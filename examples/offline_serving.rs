@@ -1,0 +1,52 @@
+//! Offline serving driver (paper Fig. 6): sweep batch sizes over every
+//! strategy on both model pairs and print the latency/normalized-throughput
+//! table.  The headline end-to-end experiment.
+//!
+//!     cargo run --release --example offline_serving -- [requests] [batches]
+//!
+//! Env: COSINE_PAIRS=l,q  COSINE_STRATEGIES=cosine,vllm,...
+
+use std::sync::Arc;
+
+use cosine::bench;
+use cosine::coordinator::ServingContext;
+use cosine::{CosineConfig, Engine};
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let requests: usize = args.first().and_then(|s| s.parse().ok()).unwrap_or(20);
+    let batches: Vec<usize> = args
+        .get(1)
+        .map(|s| s.split(',').filter_map(|x| x.parse().ok()).collect())
+        .unwrap_or_else(|| vec![1, 4, 16]);
+    let pairs = std::env::var("COSINE_PAIRS").unwrap_or_else(|_| "l,q".into());
+    let strategies =
+        std::env::var("COSINE_STRATEGIES").unwrap_or_else(|_| "cosine,vllm,vanilla,pipeinfer,specinfer".into());
+
+    let mut cfg = CosineConfig::default();
+    if let Ok(dir) = std::env::var("COSINE_ARTIFACTS") {
+        cfg.artifacts_dir = dir;
+    }
+    let engine = Arc::new(Engine::load(std::path::Path::new(&cfg.artifacts_dir))?);
+
+    for pair in pairs.split(',') {
+        println!("\n##### pair {pair} #####");
+        let mut rows = Vec::new();
+        for &b in &batches {
+            let mut cfg_b = cfg.clone();
+            cfg_b.pair = pair.to_string();
+            cfg_b.scheduler.max_batch = b;
+            let ctx = ServingContext::with_engine(engine.clone(), &cfg_b)?;
+            let trace = bench::offline_trace(&ctx, requests.max(b * 2), 100 + b as u64);
+            let mut reports = Vec::new();
+            for s in strategies.split(',') {
+                let r = bench::run(&ctx, &trace, s.trim())?;
+                eprintln!("  [pair {pair} b={b}] {}", r.summary_row());
+                reports.push(r);
+            }
+            rows.push((b, reports));
+        }
+        println!("{}", bench::fig6_table(&rows));
+    }
+    Ok(())
+}

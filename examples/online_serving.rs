@@ -1,0 +1,67 @@
+//! Online serving driver (paper Fig. 7): replay low/high/volatile arrival
+//! traces through every strategy and report latency over time windows.
+//!
+//!     cargo run --release --example online_serving -- [virtual-minutes]
+
+use cosine::coordinator::ServingContext;
+use cosine::workload::{ArrivalMode, DomainSampler, Trace};
+use cosine::CosineConfig;
+use std::str::FromStr;
+
+fn main() -> anyhow::Result<()> {
+    let minutes: f64 = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(6.0);
+    let mut cfg = CosineConfig::default();
+    if let Ok(dir) = std::env::var("COSINE_ARTIFACTS") {
+        cfg.artifacts_dir = dir;
+    }
+    let ctx = ServingContext::load(&cfg)?;
+    let c = ctx.constants().clone();
+    let cap_tps = 1.0 / ctx.t_target_decode_s(16, 1, c.prompt_len + c.gen_len / 2) * 16.0;
+    let base_rate = 0.2 * cap_tps / c.gen_len as f64;
+    println!(
+        "online serving: {minutes:.1} virtual minutes/mode, base {base_rate:.3} req/s"
+    );
+
+    for mode_s in ["low", "high", "volatile"] {
+        let mode = ArrivalMode::from_str(mode_s)?;
+        let mut sampler = DomainSampler::new(c.vocab, c.n_slices, c.prompt_len, 3);
+        let trace = Trace::online(mode, base_rate, minutes * 60.0, &mut sampler, c.gen_len, 5);
+        println!("\n--- mode {mode_s}: {} requests ---", trace.len());
+        for strat in ["cosine", "specinfer", "pipeinfer", "vllm"] {
+            let r = cosine::bench::run(&ctx, &trace, strat)?;
+            // per-time-window mean latency (Fig. 7's x-axis)
+            let windows = 6usize;
+            let wlen = minutes * 60.0 / windows as f64;
+            let mut series = String::new();
+            for w in 0..windows {
+                let (lo, hi) = (w as f64 * wlen, (w + 1) as f64 * wlen);
+                let lats: Vec<f64> = trace
+                    .requests
+                    .iter()
+                    .zip(&r.latencies_s)
+                    .filter(|(t, _)| t.arrival_s >= lo && t.arrival_s < hi)
+                    .map(|(_, l)| *l)
+                    .collect();
+                if lats.is_empty() {
+                    series.push_str("   -  ");
+                } else {
+                    series.push_str(&format!(
+                        "{:>5.1} ",
+                        lats.iter().sum::<f64>() / lats.len() as f64
+                    ));
+                }
+            }
+            println!(
+                "{:<10} mean {:>6.2}s p99 {:>6.2}s | windows(s): {}",
+                strat,
+                r.mean_latency_s(),
+                r.p99_latency_s(),
+                series
+            );
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,57 @@
+//! Quickstart: load the AOT artifacts, serve a handful of requests with the
+//! full CoSine stack, and print what happened.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+//!
+//! This is the end-to-end composition check: PJRT runtime (L1+L2 HLO) +
+//! routing + fusion + scheduling + pipelined verification (L3).
+
+use cosine::coordinator::{CoSine, ServingContext};
+use cosine::workload::{DomainSampler, Trace};
+use cosine::CosineConfig;
+
+fn main() -> anyhow::Result<()> {
+    let mut cfg = CosineConfig::default();
+    if let Ok(dir) = std::env::var("COSINE_ARTIFACTS") {
+        cfg.artifacts_dir = dir;
+    }
+
+    println!("loading artifacts from {} ...", cfg.artifacts_dir);
+    let ctx = ServingContext::load(&cfg)?;
+    let c = ctx.constants().clone();
+    println!(
+        "pair {}: target={} + {} domain drafters | prompt {} tokens, gen {} tokens",
+        cfg.pair,
+        ctx.target.instance,
+        ctx.drafters.len(),
+        c.prompt_len,
+        c.gen_len
+    );
+
+    // 8 requests across the 5 synthetic domains
+    let mut sampler = DomainSampler::new(c.vocab, c.n_slices, c.prompt_len, 1);
+    let trace = Trace::offline(8, &mut sampler, c.gen_len);
+
+    let server = CoSine::new(ctx);
+    let report = server.serve(&trace)?;
+
+    println!("\n{}", report.summary_row());
+    println!(
+        "speculation: {} rounds, {:.2} tokens/round accepted (ratio incl. bonus), {}/{} drafts accepted",
+        report.rounds,
+        report.accept_ratio,
+        report.drafts_accepted,
+        report.drafts_proposed
+    );
+    println!(
+        "modeled: makespan {:.2}s | server busy {:.1}% | cluster busy {:.1}%",
+        report.makespan_s,
+        100.0 * (1.0 - report.server_idle_frac),
+        100.0 * (1.0 - report.cluster_idle_frac),
+    );
+    println!(
+        "real: {:.1}s wall ({:.1}s inside PJRT)",
+        report.wall_s, report.pjrt_wall_s
+    );
+    Ok(())
+}

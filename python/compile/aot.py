@@ -1,0 +1,197 @@
+"""AOT pipeline: lower every (arch, entrypoint, batch bucket) to HLO text,
+export the weights blob, and write the artifacts manifest.
+
+Interchange format is HLO **text**, not serialized HloModuleProto: jax>=0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 (the
+version behind the `xla` 0.1.6 crate) rejects; the text parser reassigns ids
+and round-trips cleanly (see /opt/xla-example/README.md).
+
+Outputs under artifacts/:
+  manifest.json               shapes, buckets, model instances, constants
+  weights.bin                 all tensors, LE binary with JSON header
+  {arch}.{entry}.b{B}.hlo.txt one executable per arch/entrypoint/bucket
+
+Python runs only here (`make artifacts`); the Rust binary is self-contained
+afterwards.
+"""
+
+import argparse
+import json
+import os
+import struct
+import sys
+
+import numpy as np
+
+import jax
+from jax._src.lib import xla_client as xc
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from compile import configs as C
+from compile import model, params
+
+TARGET_ENTRIES = ("prefill", "decode", "verify")
+DRAFTER_ENTRIES = ("prefill", "decode")
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_entry(cfg, entry, batch):
+    specs = model.entry_specs(cfg, batch)[entry]
+    return model.jit_entry(cfg, entry).lower(*specs)
+
+
+# ---------------------------------------------------------------------------
+# weights blob: [u64 header_len][json header][raw tensor bytes]
+
+
+def write_weights(path, tensor_map):
+    """tensor_map: dict full_name -> np.ndarray (f32/i32)."""
+    header = {}
+    offset = 0
+    blobs = []
+    for name, arr in tensor_map.items():
+        arr = np.ascontiguousarray(arr)
+        dt = {"float32": "f32", "int32": "i32"}[str(arr.dtype)]
+        nbytes = arr.nbytes
+        header[name] = {
+            "dtype": dt,
+            "shape": list(arr.shape),
+            "offset": offset,
+            "nbytes": nbytes,
+        }
+        blobs.append(arr.tobytes())
+        offset += nbytes
+    hjson = json.dumps({"tensors": header}).encode()
+    with open(path, "wb") as f:
+        f.write(struct.pack("<Q", len(hjson)))
+        f.write(hjson)
+        for b in blobs:
+            f.write(b)
+
+
+# ---------------------------------------------------------------------------
+
+
+def shape_of(s):
+    return {"dtype": str(s.dtype), "shape": list(s.shape)}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default=os.path.join("..", "artifacts"))
+    ap.add_argument(
+        "--pairs", default="l,q", help="comma-separated pair names to build"
+    )
+    ap.add_argument(
+        "--buckets",
+        default=",".join(str(b) for b in C.BATCH_BUCKETS),
+        help="comma-separated batch buckets",
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    buckets = [int(b) for b in args.buckets.split(",")]
+    pair_names = args.pairs.split(",")
+
+    tensors = {}
+    instances = {}
+    archs = {}
+    files = []
+
+    for pname in pair_names:
+        pair = C.PAIRS[pname]
+        tgt_params, drafter_params = params.build_pair(pair)
+
+        for arch, plist, entries in (
+            (pair.target, [("target_" + pname, tgt_params)], TARGET_ENTRIES),
+            (
+                pair.drafter,
+                [
+                    (f"drafter_{pname}{i}", dp)
+                    for i, dp in enumerate(drafter_params)
+                ],
+                DRAFTER_ENTRIES,
+            ),
+        ):
+            archs[arch.name] = {
+                "n_layers": arch.n_layers,
+                "d_model": arch.d_model,
+                "n_heads": arch.n_heads,
+                "d_ff": arch.d_ff,
+                "vocab": arch.vocab,
+                "max_seq": arch.max_seq,
+                "head_dim": arch.head_dim,
+                "params": [
+                    {"name": n, "shape": list(s)} for n, s in arch.param_shapes()
+                ],
+                "entries": {},
+            }
+            for inst_name, p in plist:
+                for tname, _ in arch.param_shapes():
+                    tensors[f"{inst_name}/{tname}"] = p[tname]
+                instances[inst_name] = {
+                    "arch": arch.name,
+                    "pair": pname,
+                    "role": "target" if inst_name.startswith("target") else "drafter",
+                }
+
+            for entry in entries:
+                for b in buckets:
+                    lowered = lower_entry(arch, entry, b)
+                    text = to_hlo_text(lowered)
+                    fname = f"{arch.name}.{entry}.b{b}.hlo.txt"
+                    with open(os.path.join(args.out_dir, fname), "w") as f:
+                        f.write(text)
+                    files.append(fname)
+                    specs = model.entry_specs(arch, b)[entry]
+                    out_tree = jax.eval_shape(
+                        model.jit_entry(arch, entry), *specs
+                    )
+                    archs[arch.name]["entries"].setdefault(entry, {})[str(b)] = {
+                        "file": fname,
+                        "args": [shape_of(s) for s in specs],
+                        "outputs": [shape_of(s) for s in jax.tree.leaves(out_tree)],
+                    }
+                    print(f"lowered {fname} ({len(text)} chars)", flush=True)
+
+    write_weights(os.path.join(args.out_dir, "weights.bin"), tensors)
+
+    manifest = {
+        "version": 1,
+        "constants": {
+            "vocab": C.VOCAB,
+            "n_slices": C.N_SLICES,
+            "slice": C.SLICE,
+            "n_domains": C.N_DOMAINS,
+            "n_drafters": C.N_DRAFTERS,
+            "prompt_len": C.PROMPT_LEN,
+            "gen_len": C.GEN_LEN,
+            "gamma_max": C.GAMMA_MAX,
+            "g1": C.G1,
+            "max_seq": C.MAX_SEQ,
+            "batch_buckets": buckets,
+            "affinity_scale": C.AFFINITY_SCALE,
+            "bigram_scale": C.BIGRAM_SCALE,
+        },
+        "pairs": pair_names,
+        "archs": archs,
+        "instances": instances,
+        "files": files,
+        "weights": "weights.bin",
+    }
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(
+        f"wrote {len(files)} HLO modules, {len(tensors)} tensors -> {args.out_dir}"
+    )
+
+
+if __name__ == "__main__":
+    main()

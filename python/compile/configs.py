@@ -1,0 +1,130 @@
+"""Model/shape configuration shared by the L1 kernels, L2 model and AOT pipeline.
+
+Two model pairs mirror the paper's setup (DESIGN.md §3, §7):
+  - pair "l" (LLaMA-pair analog): deep target, shallow early-exit drafter
+    (large effective cost ratio under the hardware model).
+  - pair "q" (Qwen-pair analog): shallower target, deeper drafter
+    (small cost ratio).
+
+All shapes are static; the AOT pipeline emits one executable per
+(arch, entrypoint, batch bucket).  Sequence bookkeeping is done with a
+full-length KV cache plus a per-request current-length scalar, so no
+sequence-length buckets are needed.
+"""
+
+from dataclasses import dataclass, field
+import os
+
+# ---------------------------------------------------------------------------
+# Global shape constants (overridable for paper-shape runs via env).
+
+VOCAB = 512
+N_SLICES = 8              # vocab is partitioned into 8 slices of 64 tokens
+SLICE = VOCAB // N_SLICES
+N_DOMAINS = 5             # domains use slices 0..4; slices 5..7 are "common"
+N_DRAFTERS = 6            # drafters #1..#5 domain-specialized, #6 generalist
+
+# prompt / generation lengths.  The paper uses 256-token prompts and
+# 128-token outputs; the default artifact profile scales this down 4x so the
+# CPU-PJRT interpret-mode stack stays fast.  `COSINE_PAPER_SHAPES=1` restores
+# the paper's shapes.
+_PAPER = os.environ.get("COSINE_PAPER_SHAPES", "0") == "1"
+PROMPT_LEN = 256 if _PAPER else 64
+GEN_LEN = 128 if _PAPER else 32
+GAMMA_MAX = 8             # max draft tokens per speculation round
+G1 = GAMMA_MAX + 1        # verify width: [last committed token, gamma drafts]
+MAX_SEQ = PROMPT_LEN + GEN_LEN + GAMMA_MAX + 8  # KV cache length (slack for
+                                                # speculative overshoot)
+# round MAX_SEQ up to a multiple of the kv block size used by the kernel
+_KV_BLOCK = 32
+MAX_SEQ = ((MAX_SEQ + _KV_BLOCK - 1) // _KV_BLOCK) * _KV_BLOCK
+
+BATCH_BUCKETS = (1, 2, 4, 8, 16)
+
+# strength of the context->vocab-slice affinity bias in the target model
+# (calibrated so per-domain drafter acceptance spreads ~1.7-3.2, Table 2).
+AFFINITY_SCALE = 12.0
+# Scale of the shared bigram logit table relative to the hidden-state logits.
+# The table is what the drafter can actually "know" about the target; the
+# hidden-state term of the deep target is the part drafters must guess.
+BIGRAM_SCALE = 6.5
+# Row-correlation of a drafter's bigram table with the target's:
+#   own-domain slice rows: exact (rho=1)
+#   common-slice rows:     exact for every drafter
+#   other-domain rows:     blended with DOMAIN_RHO
+#   generalist drafter:    all rows blended with GENERALIST_RHO
+DOMAIN_RHO = 0.65
+GENERALIST_RHO = 0.9
+
+
+@dataclass(frozen=True)
+class ArchConfig:
+    """Static architecture of one decoder-only transformer."""
+
+    name: str
+    n_layers: int
+    d_model: int = 256
+    n_heads: int = 8
+    d_ff: int = 512
+    vocab: int = VOCAB
+    max_seq: int = MAX_SEQ
+    rope_base: float = 10000.0
+    norm_eps: float = 1e-5
+    affinity_scale: float = AFFINITY_SCALE
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+    def param_shapes(self):
+        """Ordered (name, shape) list — the exact parameter order of every
+        AOT entrypoint and of the weights blob consumed by the Rust runtime."""
+        L, d, ff, V = self.n_layers, self.d_model, self.d_ff, self.vocab
+        return [
+            ("embed", (V, d)),
+            ("wq", (L, d, d)),
+            ("wk", (L, d, d)),
+            ("wv", (L, d, d)),
+            ("wo", (L, d, d)),
+            ("w1", (L, d, ff)),
+            ("w3", (L, d, ff)),
+            ("w2", (L, ff, d)),
+            ("ln1", (L, d)),
+            ("ln2", (L, d)),
+            ("lnf", (d,)),
+            ("unembed", (d, V)),
+            ("bigram", (V, V)),
+        ]
+
+
+@dataclass(frozen=True)
+class PairConfig:
+    """A (target, drafter) model pair.  The drafter is an early-exit
+    truncation of the target (first `drafter_layers` layers + final norm +
+    domain-specialized unembedding)."""
+
+    name: str
+    target: ArchConfig
+    drafter: ArchConfig
+    seed: int
+
+    @property
+    def archs(self):
+        return [self.target, self.drafter]
+
+
+PAIR_L = PairConfig(
+    name="l",
+    target=ArchConfig(name="target_l", n_layers=8),
+    drafter=ArchConfig(name="drafter_l", n_layers=2),
+    seed=17,
+)
+
+PAIR_Q = PairConfig(
+    name="q",
+    target=ArchConfig(name="target_q", n_layers=6),
+    drafter=ArchConfig(name="drafter_q", n_layers=3),
+    seed=23,
+)
+
+PAIRS = {"l": PAIR_L, "q": PAIR_Q}

@@ -1,0 +1,37 @@
+"""Synthetic domain workload (python mirror of rust/src/workload/domains.rs).
+
+Domain k's prompts are first-order Markov walks over vocab slice k with a
+fixed per-domain transition structure, mixed with tokens from the shared
+"common" slices (5..7).  Used at build time for calibration tests; the Rust
+workload generator reproduces the same family of distributions.
+"""
+
+import numpy as np
+
+from .configs import N_DOMAINS, N_SLICES, SLICE
+
+IN_DOMAIN_P = 0.8   # probability a prompt token stays in the domain slice
+
+
+def domain_prompt(domain: int, length: int, rng: np.random.Generator):
+    """One prompt for `domain` in [0, N_DOMAINS)."""
+    assert 0 <= domain < N_DOMAINS
+    lo = domain * SLICE
+    common_lo = N_DOMAINS * SLICE
+    common_hi = N_SLICES * SLICE
+    toks = np.empty(length, np.int32)
+    cur = lo + int(rng.integers(SLICE))
+    for i in range(length):
+        if rng.random() < IN_DOMAIN_P:
+            # deterministic-ish walk inside the slice (simple LCG step keeps
+            # in-domain bigram structure without a stored matrix)
+            cur = lo + ((cur - lo) * 5 + 7 + int(rng.integers(3))) % SLICE
+        else:
+            cur = int(rng.integers(common_lo, common_hi))
+        toks[i] = cur
+    return toks
+
+
+def domain_batch(domain: int, batch: int, length: int, seed: int):
+    rng = np.random.default_rng(seed)
+    return np.stack([domain_prompt(domain, length, rng) for _ in range(batch)])

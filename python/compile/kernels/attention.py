@@ -1,0 +1,114 @@
+"""L1 Pallas kernel: tiled causal attention over a static-length KV cache.
+
+This is the compute hot-spot of both speculative phases:
+  - drafting decode steps (G=1): streams the KV cache block-by-block, the
+    GEMV-shaped memory-bound workload of Figure 2a;
+  - batched verification (G=G1): (block_q x block_kv) score tiles feed the
+    MXU-shaped GEMM workload.
+
+Hardware adaptation (DESIGN.md §6): the paper's threadblock/shared-memory
+scheduling maps to a BlockSpec-driven HBM->VMEM schedule — the q tile and
+one (block_kv, head_dim) K/V tile live in VMEM while a fori_loop streams KV
+blocks with a flash-style running softmax, so the cache is read exactly once
+per query tile.
+
+interpret=True everywhere: the CPU PJRT plugin cannot run Mosaic
+custom-calls; interpret-mode lowers to plain HLO that round-trips through
+the HLO-text interchange (see /opt/xla-example/README.md).
+
+Masking rule: query row i (global position `start + i`) may attend to cache
+position j iff j <= start + i.  `start` is a per-batch i32 scalar (= current
+committed KV length), which unifies prefill (start=0), single-token decode
+(q len 1) and multi-token verification (q len G1).
+"""
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_Q = 16
+DEFAULT_BLOCK_KV = 32
+NEG_INF = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, start_ref, o_ref, *, block_kv, scale):
+    """One (batch, head, q-block) tile: flash-style streaming over KV blocks."""
+    q = q_ref[0, 0, :, :].astype(jnp.float32) * scale      # (bq, hd)
+    start = start_ref[0]
+    bq, hd = q.shape
+    s_len = k_ref.shape[2]
+    n_kv = s_len // block_kv
+    qb = pl.program_id(2)
+    # global query positions for this tile
+    q_pos = qb * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, 1), 0)
+    limit = start + q_pos                                   # (bq, 1)
+
+    def body(kb, carry):
+        m, l, acc = carry
+        kv_slice = (0, 0, pl.dslice(kb * block_kv, block_kv), slice(None))
+        k_blk = pl.load(k_ref, kv_slice).astype(jnp.float32)  # (bkv, hd)
+        v_blk = pl.load(v_ref, kv_slice).astype(jnp.float32)  # (bkv, hd)
+        s = q @ k_blk.T                                       # (bq, bkv)
+        kv_pos = kb * block_kv + jax.lax.broadcasted_iota(
+            jnp.int32, (1, block_kv), 1
+        )
+        s = jnp.where(kv_pos <= limit, s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + p.sum(axis=-1, keepdims=True)
+        acc_new = acc * alpha + p @ v_blk
+        return m_new, l_new, acc_new
+
+    m0 = jnp.full((bq, 1), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((bq, 1), jnp.float32)
+    acc0 = jnp.zeros((bq, hd), jnp.float32)
+    m, l, acc = jax.lax.fori_loop(0, n_kv, body, (m0, l0, acc0))
+    # every query row can attend at least to position 0 (limit >= 0), so l>0
+    o_ref[0, 0, :, :] = (acc / l).astype(o_ref.dtype)
+
+
+def flash_attention(
+    q,
+    k,
+    v,
+    start,
+    *,
+    block_q: int = DEFAULT_BLOCK_Q,
+    block_kv: int = DEFAULT_BLOCK_KV,
+):
+    """Tiled attention.
+
+    Args:
+      q: (b, h, G, hd) queries at global positions start..start+G-1.
+      k, v: (b, h, S, hd) full static-length KV cache (new K/V already
+        written at start..start+G-1).
+      start: (b,) i32 committed cache length per request.
+    Returns:
+      (b, h, G, hd) attention output.
+    """
+    b, h, g, hd = q.shape
+    s_len = k.shape[2]
+    assert s_len % block_kv == 0, (s_len, block_kv)
+    block_q = min(block_q, g)
+    assert g % block_q == 0, (g, block_q)
+    grid = (b, h, g // block_q)
+    kernel = functools.partial(
+        _attn_kernel, block_kv=block_kv, scale=1.0 / math.sqrt(hd)
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, hd), lambda i, j, qb: (i, j, qb, 0)),
+            pl.BlockSpec((1, 1, s_len, hd), lambda i, j, qb: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, s_len, hd), lambda i, j, qb: (i, j, 0, 0)),
+            pl.BlockSpec((1,), lambda i, j, qb: (i,)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, hd), lambda i, j, qb: (i, j, qb, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, g, hd), q.dtype),
+        interpret=True,
+    )(q, k, v, start)

@@ -1,0 +1,45 @@
+"""Pure-jnp oracles for the Pallas kernels — the build-time correctness
+ground truth (pytest + hypothesis sweep in python/tests/)."""
+
+import math
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def attention_ref(q, k, v, start):
+    """Reference for kernels.attention.flash_attention.
+
+    q: (b, h, G, hd); k, v: (b, h, S, hd); start: (b,) i32.
+    Row i attends to cache positions j <= start + i.
+    """
+    b, h, g, hd = q.shape
+    s_len = k.shape[2]
+    scale = 1.0 / math.sqrt(hd)
+    scores = jnp.einsum("bhgd,bhsd->bhgs", q.astype(jnp.float32), k.astype(jnp.float32)) * scale
+    q_pos = jnp.arange(g)[None, :, None]            # (1, G, 1)
+    kv_pos = jnp.arange(s_len)[None, None, :]       # (1, 1, S)
+    limit = start[:, None, None] + q_pos            # (b, G, 1)
+    mask = kv_pos <= limit                          # (b, G, S)
+    scores = jnp.where(mask[:, None, :, :], scores, -1e30)
+    p = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
+    p = p / p.sum(axis=-1, keepdims=True)
+    return jnp.einsum("bhgs,bhsd->bhgd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def accept_length_ref(tokens, logits, draft_len):
+    """Reference for kernels.verify.accept_length (numpy, loopy, obvious)."""
+    tokens = np.asarray(tokens)
+    logits = np.asarray(logits)
+    draft_len = np.asarray(draft_len)
+    b, g1, _ = logits.shape
+    acc = np.zeros(b, np.int32)
+    bonus = np.zeros(b, np.int32)
+    for r in range(b):
+        argm = logits[r].argmax(-1)
+        a = 0
+        while a < draft_len[r] and tokens[r, a + 1] == argm[a]:
+            a += 1
+        acc[r] = a
+        bonus[r] = argm[a]
+    return acc, bonus

@@ -1,0 +1,70 @@
+"""L1 Pallas kernel: fused speculative-verification (accept-length) kernel.
+
+The analog of the paper's "CUDA-accelerated rejection sampling" (§5): given
+the target model's logits over the verify window and the draft tokens,
+compute — entirely on-device, fused into the verify executable — the greedy
+accept length and the bonus/correction token per request, so the Rust
+coordinator never has to scan logits.
+
+Window convention (see model.py): verify consumes tokens
+[x0, x1..x_gamma] where x0 is the last committed-but-uncached token.
+logits[i] predicts the token at window slot i+1, so draft x_{i+1} is
+accepted iff argmax(logits[i]) == tokens[i+1] and all earlier drafts were
+accepted.  `draft_len` caps acceptance for requests speculating fewer than
+GAMMA_MAX tokens; the bonus token is argmax(logits[accept_len]).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _accept_kernel(tokens_ref, logits_ref, draft_len_ref, acc_ref, bonus_ref):
+    logits = logits_ref[0]                     # (G1, V)
+    toks = tokens_ref[0]                       # (G1,)
+    dl = draft_len_ref[0]
+    argm = jnp.argmax(logits, axis=-1).astype(jnp.int32)   # (G1,)
+    g1 = toks.shape[0]
+    # match[i] == 1 iff draft token i+1 equals the target's argmax at slot i
+    match = (toks[1:] == argm[:-1]).astype(jnp.int32)       # (G1-1,)
+    prefix = jnp.cumprod(match)
+    acc = jnp.minimum(jnp.sum(prefix), dl).astype(jnp.int32)
+    acc_ref[0] = acc
+    # bonus/correction token: target's own prediction right after the last
+    # accepted draft (indexing argm at `acc` is safe: acc <= G1-1).
+    onehot = (jax.lax.broadcasted_iota(jnp.int32, (g1,), 0) == acc).astype(
+        jnp.int32
+    )
+    bonus_ref[0] = jnp.sum(argm * onehot).astype(jnp.int32)
+
+
+def accept_length(tokens, logits, draft_len):
+    """Greedy accept length + bonus token, fused.
+
+    Args:
+      tokens: (b, G1) i32 verify window [x0, drafts...].
+      logits: (b, G1, V) f32 target logits per window slot.
+      draft_len: (b,) i32 number of real draft tokens per request (<= G1-1).
+    Returns:
+      accept_len: (b,) i32 in [0, draft_len].
+      bonus: (b,) i32 target argmax token after the last accepted draft.
+    """
+    b, g1, v = logits.shape
+    return pl.pallas_call(
+        _accept_kernel,
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((1, g1), lambda i: (i, 0)),
+            pl.BlockSpec((1, g1, v), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b,), jnp.int32),
+            jax.ShapeDtypeStruct((b,), jnp.int32),
+        ],
+        interpret=True,
+    )(tokens, logits, draft_len)

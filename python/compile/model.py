@@ -1,0 +1,197 @@
+"""L2: the JAX transformer and its three AOT entrypoints.
+
+A LLaMA-style decoder-only transformer (RMSNorm, SwiGLU, RoPE) with a
+static-length KV cache, calling the L1 Pallas attention kernel for every
+attention op and the fused accept-length kernel inside `verify`.
+
+Entrypoints (weights are the leading 13 args, in ArchConfig.param_shapes()
+order — the Rust runtime passes them as PJRT literals on every call):
+
+  prefill(W.., tokens (b,P) i32)
+      -> logits (b,V), kv (L,2,b,h,S,hd), affinity (b,NS)
+  decode(W.., kv, affinity, cur_len (b,) i32, token (b,) i32)
+      -> logits (b,V), kv'
+  verify(W.., kv, affinity, cur_len (b,), tokens (b,G1) i32,
+         draft_len (b,) i32)
+      -> logits (b,G1,V), kv', accept_len (b,) i32, bonus (b,) i32
+
+KV bookkeeping: `cur_len` = number of committed cache positions.  prefill
+fills 0..P-1; decode writes at cur_len; verify writes the whole window at
+cur_len..cur_len+G1-1 (window slot 0 is the last committed-but-uncached
+token).  Rejected-draft cache entries are stale but harmless — the masking
+rule (position j visible iff j <= cur_len + i) hides them and later writes
+overwrite them.
+
+Domain affinity (DESIGN.md §3): prefill pools the prompt's vocab-slice
+histogram into `affinity` (b, N_SLICES); the unembedding adds
+`affinity_scale * affinity[slice_of(v)]` to every logit, making the target
+genuinely prefer in-context vocab slices.  This is the mechanism that gives
+domain-specialized drafters (exact unembedding rows on their slice) their
+differential acceptance — the substitution for the paper's fine-tuned SSMs.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .configs import SLICE, N_SLICES, G1, PROMPT_LEN, ArchConfig
+from .kernels.attention import flash_attention
+from .kernels.verify import accept_length
+
+# ---------------------------------------------------------------------------
+# primitives
+
+
+def rmsnorm(x, w, eps):
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * w
+
+
+def rope(x, positions, base):
+    """x: (b, n, h, hd); positions: (b, n) i32."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = jnp.exp(-jnp.log(base) * jnp.arange(half, dtype=jnp.float32) / half)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (b, n, half)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def _write_kv(cache, new, start):
+    """cache: (b, h, S, hd); new: (b, h, G, hd); start: (b,) i32."""
+
+    def one(c, n, s):
+        return jax.lax.dynamic_update_slice(c, n, (0, s, 0))
+
+    return jax.vmap(one)(cache, new, start)
+
+
+# ---------------------------------------------------------------------------
+# transformer core
+
+
+def _layer(cfg: ArchConfig, x, wl, kv_l, positions, start):
+    """One decoder layer.
+
+    x: (b, G, d); kv_l: (2, b, h, S, hd); positions: (b, G); start: (b,).
+    Returns (x', kv_l').
+    """
+    wq, wk, wv, wo, w1, w3, w2, ln1, ln2 = wl
+    b, g, d = x.shape
+    h, hd = cfg.n_heads, cfg.head_dim
+
+    xn = rmsnorm(x, ln1, cfg.norm_eps)
+    q = (xn @ wq).reshape(b, g, h, hd)
+    k = (xn @ wk).reshape(b, g, h, hd)
+    v = (xn @ wv).reshape(b, g, h, hd)
+    q = rope(q, positions, cfg.rope_base)
+    k = rope(k, positions, cfg.rope_base)
+
+    k_cache = _write_kv(kv_l[0], k.transpose(0, 2, 1, 3), start)
+    v_cache = _write_kv(kv_l[1], v.transpose(0, 2, 1, 3), start)
+    kv_l = jnp.stack([k_cache, v_cache])
+
+    attn = flash_attention(q.transpose(0, 2, 1, 3), k_cache, v_cache, start)
+    attn = attn.transpose(0, 2, 1, 3).reshape(b, g, d)
+    x = x + attn @ wo
+
+    xn = rmsnorm(x, ln2, cfg.norm_eps)
+    x = x + (jax.nn.silu(xn @ w1) * (xn @ w3)) @ w2
+    return x, kv_l
+
+
+def _forward(cfg: ArchConfig, weights, tokens, kv, affinity, start):
+    """Shared trunk: embed `tokens` (b, G) at positions start..start+G-1,
+    run all layers (lax.scan over the stacked weight arrays), return logits
+    for every position and the updated cache."""
+    (embed, wq, wk, wv, wo, w1, w3, w2, ln1, ln2, lnf, unembed, bigram) = weights
+    b, g = tokens.shape
+    x = embed[tokens]                                   # (b, G, d)
+    positions = start[:, None] + jnp.arange(g, dtype=jnp.int32)[None, :]
+
+    def body(x, per_layer):
+        kv_l = per_layer[-1]
+        wl = per_layer[:-1]
+        x, kv_l = _layer(cfg, x, wl, kv_l, positions, start)
+        return x, kv_l
+
+    x, kv = jax.lax.scan(body, x, (wq, wk, wv, wo, w1, w3, w2, ln1, ln2, kv))
+    x = rmsnorm(x, lnf, cfg.norm_eps)
+    logits = x @ unembed                                # (b, G, V)
+    # shared bigram table: each slot adds the logit row of its own (context)
+    # token — the component of the target's distribution a drafter can learn
+    logits = logits + bigram[tokens]                    # (b, G, V)
+    # context->slice affinity bias (same for every position)
+    slice_ids = jnp.arange(cfg.vocab, dtype=jnp.int32) // SLICE
+    bias = cfg.affinity_scale * affinity[:, slice_ids]  # (b, V)
+    return logits + bias[:, None, :], kv
+
+
+def _empty_kv(cfg: ArchConfig, b):
+    return jnp.zeros(
+        (cfg.n_layers, 2, b, cfg.n_heads, cfg.max_seq, cfg.head_dim),
+        jnp.float32,
+    )
+
+
+# ---------------------------------------------------------------------------
+# entrypoints
+
+
+def prefill(cfg: ArchConfig, *args):
+    weights, tokens = args[:13], args[13]
+    b, _ = tokens.shape
+    # prompt slice histogram -> affinity (b, NS)
+    onehot = jax.nn.one_hot(tokens // SLICE, N_SLICES, dtype=jnp.float32)
+    affinity = onehot.mean(axis=1)
+    kv = _empty_kv(cfg, b)
+    start = jnp.zeros((b,), jnp.int32)
+    logits, kv = _forward(cfg, weights, tokens, kv, affinity, start)
+    return logits[:, -1, :], kv, affinity
+
+
+def decode(cfg: ArchConfig, *args):
+    weights = args[:13]
+    kv, affinity, cur_len, token = args[13:17]
+    logits, kv = _forward(cfg, weights, token[:, None], kv, affinity, cur_len)
+    return logits[:, 0, :], kv
+
+
+def verify(cfg: ArchConfig, *args):
+    weights = args[:13]
+    kv, affinity, cur_len, tokens, draft_len = args[13:18]
+    logits, kv = _forward(cfg, weights, tokens, kv, affinity, cur_len)
+    acc, bonus = accept_length(tokens, logits, draft_len)
+    return logits, kv, acc, bonus
+
+
+ENTRY_FNS = {"prefill": prefill, "decode": decode, "verify": verify}
+
+
+# ---------------------------------------------------------------------------
+# AOT arg specs
+
+
+def entry_specs(cfg: ArchConfig, batch: int):
+    """ShapeDtypeStructs for each entrypoint at a given batch bucket, in the
+    exact argument order."""
+    f32, i32 = jnp.float32, jnp.int32
+    w = [jax.ShapeDtypeStruct(s, f32) for _, s in cfg.param_shapes()]
+    kv = jax.ShapeDtypeStruct(
+        (cfg.n_layers, 2, batch, cfg.n_heads, cfg.max_seq, cfg.head_dim), f32
+    )
+    aff = jax.ShapeDtypeStruct((batch, N_SLICES), f32)
+    lens = jax.ShapeDtypeStruct((batch,), i32)
+    return {
+        "prefill": w + [jax.ShapeDtypeStruct((batch, PROMPT_LEN), i32)],
+        "decode": w + [kv, aff, lens, jax.ShapeDtypeStruct((batch,), i32)],
+        "verify": w
+        + [kv, aff, lens, jax.ShapeDtypeStruct((batch, G1), i32), lens],
+    }
+
+
+def jit_entry(cfg: ArchConfig, entry: str):
+    return jax.jit(functools.partial(ENTRY_FNS[entry], cfg))

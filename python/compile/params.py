@@ -1,0 +1,108 @@
+"""Parameter construction: target init + early-exit domain-specialized drafters.
+
+Substitution for the paper's fine-tuned SSM fleet (DESIGN.md §3):
+
+  * The target is a deterministic random-init transformer (seeded per pair)
+    whose output distribution has two components: a deep hidden-state term
+    (what a small drafter cannot predict) and a shared bigram logit table
+    (what a drafter *can* learn from data — the analog of distillable
+    surface statistics).
+  * Each drafter is an *early-exit truncation* of the target — first
+    `drafter.n_layers` layers plus the target's final norm/unembedding — so
+    drafter and target genuinely share representations.
+  * Domain specialization lives in the bigram table: drafter k keeps the
+    target's exact rows for context tokens in vocab slice k and in the
+    shared "common" slices, but only DOMAIN_RHO-correlated rows for other
+    domains' slices.  The generalist drafter (#6) gets GENERALIST_RHO
+    everywhere.  Combined with the target's context->slice affinity bias
+    this yields the Table-2 structure (diagonal dominance, ~1.7-3.2 spread).
+"""
+
+import numpy as np
+
+from .configs import (
+    BIGRAM_SCALE,
+    DOMAIN_RHO,
+    GENERALIST_RHO,
+    N_DOMAINS,
+    N_DRAFTERS,
+    SLICE,
+    ArchConfig,
+    PairConfig,
+)
+
+
+def init_target(cfg: ArchConfig, seed: int):
+    """Deterministic scaled-gaussian init; returns dict name->np.float32."""
+    rng = np.random.default_rng(seed)
+    params = {}
+    for name, shape in cfg.param_shapes():
+        if name in ("ln1", "ln2", "lnf"):
+            params[name] = np.ones(shape, np.float32)
+        elif name == "bigram":
+            params[name] = (
+                rng.standard_normal(shape) * BIGRAM_SCALE
+            ).astype(np.float32)
+        else:
+            fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+            std = 1.0 / np.sqrt(fan_in)
+            params[name] = (rng.standard_normal(shape) * std).astype(np.float32)
+    # residual-path projections get a depth-scaled init to keep activations
+    # sane through the deepest target
+    depth_scale = 1.0 / np.sqrt(2.0 * cfg.n_layers)
+    params["wo"] = (params["wo"] * depth_scale).astype(np.float32)
+    params["w2"] = (params["w2"] * depth_scale).astype(np.float32)
+    return params
+
+
+def _blend_rows(exact, rho, rng):
+    """Return rows correlated with `exact` at level rho (same marginal
+    scale): rho * exact + sqrt(1-rho^2) * fresh_noise."""
+    noise = rng.standard_normal(exact.shape).astype(np.float32) * exact.std()
+    return (rho * exact + np.sqrt(1.0 - rho * rho) * noise).astype(np.float32)
+
+
+def make_drafter(target_params, target_cfg: ArchConfig, drafter_cfg: ArchConfig,
+                 drafter_idx: int, seed: int):
+    """Early-exit truncation + per-domain bigram specialization.
+
+    drafter_idx in [0, N_DRAFTERS): 0..N_DOMAINS-1 are domain specialists,
+    the rest are generalists.
+    """
+    k = drafter_cfg.n_layers
+    assert k <= target_cfg.n_layers
+    p = {}
+    for name, _ in drafter_cfg.param_shapes():
+        t = target_params[name]
+        if name in ("wq", "wk", "wv", "wo", "w1", "w3", "w2", "ln1", "ln2"):
+            p[name] = t[:k].copy()
+        else:
+            p[name] = t.copy()
+
+    rng = np.random.default_rng(seed * 1000 + drafter_idx)
+    bigram = p["bigram"]
+    if drafter_idx < N_DOMAINS:
+        out = _blend_rows(bigram, DOMAIN_RHO, rng)
+        # exact rows: own domain slice + common slices (>= N_DOMAINS)
+        lo, hi = drafter_idx * SLICE, (drafter_idx + 1) * SLICE
+        out[lo:hi] = bigram[lo:hi]
+        out[N_DOMAINS * SLICE:] = bigram[N_DOMAINS * SLICE:]
+    else:
+        out = _blend_rows(bigram, GENERALIST_RHO, rng)
+    p["bigram"] = out
+    return p
+
+
+def build_pair(pair: PairConfig):
+    """Returns (target_params, [drafter_params x N_DRAFTERS])."""
+    tgt = init_target(pair.target, pair.seed)
+    drafters = [
+        make_drafter(tgt, pair.target, pair.drafter, i, pair.seed)
+        for i in range(N_DRAFTERS)
+    ]
+    return tgt, drafters
+
+
+def params_arglist(cfg: ArchConfig, params):
+    """Flatten a params dict into the entrypoint argument order."""
+    return [params[name] for name, _ in cfg.param_shapes()]

@@ -1,0 +1,62 @@
+"""Calibration harness: per-(domain, drafter) greedy agreement rates.
+
+Not a pytest test — run directly to tune AFFINITY_SCALE / DOMAIN_NOISE so the
+Table-2 acceptance structure appears (diagonal dominance, ~1.7-3.2 spread in
+expected accept length ~ 1/(1-p) - 1 for match rate p).
+"""
+
+import sys
+import time
+
+import numpy as np
+import jax.numpy as jnp
+
+sys.path.insert(0, ".")
+from compile.configs import PAIR_L, PAIR_Q, PROMPT_LEN, N_DOMAINS, N_DRAFTERS
+from compile import model, params, domains
+
+
+def agreement_matrix(pair, steps=20, batch=4):
+    tgt, drafters = params.build_pair(pair)
+    tcfg, dcfg = pair.target, pair.drafter
+    tw = params.params_arglist(tcfg, tgt)
+    dws = [params.params_arglist(dcfg, d) for d in drafters]
+    pf_t = model.jit_entry(tcfg, "prefill")
+    dec_t = model.jit_entry(tcfg, "decode")
+    pf_d = model.jit_entry(dcfg, "prefill")
+    dec_d = model.jit_entry(dcfg, "decode")
+
+    match = np.zeros((N_DOMAINS, N_DRAFTERS))
+    for dom in range(N_DOMAINS):
+        toks = domains.domain_batch(dom, batch, PROMPT_LEN, seed=100 + dom)
+        lt, kvt, aff = pf_t(*tw, toks)
+        dst = []
+        for dw in dws:
+            ld, kvd, _ = pf_d(*dw, toks)
+            dst.append([ld, kvd])
+        cur = np.full((batch,), PROMPT_LEN, np.int32)
+        for _ in range(steps):
+            t_next = np.array(jnp.argmax(lt, -1), np.int32)
+            for j in range(N_DRAFTERS):
+                d_next = np.array(jnp.argmax(dst[j][0], -1), np.int32)
+                match[dom, j] += (d_next == t_next).mean() / steps
+            lt, kvt = dec_t(*tw, kvt, aff, cur, t_next)
+            for j in range(N_DRAFTERS):
+                ld, kvd = dec_d(*dws[j], dst[j][1], aff, cur, t_next)
+                dst[j] = [ld, kvd]
+            cur = cur + 1
+    return match
+
+
+if __name__ == "__main__":
+    for pair in (PAIR_L, PAIR_Q):
+        t0 = time.time()
+        m = agreement_matrix(pair)
+        print(f"pair {pair.name} ({time.time()-t0:.0f}s)  match-rate matrix "
+              "(rows=domains, cols=drafters):")
+        for dom in range(N_DOMAINS):
+            row = " ".join(f"{x:.2f}" for x in m[dom])
+            # expected accept length for gamma=8, p = matchrate:
+            # E[acc] = sum_{i=1..8} p^i
+            ea = " ".join(f"{sum(p**i for i in range(1,9)):.2f}" for p in m[dom])
+            print(f"  dom{dom}: p=[{row}]  E[acc]=[{ea}]")

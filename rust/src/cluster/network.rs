@@ -1,0 +1,53 @@
+//! Star-topology network model: token-level messages between the central
+//! node, drafter nodes, and the verification server (paper §4.2/§6.1:
+//! 100 Mbps intra-cluster Ethernet, 10 Gbps uplink, sub-1ms latency).
+
+#[derive(Debug, Clone)]
+pub struct NetworkModel {
+    /// intra-cluster (drafter <-> central) round-trip, seconds
+    pub cluster_rtt_s: f64,
+    /// cluster <-> verification-server round-trip, seconds
+    pub uplink_rtt_s: f64,
+    /// uplink bandwidth, bytes/second
+    pub uplink_bps: f64,
+    /// intra-cluster bandwidth, bytes/second (100 Mbps default)
+    pub cluster_bps: f64,
+}
+
+impl NetworkModel {
+    pub fn new(cluster_rtt_ms: f64, uplink_rtt_ms: f64, uplink_mbps: f64) -> Self {
+        Self {
+            cluster_rtt_s: cluster_rtt_ms / 1e3,
+            uplink_rtt_s: uplink_rtt_ms / 1e3,
+            uplink_bps: uplink_mbps * 1e6,
+            cluster_bps: 100.0e6 / 8.0,
+        }
+    }
+
+    /// One fusion exchange: every drafter sends its candidate token +
+    /// confidence to the central node, which broadcasts the fused token.
+    pub fn fusion_round_s(&self, n_drafters: usize, b: usize) -> f64 {
+        let msg = (b * 8) as f64; // token id + f32 confidence per request
+        self.cluster_rtt_s + (n_drafters as f64 * msg) / self.cluster_bps
+    }
+
+    /// Shipping a draft window (b × g tokens) up to the verifier and the
+    /// accept/bonus verdict back.
+    pub fn verify_exchange_s(&self, b: usize, g: usize) -> f64 {
+        let up = (b * g * 4 + b * 8) as f64;
+        let down = (b * 8) as f64;
+        self.uplink_rtt_s + (up + down) / self.uplink_bps
+    }
+
+    /// Dispatching a batch of prompts to the speculation cluster.
+    pub fn dispatch_s(&self, b: usize, prompt_len: usize) -> f64 {
+        let bytes = (b * prompt_len * 4) as f64;
+        self.uplink_rtt_s / 2.0 + bytes / self.uplink_bps
+    }
+}
+
+impl Default for NetworkModel {
+    fn default() -> Self {
+        Self::new(0.2, 0.8, 1250.0)
+    }
+}

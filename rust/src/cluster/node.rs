@@ -1,0 +1,124 @@
+//! GPU node profiles (paper Table 1) and the modeled "as-if" LLMs.
+//!
+//! The tiny CPU models supply token-level dynamics; the cluster model
+//! charges time/cost as if the paper's real models were running on the
+//! paper's real hardware, so latency/throughput/cost tables keep their
+//! shape.
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NodeKind {
+    Drafter,
+    Verifier,
+}
+
+/// One row of Table 1.
+#[derive(Debug, Clone)]
+pub struct GpuProfile {
+    pub name: String,
+    pub fp16_tflops: f64,
+    pub bandwidth_gbs: f64,
+    /// measured SSM decode speed (tokens/s) — calibration anchor
+    pub ssm_tokens_per_s: f64,
+    /// measured LLM decode speed (tokens/s), None = OOM
+    pub llm_tokens_per_s: Option<f64>,
+    pub rent_per_hr: f64,
+    pub deploy_cost: f64,
+}
+
+impl GpuProfile {
+    pub fn by_name(name: &str) -> Option<Self> {
+        match name.to_lowercase().as_str() {
+            "2080ti" => Some(Self {
+                name: "2080Ti".into(),
+                fp16_tflops: 107.6,
+                bandwidth_gbs: 616.0,
+                ssm_tokens_per_s: 350.0,
+                llm_tokens_per_s: None,
+                rent_per_hr: 0.12,
+                deploy_cost: 200.0,
+            }),
+            "3090" => Some(Self {
+                name: "3090".into(),
+                fp16_tflops: 285.0,
+                bandwidth_gbs: 936.0,
+                ssm_tokens_per_s: 450.0,
+                llm_tokens_per_s: None,
+                rent_per_hr: 0.22,
+                deploy_cost: 1000.0,
+            }),
+            // the paper's Table 1 aggregates the 4-GPU NVLink server
+            "a100" => Some(Self {
+                name: "A100".into(),
+                fp16_tflops: 5144.0,
+                bandwidth_gbs: 2039.0,
+                ssm_tokens_per_s: 9500.0,
+                llm_tokens_per_s: Some(7.13),
+                rent_per_hr: 5.67,
+                deploy_cost: 60000.0,
+            }),
+            _ => None,
+        }
+    }
+
+    pub fn table1() -> Vec<Self> {
+        ["2080ti", "3090", "a100"]
+            .iter()
+            .map(|n| Self::by_name(n).unwrap())
+            .collect()
+    }
+}
+
+/// Architecture summary of a modeled (paper-scale) LLM.
+#[derive(Debug, Clone)]
+pub struct ModeledModel {
+    pub name: String,
+    /// total parameters (count)
+    pub params: f64,
+    pub n_layers: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    /// bytes of KV cache per token (fp16)
+    pub kv_bytes_per_token: f64,
+}
+
+impl ModeledModel {
+    fn new(name: &str, params: f64, n_layers: usize, d_model: usize, n_heads: usize) -> Self {
+        let kv = 2.0 * n_layers as f64 * d_model as f64 * 2.0; // k+v, fp16
+        Self {
+            name: name.into(),
+            params,
+            n_layers,
+            d_model,
+            n_heads,
+            kv_bytes_per_token: kv,
+        }
+    }
+
+    /// The paper's LLaMA pair target: DeepSeek-R1-Distill-Llama-70B.
+    pub fn llama70b() -> Self {
+        Self::new("llama70b", 70e9, 80, 8192, 64)
+    }
+
+    /// LLaMA-68M drafter.
+    pub fn llama68m() -> Self {
+        Self::new("llama68m", 68e6, 2, 768, 12)
+    }
+
+    /// DeepSeek-R1-Distill-Qwen-32B.
+    pub fn qwen32b() -> Self {
+        Self::new("qwen32b", 32e9, 64, 5120, 40)
+    }
+
+    /// Qwen2.5-0.5B drafter.
+    pub fn qwen05b() -> Self {
+        Self::new("qwen05b", 0.5e9, 24, 896, 14)
+    }
+
+    /// (target, drafter) for a pair name.
+    pub fn pair(pair: &str) -> (Self, Self) {
+        match pair {
+            "q" => (Self::qwen32b(), Self::qwen05b()),
+            _ => (Self::llama70b(), Self::llama68m()),
+        }
+    }
+}

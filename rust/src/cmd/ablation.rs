@@ -1,0 +1,64 @@
+//! `cosine ablation`: Fig. 8 — component knockouts across cooperative node
+//! counts: full CoSine vs (−cooperative generation) vs (−token fusion) vs
+//! the SpecInfer baseline, reporting normalized throughput and acceptance.
+
+use anyhow::Result;
+use cosine::bench;
+use cosine::coordinator::ServingContext;
+use cosine::{CosineConfig, Engine};
+use std::sync::Arc;
+
+pub fn run(cfg: &CosineConfig, nodes: &str) -> Result<()> {
+    let engine = Arc::new(Engine::load(std::path::Path::new(&cfg.artifacts_dir))?);
+    let node_counts: Vec<usize> = nodes
+        .split(',')
+        .map(|s| s.trim().parse().unwrap_or(1))
+        .collect();
+    println!("\n=== Fig. 8 ablation (pair {}) ===", cfg.pair);
+    println!("nodes | variant          | tok/s  | norm  | accept");
+    println!("------+------------------+--------+-------+-------");
+    for &n in &node_counts {
+        let mut base_cfg = cfg.clone();
+        base_cfg.cluster.n_drafter_nodes = n;
+        base_cfg.router.drafters_per_request = base_cfg.router.drafters_per_request.min(n);
+
+        // baseline for normalization: SpecInfer at this node count
+        let ctx = ServingContext::with_engine(engine.clone(), &base_cfg)?;
+        let trace = bench::offline_trace(&ctx, 15, 500 + n as u64);
+        let spec = bench::run(&ctx, &trace, "specinfer")?;
+
+        let variants: Vec<(&str, Box<dyn Fn(&mut CosineConfig)>)> = vec![
+            ("cosine (full)", Box::new(|_| {})),
+            (
+                "w/o cooperative",
+                Box::new(|c: &mut CosineConfig| {
+                    c.speculation.cooperative = false;
+                    c.router.enabled = false;
+                }),
+            ),
+            (
+                "w/o token fusion",
+                Box::new(|c: &mut CosineConfig| c.speculation.fusion = false),
+            ),
+        ];
+        println!(
+            "{:>5} | {:<16} | {:>6.1} | {:>5.2} | {:>5.2}",
+            n, "specinfer", spec.throughput_tps, 1.00, spec.accept_ratio
+        );
+        for (name, tweak) in variants {
+            let mut vcfg = base_cfg.clone();
+            tweak(&mut vcfg);
+            let vctx = ServingContext::with_engine(engine.clone(), &vcfg)?;
+            let r = bench::run(&vctx, &trace, "cosine")?;
+            println!(
+                "{:>5} | {:<16} | {:>6.1} | {:>5.2} | {:>5.2}",
+                n,
+                name,
+                r.throughput_tps,
+                r.throughput_tps / spec.throughput_tps.max(1e-9),
+                r.accept_ratio
+            );
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,66 @@
+//! `cosine cost`: Table 1 (hardware profiles) and Table 3 (cost efficiency
+//! of CoSine vs SpecInfer/PipeInfer under low/high/volatile arrival).
+//!
+//! Table 3 reports cost/token normalized to the vLLM baseline on the same
+//! trace (percent; lower is better), matching the paper's
+//! computation-normalized comparison.
+
+use anyhow::Result;
+use cosine::cluster::node::GpuProfile;
+use cosine::coordinator::ServingContext;
+use cosine::workload::{ArrivalMode, DomainSampler, Trace};
+use cosine::CosineConfig;
+use std::str::FromStr;
+
+pub fn run(cfg: &CosineConfig, table1_only: bool) -> Result<()> {
+    println!("\n=== Table 1: hardware profiles ===");
+    println!("metric                | 2080Ti | 3090  | A100");
+    println!("----------------------+--------+-------+------");
+    let profiles = GpuProfile::table1();
+    let row = |name: &str, f: &dyn Fn(&GpuProfile) -> String| {
+        println!(
+            "{:<21} | {:>6} | {:>5} | {:>5}",
+            name,
+            f(&profiles[0]),
+            f(&profiles[1]),
+            f(&profiles[2])
+        );
+    };
+    row("FLOPS (FP16, T)", &|p| format!("{:.1}", p.fp16_tflops));
+    row("Bandwidth (GB/s)", &|p| format!("{:.0}", p.bandwidth_gbs));
+    row("SSM speed (tok/s)", &|p| format!("{:.0}", p.ssm_tokens_per_s));
+    row("LLM speed (tok/s)", &|p| {
+        p.llm_tokens_per_s
+            .map(|v| format!("{v:.2}"))
+            .unwrap_or("OOM".into())
+    });
+    row("Rent ($/hr)", &|p| format!("{:.2}", p.rent_per_hr));
+    row("Deploy ($)", &|p| format!("{:.0}", p.deploy_cost));
+    if table1_only {
+        return Ok(());
+    }
+
+    let ctx = ServingContext::load(cfg)?;
+    let c = ctx.constants().clone();
+    let cap_tps = 1.0 / ctx.t_target_decode_s(16, 1, c.prompt_len + c.gen_len / 2) * 16.0;
+    let base_rate = 0.2 * cap_tps / c.gen_len as f64;
+    println!("\n=== Table 3: cost efficiency (cost/token as % of vLLM) ===");
+    println!("mode      | SpecInfer | PipeInfer | CoSine");
+    println!("----------+-----------+-----------+-------");
+    for mode_s in ["low", "high", "volatile"] {
+        let mode = ArrivalMode::from_str(mode_s)?;
+        let mut sampler = DomainSampler::new(c.vocab, c.n_slices, c.prompt_len, 31);
+        let trace = Trace::online(mode, base_rate, 240.0, &mut sampler, c.gen_len, 13);
+        let vllm = cosine::bench::run(&ctx, &trace, "vllm")?;
+        let mut cells = Vec::new();
+        for strat in ["specinfer", "pipeinfer", "cosine"] {
+            let r = cosine::bench::run(&ctx, &trace, strat)?;
+            cells.push(100.0 * r.cost_per_token / vllm.cost_per_token);
+        }
+        println!(
+            "{:<9} | {:>8.2}% | {:>8.2}% | {:>5.2}%",
+            mode_s, cells[0], cells[1], cells[2]
+        );
+    }
+    Ok(())
+}

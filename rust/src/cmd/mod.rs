@@ -1,0 +1,10 @@
+//! CLI subcommand implementations — one per paper experiment.
+
+pub mod ablation;
+pub mod cost;
+pub mod motivation;
+pub mod offline;
+pub mod online;
+pub mod serve;
+pub mod smoke;
+pub mod table2;

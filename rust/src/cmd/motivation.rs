@@ -1,0 +1,170 @@
+//! `cosine motivation`: the §3 motivation profiles.
+//!
+//! * Fig. 2a — GEMM/GEMV latency proportion in SSM drafting vs LLM
+//!   verification (from the calibrated roofline op model).
+//! * Fig. 2b — speculative speedup across draft structures: sequential
+//!   lengths, token tree, multi-drafter collaboration (measured end-to-end
+//!   on the real stack).
+//! * Fig. 3b — draft-token acceptance vs confidence percentile × position
+//!   (measured from instrumented rounds).
+
+use anyhow::Result;
+use cosine::bench;
+use cosine::cluster::SimClock;
+use cosine::coordinator::fusion::{resync_after_commit, run_draft_round, DraftMode};
+use cosine::coordinator::request::Request;
+use cosine::coordinator::serve::{run_speculative, StrategyOpts};
+use cosine::coordinator::{verifier, ServingContext};
+use cosine::workload::{DomainSampler, TraceRequest};
+use cosine::CosineConfig;
+
+pub fn run(cfg: &CosineConfig, figs: &str) -> Result<()> {
+    let ctx = ServingContext::load(cfg)?;
+    for f in figs.split(',') {
+        match f.trim() {
+            "fig2a" => fig2a(&ctx)?,
+            "fig2b" => fig2b(&ctx)?,
+            "fig3b" => fig3b(&ctx)?,
+            other => eprintln!("unknown figure {other}"),
+        }
+    }
+    Ok(())
+}
+
+pub fn fig2a(ctx: &ServingContext) -> Result<()> {
+    let clock = SimClock::default();
+    println!("\n=== Fig. 2a: GEMM/GEMV latency proportion ===");
+    println!("workload                     | GEMM % | GEMV %");
+    println!("-----------------------------+--------+-------");
+    for (label, model, gpu, b, g, seq) in [
+        (
+            "SSM sequential drafting     ",
+            &ctx.modeled_drafter,
+            &ctx.drafter_gpu,
+            1usize,
+            1usize,
+            true,
+        ),
+        (
+            "LLM parallel verification   ",
+            &ctx.modeled_target,
+            &ctx.verifier_gpu,
+            8,
+            9,
+            false,
+        ),
+        (
+            "LLM incremental decode      ",
+            &ctx.modeled_target,
+            &ctx.verifier_gpu,
+            8,
+            1,
+            true,
+        ),
+    ] {
+        let (gemm, gemv) =
+            clock.gemm_gemv_split(model, gpu, b as f64, g as f64, 512.0, seq);
+        println!(
+            "{label}| {:>5.1}% | {:>5.1}%",
+            gemm * 100.0,
+            gemv * 100.0
+        );
+    }
+    Ok(())
+}
+
+pub fn fig2b(ctx: &ServingContext) -> Result<()> {
+    println!("\n=== Fig. 2b: speedup across draft structures (vs incremental decode) ===");
+    let trace = bench::offline_trace(ctx, 10, 77);
+    let base = bench::run(ctx, &trace, "vllm")?;
+    println!("structure              | tok/s  | speedup");
+    println!("-----------------------+--------+--------");
+    println!(
+        "{:<22} | {:>6.1} | {:>6.2}x",
+        "incremental (vLLM)", base.throughput_tps, 1.0
+    );
+    for gamma in [2usize, 4, 6, 8] {
+        let mut cfg2 = ctx.cfg.clone();
+        cfg2.speculation.gamma_init = gamma;
+        let ctx2 = ServingContext::with_engine(ctx.engine.clone(), &cfg2)?;
+        let mut opts = StrategyOpts::vanilla();
+        opts.name = format!("sequential γ={gamma}");
+        let r = run_speculative(&ctx2, &trace, &opts)?;
+        println!(
+            "{:<22} | {:>6.1} | {:>6.2}x",
+            opts.name,
+            r.throughput_tps,
+            r.throughput_tps / base.throughput_tps
+        );
+    }
+    for (label, strat) in [("token tree (k=3)", "specinfer"), ("multi-drafter fused", "cosine")] {
+        let r = bench::run(ctx, &trace, strat)?;
+        println!(
+            "{:<22} | {:>6.1} | {:>6.2}x",
+            label,
+            r.throughput_tps,
+            r.throughput_tps / base.throughput_tps
+        );
+    }
+    Ok(())
+}
+
+/// Instrumented rounds: per-draft-position confidence + accept outcome.
+pub fn fig3b(ctx: &ServingContext) -> Result<()> {
+    let c = ctx.constants().clone();
+    let n_drafters = ctx.drafters.len();
+    let gamma = c.gamma_max;
+    // (confidence, accepted) samples + per-position acceptance
+    let mut samples: Vec<(f32, bool)> = Vec::new();
+    let mut pos_acc = vec![(0u64, 0u64); gamma];
+    let mut sampler = DomainSampler::new(c.vocab, c.n_slices, c.prompt_len, 55);
+    for dom in 0..cosine::workload::N_DOMAINS {
+        for p in 0..4 {
+            let tr = TraceRequest {
+                id: (dom * 10 + p) as u64,
+                arrival_s: 0.0,
+                domain: dom,
+                prompt: sampler.prompt(dom),
+                max_new_tokens: c.gen_len,
+            };
+            let mut req = Request::from_trace(&tr, n_drafters, gamma);
+            verifier::ensure_target(ctx, &mut req)?;
+            while !req.is_finished() {
+                let g = gamma.min(req.remaining().max(1));
+                let round = run_draft_round(ctx, &mut req, &[dom], g, DraftMode::Fused, None)?;
+                let out = verifier::verify_and_commit(ctx, &mut req, &round.main.tokens)?;
+                for (i, conf) in round.main.confs.iter().enumerate() {
+                    let accepted = i < out.accepted;
+                    samples.push((*conf, accepted));
+                    if i < pos_acc.len() {
+                        pos_acc[i].0 += 1;
+                        pos_acc[i].1 += accepted as u64;
+                    }
+                }
+                let mut fed = round.main.tokens.clone();
+                fed.truncate(fed.len().saturating_sub(1));
+                resync_after_commit(&mut req, &[dom], &[fed], &out.committed_drafts, out.before_len);
+            }
+        }
+    }
+    // confidence percentile bins
+    samples.sort_by(|a, b| a.0.total_cmp(&b.0));
+    println!("\n=== Fig. 3b: acceptance vs confidence percentile / draft position ===");
+    println!("confidence pct | accept rate");
+    for (lo, hi) in [(0, 25), (25, 50), (50, 75), (75, 90), (90, 100)] {
+        let a = samples.len() * lo / 100;
+        let b = (samples.len() * hi / 100).min(samples.len());
+        if a >= b {
+            continue;
+        }
+        let acc = samples[a..b].iter().filter(|s| s.1).count() as f64 / (b - a) as f64;
+        println!("   {lo:>3}-{hi:<3}%    | {:.2}", acc);
+    }
+    println!("draft position | accept rate");
+    for (i, (n, acc)) in pos_acc.iter().enumerate() {
+        if *n > 0 {
+            println!("      {:<8} | {:.2}", i + 1, *acc as f64 / *n as f64);
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,35 @@
+//! `cosine offline`: Fig. 6 — offline latency (6a/6b) and normalized
+//! throughput (6c/6d) across batch sizes for every strategy.
+
+use anyhow::Result;
+use cosine::bench;
+use cosine::coordinator::ServingContext;
+use cosine::{CosineConfig, Engine};
+use std::sync::Arc;
+
+pub fn run(cfg: &CosineConfig, batches: &str, requests: usize, strategies: &str) -> Result<()> {
+    let batch_sizes: Vec<usize> = batches
+        .split(',')
+        .map(|s| s.trim().parse().unwrap_or(1))
+        .collect();
+    let strats: Vec<&str> = strategies.split(',').map(|s| s.trim()).collect();
+    let engine = Arc::new(Engine::load(std::path::Path::new(&cfg.artifacts_dir))?);
+    let mut rows = Vec::new();
+    for &b in &batch_sizes {
+        let mut cfg_b = cfg.clone();
+        cfg_b.scheduler.max_batch = b;
+        let ctx = ServingContext::with_engine(engine.clone(), &cfg_b)?;
+        let n = requests.max(b * 2);
+        let trace = bench::offline_trace(&ctx, n, 100 + b as u64);
+        let mut reports = Vec::new();
+        for s in &strats {
+            let r = bench::run(&ctx, &trace, s)?;
+            eprintln!("  [b={b}] {}", r.summary_row());
+            reports.push(r);
+        }
+        rows.push((b, reports));
+    }
+    println!("\n=== Fig. 6 (pair {}) ===", cfg.pair);
+    println!("{}", bench::fig6_table(&rows));
+    Ok(())
+}

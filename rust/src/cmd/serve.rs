@@ -1,0 +1,33 @@
+//! `cosine serve`: run the full CoSine stack on a synthetic offline trace
+//! and print the run report (the "does the whole system compose" command).
+
+use anyhow::Result;
+use cosine::bench;
+use cosine::coordinator::{CoSine, ServingContext};
+use cosine::CosineConfig;
+
+pub fn run(cfg: &CosineConfig, requests: usize) -> Result<()> {
+    let ctx = ServingContext::load(cfg)?;
+    let trace = bench::offline_trace(&ctx, requests, 11);
+    println!(
+        "serving {} requests (pair {}, {} drafter nodes, k={})",
+        requests, cfg.pair, cfg.cluster.n_drafter_nodes, cfg.router.drafters_per_request
+    );
+    let server = CoSine::new(ctx);
+    let report = server.serve(&trace)?;
+    println!("{}", report.summary_row());
+    println!(
+        "  rounds={} drafts={}/{} ({:.0}% accepted), mean latency {:.2}s, p99 {:.2}s",
+        report.rounds,
+        report.drafts_accepted,
+        report.drafts_proposed,
+        100.0 * report.drafts_accepted as f64 / report.drafts_proposed.max(1) as f64,
+        report.mean_latency_s(),
+        report.p99_latency_s(),
+    );
+    println!(
+        "  modeled makespan {:.2}s | cluster busy {:.2}s | server busy {:.2}s | pjrt wall {:.2}s",
+        report.makespan_s, report.cluster_busy_s, report.server_busy_s, report.pjrt_wall_s
+    );
+    Ok(())
+}

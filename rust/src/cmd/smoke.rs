@@ -1,0 +1,63 @@
+//! Runtime round-trip smoke test: prefill → decode → verify on the target
+//! and one drafter, checking shapes and the decode/verify consistency
+//! invariant end-to-end through the PJRT path.
+
+use anyhow::Result;
+use cosine::coordinator::sampling::argmax;
+use cosine::coordinator::ServingContext;
+use cosine::workload::DomainSampler;
+use cosine::CosineConfig;
+
+pub fn run(cfg: &CosineConfig) -> Result<()> {
+    let t0 = std::time::Instant::now();
+    let ctx = ServingContext::load(cfg)?;
+    let c = ctx.constants().clone();
+    println!(
+        "loaded pair {}: target={} drafters={} (prompt_len={} gen_len={} γmax={})",
+        cfg.pair,
+        ctx.target.instance,
+        ctx.drafters.len(),
+        c.prompt_len,
+        c.gen_len,
+        c.gamma_max
+    );
+
+    let mut sampler = DomainSampler::new(c.vocab, c.n_slices, c.prompt_len, 7);
+    let prompt = sampler.prompt(0);
+
+    // target prefill + decode
+    let (out, mut st) = ctx.target.prefill(&[prompt.clone()])?;
+    let first = argmax(&out.logits);
+    println!("target prefill ok ({} ms), first token {first}", out.wall.as_millis());
+    let d = ctx.target.decode(&mut st, &[first])?;
+    let second = argmax(&d.logits);
+    println!("target decode ok ({} ms), second token {second}", d.wall.as_millis());
+
+    // verify consistency: a window of [first, second, junk...] must accept
+    // >= 1 draft (second IS the target's own greedy continuation)
+    st.cur_len[0] -= 1; // rewind the decode so verify re-processes `first`
+    let mut window = vec![0i32; c.g1];
+    window[0] = first;
+    window[1] = second;
+    let v = ctx.target.verify(&mut st, &window, &[c.gamma_max as i32])?;
+    println!(
+        "target verify ok ({} ms): accept={} bonus={}",
+        v.wall.as_millis(),
+        v.accept[0],
+        v.bonus[0]
+    );
+    anyhow::ensure!(v.accept[0] >= 1, "verify must accept the target's own token");
+
+    // drafter roundtrip
+    let (dout, mut dst) = ctx.drafters[0].prefill(&[prompt])?;
+    let dtok = argmax(&dout.logits);
+    let dd = ctx.drafters[0].decode(&mut dst, &[dtok])?;
+    println!(
+        "drafter prefill+decode ok ({} + {} ms)",
+        dout.wall.as_millis(),
+        dd.wall.as_millis()
+    );
+
+    println!("smoke OK in {:.1}s", t0.elapsed().as_secs_f64());
+    Ok(())
+}

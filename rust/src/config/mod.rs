@@ -1,0 +1,264 @@
+//! Configuration system: everything tunable about a CoSine deployment,
+//! loadable from JSON (see `configs/*.json`) with CLI overrides.
+//! (Hand-rolled JSON — the offline image has no serde/toml.)
+
+use anyhow::{Context, Result};
+use std::path::Path;
+
+use crate::util::json::Json;
+
+#[derive(Debug, Clone)]
+pub struct CosineConfig {
+    /// artifacts directory (manifest.json, weights.bin, *.hlo.txt)
+    pub artifacts_dir: String,
+    /// which model pair to serve ("l" or "q")
+    pub pair: String,
+    pub router: RouterConfig,
+    pub scheduler: SchedulerConfig,
+    pub speculation: SpeculationConfig,
+    pub cluster: ClusterConfig,
+}
+
+impl Default for CosineConfig {
+    fn default() -> Self {
+        Self {
+            artifacts_dir: "artifacts".into(),
+            pair: "l".into(),
+            router: RouterConfig::default(),
+            scheduler: SchedulerConfig::default(),
+            speculation: SpeculationConfig::default(),
+            cluster: ClusterConfig::default(),
+        }
+    }
+}
+
+/// Adaptive request routing (paper §4.2, Eq. 1–3).
+#[derive(Debug, Clone)]
+pub struct RouterConfig {
+    /// acceptance-length threshold τ separating explore/exploit modes
+    pub tau: f64,
+    /// greedy (top-scoring) probability in exploration mode (L_acc < τ) —
+    /// low, so slots spread to underutilized drafters (see router.rs note
+    /// on the paper's Eq. 3 α/β ordering)
+    pub alpha: f64,
+    /// greedy probability in exploitation mode — high
+    pub beta: f64,
+    /// EWMA factor for routing-score updates
+    pub ewma: f64,
+    /// number of drafters routed per request (paper: 2–3)
+    pub drafters_per_request: usize,
+    /// disable routing entirely (ablation: random assignment)
+    pub enabled: bool,
+}
+
+impl Default for RouterConfig {
+    fn default() -> Self {
+        Self {
+            tau: 1.0,
+            alpha: 0.3,
+            beta: 0.9,
+            ewma: 0.3,
+            drafters_per_request: 3,
+            enabled: true,
+        }
+    }
+}
+
+/// Batch scheduling (paper §4.3, Eq. 5–8).
+#[derive(Debug, Clone)]
+pub struct SchedulerConfig {
+    /// λ: throughput/latency trade-off weight in Eq. (8)
+    pub lambda: f64,
+    /// T_max: per-iteration latency budget (modeled milliseconds)
+    pub t_max_ms: f64,
+    /// M_max: verification-server memory budget (modeled MB)
+    pub m_max_mb: f64,
+    /// Γ_max: verified-token budget per batch
+    pub gamma_total_max: usize,
+    /// hard cap on batch size (largest AOT bucket)
+    pub max_batch: usize,
+}
+
+impl Default for SchedulerConfig {
+    fn default() -> Self {
+        Self {
+            lambda: 0.00002,
+            t_max_ms: 4000.0,
+            m_max_mb: 64_000.0,
+            gamma_total_max: 160,
+            max_batch: 16,
+        }
+    }
+}
+
+/// Adaptive speculation control (paper Alg. 2).
+#[derive(Debug, Clone)]
+pub struct SpeculationConfig {
+    /// initial per-request draft length γ
+    pub gamma_init: usize,
+    pub gamma_min: usize,
+    pub gamma_max: usize,
+    /// enable confidence-based token fusion (ablation switch)
+    pub fusion: bool,
+    /// enable cooperative generation / routing (ablation switch)
+    pub cooperative: bool,
+}
+
+impl Default for SpeculationConfig {
+    fn default() -> Self {
+        Self {
+            gamma_init: 6,
+            gamma_min: 1,
+            gamma_max: 8,
+            fusion: true,
+            cooperative: true,
+        }
+    }
+}
+
+/// Heterogeneous cluster topology (paper Table 1 + §6.1).
+#[derive(Debug, Clone)]
+pub struct ClusterConfig {
+    /// number of drafter nodes in the speculation cluster
+    pub n_drafter_nodes: usize,
+    /// GPU profile per drafter node ("2080ti" | "3090")
+    pub drafter_gpu: String,
+    /// GPUs in the verification server ("a100")
+    pub verifier_gpu: String,
+    pub verifier_gpus: usize,
+    /// star-topology link round-trip (ms) inside the speculation cluster
+    pub cluster_rtt_ms: f64,
+    /// cluster <-> verification-server link round-trip (ms)
+    pub uplink_rtt_ms: f64,
+    /// uplink bandwidth (MB/s)
+    pub uplink_mbps: f64,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        Self {
+            n_drafter_nodes: 6,
+            drafter_gpu: "2080ti".into(),
+            verifier_gpu: "a100".into(),
+            verifier_gpus: 4,
+            cluster_rtt_ms: 0.2,
+            uplink_rtt_ms: 0.8,
+            uplink_mbps: 1250.0, // 10 Gbps
+        }
+    }
+}
+
+impl CosineConfig {
+    /// Load from a JSON file; absent keys keep their defaults.
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {}", path.display()))?;
+        let j = Json::parse(&text).context("parsing config JSON")?;
+        let mut cfg = Self::default();
+        cfg.apply_json(&j)?;
+        Ok(cfg)
+    }
+
+    pub fn apply_json(&mut self, j: &Json) -> Result<()> {
+        if let Some(v) = j.get("artifacts_dir") {
+            self.artifacts_dir = v.as_str()?.to_string();
+        }
+        if let Some(v) = j.get("pair") {
+            self.pair = v.as_str()?.to_string();
+        }
+        if let Some(r) = j.get("router") {
+            set_f64(r, "tau", &mut self.router.tau)?;
+            set_f64(r, "alpha", &mut self.router.alpha)?;
+            set_f64(r, "beta", &mut self.router.beta)?;
+            set_f64(r, "ewma", &mut self.router.ewma)?;
+            set_usize(r, "drafters_per_request", &mut self.router.drafters_per_request)?;
+            set_bool(r, "enabled", &mut self.router.enabled)?;
+        }
+        if let Some(s) = j.get("scheduler") {
+            set_f64(s, "lambda", &mut self.scheduler.lambda)?;
+            set_f64(s, "t_max_ms", &mut self.scheduler.t_max_ms)?;
+            set_f64(s, "m_max_mb", &mut self.scheduler.m_max_mb)?;
+            set_usize(s, "gamma_total_max", &mut self.scheduler.gamma_total_max)?;
+            set_usize(s, "max_batch", &mut self.scheduler.max_batch)?;
+        }
+        if let Some(s) = j.get("speculation") {
+            set_usize(s, "gamma_init", &mut self.speculation.gamma_init)?;
+            set_usize(s, "gamma_min", &mut self.speculation.gamma_min)?;
+            set_usize(s, "gamma_max", &mut self.speculation.gamma_max)?;
+            set_bool(s, "fusion", &mut self.speculation.fusion)?;
+            set_bool(s, "cooperative", &mut self.speculation.cooperative)?;
+        }
+        if let Some(c) = j.get("cluster") {
+            set_usize(c, "n_drafter_nodes", &mut self.cluster.n_drafter_nodes)?;
+            if let Some(v) = c.get("drafter_gpu") {
+                self.cluster.drafter_gpu = v.as_str()?.to_string();
+            }
+            if let Some(v) = c.get("verifier_gpu") {
+                self.cluster.verifier_gpu = v.as_str()?.to_string();
+            }
+            set_usize(c, "verifier_gpus", &mut self.cluster.verifier_gpus)?;
+            set_f64(c, "cluster_rtt_ms", &mut self.cluster.cluster_rtt_ms)?;
+            set_f64(c, "uplink_rtt_ms", &mut self.cluster.uplink_rtt_ms)?;
+            set_f64(c, "uplink_mbps", &mut self.cluster.uplink_mbps)?;
+        }
+        Ok(())
+    }
+
+    pub fn for_pair(pair: &str) -> Self {
+        Self {
+            pair: pair.to_string(),
+            ..Self::default()
+        }
+    }
+}
+
+fn set_f64(j: &Json, key: &str, slot: &mut f64) -> Result<()> {
+    if let Some(v) = j.get(key) {
+        *slot = v.as_f64()?;
+    }
+    Ok(())
+}
+
+fn set_usize(j: &Json, key: &str, slot: &mut usize) -> Result<()> {
+    if let Some(v) = j.get(key) {
+        *slot = v.as_usize()?;
+    }
+    Ok(())
+}
+
+fn set_bool(j: &Json, key: &str, slot: &mut bool) -> Result<()> {
+    if let Some(v) = j.get(key) {
+        *slot = v.as_bool()?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_sane() {
+        let c = CosineConfig::default();
+        assert!(c.router.alpha < c.router.beta);
+        assert!(c.speculation.gamma_min <= c.speculation.gamma_init);
+        assert!(c.speculation.gamma_init <= c.speculation.gamma_max);
+    }
+
+    #[test]
+    fn json_overrides() {
+        let mut c = CosineConfig::default();
+        let j = Json::parse(
+            r#"{"pair": "q", "router": {"tau": 3.5, "enabled": false},
+                "cluster": {"n_drafter_nodes": 4}}"#,
+        )
+        .unwrap();
+        c.apply_json(&j).unwrap();
+        assert_eq!(c.pair, "q");
+        assert_eq!(c.router.tau, 3.5);
+        assert!(!c.router.enabled);
+        assert_eq!(c.cluster.n_drafter_nodes, 4);
+        // untouched keys keep defaults
+        assert_eq!(c.scheduler.max_batch, 16);
+    }
+}

@@ -1,0 +1,151 @@
+//! ServingContext: everything a serving strategy needs — the PJRT models
+//! for real token-level computation, plus the calibrated cluster model for
+//! virtual timing/cost.  Shared by CoSine and all baselines so comparisons
+//! are apples-to-apples.
+
+use anyhow::{Context as _, Result};
+use std::path::Path;
+use std::sync::Arc;
+
+use crate::cluster::node::{GpuProfile, ModeledModel};
+use crate::cluster::simclock::{Phase, SimClock};
+use crate::cluster::NetworkModel;
+use crate::config::CosineConfig;
+use crate::runtime::{Engine, Model};
+
+pub struct ServingContext {
+    pub engine: Arc<Engine>,
+    pub target: Model,
+    pub drafters: Vec<Model>,
+    pub cfg: CosineConfig,
+
+    // hardware model
+    pub clock: SimClock,
+    pub drafter_gpu: GpuProfile,
+    pub verifier_gpu: GpuProfile,
+    pub network: NetworkModel,
+    pub modeled_target: ModeledModel,
+    pub modeled_drafter: ModeledModel,
+}
+
+impl ServingContext {
+    pub fn load(cfg: &CosineConfig) -> Result<Self> {
+        let engine = Arc::new(Engine::load(Path::new(&cfg.artifacts_dir))?);
+        Self::with_engine(engine, cfg)
+    }
+
+    /// Build a context over an existing engine (shares compiled executables
+    /// and weights across strategy variants — used by sweeps/ablation).
+    pub fn with_engine(engine: Arc<Engine>, cfg: &CosineConfig) -> Result<Self> {
+        let pair = &cfg.pair;
+        let target_name = engine
+            .manifest
+            .target(pair)
+            .with_context(|| format!("no target instance for pair {pair}"))?;
+        let target = Model::load(engine.clone(), &target_name)?;
+        let mut drafters = Vec::new();
+        for name in engine.manifest.drafters(pair) {
+            drafters.push(Model::load(engine.clone(), &name)?);
+        }
+        anyhow::ensure!(!drafters.is_empty(), "no drafters for pair {pair}");
+
+        let drafter_gpu = GpuProfile::by_name(&cfg.cluster.drafter_gpu)
+            .with_context(|| format!("unknown GPU {}", cfg.cluster.drafter_gpu))?;
+        let verifier_gpu = GpuProfile::by_name(&cfg.cluster.verifier_gpu)
+            .with_context(|| format!("unknown GPU {}", cfg.cluster.verifier_gpu))?;
+        let (modeled_target, modeled_drafter) = ModeledModel::pair(pair);
+        let network = NetworkModel::new(
+            cfg.cluster.cluster_rtt_ms,
+            cfg.cluster.uplink_rtt_ms,
+            cfg.cluster.uplink_mbps,
+        );
+        Ok(Self {
+            engine,
+            target,
+            drafters,
+            cfg: cfg.clone(),
+            clock: SimClock::default(),
+            drafter_gpu,
+            verifier_gpu,
+            network,
+            modeled_target,
+            modeled_drafter,
+        })
+    }
+
+    pub fn n_drafters(&self) -> usize {
+        self.drafters.len().min(self.cfg.cluster.n_drafter_nodes)
+    }
+
+    pub fn constants(&self) -> &crate::runtime::manifest::Constants {
+        self.engine.constants()
+    }
+
+    // ---- modeled (virtual) latencies ---------------------------------
+
+    /// Drafter-side: sequential decode of `g` tokens at batch `b` on one
+    /// drafter node.
+    pub fn t_draft_s(&self, b: usize, g: usize, ctx: usize) -> f64 {
+        self.clock.phase_s(
+            &self.modeled_drafter,
+            &self.drafter_gpu,
+            Phase::Decode,
+            b,
+            g,
+            ctx,
+            self.drafter_gpu.ssm_tokens_per_s,
+        )
+    }
+
+    /// Drafter-side prompt prefill on one node.
+    pub fn t_draft_prefill_s(&self, b: usize, ctx: usize) -> f64 {
+        self.clock.phase_s(
+            &self.modeled_drafter,
+            &self.drafter_gpu,
+            Phase::Prefill,
+            b,
+            0,
+            ctx,
+            self.drafter_gpu.ssm_tokens_per_s,
+        )
+    }
+
+    /// Verification of `g`-token windows at batch `b` on the server.
+    pub fn t_verify_s(&self, b: usize, g: usize, ctx: usize) -> f64 {
+        self.clock.phase_s(
+            &self.modeled_target,
+            &self.verifier_gpu,
+            Phase::Verify,
+            b,
+            g,
+            ctx,
+            self.verifier_gpu.llm_tokens_per_s.unwrap_or(7.13),
+        )
+    }
+
+    /// Target-side autoregressive decode (the vLLM baseline path).
+    pub fn t_target_decode_s(&self, b: usize, g: usize, ctx: usize) -> f64 {
+        self.clock.phase_s(
+            &self.modeled_target,
+            &self.verifier_gpu,
+            Phase::Decode,
+            b,
+            g,
+            ctx,
+            self.verifier_gpu.llm_tokens_per_s.unwrap_or(7.13),
+        )
+    }
+
+    /// Target prompt prefill on the server.
+    pub fn t_target_prefill_s(&self, b: usize, ctx: usize) -> f64 {
+        self.clock.phase_s(
+            &self.modeled_target,
+            &self.verifier_gpu,
+            Phase::Prefill,
+            b,
+            0,
+            ctx,
+            self.verifier_gpu.llm_tokens_per_s.unwrap_or(7.13),
+        )
+    }
+}

@@ -1,0 +1,211 @@
+//! Cooperative draft generation with confidence-based token fusion
+//! (paper §4.2 Eq. 4, Alg. 1, Fig. 5).
+//!
+//! Each participating drafter decodes in lock-step.  At every iteration the
+//! central node gathers (token, confidence) proposals from all drafters,
+//! selects the max-confidence token `x*`, and feeds it back so every
+//! drafter continues from the fused prefix.  The per-drafter proposals are
+//! kept as routing feedback and (for tree baselines) as independent side
+//! paths.
+//!
+//! KV bookkeeping: a drafter's cache stays valid for exactly the committed
+//! prefix it was fed; `resync_*` rewinds the cache pointer after each
+//! verify outcome, and `catch_up` replays missing committed tokens before
+//! the next round (the real cost that adaptive routing amortizes).
+
+use anyhow::Result;
+use std::time::Duration;
+
+use super::context::ServingContext;
+use super::request::{DrafterSync, Request};
+use super::sampling::top_prob;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DraftMode {
+    /// confidence-based token fusion (CoSine)
+    Fused,
+    /// each drafter extends its own path (SpecInfer-style trees, ablation)
+    Independent,
+}
+
+/// One drafter's proposal sequence for a round.
+#[derive(Debug, Clone)]
+pub struct DraftPath {
+    pub drafter: usize,
+    pub tokens: Vec<i32>,
+    pub confs: Vec<f32>,
+}
+
+/// Result of one cooperative drafting round for a single request.
+pub struct DraftRound {
+    /// the main (fused or primary) draft path sent to verification
+    pub main: DraftPath,
+    /// every participating drafter's own proposals (routing feedback +
+    /// tree side-branches)
+    pub paths: Vec<DraftPath>,
+    /// real wall time spent in PJRT drafter calls
+    pub wall: Duration,
+    /// number of catch-up decode steps replayed (modeled-time input)
+    pub catchup_steps: usize,
+}
+
+/// Ensure the drafter has a prefilled state and its KV covers all committed
+/// tokens; returns (#replayed steps).  After this, `sync.logits` holds
+/// fresh logits predicting the next (first draft) token.
+fn catch_up(
+    ctx: &ServingContext,
+    req: &mut Request,
+    drafter: usize,
+) -> Result<(usize, Duration)> {
+    let mut wall = Duration::ZERO;
+    if !req.drafters.contains_key(&drafter) {
+        let (out, state) = ctx.drafters[drafter].prefill(&[req.prompt.clone()])?;
+        wall += out.wall;
+        req.drafters.insert(
+            drafter,
+            DrafterSync {
+                state,
+                synced: 0,
+                logits: Some(out.logits),
+            },
+        );
+    }
+    let model = &ctx.drafters[drafter];
+    let prompt_len = req.prompt.len() as i32;
+    let sync = req.drafters.get_mut(&drafter).unwrap();
+    // rewind the cache pointer to the synced prefix
+    sync.state.cur_len[0] = prompt_len + sync.synced as i32;
+    let mut steps = 0;
+    while sync.synced < req.generated.len() {
+        let tok = req.generated[sync.synced];
+        let out = model.decode(&mut sync.state, &[tok])?;
+        wall += out.wall;
+        sync.logits = Some(out.logits);
+        sync.synced += 1;
+        steps += 1;
+    }
+    anyhow::ensure!(sync.logits.is_some(), "drafter has no fresh logits");
+    Ok((steps, wall))
+}
+
+/// Run one cooperative drafting round (Alg. 1 lines 9–16).
+///
+/// `priors`: per-drafter reliability weights for fusion — the routing
+/// scores M_r (paper §5: token fusion "leverag[es] confidence scores and
+/// historical verification accuracy").  Raw softmax confidences are not
+/// comparable across drafters with different specializations; the prior
+/// down-weights historically inaccurate drafters.  Pass `None` for
+/// unweighted (pure-confidence) fusion.
+pub fn run_draft_round(
+    ctx: &ServingContext,
+    req: &mut Request,
+    drafter_set: &[usize],
+    gamma: usize,
+    mode: DraftMode,
+    priors: Option<&[f64]>,
+) -> Result<DraftRound> {
+    assert!(!drafter_set.is_empty() && gamma >= 1);
+    if let Some(p) = priors {
+        assert_eq!(p.len(), drafter_set.len());
+    }
+    let mut wall = Duration::ZERO;
+    let mut catchup_steps = 0;
+    for &d in drafter_set {
+        let (steps, w) = catch_up(ctx, req, d)?;
+        catchup_steps += steps;
+        wall += w;
+    }
+
+    let mut paths: Vec<DraftPath> = drafter_set
+        .iter()
+        .map(|&d| DraftPath {
+            drafter: d,
+            tokens: Vec::with_capacity(gamma),
+            confs: Vec::with_capacity(gamma),
+        })
+        .collect();
+    let mut fused_tokens = Vec::with_capacity(gamma);
+    let mut fused_confs = Vec::with_capacity(gamma);
+
+    for i in 0..gamma {
+        // gather proposals (Alg. 1 TokenFusion: aggregate + argmax P(x),
+        // reliability-weighted by the routing prior)
+        let mut best: Option<(f64, f32, i32)> = None;
+        for (pi, &d) in drafter_set.iter().enumerate() {
+            let sync = &req.drafters[&d];
+            let logits = sync.logits.as_ref().expect("fresh logits");
+            let (tok, p) = top_prob(logits);
+            paths[pi].tokens.push(tok);
+            paths[pi].confs.push(p);
+            let w = priors.map_or(1.0, |pr| (pr[pi] * pr[pi]).max(1e-4));
+            let score = w * p as f64;
+            if best.map_or(true, |(bs, _, _)| score > bs) {
+                best = Some((score, p, tok));
+            }
+        }
+        let (_, conf, fused) = best.unwrap();
+        fused_tokens.push(fused);
+        fused_confs.push(conf);
+
+        // feed back for the next iteration (skip after the last draft)
+        if i + 1 < gamma {
+            for (pi, &d) in drafter_set.iter().enumerate() {
+                let feed = match mode {
+                    DraftMode::Fused => fused,
+                    DraftMode::Independent => paths[pi].tokens[i],
+                };
+                let model = &ctx.drafters[d];
+                let sync = req.drafters.get_mut(&d).unwrap();
+                let out = model.decode(&mut sync.state, &[feed])?;
+                wall += out.wall;
+                sync.logits = Some(out.logits);
+            }
+        }
+    }
+
+    let main = match mode {
+        DraftMode::Fused => DraftPath {
+            drafter: usize::MAX,
+            tokens: fused_tokens,
+            confs: fused_confs,
+        },
+        // Independent mode: primary path is the first drafter's own path;
+        // baselines pick their own winner from `paths`
+        DraftMode::Independent => paths[0].clone(),
+    };
+
+    Ok(DraftRound {
+        main,
+        paths,
+        wall,
+        catchup_steps,
+    })
+}
+
+/// After a verify outcome commits `accepted` drafts (+bonus), mark which
+/// prefix of each participating drafter's KV stays valid.
+///
+/// `fed`: the token sequence each drafter was actually fed during the round
+/// (fused path for Fused mode, its own path for Independent mode) — only
+/// the first `gamma-1` drafts were ever fed.
+pub fn resync_after_commit(
+    req: &mut Request,
+    drafter_set: &[usize],
+    fed_per_drafter: &[Vec<i32>],
+    committed_drafts: &[i32],
+    before_len: usize,
+) {
+    let synced_base = before_len;
+    for (pi, &d) in drafter_set.iter().enumerate() {
+        let fed = &fed_per_drafter[pi];
+        // longest prefix of committed drafts matching what this drafter fed
+        let mut ok = 0;
+        while ok < committed_drafts.len() && ok < fed.len() && fed[ok] == committed_drafts[ok] {
+            ok += 1;
+        }
+        if let Some(sync) = req.drafters.get_mut(&d) {
+            sync.synced = synced_base + ok;
+            sync.logits = None; // context changed (bonus token), always stale
+        }
+    }
+}

@@ -1,0 +1,157 @@
+//! Run metrics: the quantities every paper table/figure reports —
+//! end-to-end latency (ms/token), throughput (tokens/s), cost efficiency
+//! (cost/token), acceptance statistics, resource utilization.
+
+use crate::cluster::node::GpuProfile;
+
+use super::pipeline::VirtualPipeline;
+use super::request::Request;
+
+#[derive(Debug, Clone, Default)]
+pub struct RunReport {
+    pub strategy: String,
+    pub pair: String,
+    pub n_requests: usize,
+    /// tokens generated (all requests)
+    pub tokens: u64,
+    /// virtual makespan (seconds)
+    pub makespan_s: f64,
+    /// per-request end-to-end latency (virtual seconds)
+    pub latencies_s: Vec<f64>,
+    /// mean latency per generated token (virtual ms/token)
+    pub ms_per_token: f64,
+    /// tokens per virtual second
+    pub throughput_tps: f64,
+    /// mean accepted-drafts+bonus per verify round
+    pub accept_ratio: f64,
+    pub rounds: u64,
+    pub drafts_proposed: u64,
+    pub drafts_accepted: u64,
+    pub cluster_busy_s: f64,
+    pub server_busy_s: f64,
+    pub server_idle_frac: f64,
+    pub cluster_idle_frac: f64,
+    /// total modeled rent cost ($) and per-token cost
+    pub cost_total: f64,
+    pub cost_per_token: f64,
+    /// real wall-clock seconds of the whole run (coordinator + PJRT)
+    pub wall_s: f64,
+    /// real wall-clock spent inside PJRT execute
+    pub pjrt_wall_s: f64,
+}
+
+impl RunReport {
+    /// Assemble a report from finished requests + the pipeline state.
+    #[allow(clippy::too_many_arguments)]
+    pub fn assemble(
+        strategy: &str,
+        pair: &str,
+        requests: &[Request],
+        pipe: &VirtualPipeline,
+        drafter_gpu: &GpuProfile,
+        n_drafter_nodes: usize,
+        verifier_gpu: &GpuProfile,
+        verifier_gpus: usize,
+        uses_cluster: bool,
+        wall_s: f64,
+        pjrt_wall_s: f64,
+    ) -> Self {
+        let tokens: u64 = requests.iter().map(|r| r.generated.len() as u64).sum();
+        let latencies: Vec<f64> = requests
+            .iter()
+            .filter_map(|r| r.finish_s.map(|f| f - r.arrival_s))
+            .collect();
+        let makespan = pipe.makespan();
+        let per_tok: Vec<f64> = requests
+            .iter()
+            .filter_map(|r| {
+                r.finish_s
+                    .map(|f| (f - r.arrival_s) / r.generated.len().max(1) as f64)
+            })
+            .collect();
+        let ms_per_token = if per_tok.is_empty() {
+            0.0
+        } else {
+            1e3 * per_tok.iter().sum::<f64>() / per_tok.len() as f64
+        };
+        let rounds: u64 = requests.iter().map(|r| r.rounds).sum();
+        let proposed: u64 = requests.iter().map(|r| r.drafts_proposed).sum();
+        let accepted: u64 = requests.iter().map(|r| r.drafts_accepted).sum();
+        let accept_ratio = if rounds == 0 {
+            0.0
+        } else {
+            (accepted + rounds) as f64 / rounds as f64
+        };
+
+        // rent model: provisioned hardware is billed for the whole run
+        let mut rate_per_hr = verifier_gpu.rent_per_hr * verifier_gpus as f64;
+        if uses_cluster {
+            rate_per_hr += drafter_gpu.rent_per_hr * n_drafter_nodes as f64;
+        }
+        let cost_total = rate_per_hr * makespan / 3600.0;
+
+        Self {
+            strategy: strategy.into(),
+            pair: pair.into(),
+            n_requests: requests.len(),
+            tokens,
+            makespan_s: makespan,
+            ms_per_token,
+            throughput_tps: if makespan > 0.0 {
+                tokens as f64 / makespan
+            } else {
+                0.0
+            },
+            accept_ratio,
+            rounds,
+            drafts_proposed: proposed,
+            drafts_accepted: accepted,
+            cluster_busy_s: pipe.cluster_busy,
+            server_busy_s: pipe.server_busy,
+            server_idle_frac: pipe.server_idle_frac(),
+            cluster_idle_frac: pipe.cluster_idle_frac(),
+            cost_total,
+            cost_per_token: if tokens > 0 {
+                cost_total / tokens as f64
+            } else {
+                f64::INFINITY
+            },
+            latencies_s: latencies,
+            wall_s,
+            pjrt_wall_s,
+        }
+    }
+
+    pub fn mean_latency_s(&self) -> f64 {
+        if self.latencies_s.is_empty() {
+            0.0
+        } else {
+            self.latencies_s.iter().sum::<f64>() / self.latencies_s.len() as f64
+        }
+    }
+
+    pub fn p99_latency_s(&self) -> f64 {
+        if self.latencies_s.is_empty() {
+            return 0.0;
+        }
+        let mut v = self.latencies_s.clone();
+        v.sort_by(|a, b| a.total_cmp(b));
+        v[((v.len() as f64 * 0.99) as usize).min(v.len() - 1)]
+    }
+
+    pub fn summary_row(&self) -> String {
+        format!(
+            "{:<10} pair={} n={:<3} tok={:<6} lat={:>8.1} ms/tok thr={:>8.1} tok/s acc={:>4.2} cost/tok=${:.6} idle(srv)={:.0}% wall={:.1}s",
+            self.strategy,
+            self.pair,
+            self.n_requests,
+            self.tokens,
+            self.ms_per_token,
+            self.throughput_tps,
+            self.accept_ratio,
+            self.cost_per_token,
+            self.server_idle_frac * 100.0,
+            self.wall_s,
+        )
+    }
+}

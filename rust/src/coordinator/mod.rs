@@ -1,0 +1,35 @@
+//! L3 coordinator — the paper's system contribution.
+//!
+//! * `router` — adaptive request routing over domain-specialized drafters
+//!   (Eq. 1–3): routing scores from generation confidence × verification-
+//!   aligned accuracy, explore/exploit switching on acceptance length.
+//! * `fusion` — confidence-based token fusion across cooperating drafters
+//!   (Eq. 4, Alg. 1): per-iteration max-confidence selection with feedback.
+//! * `scheduler` — batch assignment minimizing `T_ttl/b + λΓ` (Eq. 5–8).
+//! * `speculation` — adaptive per-request draft budgets (Alg. 2).
+//! * `pipeline` — two-resource virtual-time pipeline (speculation cluster ∥
+//!   verification server) with double-buffered groups.
+//! * `verifier` — greedy longest-prefix acceptance + commit bookkeeping
+//!   (the accept/bonus computation itself is fused into the L1 verify
+//!   kernel; this module owns the state updates).
+//!
+//! Real token-level computation always runs on the PJRT models; timing is
+//! charged by the calibrated cluster model (see `cluster::SimClock`).
+
+pub mod context;
+pub mod fusion;
+pub mod metrics;
+pub mod pipeline;
+pub mod request;
+pub mod router;
+pub mod sampling;
+pub mod scheduler;
+pub mod speculation;
+pub mod verifier;
+
+pub mod serve;
+
+pub use context::ServingContext;
+pub use metrics::RunReport;
+pub use request::{Request, RequestPool};
+pub use serve::CoSine;

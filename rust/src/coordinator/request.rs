@@ -1,0 +1,170 @@
+//! Requests and the request pool (paper Fig. 4: requests are processed
+//! iteratively in fine-grained batches and returned to the pool until
+//! <EOS> or the generation limit).
+
+use std::collections::HashMap;
+
+use crate::runtime::BatchState;
+use crate::workload::TraceRequest;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    /// waiting in the pool, not yet prefetched
+    Queued,
+    /// prefilled, speculating/verifying rounds in flight
+    Active,
+    Finished,
+}
+
+/// Per-drafter sync state: how many committed tokens this drafter's KV
+/// cache holds, plus the logits left by its most recent decode call.
+pub struct DrafterSync {
+    pub state: BatchState,
+    /// committed tokens (prompt excluded) whose KV entries are valid
+    pub synced: usize,
+    /// logits from the last decode (predicting the next draft), if fresh
+    pub logits: Option<Vec<f32>>,
+}
+
+pub struct Request {
+    pub id: u64,
+    pub domain: usize,
+    pub prompt: Vec<i32>,
+    pub max_new_tokens: usize,
+    pub arrival_s: f64,
+
+    pub phase: Phase,
+    /// virtual time at which the request can next be scheduled (arrival,
+    /// then the end of its last verify round)
+    pub ready_at: f64,
+    /// committed output tokens (including bonus tokens)
+    pub generated: Vec<i32>,
+    /// the committed-but-uncached token fed as verify-window slot 0
+    pub pending: Option<i32>,
+    /// target-side KV state (bucket-1 real execution)
+    pub target_state: Option<BatchState>,
+    /// drafter index -> sync state
+    pub drafters: HashMap<usize, DrafterSync>,
+
+    // --- routing bookkeeping (Eq. 1-3) ---
+    /// routing vector M_r (score per drafter)
+    pub routing: Vec<f64>,
+    /// EWMA of recent acceptance length L_acc
+    pub l_acc: f64,
+    /// current per-request draft budget γ_i (Alg. 2)
+    pub gamma: usize,
+
+    // --- metrics ---
+    pub start_serve_s: Option<f64>,
+    pub finish_s: Option<f64>,
+    pub rounds: u64,
+    pub drafts_proposed: u64,
+    pub drafts_accepted: u64,
+}
+
+impl Request {
+    pub fn from_trace(t: &TraceRequest, n_drafters: usize, gamma_init: usize) -> Self {
+        Self {
+            id: t.id,
+            domain: t.domain,
+            prompt: t.prompt.clone(),
+            max_new_tokens: t.max_new_tokens,
+            arrival_s: t.arrival_s,
+            phase: Phase::Queued,
+            ready_at: t.arrival_s,
+            generated: Vec::new(),
+            pending: None,
+            target_state: None,
+            drafters: HashMap::new(),
+            routing: vec![0.5; n_drafters],
+            l_acc: 0.0,
+            gamma: gamma_init,
+            start_serve_s: None,
+            finish_s: None,
+            rounds: 0,
+            drafts_proposed: 0,
+            drafts_accepted: 0,
+        }
+    }
+
+    pub fn tokens_done(&self) -> usize {
+        self.generated.len()
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.max_new_tokens.saturating_sub(self.generated.len())
+    }
+
+    pub fn is_finished(&self) -> bool {
+        self.phase == Phase::Finished
+    }
+
+    /// Commit `accepted` draft tokens plus the bonus token after a verify
+    /// round; `proposed` is the full draft length for acceptance accounting.
+    /// Returns how many tokens were appended.
+    pub fn commit(&mut self, drafts: &[i32], accepted: usize, bonus: i32, proposed: usize) -> usize {
+        let take = accepted.min(drafts.len()).min(self.remaining());
+        self.generated.extend_from_slice(&drafts[..take]);
+        let mut appended = take;
+        if self.remaining() > 0 {
+            self.generated.push(bonus);
+            self.pending = Some(bonus);
+            appended += 1;
+        } else {
+            self.pending = None;
+        }
+        if self.remaining() == 0 {
+            self.phase = Phase::Finished;
+        }
+        self.drafts_proposed += proposed as u64;
+        self.drafts_accepted += take as u64;
+        self.rounds += 1;
+        appended
+    }
+
+    /// Mean accepted drafts per round so far (the paper's "acceptance
+    /// ratio" counts accepted + bonus, i.e. tokens per verify round).
+    pub fn acceptance_ratio(&self) -> f64 {
+        if self.rounds == 0 {
+            return 0.0;
+        }
+        (self.drafts_accepted + self.rounds) as f64 / self.rounds as f64
+    }
+}
+
+/// FIFO pool with arrival gating (for online traces).
+pub struct RequestPool {
+    pub requests: Vec<Request>,
+}
+
+impl RequestPool {
+    pub fn new(requests: Vec<Request>) -> Self {
+        Self { requests }
+    }
+
+    /// Indices of requests available for scheduling at virtual time `now`.
+    pub fn available(&self, now: f64) -> Vec<usize> {
+        self.requests
+            .iter()
+            .enumerate()
+            .filter(|(_, r)| !r.is_finished() && r.arrival_s <= now && r.phase != Phase::Active)
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    pub fn unfinished(&self) -> usize {
+        self.requests.iter().filter(|r| !r.is_finished()).count()
+    }
+
+    /// Earliest arrival among still-queued requests (to advance idle time).
+    pub fn next_arrival_after(&self, now: f64) -> Option<f64> {
+        self.requests
+            .iter()
+            .filter(|r| !r.is_finished() && r.arrival_s > now)
+            .map(|r| r.arrival_s)
+            .fold(None, |acc, t| match acc {
+                None => Some(t),
+                Some(a) => Some(a.min(t)),
+            })
+    }
+}

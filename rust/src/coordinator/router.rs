@@ -1,0 +1,168 @@
+//! Adaptive request routing (paper §4.2, Eq. 1–3).
+//!
+//! Per (request, drafter) routing scores combine the drafter's *generation
+//! confidence* (softmax prob of its proposals, Eq. 2's `c`) with its
+//! *verification-aligned accuracy* (embedding cosine between proposals and
+//! the tokens the target actually committed, Eq. 1's `d`) through a
+//! normalized harmonic mean, EWMA-folded into the routing vector `M_r`.
+//!
+//! Mode switching (Eq. 3): while the request's recent acceptance length
+//! `L_acc` is below τ the router *explores* (low greedy probability —
+//! reallocate slots to underutilized drafters); once acceptance is healthy
+//! it *exploits* (high greedy probability).  NOTE: the paper's Eq. 3 states
+//! α > β with α weighting top-selection in exploration mode, which would
+//! make exploration more greedy than exploitation; we implement the
+//! mechanism the prose describes (explore ⇒ more random) and document the
+//! deviation in DESIGN.md.
+
+use crate::config::RouterConfig;
+use crate::util::rng::Rng;
+
+use super::request::Request;
+
+/// Embedding-space similarity (Eq. 1's cos(H(x), H(x'))): precomputed
+/// normalized embedding rows of the target model.
+pub struct EmbedSim {
+    rows: Vec<Vec<f32>>,
+}
+
+impl EmbedSim {
+    /// `embed` is the (vocab, d) embedding matrix, row-major.
+    pub fn new(embed: &[f32], vocab: usize, d: usize) -> Self {
+        let mut rows = Vec::with_capacity(vocab);
+        for v in 0..vocab {
+            let r = &embed[v * d..(v + 1) * d];
+            let norm = r.iter().map(|x| x * x).sum::<f32>().sqrt().max(1e-9);
+            rows.push(r.iter().map(|x| x / norm).collect());
+        }
+        Self { rows }
+    }
+
+    pub fn cos(&self, a: i32, b: i32) -> f32 {
+        if a == b {
+            return 1.0;
+        }
+        let (ra, rb) = (&self.rows[a as usize], &self.rows[b as usize]);
+        ra.iter().zip(rb).map(|(x, y)| x * y).sum()
+    }
+}
+
+/// One drafter's contribution to a finished round, used to update M_r.
+pub struct RoundFeedback {
+    pub drafter: usize,
+    /// (confidence, proposed token) per draft position
+    pub proposals: Vec<(f32, i32)>,
+}
+
+pub struct Router {
+    pub cfg: RouterConfig,
+    rng: Rng,
+}
+
+impl Router {
+    pub fn new(cfg: RouterConfig, seed: u64) -> Self {
+        Self {
+            cfg,
+            rng: Rng::seed_from_u64(seed),
+        }
+    }
+
+    /// Eq. 2: normalized harmonic mean of confidence and accuracy.
+    pub fn score(c: f64, d: f64) -> f64 {
+        let c = c.clamp(1e-6, 1.0 - 1e-6);
+        let d = d.clamp(1e-6, 1.0 - 1e-6);
+        (c * d) / (c * d + (1.0 - c) * (1.0 - d))
+    }
+
+    /// Update the request's routing vector from a verify outcome.
+    ///
+    /// `committed` = tokens actually committed this round (accepted drafts,
+    /// bonus excluded); `accept_len` = number of accepted drafts (Eq. 1's
+    /// L_acc cut-off); `bonus` = the target's own token at the rejection
+    /// position.
+    ///
+    /// Deviation from Eq. 1/2 (documented in DESIGN.md): the verify outcome
+    /// also reveals the correct token *at* the cut (the bonus token), so we
+    /// score that position too, and we normalize over the positions with
+    /// ground truth instead of all K — otherwise zero-accept rounds drive
+    /// every drafter's score toward zero and the router cannot separate
+    /// specialists from stragglers.
+    pub fn update(
+        &mut self,
+        req: &mut Request,
+        feedback: &[RoundFeedback],
+        committed: &[i32],
+        accept_len: usize,
+        bonus: i32,
+        sim: &EmbedSim,
+    ) {
+        for fb in feedback {
+            if fb.proposals.is_empty() {
+                continue;
+            }
+            let mut m = 0.0;
+            let mut scored = 0usize;
+            for (i, (c, tok)) in fb.proposals.iter().enumerate() {
+                let expected = if i < accept_len && i < committed.len() {
+                    committed[i]
+                } else if i == accept_len {
+                    bonus
+                } else {
+                    break; // no ground truth beyond the cut (Eq. 1's 0)
+                };
+                let d = sim.cos(expected, *tok) as f64;
+                m += Self::score(*c as f64, d.max(0.0));
+                scored += 1;
+            }
+            if scored == 0 {
+                continue;
+            }
+            m /= scored as f64;
+            let e = self.cfg.ewma;
+            req.routing[fb.drafter] = (1.0 - e) * req.routing[fb.drafter] + e * m;
+        }
+        let e = self.cfg.ewma;
+        req.l_acc = (1.0 - e) * req.l_acc + e * accept_len as f64;
+    }
+
+    /// Eq. 3: choose `k` drafters for the request.
+    pub fn route(&mut self, req: &Request, n_drafters: usize, k: usize) -> Vec<usize> {
+        let k = k.min(n_drafters);
+        if !self.cfg.enabled {
+            // ablation: uniform random assignment
+            return self.random_subset(n_drafters, k);
+        }
+        let greedy_p = if req.l_acc < self.cfg.tau {
+            self.cfg.alpha // explore: mostly random
+        } else {
+            self.cfg.beta // exploit: mostly top-scoring
+        };
+        let mut chosen: Vec<usize> = Vec::with_capacity(k);
+        let mut remaining: Vec<usize> = (0..n_drafters).collect();
+        // rank remaining by routing score, descending
+        remaining.sort_by(|&a, &b| {
+            req.routing[b]
+                .partial_cmp(&req.routing[a])
+                .unwrap_or(std::cmp::Ordering::Equal)
+        });
+        for _ in 0..k {
+            if remaining.is_empty() {
+                break;
+            }
+            let idx = if self.rng.bool(greedy_p) {
+                0 // T(M_r): top-scoring operator
+            } else {
+                self.rng.usize(remaining.len()) // R(M_r)
+            };
+            chosen.push(remaining.remove(idx));
+        }
+        chosen
+    }
+
+    fn random_subset(&mut self, n: usize, k: usize) -> Vec<usize> {
+        let mut idx: Vec<usize> = (0..n).collect();
+        self.rng.partial_shuffle(&mut idx, k);
+        idx.truncate(k.min(n));
+        idx
+    }
+}

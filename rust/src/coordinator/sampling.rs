@@ -1,0 +1,40 @@
+//! Logit post-processing on the coordinator: softmax confidences, greedy
+//! argmax, and temperature sampling (the paper evaluates greedy; stochastic
+//! sampling is kept for completeness).
+
+/// Greedy argmax over one vocab row.
+pub fn argmax(logits: &[f32]) -> i32 {
+    let mut best = 0usize;
+    let mut best_v = f32::NEG_INFINITY;
+    for (i, &v) in logits.iter().enumerate() {
+        if v > best_v {
+            best_v = v;
+            best = i;
+        }
+    }
+    best as i32
+}
+
+/// Softmax probability of the argmax token (the drafter's "generation
+/// confidence" P(x) of Eq. 2).
+pub fn top_prob(logits: &[f32]) -> (i32, f32) {
+    let t = argmax(logits);
+    let m = logits[t as usize];
+    let denom: f32 = logits.iter().map(|&v| (v - m).exp()).sum();
+    (t, 1.0 / denom)
+}
+
+/// Full softmax (used by stochastic verification and tests).
+pub fn softmax(logits: &[f32]) -> Vec<f32> {
+    let m = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let exps: Vec<f32> = logits.iter().map(|&v| (v - m).exp()).collect();
+    let s: f32 = exps.iter().sum();
+    exps.iter().map(|e| e / s).collect()
+}
+
+/// Probability of a specific token under the softmax of `logits`.
+pub fn prob_of(logits: &[f32], token: i32) -> f32 {
+    let m = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let denom: f32 = logits.iter().map(|&v| (v - m).exp()).sum();
+    ((logits[token as usize] - m).exp()) / denom
+}

@@ -1,0 +1,183 @@
+//! Batch scheduling (paper §4.3, Eq. 5–8).
+//!
+//! Each iteration the scheduler selects which pool requests form the next
+//! batch, minimizing `T_ttl/b + λΓ` subject to the latency, memory, and
+//! verified-token-budget constraints.  Batched execution latency is
+//! dominated by the longest request and the batch size (Eq. 5), so the
+//! solver groups length-compatible requests.  We solve the (small) integer
+//! program exactly along the sorted-by-length frontier: for each candidate
+//! batch size b, the optimal choice is a contiguous prefix of the
+//! shortest-first ordering — evaluate every (prefix, bucket) pair and take
+//! the arg-min.
+
+use crate::config::SchedulerConfig;
+
+use super::context::ServingContext;
+
+/// A scheduling candidate (immutable snapshot of a pool request).
+#[derive(Debug, Clone)]
+pub struct Candidate {
+    /// pool index
+    pub idx: usize,
+    /// current context length (prompt + generated)
+    pub ctx_len: usize,
+    /// requested draft budget γ_i
+    pub gamma: usize,
+    /// virtual time the request becomes ready
+    pub ready_at: f64,
+    pub arrival_s: f64,
+}
+
+#[derive(Debug, Clone)]
+pub struct Assignment {
+    /// chosen pool indices
+    pub batch: Vec<usize>,
+    /// per-chosen-request draft budgets after Γ_max trimming
+    pub gammas: Vec<usize>,
+    /// predicted draft/verify latencies (seconds, modeled)
+    pub t_draft: f64,
+    pub t_verify: f64,
+    pub objective: f64,
+}
+
+pub struct Scheduler {
+    pub cfg: SchedulerConfig,
+    /// enable the Eq. 8 solver; false = plain FIFO up-to-max-batch
+    pub optimize: bool,
+}
+
+impl Scheduler {
+    pub fn new(cfg: SchedulerConfig, optimize: bool) -> Self {
+        Self { cfg, optimize }
+    }
+
+    /// Predicted phase latencies for a prospective batch.
+    fn predict(
+        &self,
+        ctx: &ServingContext,
+        chosen: &[&Candidate],
+        gammas: &[usize],
+        k_nodes: usize,
+    ) -> (f64, f64) {
+        let b = chosen.len();
+        let crit_ctx = chosen.iter().map(|c| c.ctx_len).max().unwrap_or(1);
+        let gamma_max = gammas.iter().copied().max().unwrap_or(1);
+        // drafting spreads across the speculation cluster's nodes
+        let nodes = ctx.cfg.cluster.n_drafter_nodes.max(1);
+        let per_node_b = (b * k_nodes).div_ceil(nodes).max(1);
+        let t_draft = ctx.t_draft_s(per_node_b, gamma_max, crit_ctx)
+            + gamma_max as f64 * ctx.network.fusion_round_s(k_nodes, b);
+        let big_gamma: usize = gammas.iter().map(|g| g + 1).sum();
+        let g_eff = (big_gamma as f64 / b as f64).ceil().max(1.0) as usize;
+        let t_verify = ctx.t_verify_s(b, g_eff, crit_ctx)
+            + ctx.network.verify_exchange_s(b, ctx.constants().g1);
+        (t_draft, t_verify)
+    }
+
+    /// Eq. 8 objective for a prospective batch.
+    fn objective(&self, t_draft: f64, t_verify: f64, b: usize, big_gamma: usize) -> f64 {
+        let t_ttl = t_draft + t_verify; // Eq. 7: max(T_ssm) + T_llm
+        t_ttl / b as f64 + self.cfg.lambda * big_gamma as f64
+    }
+
+    /// Choose the next batch from `avail` (must be non-empty).
+    pub fn assign(
+        &self,
+        ctx: &ServingContext,
+        avail: &[Candidate],
+        k_nodes: usize,
+    ) -> Assignment {
+        let max_b = self
+            .cfg
+            .max_batch
+            .min(*ctx.constants().batch_buckets.iter().max().unwrap_or(&16));
+        if !self.optimize {
+            // FIFO: oldest-arrival first, up to max batch
+            let mut sorted: Vec<&Candidate> = avail.iter().collect();
+            sorted.sort_by(|a, b| a.arrival_s.total_cmp(&b.arrival_s));
+            sorted.truncate(max_b);
+            let mut gammas: Vec<usize> = sorted.iter().map(|c| c.gamma).collect();
+            trim_gammas(&mut gammas, self.cfg.gamma_total_max);
+            let (t_d, t_v) = self.predict(ctx, &sorted, &gammas, k_nodes);
+            let big_gamma = gammas.iter().map(|g| g + 1).sum();
+            return Assignment {
+                batch: sorted.iter().map(|c| c.idx).collect(),
+                gammas: gammas.clone(),
+                t_draft: t_d,
+                t_verify: t_v,
+                objective: self.objective(t_d, t_v, sorted.len(), big_gamma),
+            };
+        }
+
+        // Eq. 8 solver: shortest-context-first frontier × batch size
+        let mut sorted: Vec<&Candidate> = avail.iter().collect();
+        sorted.sort_by(|a, b| {
+            a.ctx_len
+                .cmp(&b.ctx_len)
+                .then(a.arrival_s.total_cmp(&b.arrival_s))
+        });
+        let mut best: Option<Assignment> = None;
+        for b in 1..=sorted.len().min(max_b) {
+            let chosen = &sorted[..b];
+            let mut gammas: Vec<usize> = chosen.iter().map(|c| c.gamma).collect();
+            trim_gammas(&mut gammas, self.cfg.gamma_total_max);
+            // memory constraint (Eq. 7): modeled KV footprint
+            let mem_mb: f64 = chosen
+                .iter()
+                .map(|c| {
+                    ctx.modeled_target.kv_bytes_per_token * c.ctx_len as f64 / 1e6
+                })
+                .sum();
+            if mem_mb > self.cfg.m_max_mb {
+                break; // prefixes only grow
+            }
+            let (t_d, t_v) = self.predict(ctx, chosen, &gammas, k_nodes);
+            if (t_d + t_v) * 1e3 > self.cfg.t_max_ms && b > 1 {
+                continue;
+            }
+            let big_gamma: usize = gammas.iter().map(|g| g + 1).sum();
+            let obj = self.objective(t_d, t_v, b, big_gamma);
+            if best.as_ref().map_or(true, |a| obj < a.objective) {
+                best = Some(Assignment {
+                    batch: chosen.iter().map(|c| c.idx).collect(),
+                    gammas,
+                    t_draft: t_d,
+                    t_verify: t_v,
+                    objective: obj,
+                });
+            }
+        }
+        best.unwrap_or_else(|| {
+            // fall back to the single oldest request
+            let c = &sorted[0];
+            Assignment {
+                batch: vec![c.idx],
+                gammas: vec![c.gamma],
+                t_draft: 0.0,
+                t_verify: 0.0,
+                objective: f64::INFINITY,
+            }
+        })
+    }
+}
+
+/// Alg. 2 AdaptiveSpeculation inner loop: enforce Σ γ_i ≤ Γ_max by
+/// repeatedly decrementing the largest budget.
+pub fn trim_gammas(gammas: &mut [usize], gamma_total_max: usize) {
+    loop {
+        let sum: usize = gammas.iter().sum();
+        if sum <= gamma_total_max {
+            return;
+        }
+        let j = gammas
+            .iter()
+            .enumerate()
+            .max_by_key(|(_, &g)| g)
+            .map(|(i, _)| i)
+            .unwrap();
+        if gammas[j] <= 1 {
+            return; // γ_i >= 1 constraint (Eq. 6)
+        }
+        gammas[j] -= 1;
+    }
+}

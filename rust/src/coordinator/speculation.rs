@@ -1,0 +1,66 @@
+//! Adaptive speculation control (paper §4.3, Alg. 2).
+//!
+//! Balances the drafting and verification stages of the pipeline in real
+//! time: when the verification server idles (drafting is the bottleneck)
+//! the controller grows drafter participation and per-request draft
+//! budgets so each verify round carries more tokens; when the server is
+//! overloaded it shrinks them.  Together with `scheduler::trim_gammas`
+//! (the Σγ ≤ Γ_max inner loop) this implements Algorithm 2's
+//! AdaptiveSpeculation.
+
+use crate::config::SpeculationConfig;
+
+#[derive(Debug, Clone)]
+pub struct AdaptiveSpeculation {
+    pub cfg: SpeculationConfig,
+    /// smoothed draft/verify latency ratio
+    ratio_ewma: f64,
+    /// current cooperative node count per request
+    pub k_nodes: usize,
+    k_max: usize,
+}
+
+impl AdaptiveSpeculation {
+    pub fn new(cfg: SpeculationConfig, k_init: usize, k_max: usize) -> Self {
+        Self {
+            cfg,
+            ratio_ewma: 1.0,
+            k_nodes: k_init.max(1),
+            k_max: k_max.max(1),
+        }
+    }
+
+    /// Feed one iteration's modeled (t_draft, t_verify); returns the new
+    /// recommended per-request γ adjustment: +1, 0 or -1.
+    pub fn observe(&mut self, t_draft: f64, t_verify: f64) -> i32 {
+        let ratio = if t_verify > 0.0 {
+            t_draft / t_verify
+        } else {
+            1.0
+        };
+        self.ratio_ewma = 0.7 * self.ratio_ewma + 0.3 * ratio;
+        if self.ratio_ewma < 0.8 {
+            // server is the bottleneck relative to drafting: the cluster
+            // idles — grow participation so each verify carries more
+            if self.k_nodes < self.k_max {
+                self.k_nodes += 1;
+            }
+            1
+        } else if self.ratio_ewma > 1.25 {
+            // drafting lags; verification server idles between rounds —
+            // shed speculative work to restore cadence
+            if self.k_nodes > 1 {
+                self.k_nodes -= 1;
+            }
+            -1
+        } else {
+            0
+        }
+    }
+
+    /// Apply a γ adjustment to a request budget.
+    pub fn adjust_gamma(&self, gamma: usize, delta: i32) -> usize {
+        let g = gamma as i64 + delta as i64;
+        g.clamp(self.cfg.gamma_min as i64, self.cfg.gamma_max as i64) as usize
+    }
+}

@@ -1,0 +1,119 @@
+//! Verification-side state management: run the target's fused verify
+//! entrypoint over a request's draft window, commit accepted tokens, and
+//! keep the target KV bookkeeping consistent.
+//!
+//! The greedy accept-length/bonus computation itself runs *inside* the AOT
+//! verify executable (L1 fused kernel, kernels/verify.py); this module owns
+//! everything around it.
+
+use anyhow::Result;
+use std::time::Duration;
+
+use super::context::ServingContext;
+use super::request::Request;
+
+pub struct VerifyResult {
+    /// number of accepted draft tokens
+    pub accepted: usize,
+    /// committed tokens this round (accepted drafts, bonus excluded)
+    pub committed_drafts: Vec<i32>,
+    /// tokens appended to the request (accepted + bonus)
+    pub appended: usize,
+    /// generated length before this round (for drafter resync)
+    pub before_len: usize,
+    pub wall: Duration,
+}
+
+/// Ensure the request has a prefilled target state and a pending token.
+pub fn ensure_target(ctx: &ServingContext, req: &mut Request) -> Result<Duration> {
+    if req.target_state.is_some() {
+        return Ok(Duration::ZERO);
+    }
+    let (out, state) = ctx.target.prefill(&[req.prompt.clone()])?;
+    let first = super::sampling::argmax(&out.logits);
+    req.target_state = Some(state);
+    // the prefill-predicted token is committed immediately (it is the
+    // target's own sample) and becomes the verify window's slot 0
+    req.generated.push(first);
+    req.pending = Some(first);
+    Ok(out.wall)
+}
+
+/// Verify `drafts` for the request and commit the outcome.
+pub fn verify_and_commit(
+    ctx: &ServingContext,
+    req: &mut Request,
+    drafts: &[i32],
+) -> Result<VerifyResult> {
+    let c = ctx.constants();
+    let g1 = c.g1;
+    let gamma = drafts.len().min(c.gamma_max);
+    let pending = req.pending.expect("request has a pending token");
+    let before_len = req.generated.len();
+
+    let mut window = vec![0i32; g1];
+    window[0] = pending;
+    window[1..1 + gamma].copy_from_slice(&drafts[..gamma]);
+
+    let state = req.target_state.as_mut().expect("target state");
+    let out = ctx.target.verify(state, &window, &[gamma as i32])?;
+    let accepted = out.accept[0].max(0) as usize;
+    let bonus = out.bonus[0];
+
+    // advance the target cache past slot 0 + accepted drafts
+    state.advance(0, accepted as i32 + 1);
+
+    let committed_drafts: Vec<i32> = drafts[..accepted.min(drafts.len())].to_vec();
+    let appended = req.commit(&committed_drafts, accepted, bonus, gamma);
+    Ok(VerifyResult {
+        accepted,
+        committed_drafts,
+        appended,
+        before_len,
+        wall: out.wall,
+    })
+}
+
+/// Verify a path WITHOUT committing (SpecInfer tree evaluation: every
+/// side path is scored, only the winner is committed).  KV entries written
+/// beyond `cur_len` are scratch and get overwritten by the committing
+/// verify of the winning path.
+pub fn dry_verify(
+    ctx: &ServingContext,
+    req: &mut Request,
+    drafts: &[i32],
+) -> Result<VerifyResult> {
+    let c = ctx.constants();
+    let g1 = c.g1;
+    let gamma = drafts.len().min(c.gamma_max);
+    let pending = req.pending.expect("request has a pending token");
+    let mut window = vec![0i32; g1];
+    window[0] = pending;
+    window[1..1 + gamma].copy_from_slice(&drafts[..gamma]);
+    let state = req.target_state.as_mut().expect("target state");
+    let out = ctx.target.verify(state, &window, &[gamma as i32])?;
+    Ok(VerifyResult {
+        accepted: out.accept[0].max(0) as usize,
+        committed_drafts: Vec::new(),
+        appended: 0,
+        before_len: req.generated.len(),
+        wall: out.wall,
+    })
+}
+
+/// Pure-target decode of one token (vLLM baseline path, also used to
+/// finish requests whose remaining budget is too small to speculate).
+pub fn target_decode_one(ctx: &ServingContext, req: &mut Request) -> Result<Duration> {
+    let pending = req.pending.expect("pending token");
+    let state = req.target_state.as_mut().expect("target state");
+    let out = ctx.target.decode(state, &[pending])?;
+    let next = super::sampling::argmax(&out.logits);
+    req.generated.push(next);
+    req.pending = Some(next);
+    if req.remaining() == 0 {
+        req.phase = super::request::Phase::Finished;
+        req.pending = None;
+    }
+    req.rounds += 1;
+    Ok(out.wall)
+}

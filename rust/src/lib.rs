@@ -1,0 +1,26 @@
+//! CoSine — collaborative speculative inference for efficient LLM serving.
+//!
+//! A three-layer reproduction of the CoSine paper (CS.DC 2025):
+//!
+//! * **L1/L2** (build time, Python): Pallas attention + fused-verify kernels
+//!   inside a JAX transformer, AOT-lowered to HLO text under `artifacts/`.
+//! * **L3** (this crate): the paper's system contribution — adaptive request
+//!   routing across domain-specialized drafters, confidence-based token
+//!   fusion, batch scheduling and adaptive speculation over a pipelined
+//!   draft/verify workflow — plus the substrates it needs (PJRT runtime,
+//!   heterogeneous-cluster hardware model, workload generators, baselines).
+//!
+//! Python never runs on the request path: the `cosine` binary loads
+//! `artifacts/` (HLO text + weights blob + manifest) and serves.
+
+pub mod baselines;
+pub mod bench;
+pub mod cluster;
+pub mod config;
+pub mod coordinator;
+pub mod runtime;
+pub mod util;
+pub mod workload;
+
+pub use config::CosineConfig;
+pub use runtime::engine::Engine;

@@ -1,0 +1,80 @@
+//! CoSine CLI — leader entrypoint.
+//!
+//! Subcommands map 1:1 to the paper's experiments (DESIGN.md §5):
+//!   smoke        runtime round-trip check
+//!   serve        run the CoSine serving loop on a synthetic trace
+//!   offline      Fig. 6 batch-size sweep (all strategies)
+//!   online       Fig. 7 arrival-rate traces
+//!   motivation   Fig. 2a/2b/3b profiles
+//!   table2       Table 2 / Fig. 3a drafter-domain acceptance matrix
+//!   cost         Table 1 / Table 3 cost-efficiency report
+//!   ablation     component ablation (Fig. 8)
+//!
+//! Global options: --artifacts DIR  --pair l|q  --config FILE.json
+
+use anyhow::Result;
+use cosine::util::cli::Args;
+
+mod cmd;
+
+const USAGE: &str = "\
+cosine — collaborative speculative inference (CoSine reproduction)
+
+USAGE: cosine [--artifacts DIR] [--pair l|q] [--config FILE.json] <command> [options]
+
+COMMANDS:
+  smoke                              runtime round-trip check
+  serve      [--requests N]          full CoSine stack on a synthetic trace
+  offline    [--batches 1,2,4,8,16] [--requests N] [--strategies a,b,..]
+                                     Fig. 6 latency/throughput sweep
+  online     [--modes low,high,volatile] [--minutes M]
+                                     Fig. 7 online serving
+  motivation [--figs fig2a,fig2b,fig3b]
+                                     Fig. 2/3 motivation profiles
+  table2     [--prompts-per-domain N]
+                                     Table 2 acceptance matrix
+  cost       [--table1]              Table 1 + Table 3 cost efficiency
+  ablation   [--nodes 1,2,4,6,8]     Fig. 8 component ablation
+";
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&argv)?;
+
+    let mut cfg = match args.get("config") {
+        Some(p) => cosine::CosineConfig::load(std::path::Path::new(p))?,
+        None => cosine::CosineConfig::default(),
+    };
+    if let Some(a) = args.get("artifacts") {
+        cfg.artifacts_dir = a.to_string();
+    }
+    if let Some(p) = args.get("pair") {
+        cfg.pair = p.to_string();
+    }
+
+    match args.subcommand.as_deref() {
+        Some("smoke") => cmd::smoke::run(&cfg),
+        Some("serve") => cmd::serve::run(&cfg, args.get_usize("requests", 16)?),
+        Some("offline") => cmd::offline::run(
+            &cfg,
+            &args.get_or("batches", "1,2,4,8,16"),
+            args.get_usize("requests", 32)?,
+            &args.get_or("strategies", "cosine,vllm,vanilla,pipeinfer,specinfer"),
+        ),
+        Some("online") => cmd::online::run(
+            &cfg,
+            &args.get_or("modes", "low,high,volatile"),
+            args.get_f64("minutes", 240.0)?,
+        ),
+        Some("motivation") => {
+            cmd::motivation::run(&cfg, &args.get_or("figs", "fig2a,fig2b,fig3b"))
+        }
+        Some("table2") => cmd::table2::run(&cfg, args.get_usize("prompts-per-domain", 8)?),
+        Some("cost") => cmd::cost::run(&cfg, args.has_flag("table1")),
+        Some("ablation") => cmd::ablation::run(&cfg, &args.get_or("nodes", "1,2,4,6,8")),
+        _ => {
+            eprint!("{USAGE}");
+            std::process::exit(2);
+        }
+    }
+}

@@ -1,0 +1,347 @@
+//! PJRT engine: compiles and caches the AOT-lowered executables, owns the
+//! weights blob, and provides thread-shareable handles.
+//!
+//! Thread-safety note: the `xla` crate's handles hold raw pointers and are
+//! not `Send`/`Sync` by declaration, but the underlying PJRT CPU client,
+//! loaded executables and immutable literals are thread-safe for concurrent
+//! *use* (execution / read-only access).  We wrap them in newtypes with
+//! `unsafe impl Send + Sync`, and never mutate a literal after creation.
+
+use anyhow::{Context, Result};
+use std::sync::Mutex;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::time::Instant;
+
+use super::manifest::Manifest;
+use super::weights::WeightStore;
+
+/// Immutable, shareable PJRT literal (read-only after creation).
+pub struct SharedLiteral(pub xla::Literal);
+// SAFETY: literals are never mutated after creation; XLA literal reads are
+// thread-safe.
+unsafe impl Send for SharedLiteral {}
+unsafe impl Sync for SharedLiteral {}
+
+/// Shareable compiled executable.
+pub struct Exe(pub xla::PjRtLoadedExecutable);
+// SAFETY: PJRT loaded executables support concurrent Execute calls.
+unsafe impl Send for Exe {}
+unsafe impl Sync for Exe {}
+
+/// Shareable device buffer (weights stay resident; KV caches round-trip
+/// through device memory without touching the host on the fast path).
+///
+/// IMPORTANT: the TFRT CPU client zero-copies host memory into buffers
+/// (`kImmutableZeroCopy`), so every buffer carries its host backing store —
+/// dropping the source Vec/Literal while the buffer lives is a
+/// use-after-free.
+pub struct SharedBuffer {
+    pub buf: xla::PjRtBuffer,
+    _keep: Backing,
+}
+
+/// Host memory kept alive for the buffer's lifetime.
+enum Backing {
+    None,
+    F32(#[allow(dead_code)] Vec<f32>),
+    I32(#[allow(dead_code)] Vec<i32>),
+    Lit(#[allow(dead_code)] xla::Literal),
+}
+
+impl SharedBuffer {
+    /// Wrap a device-owned buffer (e.g. an execute output) that has no
+    /// host aliasing.
+    pub fn device_owned(buf: xla::PjRtBuffer) -> Self {
+        Self { buf, _keep: Backing::None }
+    }
+}
+
+// SAFETY: PJRT buffers are immutable once filled; reads are thread-safe.
+unsafe impl Send for SharedBuffer {}
+unsafe impl Sync for SharedBuffer {}
+
+struct Client(xla::PjRtClient);
+// SAFETY: the PJRT CPU client is thread-safe.
+unsafe impl Send for Client {}
+unsafe impl Sync for Client {}
+
+pub struct Engine {
+    client: Client,
+    dir: PathBuf,
+    pub manifest: Manifest,
+    pub weights: WeightStore,
+    exe_cache: Mutex<HashMap<(String, String, usize), Arc<Exe>>>,
+    weight_cache: Mutex<HashMap<String, Arc<Vec<SharedLiteral>>>>,
+    weight_buf_cache: Mutex<HashMap<String, Arc<Vec<SharedBuffer>>>>,
+    /// cumulative wall time spent inside PJRT execute, for profiling
+    pub exec_wall_ns: std::sync::atomic::AtomicU64,
+}
+
+impl Engine {
+    /// Load artifacts from a directory (manifest + weights; executables are
+    /// compiled lazily on first use).
+    pub fn load(dir: &Path) -> Result<Self> {
+        let manifest = Manifest::load(dir)?;
+        let weights = WeightStore::load(&dir.join(&manifest.weights))?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow::anyhow!("creating PJRT CPU client: {e:?}"))?;
+        Ok(Self {
+            client: Client(client),
+            dir: dir.to_path_buf(),
+            manifest,
+            weights,
+            exe_cache: Mutex::new(HashMap::new()),
+            weight_cache: Mutex::new(HashMap::new()),
+            weight_buf_cache: Mutex::new(HashMap::new()),
+            exec_wall_ns: std::sync::atomic::AtomicU64::new(0),
+        })
+    }
+
+    pub fn constants(&self) -> &super::manifest::Constants {
+        &self.manifest.constants
+    }
+
+    /// Raw PJRT client access (probes/benches).
+    pub fn client_ref(&self) -> &xla::PjRtClient {
+        &self.client.0
+    }
+
+    /// Get (compiling if needed) the executable for (arch, entry, bucket).
+    pub fn executable(&self, arch: &str, entry: &str, bucket: usize) -> Result<Arc<Exe>> {
+        let key = (arch.to_string(), entry.to_string(), bucket);
+        if let Some(e) = self.exe_cache.lock().unwrap().get(&key) {
+            return Ok(e.clone());
+        }
+        // compile outside the lock (compilation can take a while)
+        let spec = self.manifest.entry_spec(arch, entry, bucket)?;
+        let path = self.dir.join(&spec.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .map_err(|e| anyhow::anyhow!("parsing HLO text {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .0
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compiling {}: {e:?}", path.display()))?;
+        let exe = Arc::new(Exe(exe));
+        self.exe_cache.lock().unwrap().entry(key).or_insert_with(|| exe.clone());
+        Ok(exe)
+    }
+
+    /// Weight literals for a model instance, in entrypoint argument order.
+    pub fn instance_weights(&self, instance: &str) -> Result<Arc<Vec<SharedLiteral>>> {
+        if let Some(w) = self.weight_cache.lock().unwrap().get(instance) {
+            return Ok(w.clone());
+        }
+        let inst = self
+            .manifest
+            .instances
+            .get(instance)
+            .with_context(|| format!("unknown model instance {instance}"))?;
+        let arch = self
+            .manifest
+            .archs
+            .get(&inst.arch)
+            .with_context(|| format!("unknown arch {}", inst.arch))?;
+        let mut lits = Vec::with_capacity(arch.params.len());
+        for p in &arch.params {
+            lits.push(SharedLiteral(
+                self.weights.literal(&format!("{instance}/{}", p.name))?,
+            ));
+        }
+        let lits = Arc::new(lits);
+        self.weight_cache
+            .lock()
+            .unwrap()
+            .entry(instance.to_string())
+            .or_insert_with(|| lits.clone());
+        Ok(lits)
+    }
+
+    /// Weight device buffers for a model instance, uploaded once and kept
+    /// resident (the hot-path fix: weights are never re-copied per call).
+    pub fn instance_weight_buffers(&self, instance: &str) -> Result<Arc<Vec<SharedBuffer>>> {
+        if let Some(w) = self.weight_buf_cache.lock().unwrap().get(instance) {
+            return Ok(w.clone());
+        }
+        let inst = self
+            .manifest
+            .instances
+            .get(instance)
+            .with_context(|| format!("unknown model instance {instance}"))?;
+        let arch = self
+            .manifest
+            .archs
+            .get(&inst.arch)
+            .with_context(|| format!("unknown arch {}", inst.arch))?;
+        let mut bufs = Vec::with_capacity(arch.params.len());
+        for p in &arch.params {
+            let name = format!("{instance}/{}", p.name);
+            let (meta, _) = self.weights.bytes(&name)?;
+            // NOTE: use the typed upload — the crate's raw-bytes variant
+            // passes ElementType (not PrimitiveType) to the C API and
+            // silently creates an F16 buffer.
+            anyhow::ensure!(meta.dtype == "f32", "weights must be f32, got {}", meta.dtype);
+            let shape = meta.shape.clone();
+            let data = self.weights.tensor_f32(&name)?;
+            let buf = self
+                .client
+                .0
+                .buffer_from_host_buffer(&data, &shape, None)
+                .map_err(|e| anyhow::anyhow!("uploading {}: {e:?}", p.name))?;
+            bufs.push(SharedBuffer { buf, _keep: Backing::F32(data) });
+        }
+        let bufs = Arc::new(bufs);
+        self.weight_buf_cache
+            .lock()
+            .unwrap()
+            .entry(instance.to_string())
+            .or_insert_with(|| bufs.clone());
+        Ok(bufs)
+    }
+
+    /// Upload an i32 tensor to the device (keeps the host copy alive).
+    pub fn upload_i32(&self, data: &[i32], dims: &[usize]) -> Result<SharedBuffer> {
+        let owned = data.to_vec();
+        let buf = self
+            .client
+            .0
+            .buffer_from_host_buffer(&owned, dims, None)
+            .map_err(|e| anyhow::anyhow!("upload_i32: {e:?}"))?;
+        Ok(SharedBuffer { buf, _keep: Backing::I32(owned) })
+    }
+
+    /// Read an f32 device buffer back to the host.  (Via literal: the TFRT
+    /// CPU plugin does not implement CopyRawToHost.)
+    pub fn read_f32(&self, buf: &SharedBuffer, len: usize) -> Result<Vec<f32>> {
+        let lit = buf
+            .buf
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("read_f32 to_literal: {e:?}"))?;
+        let v = lit
+            .to_vec::<f32>()
+            .map_err(|e| anyhow::anyhow!("read_f32 to_vec: {e:?}"))?;
+        anyhow::ensure!(v.len() >= len, "read_f32: buffer shorter than {len}");
+        Ok(v)
+    }
+
+    /// Read an i32 device buffer back to the host.
+    pub fn read_i32(&self, buf: &SharedBuffer, len: usize) -> Result<Vec<i32>> {
+        let lit = buf
+            .buf
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("read_i32 to_literal: {e:?}"))?;
+        let v = lit
+            .to_vec::<i32>()
+            .map_err(|e| anyhow::anyhow!("read_i32 to_vec: {e:?}"))?;
+        anyhow::ensure!(v.len() >= len, "read_i32: buffer shorter than {len}");
+        Ok(v)
+    }
+
+    /// Execute on device buffers; returns per-output device buffers.
+    ///
+    /// `expected_outputs` disambiguates the two PJRT output conventions:
+    /// if the runtime hands back one buffer for a multi-output computation
+    /// (tuple root, untuple_result=false), we decompose via a host literal
+    /// and re-upload — the slow fallback, exercised only if the plugin does
+    /// not untuple.
+    pub fn run_b(
+        &self,
+        exe: &Exe,
+        args: &[&xla::PjRtBuffer],
+        expected_outputs: usize,
+    ) -> Result<Vec<SharedBuffer>> {
+        let t0 = Instant::now();
+        let mut out = exe
+            .0
+            .execute_b(args)
+            .map_err(|e| anyhow::anyhow!("execute_b: {e:?}"))?;
+        anyhow::ensure!(!out.is_empty() && !out[0].is_empty(), "empty execute output");
+        let bufs = out.swap_remove(0);
+        let res = if bufs.len() == expected_outputs {
+            bufs.into_iter().map(SharedBuffer::device_owned).collect()
+        } else if bufs.len() == 1 {
+            let mut lit = bufs[0]
+                .to_literal_sync()
+                .map_err(|e| anyhow::anyhow!("to_literal: {e:?}"))?;
+            let lits = lit
+                .decompose_tuple()
+                .map_err(|e| anyhow::anyhow!("decompose: {e:?}"))?;
+            anyhow::ensure!(
+                lits.len() == expected_outputs,
+                "expected {expected_outputs} outputs, tuple has {}",
+                lits.len()
+            );
+            let mut v = Vec::with_capacity(lits.len());
+            for l in lits {
+                let b = self
+                    .client
+                    .0
+                    .buffer_from_host_literal(None, &l)
+                    .map_err(|e| anyhow::anyhow!("re-upload: {e:?}"))?;
+                // keep the literal alive: BufferFromHostLiteral may alias it
+                v.push(SharedBuffer { buf: b, _keep: Backing::Lit(l) });
+            }
+            v
+        } else {
+            anyhow::bail!(
+                "unexpected output arity {} (expected {expected_outputs})",
+                bufs.len()
+            );
+        };
+        self.exec_wall_ns.fetch_add(
+            t0.elapsed().as_nanos() as u64,
+            std::sync::atomic::Ordering::Relaxed,
+        );
+        Ok(res)
+    }
+
+    /// Execute an executable and return the decomposed output literals.
+    pub fn run(&self, exe: &Exe, args: &[&xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let t0 = Instant::now();
+        let mut out = exe
+            .0
+            .execute(args)
+            .map_err(|e| anyhow::anyhow!("execute: {e:?}"))?;
+        anyhow::ensure!(!out.is_empty() && !out[0].is_empty(), "empty execute output");
+        let bufs = out.swap_remove(0);
+        let lits = if bufs.len() == 1 {
+            // return_tuple=True lowering: single tuple output
+            let mut lit = bufs[0]
+                .to_literal_sync()
+                .map_err(|e| anyhow::anyhow!("to_literal: {e:?}"))?;
+            match lit.decompose_tuple() {
+                Ok(v) if !v.is_empty() => v,
+                _ => vec![lit],
+            }
+        } else {
+            let mut v = Vec::with_capacity(bufs.len());
+            for b in &bufs {
+                v.push(
+                    b.to_literal_sync()
+                        .map_err(|e| anyhow::anyhow!("to_literal: {e:?}"))?,
+                );
+            }
+            v
+        };
+        self.exec_wall_ns.fetch_add(
+            t0.elapsed().as_nanos() as u64,
+            std::sync::atomic::Ordering::Relaxed,
+        );
+        Ok(lits)
+    }
+
+    /// Pre-compile a set of executables (warm-up).
+    pub fn warm(&self, arch: &str, entries: &[&str], buckets: &[usize]) -> Result<()> {
+        for e in entries {
+            for &b in buckets {
+                self.executable(arch, e, b)?;
+            }
+        }
+        Ok(())
+    }
+}

@@ -1,0 +1,229 @@
+//! Artifacts manifest: the contract between `python/compile/aot.py` and the
+//! Rust runtime.  Describes every lowered executable (argument/output
+//! shapes per entrypoint and batch bucket), every model instance and the
+//! global shape constants.  Parsed with the in-tree JSON module.
+
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::path::Path;
+
+use crate::util::json::Json;
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub version: usize,
+    pub constants: Constants,
+    pub pairs: Vec<String>,
+    pub archs: HashMap<String, Arch>,
+    pub instances: HashMap<String, Instance>,
+    pub files: Vec<String>,
+    pub weights: String,
+}
+
+#[derive(Debug, Clone)]
+pub struct Constants {
+    pub vocab: usize,
+    pub n_slices: usize,
+    pub slice_size: usize,
+    pub n_domains: usize,
+    pub n_drafters: usize,
+    pub prompt_len: usize,
+    pub gen_len: usize,
+    pub gamma_max: usize,
+    pub g1: usize,
+    pub max_seq: usize,
+    pub batch_buckets: Vec<usize>,
+    pub affinity_scale: f64,
+    pub bigram_scale: f64,
+}
+
+#[derive(Debug, Clone)]
+pub struct Arch {
+    pub n_layers: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub vocab: usize,
+    pub max_seq: usize,
+    pub head_dim: usize,
+    pub params: Vec<ParamSpec>,
+    /// entry name -> batch bucket -> spec
+    pub entries: HashMap<String, HashMap<usize, EntrySpec>>,
+}
+
+#[derive(Debug, Clone)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+#[derive(Debug, Clone)]
+pub struct EntrySpec {
+    pub file: String,
+    pub args: Vec<ShapeSpec>,
+    pub outputs: Vec<ShapeSpec>,
+}
+
+#[derive(Debug, Clone)]
+pub struct ShapeSpec {
+    pub dtype: String,
+    pub shape: Vec<usize>,
+}
+
+#[derive(Debug, Clone)]
+pub struct Instance {
+    pub arch: String,
+    pub pair: String,
+    pub role: String,
+}
+
+fn shape_spec(j: &Json) -> Result<ShapeSpec> {
+    Ok(ShapeSpec {
+        dtype: j.req("dtype")?.as_str()?.to_string(),
+        shape: j.req("shape")?.usize_vec()?,
+    })
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.json");
+        let data = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let j = Json::parse(&data).context("parsing manifest.json")?;
+
+        let version = j.req("version")?.as_usize()?;
+        anyhow::ensure!(version == 1, "unsupported manifest version {version}");
+
+        let c = j.req("constants")?;
+        let constants = Constants {
+            vocab: c.req("vocab")?.as_usize()?,
+            n_slices: c.req("n_slices")?.as_usize()?,
+            slice_size: c.req("slice")?.as_usize()?,
+            n_domains: c.req("n_domains")?.as_usize()?,
+            n_drafters: c.req("n_drafters")?.as_usize()?,
+            prompt_len: c.req("prompt_len")?.as_usize()?,
+            gen_len: c.req("gen_len")?.as_usize()?,
+            gamma_max: c.req("gamma_max")?.as_usize()?,
+            g1: c.req("g1")?.as_usize()?,
+            max_seq: c.req("max_seq")?.as_usize()?,
+            batch_buckets: c.req("batch_buckets")?.usize_vec()?,
+            affinity_scale: c.req("affinity_scale")?.as_f64()?,
+            bigram_scale: c.req("bigram_scale")?.as_f64()?,
+        };
+
+        let mut archs = HashMap::new();
+        for (name, a) in j.req("archs")?.as_obj()? {
+            let mut params = Vec::new();
+            for p in a.req("params")?.as_arr()? {
+                params.push(ParamSpec {
+                    name: p.req("name")?.as_str()?.to_string(),
+                    shape: p.req("shape")?.usize_vec()?,
+                });
+            }
+            let mut entries = HashMap::new();
+            for (ename, buckets) in a.req("entries")?.as_obj()? {
+                let mut by_bucket = HashMap::new();
+                for (bstr, spec) in buckets.as_obj()? {
+                    let bucket: usize = bstr.parse().context("bucket key")?;
+                    let args = spec
+                        .req("args")?
+                        .as_arr()?
+                        .iter()
+                        .map(shape_spec)
+                        .collect::<Result<Vec<_>>>()?;
+                    let outputs = spec
+                        .req("outputs")?
+                        .as_arr()?
+                        .iter()
+                        .map(shape_spec)
+                        .collect::<Result<Vec<_>>>()?;
+                    by_bucket.insert(
+                        bucket,
+                        EntrySpec {
+                            file: spec.req("file")?.as_str()?.to_string(),
+                            args,
+                            outputs,
+                        },
+                    );
+                }
+                entries.insert(ename.clone(), by_bucket);
+            }
+            archs.insert(
+                name.clone(),
+                Arch {
+                    n_layers: a.req("n_layers")?.as_usize()?,
+                    d_model: a.req("d_model")?.as_usize()?,
+                    n_heads: a.req("n_heads")?.as_usize()?,
+                    d_ff: a.req("d_ff")?.as_usize()?,
+                    vocab: a.req("vocab")?.as_usize()?,
+                    max_seq: a.req("max_seq")?.as_usize()?,
+                    head_dim: a.req("head_dim")?.as_usize()?,
+                    params,
+                    entries,
+                },
+            );
+        }
+
+        let mut instances = HashMap::new();
+        for (name, i) in j.req("instances")?.as_obj()? {
+            instances.insert(
+                name.clone(),
+                Instance {
+                    arch: i.req("arch")?.as_str()?.to_string(),
+                    pair: i.req("pair")?.as_str()?.to_string(),
+                    role: i.req("role")?.as_str()?.to_string(),
+                },
+            );
+        }
+
+        Ok(Manifest {
+            version,
+            constants,
+            pairs: j.req("pairs")?.str_vec()?,
+            archs,
+            instances,
+            files: j.req("files")?.str_vec()?,
+            weights: j.req("weights")?.as_str()?.to_string(),
+        })
+    }
+
+    /// Smallest batch bucket that can hold `batch` requests.
+    pub fn bucket_for(&self, batch: usize) -> Option<usize> {
+        self.constants
+            .batch_buckets
+            .iter()
+            .copied()
+            .filter(|&b| b >= batch)
+            .min()
+    }
+
+    pub fn entry_spec(&self, arch: &str, entry: &str, bucket: usize) -> Result<&EntrySpec> {
+        self.archs
+            .get(arch)
+            .with_context(|| format!("unknown arch {arch}"))?
+            .entries
+            .get(entry)
+            .with_context(|| format!("unknown entry {entry} for arch {arch}"))?
+            .get(&bucket)
+            .with_context(|| format!("no bucket {bucket} for {arch}.{entry}"))
+    }
+
+    /// Drafter instance names for a pair, in drafter-index order.
+    pub fn drafters(&self, pair: &str) -> Vec<String> {
+        let mut v: Vec<String> = self
+            .instances
+            .iter()
+            .filter(|(_, i)| i.pair == pair && i.role == "drafter")
+            .map(|(n, _)| n.clone())
+            .collect();
+        v.sort();
+        v
+    }
+
+    pub fn target(&self, pair: &str) -> Option<String> {
+        self.instances
+            .iter()
+            .find(|(_, i)| i.pair == pair && i.role == "target")
+            .map(|(n, _)| n.clone())
+    }
+}

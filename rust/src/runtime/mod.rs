@@ -1,0 +1,15 @@
+//! Runtime layer: load AOT artifacts (HLO text + weights + manifest) and
+//! execute them on the PJRT CPU client via the `xla` crate.
+//!
+//! Pattern adapted from `/opt/xla-example/load_hlo`:
+//! `PjRtClient::cpu()` → `HloModuleProto::from_text_file` →
+//! `client.compile` → `execute`, with HLO *text* as the interchange format.
+
+pub mod engine;
+pub mod manifest;
+pub mod model;
+pub mod weights;
+
+pub use engine::Engine;
+pub use manifest::Manifest;
+pub use model::{BatchState, Model, VerifyOutcome};

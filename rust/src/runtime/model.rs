@@ -1,0 +1,221 @@
+//! Model executor: typed prefill/decode/verify calls over the AOT
+//! executables, with per-batch KV-cache state.
+//!
+//! Entrypoint contract (mirrors python/compile/model.py):
+//!   prefill(W.., tokens (b,P))            -> logits (b,V), kv, affinity
+//!   decode (W.., kv, aff, cur_len, tok)   -> logits (b,V), kv'
+//!   verify (W.., kv, aff, cur_len, window (b,G1), draft_len)
+//!          -> logits (b,G1,V), kv', accept (b,), bonus (b,)
+//!
+//! Hot-path data movement: weights are uploaded to device buffers once per
+//! instance and stay resident; the KV cache and affinity round-trip as
+//! device buffers between calls (never copied to the host); only logits
+//! and the tiny accept/bonus vectors are read back per step.
+//!
+//! `cur_len` bookkeeping is owned by the caller (the coordinator advances
+//! it by `accept + 1` after committing a verify outcome).
+
+use anyhow::{Context, Result};
+use std::sync::Arc;
+use std::time::Duration;
+
+use super::engine::{Engine, SharedBuffer};
+
+/// A loaded model instance (weights + arch) bound to an engine.
+pub struct Model {
+    pub instance: String,
+    pub arch: String,
+    engine: Arc<Engine>,
+    weights: Arc<Vec<SharedBuffer>>,
+}
+
+/// Mutable inference state for one padded batch.
+pub struct BatchState {
+    /// batch bucket (padded size) this state was created at
+    pub bucket: usize,
+    /// number of real (non-padding) rows
+    pub real: usize,
+    pub kv: SharedBuffer,
+    pub affinity: SharedBuffer,
+    /// committed KV length per row (padding rows track row 0)
+    pub cur_len: Vec<i32>,
+}
+
+pub struct StepOutput {
+    /// (real, vocab) row-major logits
+    pub logits: Vec<f32>,
+    pub wall: Duration,
+}
+
+pub struct VerifyOutcome {
+    /// (real, G1, vocab) row-major logits of the verify window
+    pub logits: Vec<f32>,
+    /// accepted draft count per row, in [0, draft_len]
+    pub accept: Vec<i32>,
+    /// target's argmax token after the last accepted draft
+    pub bonus: Vec<i32>,
+    pub wall: Duration,
+}
+
+impl Model {
+    pub fn load(engine: Arc<Engine>, instance: &str) -> Result<Self> {
+        let inst = engine
+            .manifest
+            .instances
+            .get(instance)
+            .with_context(|| format!("unknown instance {instance}"))?;
+        let arch = inst.arch.clone();
+        let weights = engine.instance_weight_buffers(instance)?;
+        Ok(Self {
+            instance: instance.to_string(),
+            arch,
+            engine,
+            weights,
+        })
+    }
+
+    pub fn engine(&self) -> &Arc<Engine> {
+        &self.engine
+    }
+
+    pub fn vocab(&self) -> usize {
+        self.engine.manifest.archs[&self.arch].vocab
+    }
+
+    fn args_with_weights<'a>(&'a self, rest: &[&'a SharedBuffer]) -> Vec<&'a xla::PjRtBuffer> {
+        let mut v: Vec<&xla::PjRtBuffer> = self.weights.iter().map(|w| &w.buf).collect();
+        v.extend(rest.iter().map(|b| &b.buf));
+        v
+    }
+
+    /// Run prefill over `prompts` (each exactly `prompt_len` tokens).
+    /// Pads the batch up to the chosen bucket by repeating row 0.
+    pub fn prefill(&self, prompts: &[Vec<i32>]) -> Result<(StepOutput, BatchState)> {
+        let c = self.engine.constants();
+        let real = prompts.len();
+        let bucket = self
+            .engine
+            .manifest
+            .bucket_for(real)
+            .with_context(|| format!("batch {real} exceeds largest bucket"))?;
+        let p = c.prompt_len;
+        let mut toks = Vec::with_capacity(bucket * p);
+        for row in prompts {
+            anyhow::ensure!(row.len() == p, "prompt must be exactly {p} tokens");
+            toks.extend_from_slice(row);
+        }
+        for _ in real..bucket {
+            toks.extend_from_slice(&prompts[0]);
+        }
+        let t0 = std::time::Instant::now();
+        let tok_buf = self.engine.upload_i32(&toks, &[bucket, p])?;
+        let exe = self.engine.executable(&self.arch, "prefill", bucket)?;
+        let mut out = self.engine.run_b(&exe, &self.args_with_weights(&[&tok_buf]), 3)?;
+        anyhow::ensure!(out.len() == 3, "prefill: expected 3 outputs");
+        let affinity = out.pop().unwrap();
+        let kv = out.pop().unwrap();
+        let v = self.vocab();
+        let logits_full = self.engine.read_f32(&out.pop().unwrap(), bucket * v)?;
+        let logits = logits_full[..real * v].to_vec();
+        let state = BatchState {
+            bucket,
+            real,
+            kv,
+            affinity,
+            cur_len: vec![p as i32; bucket],
+        };
+        Ok((
+            StepOutput {
+                logits,
+                wall: t0.elapsed(),
+            },
+            state,
+        ))
+    }
+
+    /// One decode step: `tokens` has `state.real` entries; the KV cache is
+    /// updated in place and `cur_len` advanced by 1.
+    pub fn decode(&self, state: &mut BatchState, tokens: &[i32]) -> Result<StepOutput> {
+        anyhow::ensure!(tokens.len() == state.real, "decode: wrong token count");
+        let t0 = std::time::Instant::now();
+        let mut toks = tokens.to_vec();
+        toks.resize(state.bucket, tokens[0]);
+        let tok_buf = self.engine.upload_i32(&toks, &[state.bucket])?;
+        let len_buf = self.engine.upload_i32(&state.cur_len, &[state.bucket])?;
+        let exe = self.engine.executable(&self.arch, "decode", state.bucket)?;
+        let mut out = self.engine.run_b(
+            &exe,
+            &self.args_with_weights(&[&state.kv, &state.affinity, &len_buf, &tok_buf]),
+            2,
+        )?;
+        anyhow::ensure!(out.len() == 2, "decode: expected 2 outputs");
+        state.kv = out.pop().unwrap();
+        let v = self.vocab();
+        let logits_full = self.engine.read_f32(&out.pop().unwrap(), state.bucket * v)?;
+        for l in state.cur_len.iter_mut() {
+            *l += 1;
+        }
+        Ok(StepOutput {
+            logits: logits_full[..state.real * v].to_vec(),
+            wall: t0.elapsed(),
+        })
+    }
+
+    /// Verify a window of `g1` tokens per row (slot 0 = last committed
+    /// token, slots 1..=draft_len = draft tokens).  Does NOT advance
+    /// `cur_len` — the caller commits via `BatchState::advance`.
+    pub fn verify(
+        &self,
+        state: &mut BatchState,
+        windows: &[i32],
+        draft_lens: &[i32],
+    ) -> Result<VerifyOutcome> {
+        let c = self.engine.constants();
+        let g1 = c.g1;
+        anyhow::ensure!(windows.len() == state.real * g1, "verify: bad window size");
+        anyhow::ensure!(draft_lens.len() == state.real, "verify: bad draft_lens");
+        let t0 = std::time::Instant::now();
+        let mut w = windows.to_vec();
+        for _ in state.real..state.bucket {
+            w.extend_from_slice(&windows[..g1]);
+        }
+        let mut dl = draft_lens.to_vec();
+        dl.resize(state.bucket, 0);
+        let win_buf = self.engine.upload_i32(&w, &[state.bucket, g1])?;
+        let dl_buf = self.engine.upload_i32(&dl, &[state.bucket])?;
+        let len_buf = self.engine.upload_i32(&state.cur_len, &[state.bucket])?;
+        let exe = self.engine.executable(&self.arch, "verify", state.bucket)?;
+        let mut out = self.engine.run_b(
+            &exe,
+            &self.args_with_weights(&[
+                &state.kv,
+                &state.affinity,
+                &len_buf,
+                &win_buf,
+                &dl_buf,
+            ]),
+            4,
+        )?;
+        anyhow::ensure!(out.len() == 4, "verify: expected 4 outputs");
+        let bonus_full = self.engine.read_i32(&out.pop().unwrap(), state.bucket)?;
+        let accept_full = self.engine.read_i32(&out.pop().unwrap(), state.bucket)?;
+        state.kv = out.pop().unwrap();
+        let v = self.vocab();
+        let logits_full = self
+            .engine
+            .read_f32(&out.pop().unwrap(), state.bucket * g1 * v)?;
+        Ok(VerifyOutcome {
+            logits: logits_full[..state.real * g1 * v].to_vec(),
+            accept: accept_full[..state.real].to_vec(),
+            bonus: bonus_full[..state.real].to_vec(),
+            wall: t0.elapsed(),
+        })
+    }
+}
+
+impl BatchState {
+    /// Advance row `i`'s committed length by `delta` (verify: accept+1).
+    pub fn advance(&mut self, i: usize, delta: i32) {
+        self.cur_len[i] += delta;
+    }
+}

@@ -1,0 +1,92 @@
+//! Reader for the `weights.bin` blob emitted by `python/compile/aot.py`.
+//!
+//! Format: `[u64 LE header_len][JSON header][raw tensor bytes]` where the
+//! header maps `instance/tensor` names to `{dtype, shape, offset, nbytes}`
+//! (offsets relative to the start of the data section).
+
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::path::Path;
+
+use crate::util::json::Json;
+
+#[derive(Debug, Clone)]
+pub struct TensorMeta {
+    pub dtype: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+    pub nbytes: usize,
+}
+
+/// The raw blob plus its index; tensors are materialized into PJRT literals
+/// on demand (`Engine` caches them per model instance).
+pub struct WeightStore {
+    data: Vec<u8>,
+    index: HashMap<String, TensorMeta>,
+}
+
+impl WeightStore {
+    pub fn load(path: &Path) -> Result<Self> {
+        let raw = std::fs::read(path)
+            .with_context(|| format!("reading weights blob {}", path.display()))?;
+        anyhow::ensure!(raw.len() >= 8, "weights blob truncated");
+        let hlen = u64::from_le_bytes(raw[..8].try_into().unwrap()) as usize;
+        anyhow::ensure!(raw.len() >= 8 + hlen, "weights header truncated");
+        let htext = std::str::from_utf8(&raw[8..8 + hlen]).context("weights header utf8")?;
+        let j = Json::parse(htext).context("parsing weights header")?;
+        let mut index = HashMap::new();
+        for (name, meta) in j.req("tensors")?.as_obj()? {
+            index.insert(
+                name.clone(),
+                TensorMeta {
+                    dtype: meta.req("dtype")?.as_str()?.to_string(),
+                    shape: meta.req("shape")?.usize_vec()?,
+                    offset: meta.req("offset")?.as_usize()?,
+                    nbytes: meta.req("nbytes")?.as_usize()?,
+                },
+            );
+        }
+        let data = raw[8 + hlen..].to_vec();
+        Ok(Self { data, index })
+    }
+
+    pub fn names(&self) -> impl Iterator<Item = &String> {
+        self.index.keys()
+    }
+
+    pub fn meta(&self, name: &str) -> Option<&TensorMeta> {
+        self.index.get(name)
+    }
+
+    pub fn bytes(&self, name: &str) -> Result<(&TensorMeta, &[u8])> {
+        let meta = self
+            .index
+            .get(name)
+            .with_context(|| format!("unknown tensor {name}"))?;
+        let end = meta.offset + meta.nbytes;
+        anyhow::ensure!(end <= self.data.len(), "tensor {name} out of bounds");
+        Ok((meta, &self.data[meta.offset..end]))
+    }
+
+    /// Materialize one tensor as a PJRT literal.
+    pub fn literal(&self, name: &str) -> Result<xla::Literal> {
+        let (meta, bytes) = self.bytes(name)?;
+        let ty = match meta.dtype.as_str() {
+            "f32" => xla::ElementType::F32,
+            "i32" => xla::ElementType::S32,
+            other => anyhow::bail!("unsupported dtype {other} for {name}"),
+        };
+        xla::Literal::create_from_shape_and_untyped_data(ty, &meta.shape, bytes)
+            .map_err(|e| anyhow::anyhow!("literal for {name}: {e:?}"))
+    }
+
+    /// f32 view of a tensor (copies).
+    pub fn tensor_f32(&self, name: &str) -> Result<Vec<f32>> {
+        let (meta, bytes) = self.bytes(name)?;
+        anyhow::ensure!(meta.dtype == "f32", "{name} is not f32");
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+}

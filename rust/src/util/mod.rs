@@ -1,0 +1,9 @@
+//! In-tree substrates for an offline build: JSON, deterministic PRNG, CLI
+//! argument parsing, and micro-bench statistics.  (The image has no crates
+//! beyond `xla`/`anyhow`, so these are first-class modules with their own
+//! tests rather than dependencies.)
+
+pub mod cli;
+pub mod json;
+pub mod rng;
+pub mod stats;

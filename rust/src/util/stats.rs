@@ -1,0 +1,72 @@
+//! Micro-bench statistics (replaces criterion in the offline build): warm
+//! up, sample, report mean/median/p95 with a simple confidence band.
+
+use std::time::{Duration, Instant};
+
+#[derive(Debug, Clone)]
+pub struct BenchStats {
+    pub name: String,
+    pub samples_ns: Vec<f64>,
+}
+
+impl BenchStats {
+    pub fn mean_ns(&self) -> f64 {
+        self.samples_ns.iter().sum::<f64>() / self.samples_ns.len().max(1) as f64
+    }
+
+    pub fn percentile_ns(&self, p: f64) -> f64 {
+        if self.samples_ns.is_empty() {
+            return 0.0;
+        }
+        let mut v = self.samples_ns.clone();
+        v.sort_by(|a, b| a.total_cmp(b));
+        v[((v.len() as f64 * p) as usize).min(v.len() - 1)]
+    }
+
+    pub fn std_ns(&self) -> f64 {
+        let m = self.mean_ns();
+        let var = self
+            .samples_ns
+            .iter()
+            .map(|x| (x - m) * (x - m))
+            .sum::<f64>()
+            / self.samples_ns.len().max(1) as f64;
+        var.sqrt()
+    }
+
+    pub fn report(&self) -> String {
+        format!(
+            "{:<40} mean {:>10.3} ms  (median {:>9.3}, p95 {:>9.3}, ±{:>7.3}, n={})",
+            self.name,
+            self.mean_ns() / 1e6,
+            self.percentile_ns(0.5) / 1e6,
+            self.percentile_ns(0.95) / 1e6,
+            self.std_ns() / 1e6,
+            self.samples_ns.len()
+        )
+    }
+}
+
+/// Run `f` with `warmup` unrecorded iterations then `samples` timed ones.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, samples: usize, mut f: F) -> BenchStats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut out = Vec::with_capacity(samples);
+    for _ in 0..samples {
+        let t0 = Instant::now();
+        f();
+        out.push(t0.elapsed().as_nanos() as f64);
+    }
+    BenchStats {
+        name: name.to_string(),
+        samples_ns: out,
+    }
+}
+
+/// Time a single run.
+pub fn time_once<T, F: FnOnce() -> T>(f: F) -> (T, Duration) {
+    let t0 = Instant::now();
+    let v = f();
+    (v, t0.elapsed())
+}

@@ -1,0 +1,92 @@
+//! Request arrival processes for online serving (paper §6.3, Fig. 7):
+//! low / high Poisson rates and a "volatile" sinusoid-modulated rate with
+//! bursts, over a 240-minute (virtual) window.
+
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ArrivalMode {
+    Low,
+    High,
+    Volatile,
+}
+
+impl std::str::FromStr for ArrivalMode {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> anyhow::Result<Self> {
+        match s.trim().to_lowercase().as_str() {
+            "low" => Ok(Self::Low),
+            "high" => Ok(Self::High),
+            "volatile" | "fluctuated" => Ok(Self::Volatile),
+            other => anyhow::bail!("unknown arrival mode {other}"),
+        }
+    }
+}
+
+/// Poisson(-ish) arrival generator over virtual seconds.
+pub struct ArrivalProcess {
+    mode: ArrivalMode,
+    /// base rate, requests per virtual second
+    pub base_rate: f64,
+    rng: Rng,
+    t: f64,
+}
+
+impl ArrivalProcess {
+    pub fn new(mode: ArrivalMode, base_rate: f64, seed: u64) -> Self {
+        Self {
+            mode,
+            base_rate,
+            rng: Rng::seed_from_u64(seed),
+            t: 0.0,
+        }
+    }
+
+    /// Instantaneous rate at virtual time `t` seconds.
+    pub fn rate_at(&self, t: f64) -> f64 {
+        match self.mode {
+            ArrivalMode::Low => self.base_rate,
+            ArrivalMode::High => self.base_rate * 3.0,
+            ArrivalMode::Volatile => {
+                // 20-minute period sinusoid between 0.5x and 3.5x with a
+                // burst every ~47 minutes
+                let period = 20.0 * 60.0;
+                let s = (t / period * std::f64::consts::TAU).sin();
+                let mut r = self.base_rate * (2.0 + 1.5 * s);
+                if (t / 60.0) % 47.0 < 2.0 {
+                    r *= 2.0;
+                }
+                r
+            }
+        }
+    }
+
+    /// Next inter-arrival gap (thinning for the volatile mode).
+    pub fn next_arrival(&mut self) -> f64 {
+        let max_rate = match self.mode {
+            ArrivalMode::Low => self.base_rate,
+            ArrivalMode::High => self.base_rate * 3.0,
+            ArrivalMode::Volatile => self.base_rate * 7.0,
+        };
+        loop {
+            self.t += self.rng.exp(max_rate);
+            let accept = self.rate_at(self.t) / max_rate;
+            if self.rng.bool(accept.clamp(0.0, 1.0)) {
+                return self.t;
+            }
+        }
+    }
+
+    /// All arrival timestamps within `[0, horizon_s)`.
+    pub fn arrivals_until(&mut self, horizon_s: f64) -> Vec<f64> {
+        let mut out = Vec::new();
+        loop {
+            let t = self.next_arrival();
+            if t >= horizon_s {
+                break;
+            }
+            out.push(t);
+        }
+        out
+    }
+}

@@ -1,0 +1,71 @@
+//! Synthetic domain corpora — the Rust mirror of
+//! `python/compile/domains.py`.
+//!
+//! Domain k's prompts are first-order Markov walks over vocab slice k with
+//! excursions into the shared "common" slices, reproducing the paper's
+//! cross-domain prompt mix (§6.1 "Tested Prompts"): five domains sampled
+//! with their original proportionality.
+
+use crate::util::rng::Rng;
+
+pub const N_DOMAINS: usize = 5;
+const IN_DOMAIN_P: f64 = 0.8;
+
+/// Deterministic prompt sampler over the synthetic domains.
+pub struct DomainSampler {
+    pub vocab: usize,
+    pub n_slices: usize,
+    pub slice: usize,
+    pub prompt_len: usize,
+    rng: Rng,
+}
+
+impl DomainSampler {
+    pub fn new(vocab: usize, n_slices: usize, prompt_len: usize, seed: u64) -> Self {
+        Self {
+            vocab,
+            n_slices,
+            slice: vocab / n_slices,
+            prompt_len,
+            rng: Rng::seed_from_u64(seed),
+        }
+    }
+
+    /// One prompt for `domain` in [0, N_DOMAINS).
+    pub fn prompt(&mut self, domain: usize) -> Vec<i32> {
+        assert!(domain < N_DOMAINS);
+        let lo = (domain * self.slice) as i32;
+        let common_lo = (N_DOMAINS * self.slice) as i32;
+        let common_hi = (self.n_slices * self.slice) as i32;
+        let s = self.slice as i32;
+        let mut toks = Vec::with_capacity(self.prompt_len);
+        let mut cur = lo + self.rng.range(0, s as i64) as i32;
+        for _ in 0..self.prompt_len {
+            if self.rng.bool(IN_DOMAIN_P) {
+                // same in-slice walk as the python generator
+                cur = lo + ((cur - lo) * 5 + 7 + self.rng.range(0, 3) as i32) % s;
+            } else {
+                cur = self.rng.range(common_lo as i64, common_hi as i64) as i32;
+            }
+            toks.push(cur);
+        }
+        toks
+    }
+
+    /// Round-robin domain mix preserving the original proportionality
+    /// (uniform across the five datasets, like the paper's 8192-sample mix).
+    pub fn mixed_batch(&mut self, n: usize) -> Vec<(usize, Vec<i32>)> {
+        (0..n)
+            .map(|i| {
+                let d = i % N_DOMAINS;
+                (d, self.prompt(d))
+            })
+            .collect()
+    }
+}
+
+/// Which domain a vocab token belongs to (None for common slices).
+pub fn token_domain(token: i32, slice: usize) -> Option<usize> {
+    let d = token as usize / slice;
+    (d < N_DOMAINS).then_some(d)
+}

@@ -1,0 +1,11 @@
+//! Workload substrate: synthetic domain corpora (the PIQA/MedQA/FIQA/
+//! Alpaca/OASST2 analog), arrival processes for online serving, and trace
+//! replay.
+
+pub mod arrivals;
+pub mod domains;
+pub mod trace;
+
+pub use arrivals::{ArrivalMode, ArrivalProcess};
+pub use domains::{DomainSampler, N_DOMAINS};
+pub use trace::{Trace, TraceRequest};

@@ -1,0 +1,75 @@
+//! Request traces: a list of (arrival time, domain, prompt, max tokens)
+//! tuples consumed by the serving loops and the online benchmark.
+
+use super::arrivals::{ArrivalMode, ArrivalProcess};
+use super::domains::{DomainSampler, N_DOMAINS};
+
+#[derive(Debug, Clone)]
+pub struct TraceRequest {
+    pub id: u64,
+    /// arrival time in virtual seconds (0.0 for offline traces)
+    pub arrival_s: f64,
+    pub domain: usize,
+    pub prompt: Vec<i32>,
+    pub max_new_tokens: usize,
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct Trace {
+    pub requests: Vec<TraceRequest>,
+}
+
+impl Trace {
+    /// Offline trace: `n` requests, all available at t=0, uniform domain mix.
+    pub fn offline(n: usize, sampler: &mut DomainSampler, max_new_tokens: usize) -> Self {
+        let requests = sampler
+            .mixed_batch(n)
+            .into_iter()
+            .enumerate()
+            .map(|(i, (domain, prompt))| TraceRequest {
+                id: i as u64,
+                arrival_s: 0.0,
+                domain,
+                prompt,
+                max_new_tokens,
+            })
+            .collect();
+        Self { requests }
+    }
+
+    /// Online trace over `horizon_s` virtual seconds.
+    pub fn online(
+        mode: ArrivalMode,
+        base_rate: f64,
+        horizon_s: f64,
+        sampler: &mut DomainSampler,
+        max_new_tokens: usize,
+        seed: u64,
+    ) -> Self {
+        let mut proc = ArrivalProcess::new(mode, base_rate, seed);
+        let times = proc.arrivals_until(horizon_s);
+        let requests = times
+            .into_iter()
+            .enumerate()
+            .map(|(i, t)| {
+                let domain = i % N_DOMAINS;
+                TraceRequest {
+                    id: i as u64,
+                    arrival_s: t,
+                    domain,
+                    prompt: sampler.prompt(domain),
+                    max_new_tokens,
+                }
+            })
+            .collect();
+        Self { requests }
+    }
+
+    pub fn len(&self) -> usize {
+        self.requests.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.requests.is_empty()
+    }
+}

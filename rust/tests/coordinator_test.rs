@@ -1,0 +1,395 @@
+//! Unit/integration tests over the coordinator's pure logic (no PJRT):
+//! routing math (Eq. 1–3), γ trimming (Alg. 2), the virtual pipeline, the
+//! request pool, and the cluster hardware model.
+
+use cosine::cluster::node::{GpuProfile, ModeledModel};
+use cosine::cluster::simclock::{Phase, SimClock};
+use cosine::cluster::NetworkModel;
+use cosine::config::RouterConfig;
+use cosine::coordinator::pipeline::VirtualPipeline;
+use cosine::coordinator::request::Request;
+use cosine::coordinator::router::{EmbedSim, RoundFeedback, Router};
+use cosine::coordinator::sampling;
+use cosine::coordinator::scheduler::trim_gammas;
+use cosine::coordinator::speculation::AdaptiveSpeculation;
+use cosine::workload::TraceRequest;
+
+fn mk_request(id: u64, n_drafters: usize) -> Request {
+    Request::from_trace(
+        &TraceRequest {
+            id,
+            arrival_s: 0.0,
+            domain: (id % 5) as usize,
+            prompt: vec![0; 16],
+            max_new_tokens: 8,
+        },
+        n_drafters,
+        6,
+    )
+}
+
+// ---------------- router ----------------
+
+#[test]
+fn score_is_harmonic_normalized() {
+    // Eq. 2 limits: both high -> ~1, both low -> ~0, symmetric
+    assert!(Router::score(0.95, 0.95) > 0.9);
+    assert!(Router::score(0.05, 0.05) < 0.1);
+    let a = Router::score(0.3, 0.8);
+    let b = Router::score(0.8, 0.3);
+    assert!((a - b).abs() < 1e-12, "score must be symmetric");
+    // monotone in each argument
+    assert!(Router::score(0.6, 0.5) > Router::score(0.4, 0.5));
+    for (c, d) in [(0.0, 0.5), (1.0, 1.0), (0.5, 0.0)] {
+        let s = Router::score(c, d);
+        assert!((0.0..=1.0).contains(&s), "score {s} out of range");
+    }
+}
+
+#[test]
+fn routing_update_prefers_accurate_drafter() {
+    let sim_embed: Vec<f32> = (0..64 * 8)
+        .map(|i| ((i * 2654435761u64 as usize) % 97) as f32 / 97.0 - 0.5)
+        .collect();
+    let sim = EmbedSim::new(&sim_embed, 64, 8);
+    let mut router = Router::new(RouterConfig::default(), 9);
+    let mut req = mk_request(0, 3);
+    let committed: Vec<i32> = vec![5, 6, 7, 8];
+    // drafter 0 proposes exactly the committed tokens with high confidence;
+    // drafter 1 proposes wrong tokens with low confidence
+    let feedback = vec![
+        RoundFeedback {
+            drafter: 0,
+            proposals: committed.iter().map(|&t| (0.9, t)).collect(),
+        },
+        RoundFeedback {
+            drafter: 1,
+            proposals: committed.iter().map(|_| (0.2, 63)).collect(),
+        },
+    ];
+    for _ in 0..5 {
+        router.update(&mut req, &feedback, &committed, 4, 9, &sim);
+    }
+    assert!(
+        req.routing[0] > req.routing[1] + 0.2,
+        "accurate drafter must dominate: {:?}",
+        req.routing
+    );
+}
+
+#[test]
+fn routing_exploit_picks_top() {
+    let cfg = RouterConfig {
+        beta: 1.0, // fully greedy in exploit mode
+        tau: 0.0,  // always exploit (l_acc >= 0)
+        ..RouterConfig::default()
+    };
+    let mut router = Router::new(cfg, 3);
+    let mut req = mk_request(0, 6);
+    req.l_acc = 5.0;
+    req.routing = vec![0.1, 0.9, 0.3, 0.8, 0.2, 0.4];
+    let set = router.route(&req, 6, 3);
+    assert_eq!(set, vec![1, 3, 5], "fully-greedy exploit picks by score order");
+}
+
+#[test]
+fn routing_disabled_returns_k_distinct() {
+    let cfg = RouterConfig {
+        enabled: false,
+        ..RouterConfig::default()
+    };
+    let mut router = Router::new(cfg, 4);
+    let req = mk_request(1, 6);
+    for _ in 0..50 {
+        let set = router.route(&req, 6, 3);
+        assert_eq!(set.len(), 3);
+        let mut s = set.clone();
+        s.sort();
+        s.dedup();
+        assert_eq!(s.len(), 3, "duplicates in {set:?}");
+    }
+}
+
+// ---------------- sampling ----------------
+
+#[test]
+fn top_prob_matches_softmax() {
+    let logits = vec![0.0f32, 1.0, 3.0, -2.0];
+    let (tok, p) = sampling::top_prob(&logits);
+    assert_eq!(tok, 2);
+    let sm = sampling::softmax(&logits);
+    assert!((p - sm[2]).abs() < 1e-6);
+    assert!((sm.iter().sum::<f32>() - 1.0).abs() < 1e-5);
+    assert!((sampling::prob_of(&logits, 2) - sm[2]).abs() < 1e-6);
+}
+
+// ---------------- γ trimming (Alg. 2) ----------------
+
+#[test]
+fn trim_respects_budget_and_floor() {
+    let mut g = vec![8, 8, 8, 8];
+    trim_gammas(&mut g, 20);
+    assert!(g.iter().sum::<usize>() <= 20);
+    assert!(g.iter().all(|&x| x >= 1));
+
+    // unreachable budget: floor at 1 each, no infinite loop
+    let mut g = vec![1, 1, 1, 1];
+    trim_gammas(&mut g, 2);
+    assert_eq!(g, vec![1, 1, 1, 1]);
+}
+
+#[test]
+fn trim_reduces_largest_first() {
+    let mut g = vec![2, 8, 3];
+    trim_gammas(&mut g, 12);
+    // one decrement of the largest (8 -> 7) reaches the budget
+    assert_eq!(g, vec![2, 7, 3]);
+}
+
+// ---------------- adaptive speculation ----------------
+
+#[test]
+fn adaptive_grows_when_server_idle() {
+    let cfg = cosine::config::SpeculationConfig::default();
+    let mut spec = AdaptiveSpeculation::new(cfg, 2, 6);
+    // drafting much faster than verification -> cluster under-used
+    let mut delta_sum = 0;
+    for _ in 0..10 {
+        delta_sum += spec.observe(0.1, 1.0);
+    }
+    assert!(delta_sum > 0, "should recommend larger γ");
+    assert!(spec.k_nodes > 2, "should grow node participation");
+}
+
+#[test]
+fn adaptive_shrinks_when_draft_bound() {
+    let cfg = cosine::config::SpeculationConfig::default();
+    let mut spec = AdaptiveSpeculation::new(cfg, 4, 6);
+    let mut delta_sum = 0;
+    for _ in 0..10 {
+        delta_sum += spec.observe(2.0, 0.5);
+    }
+    assert!(delta_sum < 0);
+    assert!(spec.k_nodes < 4);
+}
+
+#[test]
+fn gamma_adjust_clamps() {
+    let cfg = cosine::config::SpeculationConfig::default();
+    let spec = AdaptiveSpeculation::new(cfg.clone(), 1, 6);
+    assert_eq!(spec.adjust_gamma(cfg.gamma_max, 1), cfg.gamma_max);
+    assert_eq!(spec.adjust_gamma(cfg.gamma_min, -1), cfg.gamma_min);
+    assert_eq!(spec.adjust_gamma(4, 1), 5);
+}
+
+// ---------------- virtual pipeline ----------------
+
+#[test]
+fn pipeline_overlaps_draft_and_verify() {
+    let mut p = VirtualPipeline::new();
+    // group A: draft 1s then verify 2s
+    let (_, a_draft_end) = p.draft(0.0, 1.0);
+    let (_, a_verify_end) = p.verify(a_draft_end, 2.0);
+    // group B drafts while A verifies
+    let (b_start, b_draft_end) = p.draft(0.0, 1.0);
+    assert!(b_start >= a_draft_end - 1e-9, "cluster is busy with A first");
+    assert!(b_draft_end < a_verify_end, "B's draft overlaps A's verify");
+    let (bv_start, _) = p.verify(b_draft_end, 2.0);
+    assert!(bv_start >= a_verify_end - 1e-9, "server serializes verifies");
+    assert!(p.makespan() >= 5.0 - 1e-9);
+    assert!(p.server_busy > p.cluster_busy);
+}
+
+#[test]
+fn coupled_serializes_on_server() {
+    let mut p = VirtualPipeline::new();
+    let (_, e1) = p.coupled(0.0, 1.0, 2.0);
+    let (s2, e2) = p.coupled(0.0, 1.0, 2.0);
+    assert_eq!(e1, 3.0);
+    assert!(s2 >= e1);
+    assert_eq!(e2, 6.0);
+    assert_eq!(p.cluster_busy, 0.0);
+}
+
+#[test]
+fn idle_fractions_bounded() {
+    let mut p = VirtualPipeline::new();
+    p.draft(0.0, 1.0);
+    p.verify(1.0, 1.0);
+    for f in [p.server_idle_frac(), p.cluster_idle_frac()] {
+        assert!((0.0..=1.0).contains(&f));
+    }
+}
+
+// ---------------- request bookkeeping ----------------
+
+#[test]
+fn commit_appends_accepted_plus_bonus() {
+    let mut r = mk_request(0, 3);
+    let appended = r.commit(&[10, 11, 12], 3, 99, 6);
+    assert_eq!(appended, 4);
+    assert_eq!(r.generated, vec![10, 11, 12, 99]);
+    assert_eq!(r.pending, Some(99));
+    assert_eq!(r.drafts_proposed, 6);
+    assert_eq!(r.drafts_accepted, 3);
+    assert!(!r.is_finished());
+}
+
+#[test]
+fn commit_truncates_at_max_tokens_and_finishes() {
+    let mut r = mk_request(0, 3);
+    r.max_new_tokens = 3;
+    let appended = r.commit(&[1, 2, 3, 4, 5], 5, 99, 5);
+    assert_eq!(appended, 3, "must not exceed the generation budget");
+    assert_eq!(r.generated.len(), 3);
+    assert!(r.is_finished());
+    assert_eq!(r.pending, None, "no pending token after finish");
+}
+
+#[test]
+fn acceptance_ratio_counts_bonus() {
+    let mut r = mk_request(0, 3);
+    r.commit(&[1, 2], 2, 9, 6);
+    // 2 accepted + 1 round -> ratio (2+1)/1 = 3
+    assert!((r.acceptance_ratio() - 3.0).abs() < 1e-12);
+}
+
+// ---------------- cluster hardware model ----------------
+
+#[test]
+fn table1_profiles_present() {
+    let t = GpuProfile::table1();
+    assert_eq!(t.len(), 3);
+    assert!(t[2].llm_tokens_per_s.is_some(), "A100 runs the LLM");
+    assert!(t[0].llm_tokens_per_s.is_none(), "2080Ti OOMs on the LLM");
+    assert!(t[2].rent_per_hr > t[1].rent_per_hr);
+}
+
+#[test]
+fn simclock_decode_matches_anchor() {
+    // calibration: modeled decode(b=1) must reproduce the Table-1 rate
+    let clock = SimClock::default();
+    let gpu = GpuProfile::by_name("2080ti").unwrap();
+    let m = ModeledModel::llama68m();
+    let t = clock.phase_s(&m, &gpu, Phase::Decode, 1, 1, 512, gpu.ssm_tokens_per_s);
+    let tps = 1.0 / t;
+    assert!(
+        (tps - gpu.ssm_tokens_per_s).abs() / gpu.ssm_tokens_per_s < 0.05,
+        "calibrated decode rate {tps} != anchor {}",
+        gpu.ssm_tokens_per_s
+    );
+}
+
+#[test]
+fn simclock_verify_cheaper_than_sequential_decode() {
+    // the reason speculative inference wins: verifying γ tokens in parallel
+    // is far cheaper than decoding γ tokens sequentially
+    let clock = SimClock::default();
+    let gpu = GpuProfile::by_name("a100").unwrap();
+    let m = ModeledModel::llama70b();
+    let anchor = gpu.llm_tokens_per_s.unwrap();
+    let t_verify = clock.phase_s(&m, &gpu, Phase::Verify, 1, 8, 512, anchor);
+    let t_decode = clock.phase_s(&m, &gpu, Phase::Decode, 1, 8, 512, anchor);
+    assert!(
+        t_verify < t_decode / 3.0,
+        "verify {t_verify}s vs sequential {t_decode}s"
+    );
+}
+
+#[test]
+fn simclock_batching_is_sublinear() {
+    let clock = SimClock::default();
+    let gpu = GpuProfile::by_name("a100").unwrap();
+    let m = ModeledModel::llama70b();
+    let anchor = gpu.llm_tokens_per_s.unwrap();
+    let t1 = clock.phase_s(&m, &gpu, Phase::Decode, 1, 1, 512, anchor);
+    let t16 = clock.phase_s(&m, &gpu, Phase::Decode, 16, 1, 512, anchor);
+    assert!(t16 < 16.0 * t1 * 0.5, "batch-16 step must be far below 16x");
+}
+
+#[test]
+fn gemm_gemv_split_shapes() {
+    // Fig. 2a: drafting is GEMV-dominated, verification GEMM-dominated
+    let clock = SimClock::default();
+    let d = ModeledModel::llama68m();
+    let t = ModeledModel::llama70b();
+    let dg = GpuProfile::by_name("2080ti").unwrap();
+    let vg = GpuProfile::by_name("a100").unwrap();
+    let (gemm_d, gemv_d) = clock.gemm_gemv_split(&d, &dg, 1.0, 1.0, 512.0, true);
+    let (gemm_v, gemv_v) = clock.gemm_gemv_split(&t, &vg, 8.0, 9.0, 512.0, false);
+    assert!(gemv_d > 0.7, "drafting should be GEMV-bound, got {gemv_d}");
+    assert!(gemm_v > 0.7, "verification should be GEMM-bound, got {gemm_v}");
+    assert!((gemm_d + gemv_d - 1.0).abs() < 1e-9);
+    assert!((gemm_v + gemv_v - 1.0).abs() < 1e-9);
+}
+
+#[test]
+fn network_costs_scale() {
+    let n = NetworkModel::default();
+    assert!(n.fusion_round_s(6, 16) > n.fusion_round_s(1, 1));
+    assert!(n.verify_exchange_s(16, 9) > n.verify_exchange_s(1, 9));
+    assert!(n.dispatch_s(16, 256) > 0.0);
+}
+
+// ---------------- cost model ----------------
+
+#[test]
+fn cost_ledger_accumulates() {
+    use cosine::cluster::cost::{CostLedger, CostModel};
+    let mut l = CostLedger::default();
+    let gpu = GpuProfile::by_name("a100").unwrap();
+    l.charge(&gpu, 3600.0, 4); // 4 GPUs for one hour
+    l.tokens_generated = 1000;
+    assert!((l.total_cost() - 4.0 * gpu.rent_per_hr).abs() < 1e-9);
+    assert!((l.cost_per_token() - 4.0 * gpu.rent_per_hr / 1000.0).abs() < 1e-12);
+    assert!((CostModel::efficiency_pct(0.5, 1.0) - 50.0).abs() < 1e-12);
+}
+
+#[test]
+fn cost_per_token_empty_is_infinite() {
+    use cosine::cluster::cost::CostLedger;
+    let l = CostLedger::default();
+    assert!(l.cost_per_token().is_infinite());
+}
+
+// ---------------- bench stats ----------------
+
+#[test]
+fn bench_stats_percentiles() {
+    use cosine::util::stats::BenchStats;
+    let s = BenchStats {
+        name: "t".into(),
+        samples_ns: (1..=100).map(|x| x as f64).collect(),
+    };
+    assert!((s.mean_ns() - 50.5).abs() < 1e-9);
+    assert_eq!(s.percentile_ns(0.5), 51.0);
+    assert!(s.percentile_ns(0.95) >= 95.0);
+    assert!(s.std_ns() > 0.0);
+}
+
+// ---------------- modeled models ----------------
+
+#[test]
+fn modeled_pairs_have_expected_ratios() {
+    let (t_l, d_l) = ModeledModel::pair("l");
+    let (t_q, d_q) = ModeledModel::pair("q");
+    // LLaMA pair: ~1000x parameter ratio; Qwen pair: ~64x
+    assert!(t_l.params / d_l.params > 500.0);
+    assert!(t_q.params / d_q.params < 100.0);
+    assert!(t_l.kv_bytes_per_token > d_l.kv_bytes_per_token);
+}
+
+// ---------------- arrivals rate shapes ----------------
+
+#[test]
+fn volatile_rate_fluctuates_high_rate_is_higher() {
+    use cosine::workload::{ArrivalMode, ArrivalProcess};
+    let low = ArrivalProcess::new(ArrivalMode::Low, 1.0, 1);
+    let high = ArrivalProcess::new(ArrivalMode::High, 1.0, 1);
+    let vol = ArrivalProcess::new(ArrivalMode::Volatile, 1.0, 1);
+    assert!(high.rate_at(100.0) > low.rate_at(100.0) * 2.0);
+    let rates: Vec<f64> = (0..40).map(|i| vol.rate_at(i as f64 * 60.0)).collect();
+    let max = rates.iter().cloned().fold(0.0, f64::max);
+    let min = rates.iter().cloned().fold(f64::INFINITY, f64::min);
+    assert!(max / min > 2.0, "volatile must fluctuate: {min}..{max}");
+}

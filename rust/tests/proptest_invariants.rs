@@ -1,0 +1,271 @@
+//! Property-based tests over coordinator invariants (hand-rolled harness —
+//! the offline image has no proptest; `cases!` runs each property over many
+//! seeded random inputs and reports the failing seed).
+
+use cosine::config::RouterConfig;
+use cosine::coordinator::pipeline::VirtualPipeline;
+use cosine::coordinator::request::Request;
+use cosine::coordinator::router::Router;
+use cosine::coordinator::sampling;
+use cosine::coordinator::scheduler::trim_gammas;
+use cosine::util::json::Json;
+use cosine::util::rng::Rng;
+use cosine::workload::{ArrivalMode, ArrivalProcess, DomainSampler, TraceRequest};
+
+/// Run `body(rng, case_index)` for `n` seeded cases; panic with the seed on
+/// failure so the case is reproducible.
+fn cases(n: u64, body: impl Fn(&mut Rng, u64)) {
+    for seed in 0..n {
+        let mut rng = Rng::seed_from_u64(0xC0D1 ^ (seed * 0x9E3779B9));
+        body(&mut rng, seed);
+    }
+}
+
+#[test]
+fn prop_trim_gammas_budget_and_floor() {
+    cases(200, |rng, seed| {
+        let n = 1 + rng.usize(20);
+        let mut g: Vec<usize> = (0..n).map(|_| 1 + rng.usize(8)).collect();
+        let before = g.clone();
+        let budget = 1 + rng.usize(80);
+        trim_gammas(&mut g, budget);
+        let sum: usize = g.iter().sum();
+        assert!(
+            sum <= budget.max(n), // floor of 1 per request
+            "seed {seed}: sum {sum} > budget {budget} (n={n})"
+        );
+        assert!(g.iter().all(|&x| x >= 1), "seed {seed}: γ below floor");
+        // never increases any entry
+        assert!(
+            g.iter().zip(&before).all(|(a, b)| a <= b),
+            "seed {seed}: γ grew"
+        );
+    });
+}
+
+#[test]
+fn prop_router_scores_in_unit_interval() {
+    cases(500, |rng, seed| {
+        let c = rng.f64();
+        let d = rng.f64();
+        let s = Router::score(c, d);
+        assert!((0.0..=1.0).contains(&s), "seed {seed}: score {s}");
+    });
+}
+
+#[test]
+fn prop_route_selects_valid_distinct_drafters() {
+    cases(200, |rng, seed| {
+        let n = 1 + rng.usize(8);
+        let k = 1 + rng.usize(4);
+        let mut router = Router::new(RouterConfig::default(), seed);
+        let mut req = Request::from_trace(
+            &TraceRequest {
+                id: seed,
+                arrival_s: 0.0,
+                domain: 0,
+                prompt: vec![0; 4],
+                max_new_tokens: 4,
+            },
+            n,
+            4,
+        );
+        req.l_acc = rng.f64() * 4.0;
+        for v in req.routing.iter_mut() {
+            *v = rng.f64();
+        }
+        let set = router.route(&req, n, k);
+        assert_eq!(set.len(), k.min(n), "seed {seed}");
+        let mut s = set.clone();
+        s.sort();
+        s.dedup();
+        assert_eq!(s.len(), set.len(), "seed {seed}: duplicate drafters");
+        assert!(set.iter().all(|&d| d < n), "seed {seed}: oob drafter");
+    });
+}
+
+#[test]
+fn prop_pipeline_monotone_and_conserves_busy_time() {
+    cases(100, |rng, seed| {
+        let mut p = VirtualPipeline::new();
+        let mut total_draft = 0.0;
+        let mut total_verify = 0.0;
+        let mut last_end = 0.0f64;
+        for _ in 0..20 {
+            let ready = rng.f64() * 5.0;
+            let td = rng.f64();
+            let tv = rng.f64();
+            if rng.bool(0.5) {
+                let (s, e) = p.draft(ready, td);
+                total_draft += td;
+                assert!(e >= s && s >= ready - 1e-12, "seed {seed}");
+                let (vs, ve) = p.verify(e, tv);
+                total_verify += tv;
+                assert!(vs >= e - 1e-12 && ve >= vs, "seed {seed}");
+                last_end = last_end.max(ve);
+            } else {
+                let (s, e) = p.coupled(ready, td, tv);
+                total_draft += 0.0; // coupled charges the server
+                total_verify += td + tv;
+                assert!(e >= s, "seed {seed}");
+                last_end = last_end.max(e);
+            }
+        }
+        assert!((p.cluster_busy - total_draft).abs() < 1e-9, "seed {seed}");
+        assert!((p.server_busy - total_verify).abs() < 1e-9, "seed {seed}");
+        assert!(p.makespan() >= last_end - 1e-9, "seed {seed}");
+        assert!(p.makespan() >= p.server_busy.max(p.cluster_busy) - 1e-9);
+    });
+}
+
+#[test]
+fn prop_commit_never_exceeds_budget() {
+    cases(300, |rng, seed| {
+        let mut req = Request::from_trace(
+            &TraceRequest {
+                id: seed,
+                arrival_s: 0.0,
+                domain: 0,
+                prompt: vec![0; 4],
+                max_new_tokens: 1 + rng.usize(16),
+            },
+            4,
+            4,
+        );
+        while !req.is_finished() {
+            let n_drafts = rng.usize(6);
+            let drafts: Vec<i32> = (0..n_drafts).map(|_| rng.range(0, 512) as i32).collect();
+            let accepted = rng.usize(n_drafts + 1);
+            let committed = &drafts[..accepted.min(drafts.len())];
+            req.commit(committed, accepted, rng.range(0, 512) as i32, n_drafts);
+            assert!(
+                req.generated.len() <= req.max_new_tokens,
+                "seed {seed}: overflow {} > {}",
+                req.generated.len(),
+                req.max_new_tokens
+            );
+        }
+        assert_eq!(req.generated.len(), req.max_new_tokens, "seed {seed}");
+        assert!(req.drafts_accepted <= req.drafts_proposed, "seed {seed}");
+    });
+}
+
+#[test]
+fn prop_softmax_normalizes_any_logits() {
+    cases(200, |rng, seed| {
+        let n = 2 + rng.usize(512);
+        let logits: Vec<f32> = (0..n)
+            .map(|_| (rng.normal() * 10.0) as f32)
+            .collect();
+        let sm = sampling::softmax(&logits);
+        let sum: f32 = sm.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-4, "seed {seed}: softmax sum {sum}");
+        let (tok, p) = sampling::top_prob(&logits);
+        assert!(p > 0.0 && p <= 1.0, "seed {seed}");
+        assert_eq!(tok as usize, sampling::argmax(&logits) as usize, "seed {seed}");
+    });
+}
+
+#[test]
+fn prop_arrivals_sorted_and_within_horizon() {
+    cases(30, |rng, seed| {
+        let mode = match rng.usize(3) {
+            0 => ArrivalMode::Low,
+            1 => ArrivalMode::High,
+            _ => ArrivalMode::Volatile,
+        };
+        let rate = 0.05 + rng.f64();
+        let horizon = 10.0 + rng.f64() * 100.0;
+        let mut p = ArrivalProcess::new(mode, rate, seed);
+        let times = p.arrivals_until(horizon);
+        for w in times.windows(2) {
+            assert!(w[0] <= w[1], "seed {seed}: arrivals unsorted");
+        }
+        assert!(times.iter().all(|&t| (0.0..horizon).contains(&t)), "seed {seed}");
+    });
+}
+
+#[test]
+fn prop_domain_prompts_in_vocab_slices() {
+    cases(50, |rng, seed| {
+        let mut s = DomainSampler::new(512, 8, 32, seed);
+        let dom = rng.usize(5);
+        let prompt = s.prompt(dom);
+        assert_eq!(prompt.len(), 32);
+        let slice = 512 / 8;
+        for &t in &prompt {
+            assert!((0..512).contains(&t), "seed {seed}: token oob");
+            let ts = t as usize / slice;
+            assert!(
+                ts == dom || ts >= 5,
+                "seed {seed}: token {t} in foreign domain slice {ts} (dom {dom})"
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_json_roundtrip_random_values() {
+    fn random_json(rng: &mut Rng, depth: usize) -> Json {
+        match if depth == 0 { rng.usize(4) } else { rng.usize(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.bool(0.5)),
+            2 => Json::Num((rng.range(-1_000_000, 1_000_000)) as f64),
+            3 => {
+                let n = rng.usize(12);
+                Json::Str(
+                    (0..n)
+                        .map(|_| char::from_u32(32 + rng.usize(90) as u32).unwrap())
+                        .collect(),
+                )
+            }
+            4 => Json::Arr((0..rng.usize(4)).map(|_| random_json(rng, depth - 1)).collect()),
+            _ => {
+                let mut m = std::collections::BTreeMap::new();
+                for i in 0..rng.usize(4) {
+                    m.insert(format!("k{i}"), random_json(rng, depth - 1));
+                }
+                Json::Obj(m)
+            }
+        }
+    }
+    cases(300, |rng, seed| {
+        let v = random_json(rng, 3);
+        let text = v.to_string();
+        let back = Json::parse(&text).unwrap_or_else(|e| panic!("seed {seed}: {e} in {text}"));
+        assert_eq!(back, v, "seed {seed}: roundtrip mismatch for {text}");
+    });
+}
+
+#[test]
+fn prop_scheduler_candidate_gamma_bounds() {
+    // trim_gammas composed with arbitrary per-request budgets never
+    // violates Eq. 6's γ_i >= 1 nor the Γ budget (when feasible)
+    cases(200, |rng, seed| {
+        let n = 1 + rng.usize(16);
+        let mut g: Vec<usize> = (0..n).map(|_| 1 + rng.usize(8)).collect();
+        let budget = n + rng.usize(100);
+        trim_gammas(&mut g, budget);
+        assert!(g.iter().sum::<usize>() <= budget, "seed {seed}");
+        assert!(g.iter().all(|&x| (1..=8).contains(&x)), "seed {seed}");
+    });
+}
+
+#[test]
+fn prop_embed_sim_cosine_bounds() {
+    use cosine::coordinator::router::EmbedSim;
+    cases(20, |rng, seed| {
+        let v = 8 + rng.usize(32);
+        let d = 4 + rng.usize(16);
+        let embed: Vec<f32> = (0..v * d).map(|_| rng.normal() as f32).collect();
+        let sim = EmbedSim::new(&embed, v, d);
+        for _ in 0..50 {
+            let a = rng.usize(v) as i32;
+            let b = rng.usize(v) as i32;
+            let c = sim.cos(a, b);
+            assert!((-1.01..=1.01).contains(&c), "seed {seed}: cos {c}");
+            assert!((sim.cos(a, a) - 1.0).abs() < 1e-5, "seed {seed}");
+            assert!((sim.cos(a, b) - sim.cos(b, a)).abs() < 1e-5, "seed {seed}");
+        }
+    });
+}

@@ -1,0 +1,169 @@
+//! Integration tests over the PJRT runtime: artifact loading, entrypoint
+//! contracts, KV-cache bookkeeping, and the decode/verify consistency
+//! invariants.  Requires `make artifacts` (skips cleanly otherwise).
+
+use std::path::Path;
+use std::sync::Arc;
+
+use cosine::coordinator::sampling::argmax;
+use cosine::runtime::{Engine, Model};
+use cosine::workload::DomainSampler;
+
+fn engine() -> Option<Arc<Engine>> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("artifacts missing; run `make artifacts` first — skipping");
+        return None;
+    }
+    Some(Arc::new(Engine::load(&dir).expect("engine load")))
+}
+
+fn prompt(engine: &Engine, domain: usize, seed: u64) -> Vec<i32> {
+    let c = engine.constants();
+    let mut s = DomainSampler::new(c.vocab, c.n_slices, c.prompt_len, seed);
+    s.prompt(domain)
+}
+
+#[test]
+fn manifest_structure() {
+    let Some(e) = engine() else { return };
+    let m = &e.manifest;
+    assert!(m.pairs.contains(&"l".to_string()));
+    assert_eq!(m.constants.g1, m.constants.gamma_max + 1);
+    for pair in &m.pairs {
+        let t = m.target(pair).expect("target instance");
+        assert!(m.instances.contains_key(&t));
+        let d = m.drafters(pair);
+        assert_eq!(d.len(), m.constants.n_drafters);
+    }
+    // every referenced HLO file exists
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    for f in &m.files {
+        assert!(dir.join(f).exists(), "missing artifact {f}");
+    }
+}
+
+#[test]
+fn weights_complete() {
+    let Some(e) = engine() else { return };
+    for (iname, inst) in &e.manifest.instances {
+        let arch = &e.manifest.archs[&inst.arch];
+        for p in &arch.params {
+            let name = format!("{iname}/{}", p.name);
+            let meta = e.weights.meta(&name).unwrap_or_else(|| panic!("missing {name}"));
+            assert_eq!(meta.shape, p.shape, "shape mismatch for {name}");
+        }
+    }
+}
+
+#[test]
+fn prefill_decode_verify_roundtrip() {
+    let Some(e) = engine() else { return };
+    let c = e.constants().clone();
+    let target = Model::load(e.clone(), &e.manifest.target("l").unwrap()).unwrap();
+
+    let p = prompt(&e, 0, 42);
+    let (out, mut st) = target.prefill(&[p]).unwrap();
+    assert_eq!(out.logits.len(), c.vocab);
+    assert_eq!(st.cur_len[0], c.prompt_len as i32);
+
+    let t1 = argmax(&out.logits);
+    let d = target.decode(&mut st, &[t1]).unwrap();
+    assert_eq!(st.cur_len[0], c.prompt_len as i32 + 1);
+    let t2 = argmax(&d.logits);
+
+    // verify window [t1, t2, ...] must accept t2 (it came from the target)
+    st.cur_len[0] -= 1;
+    let mut w = vec![0i32; c.g1];
+    w[0] = t1;
+    w[1] = t2;
+    let v = target.verify(&mut st, &w, &[c.gamma_max as i32]).unwrap();
+    assert!(v.accept[0] >= 1, "target must accept its own greedy token");
+    assert_eq!(v.logits.len(), c.g1 * c.vocab);
+}
+
+#[test]
+fn verify_slot0_matches_decode() {
+    // logits at verify slot 0 == decode logits for the same token
+    let Some(e) = engine() else { return };
+    let c = e.constants().clone();
+    let target = Model::load(e.clone(), &e.manifest.target("l").unwrap()).unwrap();
+    let p = prompt(&e, 1, 43);
+    let (out, mut st) = target.prefill(&[p.clone()]).unwrap();
+    let t1 = argmax(&out.logits);
+
+    let (_, mut st2) = target.prefill(&[p]).unwrap();
+    let dec = target.decode(&mut st2, &[t1]).unwrap();
+
+    let mut w = vec![7i32; c.g1];
+    w[0] = t1;
+    let v = target.verify(&mut st, &w, &[c.gamma_max as i32]).unwrap();
+    for i in 0..c.vocab {
+        assert!(
+            (v.logits[i] - dec.logits[i]).abs() < 1e-3,
+            "slot-0 verify logit {i} diverges: {} vs {}",
+            v.logits[i],
+            dec.logits[i]
+        );
+    }
+}
+
+#[test]
+fn decode_sequence_matches_verify_acceptance() {
+    // tokens produced by sequential greedy decode must be fully accepted
+    // when replayed through verify
+    let Some(e) = engine() else { return };
+    let c = e.constants().clone();
+    let target = Model::load(e.clone(), &e.manifest.target("l").unwrap()).unwrap();
+    let p = prompt(&e, 2, 44);
+
+    // sequential greedy rollout of gamma_max+1 tokens
+    let (out, mut st) = target.prefill(&[p.clone()]).unwrap();
+    let mut toks = vec![argmax(&out.logits)];
+    for _ in 0..c.gamma_max {
+        let d = target.decode(&mut st, &[*toks.last().unwrap()]).unwrap();
+        toks.push(argmax(&d.logits));
+    }
+
+    // verify [t0, t1..t_gamma] from a fresh state: all drafts must accept
+    let (_, mut st2) = target.prefill(&[p]).unwrap();
+    let v = target
+        .verify(&mut st2, &toks, &[c.gamma_max as i32])
+        .unwrap();
+    assert_eq!(
+        v.accept[0],
+        c.gamma_max as i32,
+        "self-rollout must be fully accepted (greedy determinism)"
+    );
+}
+
+#[test]
+fn drafter_truncation_shares_prefix_layers() {
+    // drafter weights are literally slices of the target's stacked arrays
+    let Some(e) = engine() else { return };
+    let tgt_wq = e.weights.tensor_f32("target_l/wq").unwrap();
+    let d0_wq = e.weights.tensor_f32("drafter_l0/wq").unwrap();
+    assert!(tgt_wq.len() > d0_wq.len());
+    assert_eq!(&tgt_wq[..d0_wq.len()], &d0_wq[..], "early-exit prefix mismatch");
+}
+
+#[test]
+fn batch_bucket_padding() {
+    // prefill with 3 prompts must pad to bucket 4 and produce 3 real rows
+    let Some(e) = engine() else { return };
+    let c = e.constants().clone();
+    let target = Model::load(e.clone(), &e.manifest.target("l").unwrap()).unwrap();
+    let prompts: Vec<Vec<i32>> = (0..3).map(|i| prompt(&e, i, 50 + i as u64)).collect();
+    let (out, st) = target.prefill(&prompts).unwrap();
+    assert_eq!(st.bucket, 4);
+    assert_eq!(st.real, 3);
+    assert_eq!(out.logits.len(), 3 * c.vocab);
+    // row 0 of a padded batch must equal the unpadded single run
+    let (solo, _) = target.prefill(&[prompts[0].clone()]).unwrap();
+    for i in 0..c.vocab {
+        assert!(
+            (out.logits[i] - solo.logits[i]).abs() < 1e-3,
+            "padding changed row-0 logits at {i}"
+        );
+    }
+}

@@ -1,0 +1,177 @@
+//! End-to-end serving tests: every strategy over small real traces on the
+//! PJRT stack.  These are the "all layers compose" checks.
+//! Requires `make artifacts` (skips cleanly otherwise).
+
+use std::path::Path;
+use std::sync::Arc;
+
+use cosine::bench;
+use cosine::coordinator::ServingContext;
+use cosine::{CosineConfig, Engine};
+
+fn ctx_with(f: impl FnOnce(&mut CosineConfig)) -> Option<ServingContext> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("artifacts missing; run `make artifacts` first — skipping");
+        return None;
+    }
+    let mut cfg = CosineConfig::default();
+    cfg.artifacts_dir = dir.to_str().unwrap().to_string();
+    f(&mut cfg);
+    let engine = Arc::new(Engine::load(&dir).expect("engine"));
+    Some(ServingContext::with_engine(engine, &cfg).expect("context"))
+}
+
+fn small_cfg(cfg: &mut CosineConfig) {
+    cfg.scheduler.max_batch = 4;
+}
+
+#[test]
+fn cosine_serves_trace_to_completion() {
+    let Some(ctx) = ctx_with(small_cfg) else { return };
+    let c = ctx.constants().clone();
+    let trace = bench::offline_trace(&ctx, 3, 21);
+    let r = bench::run(&ctx, &trace, "cosine").unwrap();
+    assert_eq!(r.n_requests, 3);
+    assert_eq!(r.tokens as usize, 3 * c.gen_len, "every request completes");
+    assert_eq!(r.latencies_s.len(), 3);
+    assert!(r.makespan_s > 0.0);
+    assert!(r.accept_ratio >= 1.0, "ratio counts the bonus token");
+    assert!(r.rounds > 0 && r.drafts_proposed >= r.drafts_accepted);
+    assert!(r.cost_per_token.is_finite() && r.cost_per_token > 0.0);
+}
+
+#[test]
+fn all_strategies_complete_and_match_token_counts() {
+    let Some(ctx) = ctx_with(small_cfg) else { return };
+    let c = ctx.constants().clone();
+    let trace = bench::offline_trace(&ctx, 2, 22);
+    for strat in ["vllm", "vanilla", "pipeinfer", "specinfer", "cosine"] {
+        let r = bench::run(&ctx, &trace, strat).unwrap();
+        assert_eq!(
+            r.tokens as usize,
+            2 * c.gen_len,
+            "{strat} must generate exactly the budget"
+        );
+        assert!(
+            r.latencies_s.iter().all(|&l| l > 0.0),
+            "{strat} latencies must be positive"
+        );
+    }
+}
+
+#[test]
+fn speculative_strategies_beat_vllm_in_virtual_time() {
+    let Some(ctx) = ctx_with(small_cfg) else { return };
+    let trace = bench::offline_trace(&ctx, 3, 23);
+    let vllm = bench::run(&ctx, &trace, "vllm").unwrap();
+    let cosine_r = bench::run(&ctx, &trace, "cosine").unwrap();
+    assert!(
+        cosine_r.throughput_tps > vllm.throughput_tps,
+        "speculation must beat incremental decoding: {} vs {}",
+        cosine_r.throughput_tps,
+        vllm.throughput_tps
+    );
+}
+
+#[test]
+fn identical_outputs_across_speculative_strategies() {
+    // greedy speculative decoding is output-invariant: all strategies must
+    // produce the same tokens as pure target decoding (the lossless
+    // property of rejection-free greedy verification).
+    //
+    // We check total token counts and spot-check one request's tokens by
+    // running vllm (pure target) and cosine over a single request.
+    let Some(ctx) = ctx_with(|cfg| {
+        cfg.scheduler.max_batch = 1;
+    }) else {
+        return;
+    };
+    let trace = bench::offline_trace(&ctx, 1, 24);
+    // Pure target rollout
+    let mut req_v = cosine::coordinator::request::Request::from_trace(&trace.requests[0], 1, 1);
+    cosine::coordinator::verifier::ensure_target(&ctx, &mut req_v).unwrap();
+    while !req_v.is_finished() {
+        cosine::coordinator::verifier::target_decode_one(&ctx, &mut req_v).unwrap();
+    }
+    // CoSine rollout
+    let r = bench::run(&ctx, &trace, "cosine").unwrap();
+    assert_eq!(r.tokens as usize, req_v.generated.len());
+    // and the tokens themselves must match — reconstruct via a second run
+    let mut req_c = cosine::coordinator::request::Request::from_trace(&trace.requests[0], 6, 4);
+    cosine::coordinator::verifier::ensure_target(&ctx, &mut req_c).unwrap();
+    while !req_c.is_finished() {
+        let g = 4usize.min(req_c.remaining().max(1));
+        let round = cosine::coordinator::fusion::run_draft_round(
+            &ctx,
+            &mut req_c,
+            &[0, 1, 2],
+            g,
+            cosine::coordinator::fusion::DraftMode::Fused,
+            None,
+        )
+        .unwrap();
+        let out =
+            cosine::coordinator::verifier::verify_and_commit(&ctx, &mut req_c, &round.main.tokens)
+                .unwrap();
+        let fed: Vec<Vec<i32>> = (0..3)
+            .map(|_| {
+                let mut f = round.main.tokens.clone();
+                f.truncate(f.len().saturating_sub(1));
+                f
+            })
+            .collect();
+        cosine::coordinator::fusion::resync_after_commit(
+            &mut req_c,
+            &[0, 1, 2],
+            &fed,
+            &out.committed_drafts,
+            out.before_len,
+        );
+    }
+    assert_eq!(
+        req_v.generated, req_c.generated,
+        "speculative greedy output must equal pure target greedy output"
+    );
+}
+
+#[test]
+fn ablation_knobs_change_behavior() {
+    let Some(full) = ctx_with(small_cfg) else { return };
+    let trace = bench::offline_trace(&full, 2, 25);
+    let r_full = bench::run(&full, &trace, "cosine").unwrap();
+
+    let Some(nofusion) = ctx_with(|cfg| {
+        small_cfg(cfg);
+        cfg.speculation.fusion = false;
+    }) else {
+        return;
+    };
+    let r_nf = bench::run(&nofusion, &trace, "cosine").unwrap();
+    // both complete; behavior may differ but token budget is identical
+    assert_eq!(r_full.tokens, r_nf.tokens);
+}
+
+#[test]
+fn online_trace_respects_arrivals() {
+    let Some(ctx) = ctx_with(small_cfg) else { return };
+    let c = ctx.constants().clone();
+    let mut sampler =
+        cosine::workload::DomainSampler::new(c.vocab, c.n_slices, c.prompt_len, 77);
+    let trace = cosine::workload::Trace::online(
+        cosine::workload::ArrivalMode::Low,
+        0.05,
+        60.0,
+        &mut sampler,
+        c.gen_len,
+        7,
+    );
+    if trace.is_empty() {
+        return;
+    }
+    let r = bench::run(&ctx, &trace, "cosine").unwrap();
+    // no request may finish before it arrives
+    for (t, lat) in trace.requests.iter().zip(&r.latencies_s) {
+        assert!(*lat > 0.0, "request {} has non-positive latency", t.id);
+    }
+}
