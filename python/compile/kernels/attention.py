@@ -35,9 +35,14 @@ NEG_INF = -1e30
 
 
 def _attn_kernel(q_ref, k_ref, v_ref, start_ref, o_ref, *, block_kv, scale):
-    """One (batch, head, q-block) tile: flash-style streaming over KV blocks."""
-    q = q_ref[0, 0, :, :].astype(jnp.float32) * scale      # (bq, hd)
-    start = start_ref[0]
+    """One (batch, head, q-block) tile: flash-style streaming over KV blocks.
+
+    Ref indexing note: scalar int indices on refs break jax 0.4.37's
+    interpret-mode discharge rule, so tiles load their full (1, 1, ..)
+    block and index the resulting array instead.
+    """
+    q = q_ref[...][0, 0].astype(jnp.float32) * scale       # (bq, hd)
+    start = start_ref[...][0]
     bq, hd = q.shape
     s_len = k_ref.shape[2]
     n_kv = s_len // block_kv
@@ -48,9 +53,14 @@ def _attn_kernel(q_ref, k_ref, v_ref, start_ref, o_ref, *, block_kv, scale):
 
     def body(kb, carry):
         m, l, acc = carry
-        kv_slice = (0, 0, pl.dslice(kb * block_kv, block_kv), slice(None))
-        k_blk = pl.load(k_ref, kv_slice).astype(jnp.float32)  # (bkv, hd)
-        v_blk = pl.load(v_ref, kv_slice).astype(jnp.float32)  # (bkv, hd)
+        kv_slice = (
+            pl.dslice(0, 1),
+            pl.dslice(0, 1),
+            pl.dslice(kb * block_kv, block_kv),
+            slice(None),
+        )
+        k_blk = pl.load(k_ref, kv_slice)[0, 0].astype(jnp.float32)  # (bkv, hd)
+        v_blk = pl.load(v_ref, kv_slice)[0, 0].astype(jnp.float32)  # (bkv, hd)
         s = q @ k_blk.T                                       # (bq, bkv)
         kv_pos = kb * block_kv + jax.lax.broadcasted_iota(
             jnp.int32, (1, block_kv), 1
@@ -68,7 +78,7 @@ def _attn_kernel(q_ref, k_ref, v_ref, start_ref, o_ref, *, block_kv, scale):
     acc0 = jnp.zeros((bq, hd), jnp.float32)
     m, l, acc = jax.lax.fori_loop(0, n_kv, body, (m0, l0, acc0))
     # every query row can attend at least to position 0 (limit >= 0), so l>0
-    o_ref[0, 0, :, :] = (acc / l).astype(o_ref.dtype)
+    o_ref[...] = (acc / l).astype(o_ref.dtype)[None, None]
 
 
 def flash_attention(

@@ -20,22 +20,24 @@ from jax.experimental import pallas as pl
 
 
 def _accept_kernel(tokens_ref, logits_ref, draft_len_ref, acc_ref, bonus_ref):
-    logits = logits_ref[0]                     # (G1, V)
-    toks = tokens_ref[0]                       # (G1,)
-    dl = draft_len_ref[0]
+    # load full (1, ..) blocks and index the arrays: scalar int ref-indices
+    # break jax 0.4.37's interpret-mode discharge rule
+    logits = logits_ref[...][0]                # (G1, V)
+    toks = tokens_ref[...][0]                  # (G1,)
+    dl = draft_len_ref[...][0]
     argm = jnp.argmax(logits, axis=-1).astype(jnp.int32)   # (G1,)
     g1 = toks.shape[0]
     # match[i] == 1 iff draft token i+1 equals the target's argmax at slot i
     match = (toks[1:] == argm[:-1]).astype(jnp.int32)       # (G1-1,)
     prefix = jnp.cumprod(match)
     acc = jnp.minimum(jnp.sum(prefix), dl).astype(jnp.int32)
-    acc_ref[0] = acc
+    acc_ref[...] = acc[None]
     # bonus/correction token: target's own prediction right after the last
     # accepted draft (indexing argm at `acc` is safe: acc <= G1-1).
     onehot = (jax.lax.broadcasted_iota(jnp.int32, (g1,), 0) == acc).astype(
         jnp.int32
     )
-    bonus_ref[0] = jnp.sum(argm * onehot).astype(jnp.int32)
+    bonus_ref[...] = jnp.sum(argm * onehot).astype(jnp.int32)[None]
 
 
 def accept_length(tokens, logits, draft_len):

@@ -1,0 +1,7 @@
+"""Make the `compile` package importable when pytest runs from the repo
+root (`python -m pytest python/tests -q`, the CI invocation)."""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.abspath(os.path.join(os.path.dirname(__file__), "..")))

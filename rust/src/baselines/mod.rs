@@ -1,8 +1,9 @@
 //! Baseline serving strategies (paper §6.1): vLLM (continuous batching, no
 //! speculation), Vanilla speculative decoding, PipeInfer, SpecInfer.  The
 //! three speculative baselines are policy configurations of the shared
-//! round engine (`coordinator::serve::run_speculative`); vLLM has its own
-//! loop.
+//! event-driven engine (`coordinator::engine`); vLLM runs on the same
+//! event loop without speculation (`coordinator::engine::run_vllm`), so
+//! every comparison shares one timing substrate.
 
 pub mod vllm;
 

@@ -1,120 +1,19 @@
 //! vLLM-like baseline: continuous batching on the verification server,
 //! plain autoregressive decoding (no speculation).  This is the paper's
 //! throughput-normalization baseline (Fig. 6c/6d set vLLM = 1.0).
+//!
+//! Since the event-engine refactor the loop itself lives in
+//! `coordinator::engine::run_vllm`, so the baseline batches continuously
+//! across verifier replicas exactly like the speculative strategies it is
+//! normalized against.
 
 use anyhow::Result;
-use std::time::Instant;
 
 use crate::coordinator::context::ServingContext;
-use crate::coordinator::pipeline::VirtualPipeline;
-use crate::coordinator::request::{Phase, Request, RequestPool};
-use crate::coordinator::verifier;
+use crate::coordinator::engine;
 use crate::coordinator::RunReport;
 use crate::workload::Trace;
 
 pub fn serve(ctx: &ServingContext, trace: &Trace) -> Result<RunReport> {
-    let wall0 = Instant::now();
-    let pjrt0 = ctx
-        .engine
-        .exec_wall_ns
-        .load(std::sync::atomic::Ordering::Relaxed);
-    let c = ctx.constants().clone();
-    let max_b = ctx
-        .cfg
-        .scheduler
-        .max_batch
-        .min(*c.batch_buckets.iter().max().unwrap_or(&16));
-    let mut pool = RequestPool::new(
-        trace
-            .requests
-            .iter()
-            .map(|t| Request::from_trace(t, 1, 1))
-            .collect(),
-    );
-    let mut pipe = VirtualPipeline::new();
-
-    loop {
-        if pool.unfinished() == 0 {
-            break;
-        }
-        // continuous batching: all arrived, unfinished requests up to max_b
-        let now = pipe.server_free;
-        let mut idxs: Vec<usize> = pool
-            .requests
-            .iter()
-            .enumerate()
-            .filter(|(_, r)| !r.is_finished())
-            .map(|(i, _)| i)
-            .collect();
-        let earliest = idxs
-            .iter()
-            .map(|&i| pool.requests[i].ready_at)
-            .fold(f64::INFINITY, f64::min);
-        let now = now.max(earliest);
-        idxs.retain(|&i| pool.requests[i].ready_at <= now + 1e-9);
-        idxs.sort_by(|&a, &b| {
-            pool.requests[a]
-                .arrival_s
-                .total_cmp(&pool.requests[b].arrival_s)
-        });
-        idxs.truncate(max_b);
-        if idxs.is_empty() {
-            continue;
-        }
-
-        let mut new_prefills = 0usize;
-        let mut ctx_crit = 1usize;
-        for &i in &idxs {
-            if pool.requests[i].target_state.is_none() {
-                new_prefills += 1;
-                verifier::ensure_target(ctx, &mut pool.requests[i])?;
-            }
-            let r = &pool.requests[i];
-            ctx_crit = ctx_crit.max(r.prompt.len() + r.generated.len());
-            if !pool.requests[i].is_finished() {
-                verifier::target_decode_one(ctx, &mut pool.requests[i])?;
-            }
-        }
-
-        // modeled: one batched decode step + any prefills
-        let b = idxs.len();
-        let mut t = ctx.t_target_decode_s(b, 1, ctx_crit);
-        if new_prefills > 0 {
-            t += ctx.t_target_prefill_s(new_prefills, c.prompt_len);
-        }
-        let ready = idxs
-            .iter()
-            .map(|&i| pool.requests[i].ready_at)
-            .fold(0.0f64, f64::max);
-        let (_, end) = pipe.verify(ready, t);
-        for &i in &idxs {
-            let r = &mut pool.requests[i];
-            r.ready_at = end;
-            if r.start_serve_s.is_none() {
-                r.start_serve_s = Some(ready);
-            }
-            if r.is_finished() && r.finish_s.is_none() {
-                r.finish_s = Some(end);
-                r.phase = Phase::Finished;
-            }
-        }
-    }
-
-    let pjrt1 = ctx
-        .engine
-        .exec_wall_ns
-        .load(std::sync::atomic::Ordering::Relaxed);
-    Ok(RunReport::assemble(
-        "vllm",
-        &ctx.cfg.pair,
-        &pool.requests,
-        &pipe,
-        &ctx.drafter_gpu,
-        0,
-        &ctx.verifier_gpu,
-        ctx.cfg.cluster.verifier_gpus,
-        false,
-        wall0.elapsed().as_secs_f64(),
-        (pjrt1 - pjrt0) as f64 / 1e9,
-    ))
+    engine::run_vllm(ctx, trace)
 }

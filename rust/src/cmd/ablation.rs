@@ -14,7 +14,10 @@ pub fn run(cfg: &CosineConfig, nodes: &str) -> Result<()> {
         .split(',')
         .map(|s| s.trim().parse().unwrap_or(1))
         .collect();
-    println!("\n=== Fig. 8 ablation (pair {}) ===", cfg.pair);
+    println!(
+        "\n=== Fig. 8 ablation (pair {}, {} verifier replica(s), event engine) ===",
+        cfg.pair, cfg.cluster.n_verifier_replicas
+    );
     println!("nodes | variant          | tok/s  | norm  | accept");
     println!("------+------------------+--------+-------+-------");
     for &n in &node_counts {

@@ -126,6 +126,9 @@ pub struct ClusterConfig {
     /// GPUs in the verification server ("a100")
     pub verifier_gpu: String,
     pub verifier_gpus: usize,
+    /// independently schedulable verification-server replicas; the event
+    /// engine dispatches each verify round to the earliest-free replica
+    pub n_verifier_replicas: usize,
     /// star-topology link round-trip (ms) inside the speculation cluster
     pub cluster_rtt_ms: f64,
     /// cluster <-> verification-server link round-trip (ms)
@@ -141,6 +144,7 @@ impl Default for ClusterConfig {
             drafter_gpu: "2080ti".into(),
             verifier_gpu: "a100".into(),
             verifier_gpus: 4,
+            n_verifier_replicas: 1,
             cluster_rtt_ms: 0.2,
             uplink_rtt_ms: 0.8,
             uplink_mbps: 1250.0, // 10 Gbps
@@ -197,6 +201,7 @@ impl CosineConfig {
                 self.cluster.verifier_gpu = v.as_str()?.to_string();
             }
             set_usize(c, "verifier_gpus", &mut self.cluster.verifier_gpus)?;
+            set_usize(c, "n_verifier_replicas", &mut self.cluster.n_verifier_replicas)?;
             set_f64(c, "cluster_rtt_ms", &mut self.cluster.cluster_rtt_ms)?;
             set_f64(c, "uplink_rtt_ms", &mut self.cluster.uplink_rtt_ms)?;
             set_f64(c, "uplink_mbps", &mut self.cluster.uplink_mbps)?;
@@ -250,7 +255,7 @@ mod tests {
         let mut c = CosineConfig::default();
         let j = Json::parse(
             r#"{"pair": "q", "router": {"tau": 3.5, "enabled": false},
-                "cluster": {"n_drafter_nodes": 4}}"#,
+                "cluster": {"n_drafter_nodes": 4, "n_verifier_replicas": 2}}"#,
         )
         .unwrap();
         c.apply_json(&j).unwrap();
@@ -258,6 +263,7 @@ mod tests {
         assert_eq!(c.router.tau, 3.5);
         assert!(!c.router.enabled);
         assert_eq!(c.cluster.n_drafter_nodes, 4);
+        assert_eq!(c.cluster.n_verifier_replicas, 2);
         // untouched keys keep defaults
         assert_eq!(c.scheduler.max_batch, 16);
     }

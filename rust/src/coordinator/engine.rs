@@ -1,0 +1,612 @@
+//! Event-driven serving engine (the tentpole generalization of the round
+//! loop that used to live in `serve.rs`).
+//!
+//! The engine runs a binary-heap event queue over virtual time.  Every
+//! drafter node and every verifier replica is an independently occupiable
+//! resource ([`ResourcePool`]); draft-completion and verify-completion are
+//! discrete [`Event`]s, and the [`Scheduler`] is re-invoked at every event
+//! that can change schedulability — a request arriving, a drafter gang
+//! freeing, a verifier replica freeing — rather than once per global
+//! round.  That is continuous (iteration-level) batching: drafting of
+//! batch B overlaps verification of batch A *per replica*, and disjoint
+//! draft gangs run concurrently on disjoint node sets.
+//!
+//! Determinism: a round's real token-level compute (PJRT drafting,
+//! verification, commit, routing feedback) runs at *schedule* time, and a
+//! request belongs to at most one in-flight round, so outcomes are
+//! independent of how other requests' phases interleave on the virtual
+//! timeline.  Phase start/end times are reserved on the resource pool at
+//! schedule time; `DraftDone`/`VerifyDone` events mark the reservation
+//! boundaries and serve as the scheduling wake-ups.
+//!
+//! Equivalence: with one drafter node and one verifier replica the
+//! reservations reduce exactly to the legacy two-resource
+//! `VirtualPipeline` (property-tested in `tests/proptest_invariants.rs`),
+//! so single-resource results are bit-identical to the old round loop.
+
+use anyhow::Result;
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+use std::time::Instant;
+
+use crate::workload::Trace;
+
+use super::context::ServingContext;
+use super::fusion::{self, DraftMode};
+use super::metrics::RunReport;
+use super::pipeline::ResourcePool;
+use super::request::{Phase, Request, RequestPool};
+use super::router::{RoundFeedback, Router};
+use super::scheduler::{trim_gammas, Candidate, Scheduler};
+use super::serve::{embed_sim, StrategyOpts};
+use super::speculation::AdaptiveSpeculation;
+use super::verifier;
+
+/// Discrete events on the virtual timeline.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EventKind {
+    /// a request enters the pool (payload: pool index)
+    Arrival(usize),
+    /// a round's draft gang freed its drafter nodes (payload: round id)
+    DraftDone(u64),
+    /// a round's verification finished on some replica (payload: round id)
+    VerifyDone(u64),
+    /// an explicit re-schedule prod with no resource transition.  The
+    /// engine loops never emit it — every internal state change already
+    /// has an Arrival/DraftDone/VerifyDone event — but external drivers
+    /// of [`EventQueue`] can use it to wake the scheduler at a chosen
+    /// virtual time.
+    SchedTick,
+}
+
+#[derive(Debug, Clone, Copy)]
+struct Event {
+    at: f64,
+    seq: u64,
+    kind: EventKind,
+}
+
+impl PartialEq for Event {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == Ordering::Equal
+    }
+}
+
+impl Eq for Event {}
+
+impl PartialOrd for Event {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for Event {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // `BinaryHeap` is a max-heap: reverse so the earliest virtual time
+        // (FIFO within a timestamp) pops first.
+        other
+            .at
+            .total_cmp(&self.at)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+/// Min-time event queue over the virtual clock.
+pub struct EventQueue {
+    heap: BinaryHeap<Event>,
+    seq: u64,
+}
+
+impl Default for EventQueue {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl EventQueue {
+    pub fn new() -> Self {
+        Self {
+            heap: BinaryHeap::new(),
+            seq: 0,
+        }
+    }
+
+    pub fn push(&mut self, at: f64, kind: EventKind) {
+        let seq = self.seq;
+        self.seq += 1;
+        self.heap.push(Event { at, seq, kind });
+    }
+
+    pub fn pop(&mut self) -> Option<(f64, EventKind)> {
+        self.heap.pop().map(|e| (e.at, e.kind))
+    }
+
+    /// Virtual time of the next event, if any.
+    pub fn next_at(&self) -> Option<f64> {
+        self.heap.peek().map(|e| e.at)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+}
+
+/// Run any speculative strategy over a trace on the event engine.
+pub fn run_speculative(
+    ctx: &ServingContext,
+    trace: &Trace,
+    opts: &StrategyOpts,
+) -> Result<RunReport> {
+    let wall0 = Instant::now();
+    let pjrt0 = ctx
+        .engine
+        .exec_wall_ns
+        .load(std::sync::atomic::Ordering::Relaxed);
+    let c = ctx.constants().clone();
+    let n_drafters = ctx.n_drafters();
+    let n_nodes = ctx.cfg.cluster.n_drafter_nodes.max(1);
+    let n_replicas = ctx.cfg.cluster.n_verifier_replicas.max(1);
+    let mut pool = RequestPool::new(
+        trace
+            .requests
+            .iter()
+            .map(|t| Request::from_trace(t, n_drafters, ctx.cfg.speculation.gamma_init))
+            .collect(),
+    );
+    let mut router = Router::new(ctx.cfg.router.clone(), 42);
+    let sim = embed_sim(ctx)?;
+    let scheduler = Scheduler::new(ctx.cfg.scheduler.clone(), opts.lp_batching);
+    let mut spec = AdaptiveSpeculation::new(ctx.cfg.speculation.clone(), opts.k, n_drafters);
+    // coupled strategies never occupy the speculation cluster
+    let mut res = ResourcePool::new(if opts.decoupled { n_nodes } else { 0 }, n_replicas);
+    let mut queue = EventQueue::new();
+    let mut round_id: u64 = 0;
+
+    for (i, r) in pool.requests.iter().enumerate() {
+        queue.push(r.arrival_s, EventKind::Arrival(i));
+    }
+
+    while let Some((now, _kind)) = queue.pop() {
+        // Coalesce every event at this timestamp before scheduling, so a
+        // batch formed at time t sees all requests ready by t (events
+        // carry no deferred state: reservations happen at schedule time).
+        while queue.next_at().is_some_and(|t| t <= now) {
+            queue.pop();
+        }
+
+        // Invoke the scheduler while a resource and candidates are free at
+        // `now` — several rounds can launch at one instant on disjoint
+        // node sets / replicas.
+        loop {
+            if pool.unfinished() == 0 {
+                break;
+            }
+            // the round's draft gang: the k cooperating drafters, bounded
+            // by the physical node count (per-node occupancy — a round no
+            // longer spreads over nodes it does not use)
+            let k_now = if opts.adaptive { spec.k_nodes } else { opts.k };
+            let gang = k_now.clamp(1, n_nodes);
+            // gate on a FULL gang so draft phases start at their
+            // scheduling instant rather than reserving into the future
+            let free = if opts.decoupled {
+                res.drafters_free_at(gang, now)
+            } else {
+                res.verifier_free_at(now)
+            };
+            if !free {
+                break;
+            }
+            let cands: Vec<Candidate> = pool
+                .requests
+                .iter()
+                .enumerate()
+                .filter(|(_, r)| !r.is_finished() && r.ready_at <= now + 1e-9)
+                .map(|(i, r)| Candidate {
+                    idx: i,
+                    ctx_len: r.prompt.len() + r.generated.len(),
+                    gamma: r.gamma.min(r.remaining().max(1)).min(c.gamma_max),
+                    ready_at: r.ready_at,
+                    arrival_s: r.arrival_s,
+                })
+                .collect();
+            if cands.is_empty() {
+                break;
+            }
+            let assign = scheduler.assign(ctx, &cands, k_now);
+            if std::env::var("COSINE_DEBUG_SCHED").is_ok() {
+                eprintln!(
+                    "sched@{now:.3}: avail={} chosen={} k={} t_d={:.3} t_v={:.3} obj={:.4}",
+                    cands.len(),
+                    assign.batch.len(),
+                    k_now,
+                    assign.t_draft,
+                    assign.t_verify,
+                    assign.objective
+                );
+            }
+
+            // -------- per-request cooperative drafting (real compute) ----
+            let mut round_gammas = assign.gammas.clone();
+            trim_gammas(&mut round_gammas, ctx.cfg.scheduler.gamma_total_max);
+            let mode = if opts.fusion {
+                DraftMode::Fused
+            } else {
+                DraftMode::Independent
+            };
+            let mut new_prefills = 0usize;
+            let mut draft_tokens_max = 0usize;
+            let mut catchup_total = 0usize;
+            let mut per_req: Vec<(usize, fusion::DraftRound, Vec<usize>)> = Vec::new();
+            let mut ctx_crit = 1usize;
+
+            for (pos, &ri) in assign.batch.iter().enumerate() {
+                let gamma = round_gammas[pos].max(1);
+                // target prefill (also commits the first token)
+                if pool.requests[ri].target_state.is_none() {
+                    new_prefills += 1;
+                    verifier::ensure_target(ctx, &mut pool.requests[ri])?;
+                }
+                let req = &mut pool.requests[ri];
+                if req.is_finished() {
+                    continue;
+                }
+                ctx_crit = ctx_crit.max(req.prompt.len() + req.generated.len());
+                // routing (Eq. 3) or fixed assignment
+                let set = if opts.routing {
+                    router.route(req, n_drafters, k_now)
+                } else if opts.k == 1 {
+                    vec![(req.id as usize) % n_drafters]
+                } else {
+                    (0..k_now.min(n_drafters)).collect()
+                };
+                let priors: Vec<f64> = set.iter().map(|&d| req.routing[d]).collect();
+                let round = fusion::run_draft_round(
+                    ctx,
+                    req,
+                    &set,
+                    gamma,
+                    mode,
+                    if opts.routing { Some(&priors) } else { None },
+                )?;
+                catchup_total += round.catchup_steps;
+                draft_tokens_max = draft_tokens_max.max(gamma);
+                per_req.push((ri, round, set));
+            }
+
+            // -------- verification + commit (real compute) --------
+            let mut big_gamma = 0usize;
+            for (ri, round, set) in &per_req {
+                let req = &mut pool.requests[*ri];
+                let (main_path, outcome) = if opts.tree {
+                    // SpecInfer: verify every independent path, keep the
+                    // best.  Real compute verifies each path; modeled time
+                    // charges the whole token tree in one batched pass
+                    // below.
+                    let mut best: Option<(usize, verifier::VerifyResult)> = None;
+                    // snapshot cur_len to retry paths from the same state
+                    let snap = req.target_state.as_ref().unwrap().cur_len.clone();
+                    let pend = req.pending;
+                    for (pi, path) in round.paths.iter().enumerate() {
+                        let vres = verifier::dry_verify(ctx, req, &path.tokens)?;
+                        req.target_state.as_mut().unwrap().cur_len = snap.clone();
+                        req.pending = pend;
+                        if best.as_ref().is_none_or(|(_, b)| vres.accepted > b.accepted) {
+                            best = Some((pi, vres));
+                        }
+                    }
+                    let (pi, _) = best.unwrap();
+                    let path = round.paths[pi].clone();
+                    let out = verifier::verify_and_commit(ctx, req, &path.tokens)?;
+                    (path.tokens.clone(), out)
+                } else {
+                    let out = verifier::verify_and_commit(ctx, req, &round.main.tokens)?;
+                    (round.main.tokens.clone(), out)
+                };
+                big_gamma += main_path.len() + 1;
+
+                // routing feedback (Eq. 1-2)
+                if opts.routing {
+                    let feedback: Vec<RoundFeedback> = round
+                        .paths
+                        .iter()
+                        .map(|p| RoundFeedback {
+                            drafter: p.drafter,
+                            proposals: p
+                                .confs
+                                .iter()
+                                .copied()
+                                .zip(p.tokens.iter().copied())
+                                .collect(),
+                        })
+                        .collect();
+                    let bonus = *req.generated.last().unwrap_or(&0);
+                    router.update(
+                        req,
+                        &feedback,
+                        &outcome.committed_drafts,
+                        outcome.accepted,
+                        bonus,
+                        &sim,
+                    );
+                } else {
+                    // still track L_acc for adaptive-γ baselines
+                    req.l_acc = 0.7 * req.l_acc + 0.3 * outcome.accepted as f64;
+                }
+
+                // drafter KV resync
+                let fed: Vec<Vec<i32>> = match mode {
+                    DraftMode::Fused => set
+                        .iter()
+                        .map(|_| {
+                            let mut f = round.main.tokens.clone();
+                            f.truncate(f.len().saturating_sub(1));
+                            f
+                        })
+                        .collect(),
+                    DraftMode::Independent => round
+                        .paths
+                        .iter()
+                        .map(|p| {
+                            let mut f = p.tokens.clone();
+                            f.truncate(f.len().saturating_sub(1));
+                            f
+                        })
+                        .collect(),
+                };
+                fusion::resync_after_commit(
+                    req,
+                    set,
+                    &fed,
+                    &outcome.committed_drafts,
+                    outcome.before_len,
+                );
+            }
+
+            // -------- virtual timing (reserve resources) --------
+            let b = per_req.len().max(1);
+            let per_node_b = (b * k_now).div_ceil(gang).max(1);
+            // catch-up replay + γ lock-step decodes, plus fusion exchanges
+            let draft_steps = draft_tokens_max + catchup_total.div_ceil(b);
+            let mut t_draft = ctx.t_draft_s(per_node_b, draft_steps.max(1), ctx_crit);
+            if opts.fusion {
+                t_draft += draft_tokens_max as f64 * ctx.network.fusion_round_s(k_now, b);
+            }
+            if new_prefills > 0 {
+                t_draft += ctx.t_draft_prefill_s(new_prefills, c.prompt_len);
+            }
+            // verification cost from the roofline at the actual window
+            // width (weight-stream-bound: near-constant in Γ until the
+            // compute knee — the economics speculative inference relies
+            // on).  Trees multiply the verified token count by the branch
+            // factor.
+            let g_eff = (big_gamma as f64 / b as f64).ceil().max(1.0) as usize;
+            let g_tree = if opts.tree { g_eff * k_now } else { g_eff };
+            let mut t_verify = ctx.t_verify_s(b, g_tree, ctx_crit);
+            if new_prefills > 0 {
+                t_verify += ctx.t_target_prefill_s(new_prefills, c.prompt_len);
+            }
+            if opts.decoupled {
+                t_verify += ctx.network.verify_exchange_s(b, c.g1);
+            }
+
+            // drafting can only start when the batch is ready
+            let batch_ready = assign
+                .batch
+                .iter()
+                .map(|&ri| pool.requests[ri].ready_at)
+                .fold(0.0f64, f64::max);
+            if std::env::var("COSINE_DEBUG_SCHED").is_ok() {
+                eprintln!(
+                    "  round {round_id}: b={} t_draft={:.3} t_verify={:.3} ready={:.3} catchup={} steps={} prefills={}",
+                    b, t_draft, t_verify, batch_ready, catchup_total, draft_steps, new_prefills
+                );
+            }
+            let verify_end = if opts.decoupled {
+                let (_, d_end) = res.draft(gang, batch_ready, t_draft);
+                let (_, _, v_end) = res.verify(d_end, t_verify);
+                queue.push(d_end, EventKind::DraftDone(round_id));
+                queue.push(v_end, EventKind::VerifyDone(round_id));
+                v_end
+            } else {
+                let (_, _, v_end) = res.coupled(batch_ready, t_draft, t_verify);
+                queue.push(v_end, EventKind::VerifyDone(round_id));
+                v_end
+            };
+            round_id += 1;
+
+            if std::env::var("COSINE_DEBUG_ROUTE").is_ok() {
+                if let Some((ri, _, set)) = per_req.first() {
+                    let r = &pool.requests[*ri];
+                    eprintln!(
+                        "route: req={} dom={} set={:?} l_acc={:.2} M={:?} acc_ratio={:.2}",
+                        r.id,
+                        r.domain,
+                        set,
+                        r.l_acc,
+                        r.routing
+                            .iter()
+                            .map(|x| (x * 100.0).round() / 100.0)
+                            .collect::<Vec<_>>(),
+                        r.acceptance_ratio()
+                    );
+                }
+            }
+
+            // -------- post-round bookkeeping --------
+            if opts.adaptive {
+                let delta = spec.observe(t_draft, t_verify);
+                for &ri in &assign.batch {
+                    let req = &mut pool.requests[ri];
+                    if delta != 0 {
+                        req.gamma = spec.adjust_gamma(req.gamma, delta);
+                    }
+                }
+            }
+            for &ri in &assign.batch {
+                let req = &mut pool.requests[ri];
+                req.ready_at = verify_end;
+                if req.start_serve_s.is_none() {
+                    req.start_serve_s = Some(batch_ready);
+                }
+                if req.is_finished() && req.finish_s.is_none() {
+                    req.finish_s = Some(verify_end);
+                    req.phase = Phase::Finished;
+                }
+            }
+        }
+    }
+    anyhow::ensure!(
+        pool.unfinished() == 0,
+        "event queue drained with {} unfinished requests",
+        pool.unfinished()
+    );
+
+    let pjrt1 = ctx
+        .engine
+        .exec_wall_ns
+        .load(std::sync::atomic::Ordering::Relaxed);
+    Ok(RunReport::assemble(
+        &opts.name,
+        &ctx.cfg.pair,
+        &pool.requests,
+        &res,
+        &ctx.drafter_gpu,
+        if opts.decoupled {
+            ctx.cfg.cluster.n_drafter_nodes
+        } else {
+            0
+        },
+        &ctx.verifier_gpu,
+        ctx.cfg.cluster.verifier_gpus,
+        opts.decoupled,
+        wall0.elapsed().as_secs_f64(),
+        (pjrt1 - pjrt0) as f64 / 1e9,
+    ))
+}
+
+/// vLLM-style continuous batching (no speculation) on the same event
+/// engine: each round is one batched target decode step occupying the
+/// earliest-free verifier replica, so the baseline scales across replicas
+/// exactly like the speculative strategies it is compared against.
+pub fn run_vllm(ctx: &ServingContext, trace: &Trace) -> Result<RunReport> {
+    let wall0 = Instant::now();
+    let pjrt0 = ctx
+        .engine
+        .exec_wall_ns
+        .load(std::sync::atomic::Ordering::Relaxed);
+    let c = ctx.constants().clone();
+    let max_b = ctx
+        .cfg
+        .scheduler
+        .max_batch
+        .min(*c.batch_buckets.iter().max().unwrap_or(&16));
+    let n_replicas = ctx.cfg.cluster.n_verifier_replicas.max(1);
+    let mut pool = RequestPool::new(
+        trace
+            .requests
+            .iter()
+            .map(|t| Request::from_trace(t, 1, 1))
+            .collect(),
+    );
+    let mut res = ResourcePool::new(0, n_replicas);
+    let mut queue = EventQueue::new();
+    let mut round_id: u64 = 0;
+
+    for (i, r) in pool.requests.iter().enumerate() {
+        queue.push(r.arrival_s, EventKind::Arrival(i));
+    }
+
+    while let Some((now, _kind)) = queue.pop() {
+        while queue.next_at().is_some_and(|t| t <= now) {
+            queue.pop();
+        }
+
+        loop {
+            if pool.unfinished() == 0 {
+                break;
+            }
+            if !res.verifier_free_at(now) {
+                break;
+            }
+            // continuous batching: arrived, unfinished requests up to max_b
+            let mut idxs: Vec<usize> = pool
+                .requests
+                .iter()
+                .enumerate()
+                .filter(|(_, r)| !r.is_finished() && r.ready_at <= now + 1e-9)
+                .map(|(i, _)| i)
+                .collect();
+            if idxs.is_empty() {
+                break;
+            }
+            idxs.sort_by(|&a, &b| {
+                pool.requests[a]
+                    .arrival_s
+                    .total_cmp(&pool.requests[b].arrival_s)
+            });
+            idxs.truncate(max_b);
+
+            let mut new_prefills = 0usize;
+            let mut ctx_crit = 1usize;
+            for &i in &idxs {
+                if pool.requests[i].target_state.is_none() {
+                    new_prefills += 1;
+                    verifier::ensure_target(ctx, &mut pool.requests[i])?;
+                }
+                let r = &pool.requests[i];
+                ctx_crit = ctx_crit.max(r.prompt.len() + r.generated.len());
+                if !pool.requests[i].is_finished() {
+                    verifier::target_decode_one(ctx, &mut pool.requests[i])?;
+                }
+            }
+
+            // modeled: one batched decode step + any prefills
+            let b = idxs.len();
+            let mut t = ctx.t_target_decode_s(b, 1, ctx_crit);
+            if new_prefills > 0 {
+                t += ctx.t_target_prefill_s(new_prefills, c.prompt_len);
+            }
+            let ready = idxs
+                .iter()
+                .map(|&i| pool.requests[i].ready_at)
+                .fold(0.0f64, f64::max);
+            let (_, _, end) = res.verify(ready, t);
+            queue.push(end, EventKind::VerifyDone(round_id));
+            round_id += 1;
+            for &i in &idxs {
+                let r = &mut pool.requests[i];
+                r.ready_at = end;
+                if r.start_serve_s.is_none() {
+                    r.start_serve_s = Some(ready);
+                }
+                if r.is_finished() && r.finish_s.is_none() {
+                    r.finish_s = Some(end);
+                    r.phase = Phase::Finished;
+                }
+            }
+        }
+    }
+    anyhow::ensure!(
+        pool.unfinished() == 0,
+        "event queue drained with {} unfinished requests",
+        pool.unfinished()
+    );
+
+    let pjrt1 = ctx
+        .engine
+        .exec_wall_ns
+        .load(std::sync::atomic::Ordering::Relaxed);
+    Ok(RunReport::assemble(
+        "vllm",
+        &ctx.cfg.pair,
+        &pool.requests,
+        &res,
+        &ctx.drafter_gpu,
+        0,
+        &ctx.verifier_gpu,
+        ctx.cfg.cluster.verifier_gpus,
+        false,
+        wall0.elapsed().as_secs_f64(),
+        (pjrt1 - pjrt0) as f64 / 1e9,
+    ))
+}

@@ -139,7 +139,7 @@ pub fn run_draft_round(
             paths[pi].confs.push(p);
             let w = priors.map_or(1.0, |pr| (pr[pi] * pr[pi]).max(1e-4));
             let score = w * p as f64;
-            if best.map_or(true, |(bs, _, _)| score > bs) {
+            if best.is_none_or(|(bs, _, _)| score > bs) {
                 best = Some((score, p, tok));
             }
         }

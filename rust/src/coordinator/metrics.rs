@@ -1,10 +1,12 @@
 //! Run metrics: the quantities every paper table/figure reports —
 //! end-to-end latency (ms/token), throughput (tokens/s), cost efficiency
-//! (cost/token), acceptance statistics, resource utilization.
+//! (cost/token), acceptance statistics, resource utilization — now with
+//! per-resource (drafter node / verifier replica) busy accounting and
+//! queueing delay from the event engine's `ResourcePool`.
 
 use crate::cluster::node::GpuProfile;
 
-use super::pipeline::VirtualPipeline;
+use super::pipeline::ResourcePool;
 use super::request::Request;
 
 #[derive(Debug, Clone, Default)]
@@ -27,10 +29,24 @@ pub struct RunReport {
     pub rounds: u64,
     pub drafts_proposed: u64,
     pub drafts_accepted: u64,
+    /// busy-seconds summed over drafter nodes / verifier replicas
     pub cluster_busy_s: f64,
     pub server_busy_s: f64,
+    /// stage-level idle fractions (1 − total busy / makespan, clamped)
     pub server_idle_frac: f64,
     pub cluster_idle_frac: f64,
+    /// replica/node count the run was modeled with
+    pub n_verifier_replicas: usize,
+    /// per-resource busy-seconds (empty when a stage has no resources,
+    /// e.g. coupled strategies never occupy the speculation cluster)
+    pub per_drafter_busy_s: Vec<f64>,
+    pub per_verifier_busy_s: Vec<f64>,
+    /// capacity-normalized utilization (busy / (resources × makespan))
+    pub drafter_util: f64,
+    pub verifier_util: f64,
+    /// mean queueing delay between phase readiness and phase start
+    pub draft_queue_delay_s: f64,
+    pub verify_queue_delay_s: f64,
     /// total modeled rent cost ($) and per-token cost
     pub cost_total: f64,
     pub cost_per_token: f64,
@@ -41,13 +57,13 @@ pub struct RunReport {
 }
 
 impl RunReport {
-    /// Assemble a report from finished requests + the pipeline state.
+    /// Assemble a report from finished requests + the resource-pool state.
     #[allow(clippy::too_many_arguments)]
     pub fn assemble(
         strategy: &str,
         pair: &str,
         requests: &[Request],
-        pipe: &VirtualPipeline,
+        res: &ResourcePool,
         drafter_gpu: &GpuProfile,
         n_drafter_nodes: usize,
         verifier_gpu: &GpuProfile,
@@ -61,7 +77,7 @@ impl RunReport {
             .iter()
             .filter_map(|r| r.finish_s.map(|f| f - r.arrival_s))
             .collect();
-        let makespan = pipe.makespan();
+        let makespan = res.makespan();
         let per_tok: Vec<f64> = requests
             .iter()
             .filter_map(|r| {
@@ -83,8 +99,10 @@ impl RunReport {
             (accepted + rounds) as f64 / rounds as f64
         };
 
-        // rent model: provisioned hardware is billed for the whole run
-        let mut rate_per_hr = verifier_gpu.rent_per_hr * verifier_gpus as f64;
+        // rent model: provisioned hardware is billed for the whole run;
+        // every verifier replica is a full verification server
+        let mut rate_per_hr =
+            verifier_gpu.rent_per_hr * (verifier_gpus * res.verifiers.len()) as f64;
         if uses_cluster {
             rate_per_hr += drafter_gpu.rent_per_hr * n_drafter_nodes as f64;
         }
@@ -106,10 +124,17 @@ impl RunReport {
             rounds,
             drafts_proposed: proposed,
             drafts_accepted: accepted,
-            cluster_busy_s: pipe.cluster_busy,
-            server_busy_s: pipe.server_busy,
-            server_idle_frac: pipe.server_idle_frac(),
-            cluster_idle_frac: pipe.cluster_idle_frac(),
+            cluster_busy_s: res.drafter_busy_total(),
+            server_busy_s: res.verifier_busy_total(),
+            server_idle_frac: res.verifier_idle_frac(),
+            cluster_idle_frac: res.drafter_idle_frac(),
+            n_verifier_replicas: res.verifiers.len(),
+            per_drafter_busy_s: res.drafters.iter().map(|r| r.busy).collect(),
+            per_verifier_busy_s: res.verifiers.iter().map(|r| r.busy).collect(),
+            drafter_util: res.drafter_util(),
+            verifier_util: res.verifier_util(),
+            draft_queue_delay_s: res.mean_draft_wait_s(),
+            verify_queue_delay_s: res.mean_verify_wait_s(),
             cost_total,
             cost_per_token: if tokens > 0 {
                 cost_total / tokens as f64
@@ -141,7 +166,7 @@ impl RunReport {
 
     pub fn summary_row(&self) -> String {
         format!(
-            "{:<10} pair={} n={:<3} tok={:<6} lat={:>8.1} ms/tok thr={:>8.1} tok/s acc={:>4.2} cost/tok=${:.6} idle(srv)={:.0}% wall={:.1}s",
+            "{:<10} pair={} n={:<3} tok={:<6} lat={:>8.1} ms/tok thr={:>8.1} tok/s acc={:>4.2} cost/tok=${:.6} idle(srv)={:.0}% qwait={:.2}s wall={:.1}s",
             self.strategy,
             self.pair,
             self.n_requests,
@@ -151,6 +176,7 @@ impl RunReport {
             self.accept_ratio,
             self.cost_per_token,
             self.server_idle_frac * 100.0,
+            self.verify_queue_delay_s,
             self.wall_s,
         )
     }

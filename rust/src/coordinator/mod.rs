@@ -7,8 +7,10 @@
 //!   (Eq. 4, Alg. 1): per-iteration max-confidence selection with feedback.
 //! * `scheduler` — batch assignment minimizing `T_ttl/b + λΓ` (Eq. 5–8).
 //! * `speculation` — adaptive per-request draft budgets (Alg. 2).
-//! * `pipeline` — two-resource virtual-time pipeline (speculation cluster ∥
-//!   verification server) with double-buffered groups.
+//! * `pipeline` — virtual-time resource models: the legacy two-resource
+//!   pipeline plus the per-resource `ResourcePool` generalization.
+//! * `engine` — the event-driven serving loop (binary-heap event queue,
+//!   per-node drafter occupancy, per-replica continuous batching).
 //! * `verifier` — greedy longest-prefix acceptance + commit bookkeeping
 //!   (the accept/bonus computation itself is fused into the L1 verify
 //!   kernel; this module owns the state updates).
@@ -17,6 +19,7 @@
 //! charged by the calibrated cluster model (see `cluster::SimClock`).
 
 pub mod context;
+pub mod engine;
 pub mod fusion;
 pub mod metrics;
 pub mod pipeline;

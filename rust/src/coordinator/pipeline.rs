@@ -1,11 +1,16 @@
-//! Two-resource virtual-time pipeline (paper §4.3 / Fig. 4).
+//! Virtual-time resource models (paper §4.3 / Fig. 4).
 //!
-//! The speculation cluster and the verification server are independent
-//! resources; a speculation round occupies the cluster for `t_draft`, then
-//! the server for `t_verify`.  Because the scheduler interleaves disjoint
-//! request groups, drafting of group B overlaps verification of group A —
-//! the decoupled pipelining that coupled baselines (Vanilla, SpecInfer)
-//! cannot do (they serialize both phases on one resource).
+//! Two generations live here:
+//!
+//! * [`VirtualPipeline`] — the original two-resource model (one speculation
+//!   cluster, one verification server).  Kept as the reference the
+//!   event-driven engine is property-tested against.
+//! * [`ResourcePool`] — its generalization: every drafter node and every
+//!   verifier replica is an independently occupiable [`Resource`] with its
+//!   own busy/idle accounting, so drafting of group B overlaps
+//!   verification of group A *per replica*, and concurrent draft rounds
+//!   can run on disjoint node sets.  With one drafter node and one
+//!   verifier replica the pool reduces exactly to [`VirtualPipeline`].
 
 #[derive(Debug, Clone, Default)]
 pub struct VirtualPipeline {
@@ -71,6 +76,207 @@ impl VirtualPipeline {
             0.0
         } else {
             1.0 - self.cluster_busy / m
+        }
+    }
+}
+
+/// One independently occupiable resource (a drafter node or a verifier
+/// replica) on the virtual timeline.
+#[derive(Debug, Clone, Default)]
+pub struct Resource {
+    /// time the resource becomes free
+    pub free_at: f64,
+    /// accumulated busy time
+    pub busy: f64,
+}
+
+impl Resource {
+    /// Occupy from `max(ready_at, free_at)` for `dur`; returns (start, end).
+    pub fn occupy(&mut self, ready_at: f64, dur: f64) -> (f64, f64) {
+        let start = ready_at.max(self.free_at);
+        let end = start + dur;
+        self.free_at = end;
+        self.busy += dur;
+        (start, end)
+    }
+}
+
+/// Per-resource generalization of [`VirtualPipeline`]: `drafters` are the
+/// speculation-cluster nodes, `verifiers` the verification-server
+/// replicas.  Draft phases occupy a gang of the earliest-free nodes;
+/// verify phases occupy the earliest-free replica, which is what lets the
+/// event engine run continuous (iteration-level) batching across replicas.
+#[derive(Debug, Clone)]
+pub struct ResourcePool {
+    pub drafters: Vec<Resource>,
+    pub verifiers: Vec<Resource>,
+    /// accumulated wait between phase readiness and phase start
+    pub draft_wait: f64,
+    pub verify_wait: f64,
+    pub draft_phases: u64,
+    pub verify_phases: u64,
+}
+
+impl ResourcePool {
+    /// `n_drafters` may be 0 for coupled strategies that never touch the
+    /// speculation cluster; at least one verifier replica always exists.
+    pub fn new(n_drafters: usize, n_verifiers: usize) -> Self {
+        Self {
+            drafters: vec![Resource::default(); n_drafters],
+            verifiers: vec![Resource::default(); n_verifiers.max(1)],
+            draft_wait: 0.0,
+            verify_wait: 0.0,
+            draft_phases: 0,
+            verify_phases: 0,
+        }
+    }
+
+    fn earliest(set: &[Resource]) -> usize {
+        let mut best = 0;
+        for (i, r) in set.iter().enumerate() {
+            if r.free_at < set[best].free_at {
+                best = i;
+            }
+        }
+        best
+    }
+
+    /// True when at least one drafter node is free at virtual time `t`
+    /// (always true for pools without drafter resources).
+    pub fn drafter_free_at(&self, t: f64) -> bool {
+        self.drafters.is_empty() || self.drafters.iter().any(|r| r.free_at <= t + 1e-9)
+    }
+
+    /// True when a full gang of `m` drafter nodes is free at virtual time
+    /// `t` (always true for pools without drafter resources).  Gating on
+    /// the whole gang keeps draft starts at their scheduling instant
+    /// instead of reserving into the future past not-yet-ready requests.
+    pub fn drafters_free_at(&self, m: usize, t: f64) -> bool {
+        if self.drafters.is_empty() {
+            return true;
+        }
+        let m = m.clamp(1, self.drafters.len());
+        self.drafters.iter().filter(|r| r.free_at <= t + 1e-9).count() >= m
+    }
+
+    /// True when at least one verifier replica is free at virtual time `t`.
+    pub fn verifier_free_at(&self, t: f64) -> bool {
+        self.verifiers.iter().any(|r| r.free_at <= t + 1e-9)
+    }
+
+    /// Occupy a gang of the `m` earliest-free drafter nodes for one draft
+    /// phase; returns (start, end).  The gang starts when its last member
+    /// frees (cooperative lock-step drafting synchronizes every token).
+    pub fn draft(&mut self, m: usize, ready_at: f64, dur: f64) -> (f64, f64) {
+        if self.drafters.is_empty() {
+            return (ready_at, ready_at + dur);
+        }
+        let m = m.clamp(1, self.drafters.len());
+        let mut idx: Vec<usize> = (0..self.drafters.len()).collect();
+        idx.sort_by(|&a, &b| self.drafters[a].free_at.total_cmp(&self.drafters[b].free_at));
+        let mut start = ready_at;
+        for &i in &idx[..m] {
+            start = start.max(self.drafters[i].free_at);
+        }
+        let end = start + dur;
+        for &i in &idx[..m] {
+            self.drafters[i].busy += dur;
+            self.drafters[i].free_at = end;
+        }
+        self.draft_wait += start - ready_at;
+        self.draft_phases += 1;
+        (start, end)
+    }
+
+    /// Occupy the earliest-free verifier replica; returns (replica, start,
+    /// end).
+    pub fn verify(&mut self, ready_at: f64, dur: f64) -> (usize, f64, f64) {
+        let i = Self::earliest(&self.verifiers);
+        let (start, end) = self.verifiers[i].occupy(ready_at, dur);
+        self.verify_wait += start - ready_at;
+        self.verify_phases += 1;
+        (i, start, end)
+    }
+
+    /// Coupled execution: draft + verify back-to-back on one verifier
+    /// replica (co-located drafting, the resource-contention regime).
+    pub fn coupled(&mut self, ready_at: f64, t_draft: f64, t_verify: f64) -> (usize, f64, f64) {
+        self.verify(ready_at, t_draft + t_verify)
+    }
+
+    pub fn makespan(&self) -> f64 {
+        let d = self.drafters.iter().map(|r| r.free_at).fold(0.0, f64::max);
+        let v = self.verifiers.iter().map(|r| r.free_at).fold(0.0, f64::max);
+        d.max(v)
+    }
+
+    pub fn drafter_busy_total(&self) -> f64 {
+        self.drafters.iter().map(|r| r.busy).sum()
+    }
+
+    pub fn verifier_busy_total(&self) -> f64 {
+        self.verifiers.iter().map(|r| r.busy).sum()
+    }
+
+    /// Stage-level idle fraction of the verification server, using the
+    /// seed's definition `1 − busy/makespan` with busy summed over
+    /// replicas, clamped to [0, 1] (parallel replicas can accumulate more
+    /// busy-seconds than the makespan).
+    pub fn verifier_idle_frac(&self) -> f64 {
+        let m = self.makespan();
+        if m <= 0.0 {
+            0.0
+        } else {
+            (1.0 - self.verifier_busy_total() / m).max(0.0)
+        }
+    }
+
+    /// Stage-level idle fraction of the speculation cluster (same
+    /// convention as [`Self::verifier_idle_frac`]).
+    pub fn drafter_idle_frac(&self) -> f64 {
+        let m = self.makespan();
+        if m <= 0.0 {
+            0.0
+        } else {
+            (1.0 - self.drafter_busy_total() / m).max(0.0)
+        }
+    }
+
+    /// Capacity-normalized utilization: busy-seconds over
+    /// `replicas × makespan`.
+    pub fn verifier_util(&self) -> f64 {
+        let m = self.makespan() * self.verifiers.len() as f64;
+        if m <= 0.0 {
+            0.0
+        } else {
+            self.verifier_busy_total() / m
+        }
+    }
+
+    pub fn drafter_util(&self) -> f64 {
+        let m = self.makespan() * self.drafters.len().max(1) as f64;
+        if m <= 0.0 {
+            0.0
+        } else {
+            self.drafter_busy_total() / m
+        }
+    }
+
+    /// Mean queueing delay between a verify phase becoming ready and a
+    /// replica starting it.
+    pub fn mean_verify_wait_s(&self) -> f64 {
+        if self.verify_phases == 0 {
+            0.0
+        } else {
+            self.verify_wait / self.verify_phases as f64
+        }
+    }
+
+    pub fn mean_draft_wait_s(&self) -> f64 {
+        if self.draft_phases == 0 {
+            0.0
+        } else {
+            self.draft_wait / self.draft_phases as f64
         }
     }
 }

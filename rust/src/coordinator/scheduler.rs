@@ -62,9 +62,12 @@ impl Scheduler {
         let b = chosen.len();
         let crit_ctx = chosen.iter().map(|c| c.ctx_len).max().unwrap_or(1);
         let gamma_max = gammas.iter().copied().max().unwrap_or(1);
-        // drafting spreads across the speculation cluster's nodes
+        // drafting occupies the round's gang: the k cooperating drafters,
+        // bounded by the physical node count (matches the event engine's
+        // per-node occupancy model)
         let nodes = ctx.cfg.cluster.n_drafter_nodes.max(1);
-        let per_node_b = (b * k_nodes).div_ceil(nodes).max(1);
+        let gang = k_nodes.clamp(1, nodes);
+        let per_node_b = (b * k_nodes).div_ceil(gang).max(1);
         let t_draft = ctx.t_draft_s(per_node_b, gamma_max, crit_ctx)
             + gamma_max as f64 * ctx.network.fusion_round_s(k_nodes, b);
         let big_gamma: usize = gammas.iter().map(|g| g + 1).sum();
@@ -137,7 +140,7 @@ impl Scheduler {
             }
             let big_gamma: usize = gammas.iter().map(|g| g + 1).sum();
             let obj = self.objective(t_d, t_v, b, big_gamma);
-            if best.as_ref().map_or(true, |a| obj < a.objective) {
+            if best.as_ref().is_none_or(|a| obj < a.objective) {
                 best = Some(Assignment {
                     batch: chosen.iter().map(|c| c.idx).collect(),
                     gammas,

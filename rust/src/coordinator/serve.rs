@@ -1,10 +1,10 @@
-//! The unified speculative serving engine.
+//! Strategy definitions for the unified speculative serving engine.
 //!
 //! CoSine and the three speculative baselines differ only in policy knobs
-//! (`StrategyOpts`); they all run the same round loop — (schedule →
-//! cooperative draft → verify → commit → resync) — over the same runtime
-//! and hardware model, which is what makes the paper's comparisons
-//! apples-to-apples:
+//! (`StrategyOpts`); they all run the same event-driven loop (see
+//! `coordinator::engine`) — (schedule → cooperative draft → verify →
+//! commit → resync) — over the same runtime and hardware model, which is
+//! what makes the paper's comparisons apples-to-apples:
 //!
 //! | strategy  | routing | fusion | k | decoupled | adaptive γ | LP batch |
 //! |-----------|---------|--------|---|-----------|------------|----------|
@@ -13,22 +13,17 @@
 //! | PipeInfer | no      | no     | 1 | yes       | no         | no       |
 //! | SpecInfer | no      | no(tree)| 3| no        | no         | no       |
 //!
-//! (vLLM has no speculation and lives in `baselines::vllm`.)
+//! (vLLM has no speculation and runs as `engine::run_vllm` on the same
+//! event loop.)
 
 use anyhow::Result;
-use std::time::Instant;
 
 use crate::workload::Trace;
 
 use super::context::ServingContext;
-use super::fusion::{self, DraftMode};
+use super::engine;
 use super::metrics::RunReport;
-use super::pipeline::VirtualPipeline;
-use super::request::{Phase, Request, RequestPool};
-use super::router::{EmbedSim, RoundFeedback, Router};
-use super::scheduler::{trim_gammas, Candidate, Scheduler};
-use super::speculation::AdaptiveSpeculation;
-use super::verifier;
+use super::router::EmbedSim;
 
 #[derive(Debug, Clone)]
 pub struct StrategyOpts {
@@ -123,322 +118,13 @@ impl CoSine {
     }
 }
 
-/// Run any speculative strategy over a trace.  Returns the run report.
+/// Run any speculative strategy over a trace on the event-driven engine.
 pub fn run_speculative(
     ctx: &ServingContext,
     trace: &Trace,
     opts: &StrategyOpts,
 ) -> Result<RunReport> {
-    let wall0 = Instant::now();
-    let pjrt0 = ctx
-        .engine
-        .exec_wall_ns
-        .load(std::sync::atomic::Ordering::Relaxed);
-    let c = ctx.constants().clone();
-    let n_drafters = ctx.n_drafters();
-    let mut pool = RequestPool::new(
-        trace
-            .requests
-            .iter()
-            .map(|t| Request::from_trace(t, n_drafters, ctx.cfg.speculation.gamma_init))
-            .collect(),
-    );
-    let mut router = Router::new(ctx.cfg.router.clone(), 42);
-    let sim = embed_sim(ctx)?;
-    let scheduler = Scheduler::new(ctx.cfg.scheduler.clone(), opts.lp_batching);
-    let mut spec = AdaptiveSpeculation::new(
-        ctx.cfg.speculation.clone(),
-        opts.k,
-        n_drafters,
-    );
-    let mut pipe = VirtualPipeline::new();
-
-    loop {
-        if pool.unfinished() == 0 {
-            break;
-        }
-        // -------- schedule (Alg. 2 BatchAssignment) --------
-        let now = if opts.decoupled {
-            pipe.cluster_free
-        } else {
-            pipe.server_free
-        };
-        let mut cands: Vec<Candidate> = pool
-            .requests
-            .iter()
-            .enumerate()
-            .filter(|(_, r)| !r.is_finished())
-            .map(|(i, r)| Candidate {
-                idx: i,
-                ctx_len: r.prompt.len() + r.generated.len(),
-                gamma: r.gamma.min(r.remaining().max(1)).min(c.gamma_max),
-                ready_at: r.ready_at,
-                arrival_s: r.arrival_s,
-            })
-            .collect();
-        // gate on readiness: take requests ready by `now`, or advance to
-        // the earliest ready time
-        let earliest = cands
-            .iter()
-            .map(|x| x.ready_at)
-            .fold(f64::INFINITY, f64::min);
-        let now = now.max(earliest);
-        cands.retain(|x| x.ready_at <= now + 1e-9);
-        if cands.is_empty() {
-            continue;
-        }
-        let k_now = if opts.adaptive { spec.k_nodes } else { opts.k };
-        let assign = scheduler.assign(ctx, &cands, k_now);
-        if std::env::var("COSINE_DEBUG_SCHED").is_ok() {
-            eprintln!(
-                "sched: avail={} chosen={} k={} t_d={:.3} t_v={:.3} obj={:.4}",
-                cands.len(),
-                assign.batch.len(),
-                k_now,
-                assign.t_draft,
-                assign.t_verify,
-                assign.objective
-            );
-        }
-
-        // -------- per-request cooperative drafting --------
-        let mut round_gammas = assign.gammas.clone();
-        trim_gammas(&mut round_gammas, ctx.cfg.scheduler.gamma_total_max);
-        let mode = if opts.fusion {
-            DraftMode::Fused
-        } else {
-            DraftMode::Independent
-        };
-        let mut new_prefills = 0usize;
-        let mut draft_tokens_max = 0usize;
-        let mut catchup_total = 0usize;
-        let mut per_req: Vec<(usize, fusion::DraftRound, Vec<usize>)> = Vec::new();
-        let mut ctx_crit = 1usize;
-
-        for (pos, &ri) in assign.batch.iter().enumerate() {
-            let gamma = round_gammas[pos].max(1);
-            // target prefill (also commits the first token)
-            if pool.requests[ri].target_state.is_none() {
-                new_prefills += 1;
-                verifier::ensure_target(ctx, &mut pool.requests[ri])?;
-            }
-            let req = &mut pool.requests[ri];
-            if req.is_finished() {
-                continue;
-            }
-            ctx_crit = ctx_crit.max(req.prompt.len() + req.generated.len());
-            // routing (Eq. 3) or fixed assignment
-            let set = if opts.routing {
-                router.route(req, n_drafters, k_now)
-            } else if opts.k == 1 {
-                vec![(req.id as usize) % n_drafters]
-            } else {
-                (0..k_now.min(n_drafters)).collect()
-            };
-            let priors: Vec<f64> = set.iter().map(|&d| req.routing[d]).collect();
-            let round = fusion::run_draft_round(
-                ctx,
-                req,
-                &set,
-                gamma,
-                mode,
-                if opts.routing { Some(&priors) } else { None },
-            )?;
-            catchup_total += round.catchup_steps;
-            draft_tokens_max = draft_tokens_max.max(gamma);
-            per_req.push((ri, round, set));
-        }
-
-        // -------- verification + commit --------
-        let mut big_gamma = 0usize;
-        for (ri, round, set) in &per_req {
-            let req = &mut pool.requests[*ri];
-            let (main_path, outcome) = if opts.tree {
-                // SpecInfer: verify every independent path, keep the best.
-                // Real compute verifies each path; modeled time charges the
-                // whole token tree in one batched pass below.
-                let mut best: Option<(usize, verifier::VerifyResult)> = None;
-                // snapshot cur_len to retry paths from the same state
-                let snap = req.target_state.as_ref().unwrap().cur_len.clone();
-                let pend = req.pending;
-                for (pi, path) in round.paths.iter().enumerate() {
-                    let res = verifier::dry_verify(ctx, req, &path.tokens)?;
-                    req.target_state.as_mut().unwrap().cur_len = snap.clone();
-                    req.pending = pend;
-                    if best.as_ref().map_or(true, |(_, b)| res.accepted > b.accepted) {
-                        best = Some((pi, res));
-                    }
-                }
-                let (pi, _) = best.unwrap();
-                let path = round.paths[pi].clone();
-                let out = verifier::verify_and_commit(ctx, req, &path.tokens)?;
-                (path.tokens.clone(), out)
-            } else {
-                let out = verifier::verify_and_commit(ctx, req, &round.main.tokens)?;
-                (round.main.tokens.clone(), out)
-            };
-            big_gamma += main_path.len() + 1;
-
-            // routing feedback (Eq. 1-2)
-            if opts.routing {
-                let feedback: Vec<RoundFeedback> = round
-                    .paths
-                    .iter()
-                    .map(|p| RoundFeedback {
-                        drafter: p.drafter,
-                        proposals: p.confs.iter().copied().zip(p.tokens.iter().copied()).collect(),
-                    })
-                    .collect();
-                let bonus = *req.generated.last().unwrap_or(&0);
-                router.update(
-                    req,
-                    &feedback,
-                    &outcome.committed_drafts,
-                    outcome.accepted,
-                    bonus,
-                    &sim,
-                );
-            } else {
-                // still track L_acc for adaptive-γ baselines
-                req.l_acc = 0.7 * req.l_acc + 0.3 * outcome.accepted as f64;
-            }
-
-            // drafter KV resync
-            let fed: Vec<Vec<i32>> = match mode {
-                DraftMode::Fused => set
-                    .iter()
-                    .map(|_| {
-                        let mut f = round.main.tokens.clone();
-                        f.truncate(f.len().saturating_sub(1));
-                        f
-                    })
-                    .collect(),
-                DraftMode::Independent => round
-                    .paths
-                    .iter()
-                    .map(|p| {
-                        let mut f = p.tokens.clone();
-                        f.truncate(f.len().saturating_sub(1));
-                        f
-                    })
-                    .collect(),
-            };
-            fusion::resync_after_commit(
-                req,
-                set,
-                &fed,
-                &outcome.committed_drafts,
-                outcome.before_len,
-            );
-        }
-
-        // -------- virtual timing --------
-        let b = per_req.len().max(1);
-        let nodes = ctx.cfg.cluster.n_drafter_nodes.max(1);
-        let per_node_b = (b * k_now).div_ceil(nodes).max(1);
-        // catch-up replay + γ lock-step decodes, plus fusion exchanges
-        let draft_steps = draft_tokens_max + catchup_total.div_ceil(b.max(1));
-        let mut t_draft = ctx.t_draft_s(per_node_b, draft_steps.max(1), ctx_crit);
-        if opts.fusion {
-            t_draft += draft_tokens_max as f64 * ctx.network.fusion_round_s(k_now, b);
-        }
-        if new_prefills > 0 {
-            t_draft += ctx.t_draft_prefill_s(new_prefills, c.prompt_len);
-        }
-        // verification cost from the roofline at the actual window width
-        // (weight-stream-bound: near-constant in Γ until the compute knee —
-        // the economics speculative inference relies on).  Trees multiply
-        // the verified token count by the branch factor.
-        let g_eff = (big_gamma as f64 / b as f64).ceil().max(1.0) as usize;
-        let g_tree = if opts.tree { g_eff * k_now } else { g_eff };
-        let mut t_verify = ctx.t_verify_s(b, g_tree, ctx_crit);
-        if new_prefills > 0 {
-            t_verify += ctx.t_target_prefill_s(new_prefills, c.prompt_len);
-        }
-        if opts.decoupled {
-            t_verify += ctx.network.verify_exchange_s(b, c.g1);
-        }
-
-        // drafting can only start when the batch is ready
-        let batch_ready = assign
-            .batch
-            .iter()
-            .map(|&ri| pool.requests[ri].ready_at)
-            .fold(0.0f64, f64::max);
-        if std::env::var("COSINE_DEBUG_SCHED").is_ok() {
-            eprintln!(
-                "  round: b={} t_draft={:.3} t_verify={:.3} ready={:.3} catchup={} steps={} prefills={}",
-                b, t_draft, t_verify, batch_ready, catchup_total, draft_steps, new_prefills
-            );
-        }
-        let verify_end = if opts.decoupled {
-            let (_, d_end) = pipe.draft(batch_ready, t_draft);
-            let (_, v_end) = pipe.verify(d_end, t_verify);
-            v_end
-        } else {
-            let (_, v_end) = pipe.coupled(batch_ready, t_draft, t_verify);
-            v_end
-        };
-
-        if std::env::var("COSINE_DEBUG_ROUTE").is_ok() {
-            if let Some((ri, _, set)) = per_req.first() {
-                let r = &pool.requests[*ri];
-                eprintln!(
-                    "route: req={} dom={} set={:?} l_acc={:.2} M={:?} acc_ratio={:.2}",
-                    r.id,
-                    r.domain,
-                    set,
-                    r.l_acc,
-                    r.routing.iter().map(|x| (x * 100.0).round() / 100.0).collect::<Vec<_>>(),
-                    r.acceptance_ratio()
-                );
-            }
-        }
-
-        // -------- post-round bookkeeping --------
-        if opts.adaptive {
-            let delta = spec.observe(t_draft, t_verify);
-            for &ri in &assign.batch {
-                let req = &mut pool.requests[ri];
-                if delta != 0 {
-                    req.gamma = spec.adjust_gamma(req.gamma, delta);
-                }
-            }
-        }
-        for &ri in &assign.batch {
-            let req = &mut pool.requests[ri];
-            req.ready_at = verify_end;
-            if req.start_serve_s.is_none() {
-                req.start_serve_s = Some(batch_ready);
-            }
-            if req.is_finished() && req.finish_s.is_none() {
-                req.finish_s = Some(verify_end);
-                req.phase = Phase::Finished;
-            }
-        }
-    }
-
-    let pjrt1 = ctx
-        .engine
-        .exec_wall_ns
-        .load(std::sync::atomic::Ordering::Relaxed);
-    Ok(RunReport::assemble(
-        &opts.name,
-        &ctx.cfg.pair,
-        &pool.requests,
-        &pipe,
-        &ctx.drafter_gpu,
-        if opts.decoupled {
-            ctx.cfg.cluster.n_drafter_nodes
-        } else {
-            0
-        },
-        &ctx.verifier_gpu,
-        ctx.cfg.cluster.verifier_gpus,
-        opts.decoupled,
-        wall0.elapsed().as_secs_f64(),
-        (pjrt1 - pjrt0) as f64 / 1e9,
-    ))
+    engine::run_speculative(ctx, trace, opts)
 }
 
 /// Build the embedding-cosine helper from the target's embedding matrix.

@@ -11,6 +11,7 @@
 //!   ablation     component ablation (Fig. 8)
 //!
 //! Global options: --artifacts DIR  --pair l|q  --config FILE.json
+//!                 --replicas N (verifier replicas for the event engine)
 
 use anyhow::Result;
 use cosine::util::cli::Args;
@@ -20,7 +21,8 @@ mod cmd;
 const USAGE: &str = "\
 cosine — collaborative speculative inference (CoSine reproduction)
 
-USAGE: cosine [--artifacts DIR] [--pair l|q] [--config FILE.json] <command> [options]
+USAGE: cosine [--artifacts DIR] [--pair l|q] [--config FILE.json] [--replicas N]
+              <command> [options]
 
 COMMANDS:
   smoke                              runtime round-trip check
@@ -51,6 +53,8 @@ fn main() -> Result<()> {
     if let Some(p) = args.get("pair") {
         cfg.pair = p.to_string();
     }
+    cfg.cluster.n_verifier_replicas =
+        args.get_usize("replicas", cfg.cluster.n_verifier_replicas)?;
 
     match args.subcommand.as_deref() {
         Some("smoke") => cmd::smoke::run(&cfg),

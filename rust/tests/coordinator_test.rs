@@ -221,6 +221,94 @@ fn idle_fractions_bounded() {
     }
 }
 
+// ---------------- event engine resources ----------------
+
+#[test]
+fn two_replicas_overlap_verifies() {
+    use cosine::coordinator::pipeline::ResourcePool;
+    // one replica serializes two rounds; two replicas run them in parallel
+    let mut one = ResourcePool::new(0, 1);
+    one.verify(0.0, 2.0);
+    let (_, s2, e2) = one.verify(0.0, 2.0);
+    assert!((s2 - 2.0).abs() < 1e-12 && (e2 - 4.0).abs() < 1e-12);
+
+    let mut two = ResourcePool::new(0, 2);
+    let (r1, a1, _) = two.verify(0.0, 2.0);
+    let (r2, a2, b2) = two.verify(0.0, 2.0);
+    assert_ne!(r1, r2, "second round must take the other replica");
+    assert!((a1 - 0.0).abs() < 1e-12 && (a2 - 0.0).abs() < 1e-12, "both start at 0");
+    assert!((b2 - 2.0).abs() < 1e-12);
+    assert!((two.makespan() - 2.0).abs() < 1e-12, "parallel verifies halve the makespan");
+    assert!((two.verifier_busy_total() - 4.0).abs() < 1e-12, "busy time is conserved");
+    // seed-convention stage idle: busy (4.0) exceeds makespan (2.0) -> 0
+    assert_eq!(two.verifier_idle_frac(), 0.0);
+    assert!((two.verifier_util() - 1.0).abs() < 1e-12);
+    assert_eq!(two.mean_verify_wait_s(), 0.0, "no queueing with a free replica");
+    assert!(one.mean_verify_wait_s() > 0.0, "single replica queues the second round");
+}
+
+#[test]
+fn draft_gangs_run_concurrently_on_disjoint_nodes() {
+    use cosine::coordinator::pipeline::ResourcePool;
+    // 6 nodes, gangs of 3: two rounds draft at the same time
+    let mut p = ResourcePool::new(6, 1);
+    let (s1, e1) = p.draft(3, 0.0, 1.0);
+    let (s2, e2) = p.draft(3, 0.0, 1.0);
+    assert!((s1 - 0.0).abs() < 1e-12 && (s2 - 0.0).abs() < 1e-12);
+    assert!((e1 - 1.0).abs() < 1e-12 && (e2 - 1.0).abs() < 1e-12);
+    // a third gang must wait for nodes to free
+    let (s3, _) = p.draft(3, 0.0, 1.0);
+    assert!((s3 - 1.0).abs() < 1e-12, "no free nodes until t=1");
+    assert!((p.drafter_busy_total() - 9.0).abs() < 1e-12);
+}
+
+#[test]
+fn draft_gang_waits_for_last_member() {
+    use cosine::coordinator::pipeline::ResourcePool;
+    // 2 nodes, one busy until t=2: a gang of 2 starts when both are free
+    let mut p = ResourcePool::new(2, 1);
+    p.draft(1, 0.0, 2.0);
+    let (s, e) = p.draft(2, 0.5, 1.0);
+    assert!((s - 2.0).abs() < 1e-12, "lock-step gang starts at the last free node");
+    assert!((e - 3.0).abs() < 1e-12);
+}
+
+#[test]
+fn event_queue_orders_by_time_then_fifo() {
+    use cosine::coordinator::engine::{EventKind, EventQueue};
+    let mut q = EventQueue::new();
+    q.push(2.0, EventKind::VerifyDone(7));
+    q.push(0.5, EventKind::Arrival(1));
+    q.push(0.5, EventKind::Arrival(2));
+    q.push(1.0, EventKind::DraftDone(0));
+    q.push(0.0, EventKind::SchedTick);
+    let order: Vec<(f64, EventKind)> = std::iter::from_fn(|| q.pop()).collect();
+    assert_eq!(order.len(), 5);
+    assert_eq!(order[0].1, EventKind::SchedTick);
+    assert_eq!(order[1].1, EventKind::Arrival(1), "FIFO within a timestamp");
+    assert_eq!(order[2].1, EventKind::Arrival(2));
+    assert_eq!(order[3].1, EventKind::DraftDone(0));
+    assert_eq!(order[4].1, EventKind::VerifyDone(7));
+    assert!(q.is_empty());
+}
+
+#[test]
+fn resource_pool_free_queries() {
+    use cosine::coordinator::pipeline::ResourcePool;
+    let mut p = ResourcePool::new(1, 1);
+    assert!(p.drafter_free_at(0.0) && p.verifier_free_at(0.0));
+    p.draft(1, 0.0, 1.0);
+    p.verify(1.0, 1.0);
+    assert!(!p.drafter_free_at(0.5));
+    assert!(p.drafter_free_at(1.0));
+    assert!(!p.verifier_free_at(1.5));
+    assert!(p.verifier_free_at(2.0));
+    // a pool without drafter resources (coupled strategies) is always
+    // "drafter-free"
+    let c = ResourcePool::new(0, 1);
+    assert!(c.drafter_free_at(0.0));
+}
+
 // ---------------- request bookkeeping ----------------
 
 #[test]

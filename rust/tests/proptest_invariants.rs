@@ -3,7 +3,7 @@
 //! seeded random inputs and reports the failing seed).
 
 use cosine::config::RouterConfig;
-use cosine::coordinator::pipeline::VirtualPipeline;
+use cosine::coordinator::pipeline::{ResourcePool, VirtualPipeline};
 use cosine::coordinator::request::Request;
 use cosine::coordinator::router::Router;
 use cosine::coordinator::sampling;
@@ -115,6 +115,110 @@ fn prop_pipeline_monotone_and_conserves_busy_time() {
         assert!((p.server_busy - total_verify).abs() < 1e-9, "seed {seed}");
         assert!(p.makespan() >= last_end - 1e-9, "seed {seed}");
         assert!(p.makespan() >= p.server_busy.max(p.cluster_busy) - 1e-9);
+    });
+}
+
+#[test]
+fn prop_event_pool_1x1_equals_virtual_pipeline() {
+    // With one drafter node and one verifier replica, the event engine's
+    // ResourcePool must reproduce the legacy two-resource VirtualPipeline
+    // exactly on identical schedules: same phase start/end times, same
+    // makespan, same busy accounting, same idle fractions.
+    cases(200, |rng, seed| {
+        let mut legacy = VirtualPipeline::new();
+        let mut pool = ResourcePool::new(1, 1);
+        for step in 0..30 {
+            let ready = rng.f64() * 8.0;
+            let td = rng.f64();
+            let tv = rng.f64();
+            if rng.bool(0.7) {
+                let (ls, le) = legacy.draft(ready, td);
+                let (ps, pe) = pool.draft(1, ready, td);
+                assert!((ls - ps).abs() < 1e-12, "seed {seed} step {step}: draft start");
+                assert!((le - pe).abs() < 1e-12, "seed {seed} step {step}: draft end");
+                let (lvs, lve) = legacy.verify(le, tv);
+                let (_, pvs, pve) = pool.verify(pe, tv);
+                assert!((lvs - pvs).abs() < 1e-12, "seed {seed} step {step}: verify start");
+                assert!((lve - pve).abs() < 1e-12, "seed {seed} step {step}: verify end");
+            } else {
+                let (ls, le) = legacy.coupled(ready, td, tv);
+                // a coupled pool has no drafter resources, but the single
+                // verifier replica must behave identically
+                let (_, ps, pe) = pool.coupled(ready, td, tv);
+                assert!((ls - ps).abs() < 1e-12, "seed {seed} step {step}: coupled start");
+                assert!((le - pe).abs() < 1e-12, "seed {seed} step {step}: coupled end");
+            }
+        }
+        assert!(
+            (legacy.makespan() - pool.makespan()).abs() < 1e-9,
+            "seed {seed}: makespan {} vs {}",
+            legacy.makespan(),
+            pool.makespan()
+        );
+        assert!((legacy.cluster_busy - pool.drafter_busy_total()).abs() < 1e-9, "seed {seed}");
+        assert!((legacy.server_busy - pool.verifier_busy_total()).abs() < 1e-9, "seed {seed}");
+        assert!(
+            (legacy.server_idle_frac() - pool.verifier_idle_frac()).abs() < 1e-9,
+            "seed {seed}"
+        );
+    });
+}
+
+#[test]
+fn prop_multi_replica_never_slower_and_conserves_busy() {
+    // The same verify schedule dispatched to R replicas finishes no later
+    // than on one replica, conserves total busy time, and replica
+    // reservations never overlap on one replica.
+    cases(150, |rng, seed| {
+        let n = 2 + rng.usize(3);
+        let mut one = ResourcePool::new(0, 1);
+        let mut many = ResourcePool::new(0, n);
+        let mut total = 0.0;
+        for _ in 0..25 {
+            let ready = rng.f64() * 4.0;
+            let tv = 0.05 + rng.f64();
+            total += tv;
+            one.verify(ready, tv);
+            many.verify(ready, tv);
+        }
+        assert!(
+            many.makespan() <= one.makespan() + 1e-9,
+            "seed {seed}: {} replicas slower ({} > {})",
+            n,
+            many.makespan(),
+            one.makespan()
+        );
+        assert!((many.verifier_busy_total() - total).abs() < 1e-9, "seed {seed}");
+        assert!((one.verifier_busy_total() - total).abs() < 1e-9, "seed {seed}");
+        // per-replica busy never exceeds the span it could have been busy
+        for r in &many.verifiers {
+            assert!(r.busy <= r.free_at + 1e-9, "seed {seed}: overcommitted replica");
+        }
+        // queueing delay can only shrink with more replicas
+        assert!(
+            many.verify_wait <= one.verify_wait + 1e-9,
+            "seed {seed}: queue delay grew with replicas"
+        );
+    });
+}
+
+#[test]
+fn prop_trim_gammas_all_ones_and_zero_budget() {
+    // Γ_max = 0 and all-ones inputs are the floor cases: trim_gammas must
+    // terminate and never push any budget below 1.
+    cases(100, |rng, seed| {
+        let n = 1 + rng.usize(12);
+        let mut ones = vec![1usize; n];
+        trim_gammas(&mut ones, 0);
+        assert_eq!(ones, vec![1usize; n], "seed {seed}: all-ones changed under Γ_max=0");
+
+        let mut g: Vec<usize> = (0..n).map(|_| 1 + rng.usize(8)).collect();
+        trim_gammas(&mut g, 0);
+        assert_eq!(g, vec![1usize; n], "seed {seed}: Γ_max=0 must floor to all ones");
+
+        let mut ones2 = vec![1usize; n];
+        trim_gammas(&mut ones2, n);
+        assert_eq!(ones2, vec![1usize; n], "seed {seed}: exact-budget all-ones changed");
     });
 }
 

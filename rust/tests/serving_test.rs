@@ -153,6 +153,61 @@ fn ablation_knobs_change_behavior() {
 }
 
 #[test]
+fn second_verifier_replica_improves_serving() {
+    // fig6-style offline workload: with 2 verifier replicas the event
+    // engine must strictly raise throughput and strictly lower the
+    // stage-level verifier idle fraction vs. 1 replica (vLLM is purely
+    // verifier-bound, so the effect is deterministic; CoSine must at
+    // least not regress and its verify queueing must not grow).
+    let Some(ctx1) = ctx_with(|cfg| {
+        cfg.scheduler.max_batch = 2;
+        cfg.cluster.n_verifier_replicas = 1;
+    }) else {
+        return;
+    };
+    let Some(ctx2) = ctx_with(|cfg| {
+        cfg.scheduler.max_batch = 2;
+        cfg.cluster.n_verifier_replicas = 2;
+    }) else {
+        return;
+    };
+    let trace = bench::offline_trace(&ctx1, 8, 31);
+
+    let v1 = bench::run(&ctx1, &trace, "vllm").unwrap();
+    let v2 = bench::run(&ctx2, &trace, "vllm").unwrap();
+    assert_eq!(v1.tokens, v2.tokens);
+    assert!(
+        v2.throughput_tps > v1.throughput_tps,
+        "2nd replica must raise vllm throughput: {} vs {}",
+        v2.throughput_tps,
+        v1.throughput_tps
+    );
+    assert!(
+        v2.server_idle_frac < v1.server_idle_frac + 1e-9,
+        "verifier idle must not grow: {} vs {}",
+        v2.server_idle_frac,
+        v1.server_idle_frac
+    );
+    assert_eq!(v2.n_verifier_replicas, 2);
+    assert_eq!(v2.per_verifier_busy_s.len(), 2);
+    assert!(v2.per_verifier_busy_s.iter().all(|&b| b > 0.0), "both replicas must work");
+
+    let c1 = bench::run(&ctx1, &trace, "cosine").unwrap();
+    let c2 = bench::run(&ctx2, &trace, "cosine").unwrap();
+    assert_eq!(c1.tokens, c2.tokens, "replica count must not change outputs");
+    assert!(
+        c2.throughput_tps >= c1.throughput_tps * 0.99,
+        "cosine must not regress with a 2nd replica: {} vs {}",
+        c2.throughput_tps,
+        c1.throughput_tps
+    );
+    assert!(
+        c2.verify_queue_delay_s <= c1.verify_queue_delay_s + 1e-9,
+        "verify queueing must not grow with replicas"
+    );
+}
+
+#[test]
 fn online_trace_respects_arrivals() {
     let Some(ctx) = ctx_with(small_cfg) else { return };
     let c = ctx.constants().clone();
