@@ -46,7 +46,7 @@ fn main() {
     let s = stats::bench("router update+route x16 requests", 10, 200, || {
         for r in reqs.iter_mut() {
             router.update(r, &feedback, &committed, 6, 7, &sim);
-            let _ = router.route(r, 6, 3);
+            let _ = router.route(r, 6, 3, &[]);
         }
     });
     println!("{}", s.report());

@@ -19,9 +19,11 @@ fn main() -> anyhow::Result<()> {
     // ---- Fig. 2a: modeled GEMM/GEMV split ----
     let clock = SimClock::default();
     println!("=== Fig. 2a (modeled GEMM/GEMV latency proportions) ===");
-    let (gemm, gemv) = clock.gemm_gemv_split(&ctx.modeled_drafter, &ctx.drafter_gpu, 1.0, 1.0, 512.0, true);
+    let (gemm, gemv) =
+        clock.gemm_gemv_split(&ctx.modeled_drafter, &ctx.drafter_gpu, 1.0, 1.0, 512.0, true);
     println!("SSM drafting   : GEMM {:>5.1}%  GEMV {:>5.1}%", gemm * 100.0, gemv * 100.0);
-    let (gemm, gemv) = clock.gemm_gemv_split(&ctx.modeled_target, &ctx.verifier_gpu, 8.0, 9.0, 512.0, false);
+    let (gemm, gemv) =
+        clock.gemm_gemv_split(&ctx.modeled_target, &ctx.verifier_gpu, 8.0, 9.0, 512.0, false);
     println!("LLM verification: GEMM {:>5.1}%  GEMV {:>5.1}%", gemm * 100.0, gemv * 100.0);
 
     // ---- real PJRT phase timings (the physical substrate of Fig. 2) ----

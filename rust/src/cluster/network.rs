@@ -39,6 +39,15 @@ impl NetworkModel {
         self.uplink_rtt_s + (up + down) / self.uplink_bps
     }
 
+    /// One all-gather step between verifier replicas sharding a verify
+    /// round: each extra shard ships its slice of accept/bonus verdicts
+    /// (≤ b small messages) one hop and waits half an RTT.  The engine
+    /// charges this `shards − 1` times per sharded round
+    /// (`ResourcePool::allgather_step_s`).
+    pub fn allgather_step_s(&self, b: usize) -> f64 {
+        self.uplink_rtt_s / 2.0 + (b * 8) as f64 / self.uplink_bps
+    }
+
     /// Dispatching a batch of prompts to the speculation cluster.
     pub fn dispatch_s(&self, b: usize, prompt_len: usize) -> f64 {
         let bytes = (b * prompt_len * 4) as f64;

@@ -143,7 +143,13 @@ pub fn fig3b(ctx: &ServingContext) -> Result<()> {
                 }
                 let mut fed = round.main.tokens.clone();
                 fed.truncate(fed.len().saturating_sub(1));
-                resync_after_commit(&mut req, &[dom], &[fed], &out.committed_drafts, out.before_len);
+                resync_after_commit(
+                    &mut req,
+                    &[dom],
+                    &[fed],
+                    &out.committed_drafts,
+                    out.before_len,
+                );
             }
         }
     }

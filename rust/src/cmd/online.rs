@@ -20,15 +20,15 @@ pub fn run(cfg: &CosineConfig, modes: &str, minutes: f64) -> Result<()> {
     let cap_tps = 1.0 / ctx.t_target_decode_s(16, 1, c.prompt_len + c.gen_len / 2) * 16.0;
     let base_rate = 0.2 * cap_tps / c.gen_len as f64;
     println!(
-        "online serving: {:.1} virtual minutes, base rate {:.3} req/s (cap ~{:.1} tok/s), {} verifier replica(s)",
-        minutes, base_rate, cap_tps, cfg.cluster.n_verifier_replicas
+        "online serving: {:.1} virtual minutes, base rate {:.3} req/s (cap ~{:.1} tok/s), {} verifier replica(s), routing seed {}",
+        minutes, base_rate, cap_tps, cfg.cluster.n_verifier_replicas, cfg.router.seed
     );
 
     println!(
-        "\nmode      | strategy   | mean lat (s) | p99 (s) | ms/token | tok/s | idle% | qwait(s) | cost/tok"
+        "\nmode      | strategy   | mean lat (s) | p99 (s) | ms/token | tok/s | idle% | qwait(s) | shards | shard-eff% | cost/tok"
     );
     println!(
-        "----------+------------+--------------+---------+----------+-------+-------+----------+---------"
+        "----------+------------+--------------+---------+----------+-------+-------+----------+--------+------------+---------"
     );
     for mode_s in modes.split(',') {
         let mode = ArrivalMode::from_str(mode_s)?;
@@ -38,7 +38,7 @@ pub fn run(cfg: &CosineConfig, modes: &str, minutes: f64) -> Result<()> {
         for strat in ["cosine", "specinfer", "pipeinfer", "vanilla", "vllm"] {
             let r = cosine::bench::run(&ctx, &trace, strat)?;
             println!(
-                "{:<9} | {:<10} | {:>12.2} | {:>7.2} | {:>8.1} | {:>5.1} | {:>5.0} | {:>8.3} | ${:.6}",
+                "{:<9} | {:<10} | {:>12.2} | {:>7.2} | {:>8.1} | {:>5.1} | {:>5.0} | {:>8.3} | {:>6.2} | {:>10.1} | ${:.6}",
                 mode_s.trim(),
                 strat,
                 r.mean_latency_s(),
@@ -47,6 +47,8 @@ pub fn run(cfg: &CosineConfig, modes: &str, minutes: f64) -> Result<()> {
                 r.throughput_tps,
                 r.server_idle_frac * 100.0,
                 r.verify_queue_delay_s,
+                r.mean_verify_shards(),
+                r.shard_efficiency() * 100.0,
                 r.cost_per_token,
             );
         }

@@ -38,7 +38,8 @@ pub fn acceptance_matrix(
                 verifier::ensure_target(ctx, &mut req)?;
                 while !req.is_finished() {
                     let g = gamma.min(req.remaining().max(1));
-                    let round = run_draft_round(ctx, &mut req, &[d], g, DraftMode::Independent, None)?;
+                    let round =
+                        run_draft_round(ctx, &mut req, &[d], g, DraftMode::Independent, None)?;
                     let out = verifier::verify_and_commit(ctx, &mut req, &round.main.tokens)?;
                     let mut fed = round.main.tokens.clone();
                     fed.truncate(fed.len().saturating_sub(1));

@@ -47,6 +47,11 @@ pub struct RouterConfig {
     pub ewma: f64,
     /// number of drafters routed per request (paper: 2–3)
     pub drafters_per_request: usize,
+    /// routing-score penalty per second of node backlog (load-aware
+    /// routing); 0 disables load awareness
+    pub load_penalty: f64,
+    /// seed for the routing exploration RNG
+    pub seed: u64,
     /// disable routing entirely (ablation: random assignment)
     pub enabled: bool,
 }
@@ -59,6 +64,8 @@ impl Default for RouterConfig {
             beta: 0.9,
             ewma: 0.3,
             drafters_per_request: 3,
+            load_penalty: 0.1,
+            seed: 42,
             enabled: true,
         }
     }
@@ -176,6 +183,10 @@ impl CosineConfig {
             set_f64(r, "beta", &mut self.router.beta)?;
             set_f64(r, "ewma", &mut self.router.ewma)?;
             set_usize(r, "drafters_per_request", &mut self.router.drafters_per_request)?;
+            set_f64(r, "load_penalty", &mut self.router.load_penalty)?;
+            if let Some(v) = r.get("seed") {
+                self.router.seed = v.as_usize()? as u64;
+            }
             set_bool(r, "enabled", &mut self.router.enabled)?;
         }
         if let Some(s) = j.get("scheduler") {
@@ -254,7 +265,8 @@ mod tests {
     fn json_overrides() {
         let mut c = CosineConfig::default();
         let j = Json::parse(
-            r#"{"pair": "q", "router": {"tau": 3.5, "enabled": false},
+            r#"{"pair": "q", "router": {"tau": 3.5, "enabled": false,
+                                        "seed": 7, "load_penalty": 0.25},
                 "cluster": {"n_drafter_nodes": 4, "n_verifier_replicas": 2}}"#,
         )
         .unwrap();
@@ -262,6 +274,8 @@ mod tests {
         assert_eq!(c.pair, "q");
         assert_eq!(c.router.tau, 3.5);
         assert!(!c.router.enabled);
+        assert_eq!(c.router.seed, 7);
+        assert_eq!(c.router.load_penalty, 0.25);
         assert_eq!(c.cluster.n_drafter_nodes, 4);
         assert_eq!(c.cluster.n_verifier_replicas, 2);
         // untouched keys keep defaults

@@ -5,11 +5,22 @@
 //! drafter node and every verifier replica is an independently occupiable
 //! resource ([`ResourcePool`]); draft-completion and verify-completion are
 //! discrete [`Event`]s, and the [`Scheduler`] is re-invoked at every event
-//! that can change schedulability — a request arriving, a drafter gang
+//! that can change schedulability — a request arriving, a drafter node
 //! freeing, a verifier replica freeing — rather than once per global
 //! round.  That is continuous (iteration-level) batching: drafting of
-//! batch B overlaps verification of batch A *per replica*, and disjoint
-//! draft gangs run concurrently on disjoint node sets.
+//! batch B overlaps verification of batch A *per replica*, and requests
+//! with disjoint routed drafter sets overlap their draft phases.
+//!
+//! Placement is per request, not per gang: each request's routed drafter
+//! set is resolved (load-aware, backlog-penalized) when it becomes a
+//! scheduling candidate, carried through `Assignment::placement`, and
+//! reserved node-by-node with [`ResourcePool::draft_on`] — a node
+//! drafting for q requests serves them as q sequential lock-step phases,
+//! while disjoint sets launch without waiting for a full gang.
+//! Verification is sharded: one round's batch splits across every replica
+//! free at its ready time ([`ResourcePool::verify_sharded`]) with a
+//! modeled all-gather per extra shard, so replicas no longer take whole
+//! rounds.  The vLLM baseline shares the same sharded verify path.
 //!
 //! Determinism: a round's real token-level compute (PJRT drafting,
 //! verification, commit, routing feedback) runs at *schedule* time, and a
@@ -34,7 +45,7 @@ use crate::workload::Trace;
 use super::context::ServingContext;
 use super::fusion::{self, DraftMode};
 use super::metrics::RunReport;
-use super::pipeline::ResourcePool;
+use super::pipeline::{ResourcePool, ShardedVerify};
 use super::request::{Phase, Request, RequestPool};
 use super::router::{RoundFeedback, Router};
 use super::scheduler::{trim_gammas, Candidate, Scheduler};
@@ -47,15 +58,21 @@ use super::verifier;
 pub enum EventKind {
     /// a request enters the pool (payload: pool index)
     Arrival(usize),
-    /// a round's draft gang freed its drafter nodes (payload: round id)
-    DraftDone(u64),
-    /// a round's verification finished on some replica (payload: round id)
+    /// one drafter node freed from a round's per-request draft phase
+    /// (payload: round id, node index) — per-(round, node) because rounds
+    /// overlap on disjoint node sets and each node frees independently of
+    /// the rest of the cluster
+    DraftDone(u64, usize),
+    /// a round's verification finished on its replica shard(s)
+    /// (payload: round id)
     VerifyDone(u64),
-    /// an explicit re-schedule prod with no resource transition.  The
-    /// engine loops never emit it — every internal state change already
-    /// has an Arrival/DraftDone/VerifyDone event — but external drivers
-    /// of [`EventQueue`] can use it to wake the scheduler at a chosen
-    /// virtual time.
+    /// re-schedule prod with no resource transition.  The engine arms it
+    /// as a safety net: if ready requests are waiting but the queue has
+    /// drained (every wake-up coalesced into the current instant), a
+    /// SchedTick at the earliest busy resource's free time keeps the loop
+    /// live instead of exiting with unfinished requests.  External
+    /// drivers of [`EventQueue`] can push it to wake the scheduler at any
+    /// chosen virtual time.
     SchedTick,
 }
 
@@ -131,6 +148,21 @@ impl EventQueue {
     }
 }
 
+/// One request's share of an in-flight round: the real draft outcome plus
+/// everything the virtual-timing pass needs to price and place it.
+struct PerReq {
+    /// pool index
+    ri: usize,
+    round: fusion::DraftRound,
+    /// the routed drafter set the round ran (and reserves) on
+    set: Vec<usize>,
+    gamma: usize,
+    /// context length when the round was scheduled
+    ctx_len: usize,
+    /// whether this round paid the request's target prefill
+    prefilled: bool,
+}
+
 /// Run any speculative strategy over a trace on the event engine.
 pub fn run_speculative(
     ctx: &ServingContext,
@@ -146,6 +178,9 @@ pub fn run_speculative(
     let n_drafters = ctx.n_drafters();
     let n_nodes = ctx.cfg.cluster.n_drafter_nodes.max(1);
     let n_replicas = ctx.cfg.cluster.n_verifier_replicas.max(1);
+    // hoisted out of the scheduling loop: env lookups are syscalls
+    let debug_sched = std::env::var("COSINE_DEBUG_SCHED").is_ok();
+    let debug_route = std::env::var("COSINE_DEBUG_ROUTE").is_ok();
     let mut pool = RequestPool::new(
         trace
             .requests
@@ -153,12 +188,13 @@ pub fn run_speculative(
             .map(|t| Request::from_trace(t, n_drafters, ctx.cfg.speculation.gamma_init))
             .collect(),
     );
-    let mut router = Router::new(ctx.cfg.router.clone(), 42);
+    let mut router = Router::new(ctx.cfg.router.clone(), ctx.cfg.router.seed);
     let sim = embed_sim(ctx)?;
     let scheduler = Scheduler::new(ctx.cfg.scheduler.clone(), opts.lp_batching);
     let mut spec = AdaptiveSpeculation::new(ctx.cfg.speculation.clone(), opts.k, n_drafters);
     // coupled strategies never occupy the speculation cluster
     let mut res = ResourcePool::new(if opts.decoupled { n_nodes } else { 0 }, n_replicas);
+    res.allgather_step_s = ctx.network.allgather_step_s(ctx.cfg.scheduler.max_batch.max(1));
     let mut queue = EventQueue::new();
     let mut round_id: u64 = 0;
 
@@ -174,46 +210,69 @@ pub fn run_speculative(
             queue.pop();
         }
 
-        // Invoke the scheduler while a resource and candidates are free at
+        // Invoke the scheduler while resources and candidates are free at
         // `now` — several rounds can launch at one instant on disjoint
         // node sets / replicas.
         loop {
             if pool.unfinished() == 0 {
                 break;
             }
-            // the round's draft gang: the k cooperating drafters, bounded
-            // by the physical node count (per-node occupancy — a round no
-            // longer spreads over nodes it does not use)
             let k_now = if opts.adaptive { spec.k_nodes } else { opts.k };
-            let gang = k_now.clamp(1, n_nodes);
-            // gate on a FULL gang so draft phases start at their
-            // scheduling instant rather than reserving into the future
-            let free = if opts.decoupled {
-                res.drafters_free_at(gang, now)
-            } else {
-                res.verifier_free_at(now)
-            };
-            if !free {
+            if !opts.decoupled && !res.verifier_free_at(now) {
                 break;
             }
+
+            // Resolve (and cache) per-request drafter placement for every
+            // ready request; routing is load-aware over the current
+            // per-node backlogs.  The cache holds until the request's
+            // round commits, so the exploration RNG advances once per
+            // round exactly as it did under the gang model.
+            let backlog = res.drafter_backlog(now);
+            for r in pool.requests.iter_mut() {
+                if r.is_finished() || r.ready_at > now + 1e-9 || r.routed_set.is_some() {
+                    continue;
+                }
+                let set = if opts.routing {
+                    router.route(r, n_drafters, k_now, &backlog)
+                } else if opts.k == 1 {
+                    vec![(r.id as usize) % n_drafters]
+                } else {
+                    (0..k_now.min(n_drafters)).collect()
+                };
+                r.routed_set = Some(set);
+            }
+
+            // Candidates: ready requests whose routed node set is free at
+            // `now`.  Requests with disjoint sets launch without waiting
+            // for a full gang; a request on busy nodes wakes at those
+            // nodes' DraftDone events.
             let cands: Vec<Candidate> = pool
                 .requests
                 .iter()
                 .enumerate()
                 .filter(|(_, r)| !r.is_finished() && r.ready_at <= now + 1e-9)
+                .filter(|(_, r)| {
+                    !opts.decoupled
+                        || res.nodes_free_at(r.routed_set.as_deref().unwrap_or(&[]), now)
+                })
                 .map(|(i, r)| Candidate {
                     idx: i,
                     ctx_len: r.prompt.len() + r.generated.len(),
                     gamma: r.gamma.min(r.remaining().max(1)).min(c.gamma_max),
                     ready_at: r.ready_at,
                     arrival_s: r.arrival_s,
+                    drafter_set: if opts.decoupled {
+                        r.routed_set.clone().unwrap_or_default()
+                    } else {
+                        Vec::new()
+                    },
                 })
                 .collect();
             if cands.is_empty() {
                 break;
             }
             let assign = scheduler.assign(ctx, &cands, k_now);
-            if std::env::var("COSINE_DEBUG_SCHED").is_ok() {
+            if debug_sched {
                 eprintln!(
                     "sched@{now:.3}: avail={} chosen={} k={} t_d={:.3} t_v={:.3} obj={:.4}",
                     cands.len(),
@@ -234,30 +293,32 @@ pub fn run_speculative(
                 DraftMode::Independent
             };
             let mut new_prefills = 0usize;
-            let mut draft_tokens_max = 0usize;
-            let mut catchup_total = 0usize;
-            let mut per_req: Vec<(usize, fusion::DraftRound, Vec<usize>)> = Vec::new();
+            let mut per_req: Vec<PerReq> = Vec::new();
             let mut ctx_crit = 1usize;
 
             for (pos, &ri) in assign.batch.iter().enumerate() {
                 let gamma = round_gammas[pos].max(1);
+                let mut prefilled = false;
                 // target prefill (also commits the first token)
                 if pool.requests[ri].target_state.is_none() {
                     new_prefills += 1;
+                    prefilled = true;
                     verifier::ensure_target(ctx, &mut pool.requests[ri])?;
                 }
                 let req = &mut pool.requests[ri];
                 if req.is_finished() {
                     continue;
                 }
-                ctx_crit = ctx_crit.max(req.prompt.len() + req.generated.len());
-                // routing (Eq. 3) or fixed assignment
-                let set = if opts.routing {
-                    router.route(req, n_drafters, k_now)
-                } else if opts.k == 1 {
-                    vec![(req.id as usize) % n_drafters]
+                let ctx_len = req.prompt.len() + req.generated.len();
+                ctx_crit = ctx_crit.max(ctx_len);
+                // the assignment's placement; coupled candidates carry no
+                // placement, so fall back to the cached routed set
+                let set = if !assign.placement[pos].is_empty() {
+                    assign.placement[pos].clone()
                 } else {
-                    (0..k_now.min(n_drafters)).collect()
+                    req.routed_set
+                        .clone()
+                        .unwrap_or_else(|| vec![(req.id as usize) % n_drafters])
                 };
                 let priors: Vec<f64> = set.iter().map(|&d| req.routing[d]).collect();
                 let round = fusion::run_draft_round(
@@ -268,15 +329,20 @@ pub fn run_speculative(
                     mode,
                     if opts.routing { Some(&priors) } else { None },
                 )?;
-                catchup_total += round.catchup_steps;
-                draft_tokens_max = draft_tokens_max.max(gamma);
-                per_req.push((ri, round, set));
+                per_req.push(PerReq {
+                    ri,
+                    round,
+                    set,
+                    gamma,
+                    ctx_len,
+                    prefilled,
+                });
             }
 
             // -------- verification + commit (real compute) --------
             let mut big_gamma = 0usize;
-            for (ri, round, set) in &per_req {
-                let req = &mut pool.requests[*ri];
+            for pr in &per_req {
+                let req = &mut pool.requests[pr.ri];
                 let (main_path, outcome) = if opts.tree {
                     // SpecInfer: verify every independent path, keep the
                     // best.  Real compute verifies each path; modeled time
@@ -286,7 +352,7 @@ pub fn run_speculative(
                     // snapshot cur_len to retry paths from the same state
                     let snap = req.target_state.as_ref().unwrap().cur_len.clone();
                     let pend = req.pending;
-                    for (pi, path) in round.paths.iter().enumerate() {
+                    for (pi, path) in pr.round.paths.iter().enumerate() {
                         let vres = verifier::dry_verify(ctx, req, &path.tokens)?;
                         req.target_state.as_mut().unwrap().cur_len = snap.clone();
                         req.pending = pend;
@@ -295,18 +361,19 @@ pub fn run_speculative(
                         }
                     }
                     let (pi, _) = best.unwrap();
-                    let path = round.paths[pi].clone();
+                    let path = pr.round.paths[pi].clone();
                     let out = verifier::verify_and_commit(ctx, req, &path.tokens)?;
                     (path.tokens.clone(), out)
                 } else {
-                    let out = verifier::verify_and_commit(ctx, req, &round.main.tokens)?;
-                    (round.main.tokens.clone(), out)
+                    let out = verifier::verify_and_commit(ctx, req, &pr.round.main.tokens)?;
+                    (pr.round.main.tokens.clone(), out)
                 };
                 big_gamma += main_path.len() + 1;
 
                 // routing feedback (Eq. 1-2)
                 if opts.routing {
-                    let feedback: Vec<RoundFeedback> = round
+                    let feedback: Vec<RoundFeedback> = pr
+                        .round
                         .paths
                         .iter()
                         .map(|p| RoundFeedback {
@@ -335,15 +402,17 @@ pub fn run_speculative(
 
                 // drafter KV resync
                 let fed: Vec<Vec<i32>> = match mode {
-                    DraftMode::Fused => set
+                    DraftMode::Fused => pr
+                        .set
                         .iter()
                         .map(|_| {
-                            let mut f = round.main.tokens.clone();
+                            let mut f = pr.round.main.tokens.clone();
                             f.truncate(f.len().saturating_sub(1));
                             f
                         })
                         .collect(),
-                    DraftMode::Independent => round
+                    DraftMode::Independent => pr
+                        .round
                         .paths
                         .iter()
                         .map(|p| {
@@ -355,7 +424,7 @@ pub fn run_speculative(
                 };
                 fusion::resync_after_commit(
                     req,
-                    set,
+                    &pr.set,
                     &fed,
                     &outcome.committed_drafts,
                     outcome.before_len,
@@ -364,16 +433,6 @@ pub fn run_speculative(
 
             // -------- virtual timing (reserve resources) --------
             let b = per_req.len().max(1);
-            let per_node_b = (b * k_now).div_ceil(gang).max(1);
-            // catch-up replay + γ lock-step decodes, plus fusion exchanges
-            let draft_steps = draft_tokens_max + catchup_total.div_ceil(b);
-            let mut t_draft = ctx.t_draft_s(per_node_b, draft_steps.max(1), ctx_crit);
-            if opts.fusion {
-                t_draft += draft_tokens_max as f64 * ctx.network.fusion_round_s(k_now, b);
-            }
-            if new_prefills > 0 {
-                t_draft += ctx.t_draft_prefill_s(new_prefills, c.prompt_len);
-            }
             // verification cost from the roofline at the actual window
             // width (weight-stream-bound: near-constant in Γ until the
             // compute knee — the economics speculative inference relies
@@ -381,47 +440,113 @@ pub fn run_speculative(
             // factor.
             let g_eff = (big_gamma as f64 / b as f64).ceil().max(1.0) as usize;
             let g_tree = if opts.tree { g_eff * k_now } else { g_eff };
-            let mut t_verify = ctx.t_verify_s(b, g_tree, ctx_crit);
-            if new_prefills > 0 {
-                t_verify += ctx.t_target_prefill_s(new_prefills, c.prompt_len);
-            }
-            if opts.decoupled {
-                t_verify += ctx.network.verify_exchange_s(b, c.g1);
-            }
-
             // drafting can only start when the batch is ready
             let batch_ready = assign
                 .batch
                 .iter()
                 .map(|&ri| pool.requests[ri].ready_at)
                 .fold(0.0f64, f64::max);
-            if std::env::var("COSINE_DEBUG_SCHED").is_ok() {
-                eprintln!(
-                    "  round {round_id}: b={} t_draft={:.3} t_verify={:.3} ready={:.3} catchup={} steps={} prefills={}",
-                    b, t_draft, t_verify, batch_ready, catchup_total, draft_steps, new_prefills
-                );
-            }
-            let verify_end = if opts.decoupled {
-                let (_, d_end) = res.draft(gang, batch_ready, t_draft);
-                let (_, _, v_end) = res.verify(d_end, t_verify);
-                queue.push(d_end, EventKind::DraftDone(round_id));
-                queue.push(v_end, EventKind::VerifyDone(round_id));
-                v_end
+
+            let (t_draft, t_verify, verify_end, shards) = if opts.decoupled {
+                // per-request draft reservations on each request's routed
+                // node set: disjoint sets overlap, overlapping sets
+                // serialize per node
+                let mut draft_start = f64::INFINITY;
+                let mut draft_end = batch_ready;
+                for pr in &per_req {
+                    let steps = pr.gamma + pr.round.catchup_steps;
+                    let coop = pr.set.len().max(1);
+                    let mut t_i = ctx.t_draft_s(1, steps.max(1), pr.ctx_len);
+                    if opts.fusion {
+                        t_i += pr.gamma as f64 * ctx.network.fusion_round_s(coop, 1);
+                    }
+                    if pr.prefilled {
+                        t_i += ctx.t_draft_prefill_s(1, c.prompt_len);
+                    }
+                    let (s_i, e_i) = res.draft_on(&pr.set, pool.requests[pr.ri].ready_at, t_i);
+                    for &node in &pr.set {
+                        queue.push(e_i, EventKind::DraftDone(round_id, node));
+                    }
+                    draft_start = draft_start.min(s_i);
+                    draft_end = draft_end.max(e_i);
+                    if pool.requests[pr.ri].start_serve_s.is_none() {
+                        pool.requests[pr.ri].start_serve_s = Some(s_i);
+                    }
+                }
+                let t_draft = if per_req.is_empty() {
+                    0.0
+                } else {
+                    draft_end - draft_start.min(draft_end)
+                };
+                // sharded verification: model the round duration at every
+                // shard count — the roofline keeps stream-bound rounds
+                // from sharding (splitting saves nothing before the
+                // compute knee), so only genuinely compute-bound batches
+                // split
+                let durs: Vec<f64> = (1..=n_replicas)
+                    .map(|s| {
+                        let bs = b.div_ceil(s);
+                        let mut t = ctx.t_verify_s(bs, g_tree, ctx_crit);
+                        if new_prefills > 0 {
+                            t += ctx.t_target_prefill_s(new_prefills.div_ceil(s), c.prompt_len);
+                        }
+                        t + ctx.network.verify_exchange_s(bs, c.g1)
+                    })
+                    .collect();
+                let sv = if opts.sharded_verify {
+                    res.verify_sharded(b, draft_end, &durs)
+                } else {
+                    let (_, start, end) = res.verify(draft_end, durs[0]);
+                    ShardedVerify {
+                        start,
+                        end,
+                        shards: 1,
+                    }
+                };
+                queue.push(sv.end, EventKind::VerifyDone(round_id));
+                (t_draft, sv.end - sv.start, sv.end, sv.shards)
             } else {
+                // coupled: batch-level draft + verify back-to-back on one
+                // replica (co-located drafting, the resource-contention
+                // regime)
+                let draft_tokens_max = per_req.iter().map(|p| p.gamma).max().unwrap_or(0);
+                let catchup_total: usize = per_req.iter().map(|p| p.round.catchup_steps).sum();
+                let gang = k_now.clamp(1, n_nodes);
+                let per_node_b = (b * k_now).div_ceil(gang).max(1);
+                // catch-up replay + γ lock-step decodes, plus fusion
+                // exchanges
+                let draft_steps = draft_tokens_max + catchup_total.div_ceil(b);
+                let mut t_draft = ctx.t_draft_s(per_node_b, draft_steps.max(1), ctx_crit);
+                if opts.fusion {
+                    t_draft += draft_tokens_max as f64 * ctx.network.fusion_round_s(k_now, b);
+                }
+                if new_prefills > 0 {
+                    t_draft += ctx.t_draft_prefill_s(new_prefills, c.prompt_len);
+                }
+                let mut t_verify = ctx.t_verify_s(b, g_tree, ctx_crit);
+                if new_prefills > 0 {
+                    t_verify += ctx.t_target_prefill_s(new_prefills, c.prompt_len);
+                }
                 let (_, _, v_end) = res.coupled(batch_ready, t_draft, t_verify);
                 queue.push(v_end, EventKind::VerifyDone(round_id));
-                v_end
+                (t_draft, t_verify, v_end, 1usize)
             };
+            if debug_sched {
+                eprintln!(
+                    "  round {round_id}: b={} t_draft={:.3} t_verify={:.3} ready={:.3} prefills={} shards={}",
+                    b, t_draft, t_verify, batch_ready, new_prefills, shards
+                );
+            }
             round_id += 1;
 
-            if std::env::var("COSINE_DEBUG_ROUTE").is_ok() {
-                if let Some((ri, _, set)) = per_req.first() {
-                    let r = &pool.requests[*ri];
+            if debug_route {
+                if let Some(pr) = per_req.first() {
+                    let r = &pool.requests[pr.ri];
                     eprintln!(
                         "route: req={} dom={} set={:?} l_acc={:.2} M={:?} acc_ratio={:.2}",
                         r.id,
                         r.domain,
-                        set,
+                        pr.set,
                         r.l_acc,
                         r.routing
                             .iter()
@@ -433,7 +558,7 @@ pub fn run_speculative(
             }
 
             // -------- post-round bookkeeping --------
-            if opts.adaptive {
+            if opts.adaptive && !per_req.is_empty() {
                 let delta = spec.observe(t_draft, t_verify);
                 for &ri in &assign.batch {
                     let req = &mut pool.requests[ri];
@@ -445,12 +570,39 @@ pub fn run_speculative(
             for &ri in &assign.batch {
                 let req = &mut pool.requests[ri];
                 req.ready_at = verify_end;
+                // drop the cached placement so the next round re-routes
+                // with fresh feedback and fresh backlogs
+                req.routed_set = None;
                 if req.start_serve_s.is_none() {
                     req.start_serve_s = Some(batch_ready);
                 }
                 if req.is_finished() && req.finish_s.is_none() {
                     req.finish_s = Some(verify_end);
                     req.phase = Phase::Finished;
+                }
+            }
+        }
+
+        // SchedTick safety net: every busy resource already has a
+        // DraftDone/VerifyDone wake-up queued by construction, but if
+        // ready work is waiting and the queue has drained anyway, prod
+        // the scheduler when the earliest busy resource frees instead of
+        // letting the run exit with unfinished requests.
+        if queue.is_empty() && pool.unfinished() > 0 {
+            let waiting = pool
+                .requests
+                .iter()
+                .any(|r| !r.is_finished() && r.ready_at <= now + 1e-9);
+            if waiting {
+                let free_t = res
+                    .drafters
+                    .iter()
+                    .chain(res.verifiers.iter())
+                    .map(|r| r.free_at)
+                    .filter(|&t| t > now + 1e-9)
+                    .fold(f64::INFINITY, f64::min);
+                if free_t.is_finite() {
+                    queue.push(free_t, EventKind::SchedTick);
                 }
             }
         }
@@ -485,9 +637,10 @@ pub fn run_speculative(
 }
 
 /// vLLM-style continuous batching (no speculation) on the same event
-/// engine: each round is one batched target decode step occupying the
-/// earliest-free verifier replica, so the baseline scales across replicas
-/// exactly like the speculative strategies it is compared against.
+/// engine: each round is one batched target decode step, sharded across
+/// the verifier replicas free at its ready time exactly like the
+/// speculative strategies it is compared against (the roofline decides
+/// whether splitting a stream-bound decode actually pays).
 pub fn run_vllm(ctx: &ServingContext, trace: &Trace) -> Result<RunReport> {
     let wall0 = Instant::now();
     let pjrt0 = ctx
@@ -509,6 +662,7 @@ pub fn run_vllm(ctx: &ServingContext, trace: &Trace) -> Result<RunReport> {
             .collect(),
     );
     let mut res = ResourcePool::new(0, n_replicas);
+    res.allgather_step_s = ctx.network.allgather_step_s(max_b.max(1));
     let mut queue = EventQueue::new();
     let mut round_id: u64 = 0;
 
@@ -560,27 +714,34 @@ pub fn run_vllm(ctx: &ServingContext, trace: &Trace) -> Result<RunReport> {
                 }
             }
 
-            // modeled: one batched decode step + any prefills
+            // modeled: one batched decode step (+ prefills) at every shard
+            // count; verify_sharded picks the fastest placement
             let b = idxs.len();
-            let mut t = ctx.t_target_decode_s(b, 1, ctx_crit);
-            if new_prefills > 0 {
-                t += ctx.t_target_prefill_s(new_prefills, c.prompt_len);
-            }
+            let durs: Vec<f64> = (1..=n_replicas)
+                .map(|s| {
+                    let bs = b.div_ceil(s);
+                    let mut t = ctx.t_target_decode_s(bs, 1, ctx_crit);
+                    if new_prefills > 0 {
+                        t += ctx.t_target_prefill_s(new_prefills.div_ceil(s), c.prompt_len);
+                    }
+                    t
+                })
+                .collect();
             let ready = idxs
                 .iter()
                 .map(|&i| pool.requests[i].ready_at)
                 .fold(0.0f64, f64::max);
-            let (_, _, end) = res.verify(ready, t);
-            queue.push(end, EventKind::VerifyDone(round_id));
+            let sv = res.verify_sharded(b, ready, &durs);
+            queue.push(sv.end, EventKind::VerifyDone(round_id));
             round_id += 1;
             for &i in &idxs {
                 let r = &mut pool.requests[i];
-                r.ready_at = end;
+                r.ready_at = sv.end;
                 if r.start_serve_s.is_none() {
                     r.start_serve_s = Some(ready);
                 }
                 if r.is_finished() && r.finish_s.is_none() {
-                    r.finish_s = Some(end);
+                    r.finish_s = Some(sv.end);
                     r.phase = Phase::Finished;
                 }
             }

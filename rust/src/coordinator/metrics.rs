@@ -1,8 +1,9 @@
 //! Run metrics: the quantities every paper table/figure reports —
 //! end-to-end latency (ms/token), throughput (tokens/s), cost efficiency
-//! (cost/token), acceptance statistics, resource utilization — now with
-//! per-resource (drafter node / verifier replica) busy accounting and
-//! queueing delay from the event engine's `ResourcePool`.
+//! (cost/token), acceptance statistics, resource utilization — with
+//! per-resource (drafter node / verifier replica) busy accounting,
+//! queueing delay, per-node queue depth, and verify-shard efficiency from
+//! the event engine's `ResourcePool`.
 
 use crate::cluster::node::GpuProfile;
 
@@ -41,6 +42,24 @@ pub struct RunReport {
     /// e.g. coupled strategies never occupy the speculation cluster)
     pub per_drafter_busy_s: Vec<f64>,
     pub per_verifier_busy_s: Vec<f64>,
+    /// per-node draft phases served (the queue depth each drafter node
+    /// absorbed under per-request placement)
+    pub per_drafter_phases: Vec<u64>,
+    /// per-replica verify phases served (a sharded round counts once on
+    /// every replica it touched)
+    pub per_verifier_phases: Vec<u64>,
+    /// max − min drafter backlog at end of run (the load-balance signal
+    /// load-aware routing bounds)
+    pub drafter_spread_s: f64,
+    /// verify rounds total / rounds that sharded across >1 replica /
+    /// shards summed over those rounds / modeled seconds saved vs.
+    /// unsharded rounds
+    pub verify_phases: u64,
+    pub verify_shard_rounds: u64,
+    pub verify_shards_total: u64,
+    pub verify_shard_saved_s: f64,
+    /// per-round verify durations summed (counts a sharded round once)
+    pub verify_round_time_s: f64,
     /// capacity-normalized utilization (busy / (resources × makespan))
     pub drafter_util: f64,
     pub verifier_util: f64,
@@ -131,6 +150,14 @@ impl RunReport {
             n_verifier_replicas: res.verifiers.len(),
             per_drafter_busy_s: res.drafters.iter().map(|r| r.busy).collect(),
             per_verifier_busy_s: res.verifiers.iter().map(|r| r.busy).collect(),
+            per_drafter_phases: res.drafters.iter().map(|r| r.phases).collect(),
+            per_verifier_phases: res.verifiers.iter().map(|r| r.phases).collect(),
+            drafter_spread_s: res.drafter_spread_s(),
+            verify_phases: res.verify_phases,
+            verify_shard_rounds: res.verify_shard_rounds,
+            verify_shards_total: res.verify_shards_total,
+            verify_shard_saved_s: res.verify_shard_saved_s,
+            verify_round_time_s: res.verify_round_time_s,
             drafter_util: res.drafter_util(),
             verifier_util: res.verifier_util(),
             draft_queue_delay_s: res.mean_draft_wait_s(),
@@ -144,6 +171,28 @@ impl RunReport {
             latencies_s: latencies,
             wall_s,
             pjrt_wall_s,
+        }
+    }
+
+    /// Mean replicas per verify round (1.0 = never sharded, 0 = no verify
+    /// rounds ran).
+    pub fn mean_verify_shards(&self) -> f64 {
+        if self.verify_phases == 0 {
+            0.0
+        } else {
+            (self.verify_shards_total + (self.verify_phases - self.verify_shard_rounds)) as f64
+                / self.verify_phases as f64
+        }
+    }
+
+    /// Shard efficiency: fraction of the unsharded per-round verify time
+    /// that sharding saved (0 when no round ever sharded).
+    pub fn shard_efficiency(&self) -> f64 {
+        let unsharded = self.verify_round_time_s + self.verify_shard_saved_s;
+        if unsharded <= 0.0 {
+            0.0
+        } else {
+            self.verify_shard_saved_s / unsharded
         }
     }
 
@@ -166,7 +215,7 @@ impl RunReport {
 
     pub fn summary_row(&self) -> String {
         format!(
-            "{:<10} pair={} n={:<3} tok={:<6} lat={:>8.1} ms/tok thr={:>8.1} tok/s acc={:>4.2} cost/tok=${:.6} idle(srv)={:.0}% qwait={:.2}s wall={:.1}s",
+            "{:<10} pair={} n={:<3} tok={:<6} lat={:>8.1} ms/tok thr={:>8.1} tok/s acc={:>4.2} cost/tok=${:.6} idle(srv)={:.0}% qwait={:.2}s shards={:.2} wall={:.1}s",
             self.strategy,
             self.pair,
             self.n_requests,
@@ -177,6 +226,7 @@ impl RunReport {
             self.cost_per_token,
             self.server_idle_frac * 100.0,
             self.verify_queue_delay_s,
+            self.mean_verify_shards(),
             self.wall_s,
         )
     }

@@ -9,8 +9,13 @@
 //!   verifier replica is an independently occupiable [`Resource`] with its
 //!   own busy/idle accounting, so drafting of group B overlaps
 //!   verification of group A *per replica*, and concurrent draft rounds
-//!   can run on disjoint node sets.  With one drafter node and one
-//!   verifier replica the pool reduces exactly to [`VirtualPipeline`].
+//!   can run on disjoint node sets.  Placement is per request:
+//!   [`ResourcePool::draft_on`] reserves exactly the request's routed
+//!   drafter set (overlapping sets serialize per node), and
+//!   [`ResourcePool::verify_sharded`] splits one verify round across the
+//!   replicas that are free at its ready time, paying a modeled
+//!   all-gather per extra shard.  With one drafter node and one verifier
+//!   replica the pool reduces exactly to [`VirtualPipeline`].
 
 #[derive(Debug, Clone, Default)]
 pub struct VirtualPipeline {
@@ -88,6 +93,8 @@ pub struct Resource {
     pub free_at: f64,
     /// accumulated busy time
     pub busy: f64,
+    /// phases this resource served (per-node/per-replica queue depth)
+    pub phases: u64,
 }
 
 impl Resource {
@@ -97,15 +104,29 @@ impl Resource {
         let end = start + dur;
         self.free_at = end;
         self.busy += dur;
+        self.phases += 1;
         (start, end)
     }
 }
 
+/// Reservation returned by [`ResourcePool::verify_sharded`].
+#[derive(Debug, Clone, Copy)]
+pub struct ShardedVerify {
+    pub start: f64,
+    pub end: f64,
+    /// replicas the round's batch was split across (1 = unsharded)
+    pub shards: usize,
+}
+
 /// Per-resource generalization of [`VirtualPipeline`]: `drafters` are the
 /// speculation-cluster nodes, `verifiers` the verification-server
-/// replicas.  Draft phases occupy a gang of the earliest-free nodes;
-/// verify phases occupy the earliest-free replica, which is what lets the
-/// event engine run continuous (iteration-level) batching across replicas.
+/// replicas.  Draft phases reserve exactly the request's routed drafter
+/// set ([`Self::draft_on`]; the legacy earliest-free gang model survives
+/// as [`Self::draft`] for the equivalence tests), and verify phases either
+/// occupy the earliest-free replica ([`Self::verify`]) or shard one round
+/// across all free replicas ([`Self::verify_sharded`]) — which is what
+/// lets the event engine run continuous (iteration-level) batching across
+/// replicas without replicas taking whole rounds.
 #[derive(Debug, Clone)]
 pub struct ResourcePool {
     pub drafters: Vec<Resource>,
@@ -115,6 +136,19 @@ pub struct ResourcePool {
     pub verify_wait: f64,
     pub draft_phases: u64,
     pub verify_phases: u64,
+    /// modeled latency of one all-gather step between verify shards
+    /// (charged `shards − 1` times per sharded round); 0 = free
+    pub allgather_step_s: f64,
+    /// verify rounds that actually split across more than one replica
+    pub verify_shard_rounds: u64,
+    /// shards summed over those sharded rounds
+    pub verify_shards_total: u64,
+    /// modeled seconds saved by sharding vs. the unsharded duration
+    pub verify_shard_saved_s: f64,
+    /// wall (per-round) verify durations summed — unlike busy time this
+    /// counts a sharded round once, so `+ verify_shard_saved_s` recovers
+    /// what the same rounds would have cost unsharded
+    pub verify_round_time_s: f64,
 }
 
 impl ResourcePool {
@@ -128,6 +162,11 @@ impl ResourcePool {
             verify_wait: 0.0,
             draft_phases: 0,
             verify_phases: 0,
+            allgather_step_s: 0.0,
+            verify_shard_rounds: 0,
+            verify_shards_total: 0,
+            verify_shard_saved_s: 0.0,
+            verify_round_time_s: 0.0,
         }
     }
 
@@ -159,6 +198,35 @@ impl ResourcePool {
         self.drafters.iter().filter(|r| r.free_at <= t + 1e-9).count() >= m
     }
 
+    /// True when every node of `set` is free at virtual time `t`
+    /// (vacuously true for pools without drafter resources; out-of-range
+    /// indices are ignored).
+    pub fn nodes_free_at(&self, set: &[usize], t: f64) -> bool {
+        if self.drafters.is_empty() {
+            return true;
+        }
+        set.iter()
+            .all(|&i| self.drafters.get(i).is_none_or(|r| r.free_at <= t + 1e-9))
+    }
+
+    /// Per-node backlog at virtual time `t`: how long each drafter node is
+    /// still reserved past `t` (the router's load signal).
+    pub fn drafter_backlog(&self, t: f64) -> Vec<f64> {
+        self.drafters.iter().map(|r| (r.free_at - t).max(0.0)).collect()
+    }
+
+    /// Spread of drafter backlogs (max − min `free_at`): the load-balance
+    /// signal load-aware routing is meant to bound.
+    pub fn drafter_spread_s(&self) -> f64 {
+        let max = self.drafters.iter().map(|r| r.free_at).fold(f64::NEG_INFINITY, f64::max);
+        let min = self.drafters.iter().map(|r| r.free_at).fold(f64::INFINITY, f64::min);
+        if max.is_finite() && min.is_finite() {
+            max - min
+        } else {
+            0.0
+        }
+    }
+
     /// True when at least one verifier replica is free at virtual time `t`.
     pub fn verifier_free_at(&self, t: f64) -> bool {
         self.verifiers.iter().any(|r| r.free_at <= t + 1e-9)
@@ -181,6 +249,35 @@ impl ResourcePool {
         let end = start + dur;
         for &i in &idx[..m] {
             self.drafters[i].busy += dur;
+            self.drafters[i].phases += 1;
+            self.drafters[i].free_at = end;
+        }
+        self.draft_wait += start - ready_at;
+        self.draft_phases += 1;
+        (start, end)
+    }
+
+    /// Reserve one cooperative draft phase on exactly the request's routed
+    /// drafter `set` (per-request placement); returns (start, end).
+    /// Lock-step cooperation: the phase starts when the last node of the
+    /// set frees, and every node is occupied until the shared end — so a
+    /// node drafting for q requests serves them as q sequential phases,
+    /// while requests with disjoint sets overlap freely.  Out-of-range
+    /// indices are ignored; pools without drafter resources charge no one.
+    pub fn draft_on(&mut self, set: &[usize], ready_at: f64, dur: f64) -> (f64, f64) {
+        let nodes: Vec<usize> =
+            set.iter().copied().filter(|&i| i < self.drafters.len()).collect();
+        if nodes.is_empty() {
+            return (ready_at, ready_at + dur);
+        }
+        let mut start = ready_at;
+        for &i in &nodes {
+            start = start.max(self.drafters[i].free_at);
+        }
+        let end = start + dur;
+        for &i in &nodes {
+            self.drafters[i].busy += dur;
+            self.drafters[i].phases += 1;
             self.drafters[i].free_at = end;
         }
         self.draft_wait += start - ready_at;
@@ -195,7 +292,66 @@ impl ResourcePool {
         let (start, end) = self.verifiers[i].occupy(ready_at, dur);
         self.verify_wait += start - ready_at;
         self.verify_phases += 1;
+        self.verify_round_time_s += dur;
         (i, start, end)
+    }
+
+    /// Split one verify round's batch of `b` requests across the verifier
+    /// replicas that are free at the round's *effective start* — the
+    /// ready time, or the earliest replica-free time if every replica is
+    /// still busy then (a round queued behind busy replicas can shard on
+    /// whatever frees together, not just on what was free when it became
+    /// ready).  `durs[s-1]` is the caller-modeled round duration when the
+    /// batch is sharded `s` ways — the caller owns the roofline, so
+    /// sublinear batching (weight-stream-bound verification barely speeds
+    /// up from smaller shards) is priced honestly rather than assumed
+    /// linear.  Each extra shard pays one [`Self::allgather_step_s`] to
+    /// merge verdicts, and all shards run lock-step to the all-gather.
+    /// Falls back to the earliest-free single replica whenever sharding
+    /// would not strictly finish earlier, so a sharded round never ends
+    /// later than the unsharded one and a 1-replica pool reduces exactly
+    /// to [`Self::verify`].
+    pub fn verify_sharded(&mut self, b: usize, ready_at: f64, durs: &[f64]) -> ShardedVerify {
+        assert!(!durs.is_empty(), "durs must model at least the unsharded duration");
+        // effective start: when the earliest replica frees, or ready_at
+        let t0 = ready_at.max(
+            self.verifiers
+                .iter()
+                .map(|r| r.free_at)
+                .fold(f64::INFINITY, f64::min),
+        );
+        let free: Vec<usize> = self
+            .verifiers
+            .iter()
+            .enumerate()
+            .filter(|(_, r)| r.free_at <= t0 + 1e-9)
+            .map(|(i, _)| i)
+            .collect();
+        // shard count minimizing the modeled round duration (latency-greedy)
+        let s_max = free.len().min(b.max(1)).min(durs.len());
+        let mut s_best = 1usize;
+        let mut d_best = durs[0];
+        for s in 2..=s_max {
+            let d = durs[s - 1] + self.allgather_step_s * (s - 1) as f64;
+            if d < d_best - 1e-12 {
+                s_best = s;
+                d_best = d;
+            }
+        }
+        if s_best <= 1 {
+            let (_, start, end) = self.verify(ready_at, durs[0]);
+            return ShardedVerify { start, end, shards: 1 };
+        }
+        for &i in free.iter().take(s_best) {
+            self.verifiers[i].occupy(t0, d_best);
+        }
+        self.verify_wait += t0 - ready_at;
+        self.verify_phases += 1;
+        self.verify_round_time_s += d_best;
+        self.verify_shard_rounds += 1;
+        self.verify_shards_total += s_best as u64;
+        self.verify_shard_saved_s += durs[0] - d_best;
+        ShardedVerify { start: t0, end: t0 + d_best, shards: s_best }
     }
 
     /// Coupled execution: draft + verify back-to-back on one verifier

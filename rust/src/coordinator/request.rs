@@ -49,6 +49,10 @@ pub struct Request {
     // --- routing bookkeeping (Eq. 1-3) ---
     /// routing vector M_r (score per drafter)
     pub routing: Vec<f64>,
+    /// the drafter set routed for the request's next round (placement),
+    /// cached from candidate-build time until the round commits so the
+    /// exploration RNG advances once per round
+    pub routed_set: Option<Vec<usize>>,
     /// EWMA of recent acceptance length L_acc
     pub l_acc: f64,
     /// current per-request draft budget γ_i (Alg. 2)
@@ -77,6 +81,7 @@ impl Request {
             target_state: None,
             drafters: HashMap::new(),
             routing: vec![0.5; n_drafters],
+            routed_set: None,
             l_acc: 0.0,
             gamma: gamma_init,
             start_serve_s: None,
@@ -102,7 +107,13 @@ impl Request {
     /// Commit `accepted` draft tokens plus the bonus token after a verify
     /// round; `proposed` is the full draft length for acceptance accounting.
     /// Returns how many tokens were appended.
-    pub fn commit(&mut self, drafts: &[i32], accepted: usize, bonus: i32, proposed: usize) -> usize {
+    pub fn commit(
+        &mut self,
+        drafts: &[i32],
+        accepted: usize,
+        bonus: i32,
+        proposed: usize,
+    ) -> usize {
         let take = accepted.min(drafts.len()).min(self.remaining());
         self.generated.extend_from_slice(&drafts[..take]);
         let mut appended = take;

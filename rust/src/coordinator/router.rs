@@ -9,7 +9,11 @@
 //! Mode switching (Eq. 3): while the request's recent acceptance length
 //! `L_acc` is below τ the router *explores* (low greedy probability —
 //! reallocate slots to underutilized drafters); once acceptance is healthy
-//! it *exploits* (high greedy probability).  NOTE: the paper's Eq. 3 states
+//! it *exploits* (high greedy probability).  Selection is additionally
+//! *load-aware*: scores are penalized by each node's current backlog
+//! (`RouterConfig::load_penalty` per second until free) so exploitation
+//! spreads over equally-specialized nodes instead of serializing on one.
+//! NOTE: the paper's Eq. 3 states
 //! α > β with α weighting top-selection in exploration mode, which would
 //! make exploration more greedy than exploitation; we implement the
 //! mechanism the prose describes (explore ⇒ more random) and document the
@@ -125,8 +129,22 @@ impl Router {
         req.l_acc = (1.0 - e) * req.l_acc + e * accept_len as f64;
     }
 
-    /// Eq. 3: choose `k` drafters for the request.
-    pub fn route(&mut self, req: &Request, n_drafters: usize, k: usize) -> Vec<usize> {
+    /// Eq. 3: choose `k` drafters for the request, load-aware.
+    ///
+    /// `load` is each node's current backlog in seconds until free (the
+    /// engine feeds `ResourcePool::drafter_backlog`; missing entries count
+    /// as idle).  Scores are penalized by `load_penalty × backlog` before
+    /// ranking, so the exploit mode stops piling every request onto the
+    /// same specialist: once a node's queue outweighs its score edge the
+    /// next-best idle node wins, bounding the backlog spread by
+    /// `score_gap / load_penalty` plus one phase.
+    pub fn route(
+        &mut self,
+        req: &Request,
+        n_drafters: usize,
+        k: usize,
+        load: &[f64],
+    ) -> Vec<usize> {
         let k = k.min(n_drafters);
         if !self.cfg.enabled {
             // ablation: uniform random assignment
@@ -137,14 +155,14 @@ impl Router {
         } else {
             self.cfg.beta // exploit: mostly top-scoring
         };
+        let penalty = self.cfg.load_penalty;
+        let scores: Vec<f64> = (0..n_drafters)
+            .map(|d| req.routing[d] - penalty * load.get(d).copied().unwrap_or(0.0))
+            .collect();
         let mut chosen: Vec<usize> = Vec::with_capacity(k);
         let mut remaining: Vec<usize> = (0..n_drafters).collect();
-        // rank remaining by routing score, descending
-        remaining.sort_by(|&a, &b| {
-            req.routing[b]
-                .partial_cmp(&req.routing[a])
-                .unwrap_or(std::cmp::Ordering::Equal)
-        });
+        // rank remaining by backlog-penalized routing score, descending
+        remaining.sort_by(|&a, &b| scores[b].total_cmp(&scores[a]));
         for _ in 0..k {
             if remaining.is_empty() {
                 break;

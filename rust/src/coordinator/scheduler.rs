@@ -26,6 +26,9 @@ pub struct Candidate {
     /// virtual time the request becomes ready
     pub ready_at: f64,
     pub arrival_s: f64,
+    /// the request's routed drafter set (per-request placement); empty
+    /// for strategies that never occupy the speculation cluster
+    pub drafter_set: Vec<usize>,
 }
 
 #[derive(Debug, Clone)]
@@ -34,6 +37,9 @@ pub struct Assignment {
     pub batch: Vec<usize>,
     /// per-chosen-request draft budgets after Γ_max trimming
     pub gammas: Vec<usize>,
+    /// per-chosen-request routed drafter sets (parallel to `batch`); the
+    /// engine's draft reservations consume exactly these nodes
+    pub placement: Vec<Vec<usize>>,
     /// predicted draft/verify latencies (seconds, modeled)
     pub t_draft: f64,
     pub t_verify: f64,
@@ -62,14 +68,33 @@ impl Scheduler {
         let b = chosen.len();
         let crit_ctx = chosen.iter().map(|c| c.ctx_len).max().unwrap_or(1);
         let gamma_max = gammas.iter().copied().max().unwrap_or(1);
-        // drafting occupies the round's gang: the k cooperating drafters,
-        // bounded by the physical node count (matches the event engine's
-        // per-node occupancy model)
         let nodes = ctx.cfg.cluster.n_drafter_nodes.max(1);
-        let gang = k_nodes.clamp(1, nodes);
-        let per_node_b = (b * k_nodes).div_ceil(gang).max(1);
-        let t_draft = ctx.t_draft_s(per_node_b, gamma_max, crit_ctx)
-            + gamma_max as f64 * ctx.network.fusion_round_s(k_nodes, b);
+        let t_draft = if chosen.iter().any(|c| !c.drafter_set.is_empty()) {
+            // per-request placement: a node drafting for q requests runs
+            // them as q sequential lock-step phases, so the round's draft
+            // latency is priced by the deepest per-node queue — this is
+            // what moves the Eq. 8 frontier away from batches that pile
+            // onto one hot node
+            let mut depth = vec![0usize; nodes];
+            for c in chosen {
+                for &d in &c.drafter_set {
+                    if d < nodes {
+                        depth[d] += 1;
+                    }
+                }
+            }
+            let q_max = depth.iter().copied().max().unwrap_or(0).max(1);
+            q_max as f64
+                * (ctx.t_draft_s(1, gamma_max, crit_ctx)
+                    + gamma_max as f64 * ctx.network.fusion_round_s(k_nodes, 1))
+        } else {
+            // no placement information (coupled strategies): the legacy
+            // gang estimate over the k cooperating drafters
+            let gang = k_nodes.clamp(1, nodes);
+            let per_node_b = (b * k_nodes).div_ceil(gang).max(1);
+            ctx.t_draft_s(per_node_b, gamma_max, crit_ctx)
+                + gamma_max as f64 * ctx.network.fusion_round_s(k_nodes, b)
+        };
         let big_gamma: usize = gammas.iter().map(|g| g + 1).sum();
         let g_eff = (big_gamma as f64 / b as f64).ceil().max(1.0) as usize;
         let t_verify = ctx.t_verify_s(b, g_eff, crit_ctx)
@@ -106,6 +131,7 @@ impl Scheduler {
             return Assignment {
                 batch: sorted.iter().map(|c| c.idx).collect(),
                 gammas: gammas.clone(),
+                placement: sorted.iter().map(|c| c.drafter_set.clone()).collect(),
                 t_draft: t_d,
                 t_verify: t_v,
                 objective: self.objective(t_d, t_v, sorted.len(), big_gamma),
@@ -144,6 +170,7 @@ impl Scheduler {
                 best = Some(Assignment {
                     batch: chosen.iter().map(|c| c.idx).collect(),
                     gammas,
+                    placement: chosen.iter().map(|c| c.drafter_set.clone()).collect(),
                     t_draft: t_d,
                     t_verify: t_v,
                     objective: obj,
@@ -151,14 +178,24 @@ impl Scheduler {
             }
         }
         best.unwrap_or_else(|| {
-            // fall back to the single oldest request
-            let c = &sorted[0];
+            // every prefix violated a constraint: serve the shortest
+            // request alone, priced with its real single-request
+            // latencies — the old fallback returned zeros with an
+            // infinite objective, which poisoned the adaptive-γ
+            // controller's (t_draft, t_verify) observations
+            let c = sorted[0];
+            let single = [c];
+            let mut gammas = vec![c.gamma];
+            trim_gammas(&mut gammas, self.cfg.gamma_total_max);
+            let (t_d, t_v) = self.predict(ctx, &single, &gammas, k_nodes);
+            let big_gamma = gammas[0] + 1;
             Assignment {
                 batch: vec![c.idx],
-                gammas: vec![c.gamma],
-                t_draft: 0.0,
-                t_verify: 0.0,
-                objective: f64::INFINITY,
+                gammas,
+                placement: vec![c.drafter_set.clone()],
+                t_draft: t_d,
+                t_verify: t_v,
+                objective: self.objective(t_d, t_v, 1, big_gamma),
             }
         })
     }

@@ -6,12 +6,12 @@
 //! commit → resync) — over the same runtime and hardware model, which is
 //! what makes the paper's comparisons apples-to-apples:
 //!
-//! | strategy  | routing | fusion | k | decoupled | adaptive γ | LP batch |
-//! |-----------|---------|--------|---|-----------|------------|----------|
-//! | CoSine    | yes     | yes    | 3 | yes       | yes        | yes      |
-//! | Vanilla   | no      | no     | 1 | no        | no         | no       |
-//! | PipeInfer | no      | no     | 1 | yes       | no         | no       |
-//! | SpecInfer | no      | no(tree)| 3| no        | no         | no       |
+//! | strategy  | routing | fusion | k | decoupled | adaptive γ | LP batch | sharded |
+//! |-----------|---------|--------|---|-----------|------------|----------|---------|
+//! | CoSine    | yes     | yes    | 3 | yes       | yes        | yes      | yes     |
+//! | Vanilla   | no      | no     | 1 | no        | no         | no       | n/a     |
+//! | PipeInfer | no      | no     | 1 | yes       | no         | no       | yes     |
+//! | SpecInfer | no      | no(tree)| 3| no        | no         | no       | n/a     |
 //!
 //! (vLLM has no speculation and runs as `engine::run_vllm` on the same
 //! event loop.)
@@ -43,6 +43,9 @@ pub struct StrategyOpts {
     pub lp_batching: bool,
     /// SpecInfer-style tree verification over independent paths
     pub tree: bool,
+    /// data-parallel sharding of a verify round across the replicas free
+    /// at its ready time (decoupled strategies only; ablation switch)
+    pub sharded_verify: bool,
 }
 
 impl StrategyOpts {
@@ -56,6 +59,7 @@ impl StrategyOpts {
             adaptive: true,
             lp_batching: true,
             tree: false,
+            sharded_verify: true,
         }
     }
 
@@ -69,6 +73,7 @@ impl StrategyOpts {
             adaptive: false,
             lp_batching: false,
             tree: false,
+            sharded_verify: false,
         }
     }
 
@@ -82,6 +87,7 @@ impl StrategyOpts {
             adaptive: false,
             lp_batching: false,
             tree: false,
+            sharded_verify: true,
         }
     }
 
@@ -95,6 +101,7 @@ impl StrategyOpts {
             adaptive: false,
             lp_batching: false,
             tree: true,
+            sharded_verify: false,
         }
     }
 }

@@ -12,6 +12,7 @@
 //!
 //! Global options: --artifacts DIR  --pair l|q  --config FILE.json
 //!                 --replicas N (verifier replicas for the event engine)
+//!                 --seed N (routing-exploration RNG seed)
 
 use anyhow::Result;
 use cosine::util::cli::Args;
@@ -22,7 +23,7 @@ const USAGE: &str = "\
 cosine — collaborative speculative inference (CoSine reproduction)
 
 USAGE: cosine [--artifacts DIR] [--pair l|q] [--config FILE.json] [--replicas N]
-              <command> [options]
+              [--seed N] <command> [options]
 
 COMMANDS:
   smoke                              runtime round-trip check
@@ -55,6 +56,7 @@ fn main() -> Result<()> {
     }
     cfg.cluster.n_verifier_replicas =
         args.get_usize("replicas", cfg.cluster.n_verifier_replicas)?;
+    cfg.router.seed = args.get_usize("seed", cfg.router.seed as usize)? as u64;
 
     match args.subcommand.as_deref() {
         Some("smoke") => cmd::smoke::run(&cfg),

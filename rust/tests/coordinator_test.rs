@@ -88,8 +88,28 @@ fn routing_exploit_picks_top() {
     let mut req = mk_request(0, 6);
     req.l_acc = 5.0;
     req.routing = vec![0.1, 0.9, 0.3, 0.8, 0.2, 0.4];
-    let set = router.route(&req, 6, 3);
+    let set = router.route(&req, 6, 3, &[0.0; 6]);
     assert_eq!(set, vec![1, 3, 5], "fully-greedy exploit picks by score order");
+}
+
+#[test]
+fn load_aware_routing_spills_from_hot_node() {
+    let cfg = RouterConfig {
+        beta: 1.0, // fully greedy in exploit mode
+        tau: 0.0,
+        load_penalty: 0.5,
+        ..RouterConfig::default()
+    };
+    let mut router = Router::new(cfg, 3);
+    let mut req = mk_request(0, 3);
+    req.l_acc = 5.0;
+    req.routing = vec![0.9, 0.8, 0.7];
+    // idle cluster: the specialist wins
+    assert_eq!(router.route(&req, 3, 1, &[0.0; 3]), vec![0]);
+    // 3s backlog on node 0 outweighs its 0.1 score edge: spill to node 1
+    assert_eq!(router.route(&req, 3, 1, &[3.0, 0.0, 0.0]), vec![1]);
+    // missing load entries count as idle
+    assert_eq!(router.route(&req, 3, 1, &[3.0]), vec![1]);
 }
 
 #[test]
@@ -101,7 +121,7 @@ fn routing_disabled_returns_k_distinct() {
     let mut router = Router::new(cfg, 4);
     let req = mk_request(1, 6);
     for _ in 0..50 {
-        let set = router.route(&req, 6, 3);
+        let set = router.route(&req, 6, 3, &[]);
         assert_eq!(set.len(), 3);
         let mut s = set.clone();
         s.sort();
@@ -280,16 +300,91 @@ fn event_queue_orders_by_time_then_fifo() {
     q.push(2.0, EventKind::VerifyDone(7));
     q.push(0.5, EventKind::Arrival(1));
     q.push(0.5, EventKind::Arrival(2));
-    q.push(1.0, EventKind::DraftDone(0));
+    q.push(1.0, EventKind::DraftDone(0, 3));
     q.push(0.0, EventKind::SchedTick);
     let order: Vec<(f64, EventKind)> = std::iter::from_fn(|| q.pop()).collect();
     assert_eq!(order.len(), 5);
     assert_eq!(order[0].1, EventKind::SchedTick);
     assert_eq!(order[1].1, EventKind::Arrival(1), "FIFO within a timestamp");
     assert_eq!(order[2].1, EventKind::Arrival(2));
-    assert_eq!(order[3].1, EventKind::DraftDone(0));
+    assert_eq!(order[3].1, EventKind::DraftDone(0, 3));
     assert_eq!(order[4].1, EventKind::VerifyDone(7));
     assert!(q.is_empty());
+}
+
+#[test]
+fn disjoint_sets_overlap_where_gang_serializes() {
+    use cosine::coordinator::pipeline::ResourcePool;
+    // Two requests routed to disjoint single-node sets on a 2-node
+    // cluster.  The lock-step gang model (gang = both nodes) serializes
+    // their rounds; per-request placement overlaps them — the property
+    // the gang model made impossible.
+    let mut gang = ResourcePool::new(2, 1);
+    let (_, g1_end) = gang.draft(2, 0.0, 1.0);
+    let (g2_start, g2_end) = gang.draft(2, 0.0, 1.0);
+    assert!(g2_start >= g1_end - 1e-12, "gang model serializes the rounds");
+    assert!((g2_end - 2.0).abs() < 1e-12);
+
+    let mut placed = ResourcePool::new(2, 1);
+    let (a_start, a_end) = placed.draft_on(&[0], 0.0, 1.0);
+    let (b_start, b_end) = placed.draft_on(&[1], 0.0, 1.0);
+    assert!((a_start - 0.0).abs() < 1e-12 && (b_start - 0.0).abs() < 1e-12);
+    assert!(
+        b_start < a_end,
+        "disjoint routed sets must overlap their draft phases"
+    );
+    assert!((a_end - 1.0).abs() < 1e-12 && (b_end - 1.0).abs() < 1e-12);
+    assert!(placed.makespan() < gang.makespan(), "placement halves the draft makespan");
+    // a third request on node 0 serializes behind the first (per-node
+    // queue depth 2)
+    let (c_start, _) = placed.draft_on(&[0], 0.0, 1.0);
+    assert!((c_start - 1.0).abs() < 1e-12);
+    assert_eq!(placed.drafters[0].phases, 2);
+    assert_eq!(placed.drafters[1].phases, 1);
+}
+
+#[test]
+fn sharded_verify_beats_whole_round_on_makespan() {
+    use cosine::coordinator::pipeline::ResourcePool;
+    // One compute-bound round (b=8): whole-round replica assignment puts
+    // 4s on a single replica; sharding splits it across both free
+    // replicas at the caller-modeled 2-way duration.
+    let mut whole = ResourcePool::new(0, 2);
+    whole.verify(0.0, 4.0);
+    assert!((whole.makespan() - 4.0).abs() < 1e-12);
+
+    let mut sharded = ResourcePool::new(0, 2);
+    let sv = sharded.verify_sharded(8, 0.0, &[4.0, 2.2]);
+    assert_eq!(sv.shards, 2);
+    assert!((sv.end - 2.2).abs() < 1e-12);
+    assert!(
+        sharded.makespan() < whole.makespan(),
+        "sharded verify must beat whole-round assignment: {} vs {}",
+        sharded.makespan(),
+        whole.makespan()
+    );
+    assert_eq!(sharded.verify_shard_rounds, 1);
+    assert_eq!(sharded.verify_shards_total, 2);
+    assert!((sharded.verify_shard_saved_s - 1.8).abs() < 1e-12);
+    assert_eq!(sharded.verifiers[0].phases, 1);
+    assert_eq!(sharded.verifiers[1].phases, 1);
+}
+
+#[test]
+fn sharded_verify_respects_allgather_and_stream_bound_rounds() {
+    use cosine::coordinator::pipeline::ResourcePool;
+    // Stream-bound round: splitting saves (almost) nothing, so the pool
+    // must keep the round whole even with free replicas.
+    let mut p = ResourcePool::new(0, 4);
+    let sv = p.verify_sharded(8, 0.0, &[1.0, 0.99, 0.98, 0.97]);
+    p.allgather_step_s = 0.05;
+    let sv2 = p.verify_sharded(8, 10.0, &[1.0, 0.99, 0.98, 0.97]);
+    assert_eq!(sv.shards, 4, "free split still helps marginally at zero all-gather cost");
+    assert_eq!(sv2.shards, 1, "all-gather cost must suppress marginal sharding");
+    assert!((sv2.end - 11.0).abs() < 1e-12);
+    // a batch of 1 can never shard
+    let sv3 = p.verify_sharded(1, 20.0, &[1.0, 0.5, 0.4, 0.3]);
+    assert_eq!(sv3.shards, 1);
 }
 
 #[test]

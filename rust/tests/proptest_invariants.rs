@@ -74,7 +74,8 @@ fn prop_route_selects_valid_distinct_drafters() {
         for v in req.routing.iter_mut() {
             *v = rng.f64();
         }
-        let set = router.route(&req, n, k);
+        let load: Vec<f64> = (0..n).map(|_| rng.f64() * 3.0).collect();
+        let set = router.route(&req, n, k, &load);
         assert_eq!(set.len(), k.min(n), "seed {seed}");
         let mut s = set.clone();
         s.sort();
@@ -160,6 +161,182 @@ fn prop_event_pool_1x1_equals_virtual_pipeline() {
         assert!(
             (legacy.server_idle_frac() - pool.verifier_idle_frac()).abs() < 1e-9,
             "seed {seed}"
+        );
+    });
+}
+
+#[test]
+fn prop_placed_pool_1x1_equals_virtual_pipeline() {
+    // The per-request placement APIs (draft_on on a pinned set,
+    // verify_sharded with a 1-replica pool) must also reduce exactly to
+    // the legacy VirtualPipeline at 1 node + 1 replica — this pins the
+    // refactor's semantics on the engine's new reservation path.
+    cases(200, |rng, seed| {
+        let mut legacy = VirtualPipeline::new();
+        let mut pool = ResourcePool::new(1, 1);
+        for step in 0..30 {
+            let ready = rng.f64() * 8.0;
+            let td = rng.f64();
+            let tv = rng.f64();
+            let b = 1 + rng.usize(8);
+            let (ls, le) = legacy.draft(ready, td);
+            let (ps, pe) = pool.draft_on(&[0], ready, td);
+            assert!((ls - ps).abs() < 1e-12, "seed {seed} step {step}: draft start");
+            assert!((le - pe).abs() < 1e-12, "seed {seed} step {step}: draft end");
+            let (lvs, lve) = legacy.verify(le, tv);
+            let sv = pool.verify_sharded(b, pe, &[tv]);
+            assert_eq!(sv.shards, 1, "seed {seed} step {step}: 1 replica can never shard");
+            assert!((lvs - sv.start).abs() < 1e-12, "seed {seed} step {step}: verify start");
+            assert!((lve - sv.end).abs() < 1e-12, "seed {seed} step {step}: verify end");
+        }
+        assert!((legacy.makespan() - pool.makespan()).abs() < 1e-9, "seed {seed}");
+        assert!((legacy.cluster_busy - pool.drafter_busy_total()).abs() < 1e-9, "seed {seed}");
+        assert!((legacy.server_busy - pool.verifier_busy_total()).abs() < 1e-9, "seed {seed}");
+        assert_eq!(pool.verify_shard_rounds, 0, "seed {seed}: no round may have sharded");
+    });
+}
+
+#[test]
+fn prop_per_node_placement_conserves_gang_busy() {
+    // (a) When every request routes to the same set, per-node placement
+    // must conserve the gang model's busy time: identical per-node busy
+    // and timings for the full-cluster set, and identical busy-second
+    // totals for any pinned partial set.
+    cases(150, |rng, seed| {
+        let n = 1 + rng.usize(6);
+        let all: Vec<usize> = (0..n).collect();
+        let mut gang = ResourcePool::new(n, 1);
+        let mut placed = ResourcePool::new(n, 1);
+        for step in 0..20 {
+            let ready = rng.f64() * 5.0;
+            let dur = 0.05 + rng.f64();
+            let (gs, ge) = gang.draft(n, ready, dur);
+            let (ps, pe) = placed.draft_on(&all, ready, dur);
+            assert!((gs - ps).abs() < 1e-12, "seed {seed} step {step}: start");
+            assert!((ge - pe).abs() < 1e-12, "seed {seed} step {step}: end");
+        }
+        for (i, (g, p)) in gang.drafters.iter().zip(&placed.drafters).enumerate() {
+            assert!((g.busy - p.busy).abs() < 1e-9, "seed {seed}: node {i} busy diverged");
+            assert_eq!(g.phases, p.phases, "seed {seed}: node {i} phase count diverged");
+        }
+        assert!((gang.makespan() - placed.makespan()).abs() < 1e-9, "seed {seed}");
+
+        // partial pinned set: totals are conserved (m × dur per phase)
+        // even though the gang model spreads over earliest-free nodes
+        let m = 1 + rng.usize(n);
+        let sub: Vec<usize> = (0..m).collect();
+        let mut gang_m = ResourcePool::new(n, 1);
+        let mut placed_m = ResourcePool::new(n, 1);
+        let mut expect = 0.0;
+        for _ in 0..20 {
+            let ready = rng.f64() * 5.0;
+            let dur = 0.05 + rng.f64();
+            expect += m as f64 * dur;
+            gang_m.draft(m, ready, dur);
+            placed_m.draft_on(&sub, ready, dur);
+        }
+        assert!((gang_m.drafter_busy_total() - expect).abs() < 1e-9, "seed {seed}");
+        assert!((placed_m.drafter_busy_total() - expect).abs() < 1e-9, "seed {seed}");
+    });
+}
+
+#[test]
+fn prop_sharded_verify_never_later_than_single() {
+    // (b) From any pool state, verify_sharded must never finish a round
+    // later than dispatching it whole to the earliest-free replica.
+    cases(150, |rng, seed| {
+        let nrep = 1 + rng.usize(4);
+        let mut pool = ResourcePool::new(0, nrep);
+        pool.allgather_step_s = rng.f64() * 0.01;
+        for step in 0..25 {
+            let ready = rng.f64() * 4.0;
+            let b = 1 + rng.usize(16);
+            // caller-modeled shard durations: nonincreasing in shard count
+            let base = 0.05 + rng.f64();
+            let mut durs = vec![base];
+            for s in 2..=nrep {
+                let prev = durs[s - 2];
+                durs.push(prev * (0.5 + 0.5 * rng.f64()));
+            }
+            let mut single = pool.clone();
+            let (_, _, single_end) = single.verify(ready, durs[0]);
+            let sv = pool.verify_sharded(b, ready, &durs);
+            assert!(
+                sv.end <= single_end + 1e-9,
+                "seed {seed} step {step}: sharded {} later than single {}",
+                sv.end,
+                single_end
+            );
+            assert!(sv.start >= ready - 1e-9 && sv.end >= sv.start, "seed {seed} step {step}");
+            assert!(sv.shards >= 1 && sv.shards <= nrep.min(b), "seed {seed} step {step}");
+        }
+        for r in &pool.verifiers {
+            assert!(r.busy <= r.free_at + 1e-9, "seed {seed}: overcommitted replica");
+        }
+    });
+}
+
+#[test]
+fn prop_load_aware_routing_bounds_backlog_spread() {
+    // (c) Under a skewed-domain trace (every request's specialist is node
+    // 0), greedy exploitation with a backlog penalty must keep the
+    // per-node backlog spread bounded by score_gap / load_penalty plus
+    // one phase, while load-blind routing serializes the whole trace on
+    // the specialist.
+    cases(50, |rng, seed| {
+        let n = 2 + rng.usize(5);
+        let gap = 0.3;
+        let penalty = 0.5;
+        let cfg = RouterConfig {
+            beta: 1.0, // fully greedy: isolate the load term
+            tau: 0.0,
+            load_penalty: penalty,
+            ..RouterConfig::default()
+        };
+        let blind_cfg = RouterConfig {
+            load_penalty: 0.0,
+            ..cfg.clone()
+        };
+        let mut aware = Router::new(cfg, seed);
+        let mut blind = Router::new(blind_cfg, seed);
+        let mut req = Request::from_trace(
+            &TraceRequest {
+                id: seed,
+                arrival_s: 0.0,
+                domain: 0,
+                prompt: vec![0; 4],
+                max_new_tokens: 4,
+            },
+            n,
+            4,
+        );
+        req.l_acc = 10.0; // exploit mode
+        for (i, v) in req.routing.iter_mut().enumerate() {
+            *v = if i == 0 { 0.6 + gap } else { 0.6 };
+        }
+        let dur = 0.2 + rng.f64();
+        let rounds = 30 + rng.usize(30);
+        let mut free_aware = vec![0.0f64; n];
+        let mut free_blind = vec![0.0f64; n];
+        for _ in 0..rounds {
+            let a = aware.route(&req, n, 1, &free_aware)[0];
+            free_aware[a] += dur;
+            let b = blind.route(&req, n, 1, &free_blind)[0];
+            free_blind[b] += dur;
+        }
+        let spread = |f: &[f64]| {
+            f.iter().copied().fold(f64::NEG_INFINITY, f64::max)
+                - f.iter().copied().fold(f64::INFINITY, f64::min)
+        };
+        assert!(
+            spread(&free_aware) <= gap / penalty + dur + 1e-9,
+            "seed {seed}: spread {} exceeds bound {}",
+            spread(&free_aware),
+            gap / penalty + dur
+        );
+        assert!(
+            (spread(&free_blind) - rounds as f64 * dur).abs() < 1e-9,
+            "seed {seed}: blind routing must pile everything on the specialist"
         );
     });
 }
