@@ -1,0 +1,49 @@
+#!/usr/bin/env python3
+"""Gate the scheduler hot-path bench (cosine bench --smoke) against the
+committed baseline.
+
+Usage: check_bench.py BENCH_sched.json bench-baseline.json
+
+Two gates:
+  * machine-independent: the incremental solver must keep a
+    >= min_speedup_events_per_s events/sec advantage over the naive
+    from-scratch reference, and both must produce identical schedules;
+  * machine-dependent (armed once the baseline records events_per_s for
+    this runner class): absolute events/sec must not regress > 20%.
+"""
+import json
+import sys
+
+
+def main() -> None:
+    with open(sys.argv[1]) as f:
+        cur = json.load(f)
+    with open(sys.argv[2]) as f:
+        base = json.load(f)
+
+    if not cur["schedule_identical"]:
+        sys.exit("incremental schedule diverged from the naive reference")
+
+    speedup = cur["speedup_events_per_s"]
+    min_speedup = base.get("min_speedup_events_per_s", 2.0)
+    if speedup < min_speedup:
+        sys.exit(f"events/sec speedup {speedup:.2f}x below required {min_speedup}x")
+    print(f"speedup {speedup:.2f}x >= {min_speedup}x")
+
+    baseline_ev = base.get("events_per_s")
+    cur_ev = cur["incremental"]["events_per_s"]
+    if baseline_ev is None:
+        print(
+            f"baseline events_per_s unset; measured {cur_ev:.0f} ev/s "
+            "(record it in .github/bench-baseline.json to arm the 20% gate)"
+        )
+    elif cur_ev < 0.8 * baseline_ev:
+        sys.exit(
+            f"events/sec regressed >20%: {cur_ev:.0f} vs baseline {baseline_ev:.0f}"
+        )
+    else:
+        print(f"events/sec {cur_ev:.0f} within 20% of baseline {baseline_ev:.0f}")
+
+
+if __name__ == "__main__":
+    main()

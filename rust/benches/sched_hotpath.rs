@@ -1,0 +1,94 @@
+//! Bench: the Eq. 8 scheduler hot path in isolation — the incremental
+//! persistent-pool solver vs the naive from-scratch reference at several
+//! pool depths, the closed-form `trim_gammas`, and candidate-pool churn.
+//! The full event-loop comparison (events/sec, BENCH_sched.json) lives in
+//! `cosine bench`; this one isolates the per-invocation solver cost.
+//!
+//!     cargo bench --bench sched_hotpath
+
+use cosine::config::SchedulerConfig;
+use cosine::coordinator::scheduler::{
+    trim_gammas, Candidate, CandidatePool, PlacementArena, SchedCostModel, Scheduler,
+};
+use cosine::util::rng::Rng;
+use cosine::util::stats;
+
+fn mk_pool(
+    n: usize,
+    arena: &mut PlacementArena,
+    rng: &mut Rng,
+) -> (CandidatePool, Vec<Candidate>) {
+    let mut pool = CandidatePool::new();
+    let mut avail = Vec::with_capacity(n);
+    let mut nodes: Vec<usize> = (0..6).collect();
+    for i in 0..n {
+        rng.partial_shuffle(&mut nodes, 3);
+        let pid = arena.intern(&nodes[..3]);
+        let c = Candidate {
+            idx: i,
+            ctx_len: 64 + rng.usize(1024),
+            gamma: 1 + rng.usize(8),
+            ready_at: 0.0,
+            arrival_s: rng.f64() * 10.0,
+            placement: pid,
+        };
+        pool.insert(c);
+        avail.push(c);
+    }
+    (pool, avail)
+}
+
+fn main() {
+    let cost = SchedCostModel::synthetic("l", 6);
+
+    for depth in [64usize, 256, 1024] {
+        let mut rng = Rng::seed_from_u64(11);
+        let mut arena = PlacementArena::new();
+        let (pool, avail) = mk_pool(depth, &mut arena, &mut rng);
+        let mut sched = Scheduler::new(SchedulerConfig::default(), true);
+        let s = stats::bench(
+            &format!("assign_incremental (depth {depth})"),
+            10,
+            200,
+            || {
+                let a = sched
+                    .assign_incremental(&cost, &arena, &pool, 3, |_| true)
+                    .unwrap();
+                assert!(!a.batch.is_empty());
+            },
+        );
+        println!("{}", s.report());
+        let sched_ref = Scheduler::new(SchedulerConfig::default(), true);
+        let s = stats::bench(
+            &format!("assign_reference   (depth {depth})"),
+            10,
+            200,
+            || {
+                let a = sched_ref.assign_reference(&cost, &arena, &avail, 3);
+                assert!(!a.batch.is_empty());
+            },
+        );
+        println!("{}", s.report());
+    }
+
+    let s = stats::bench("trim_gammas closed form (1024 reqs, cap 512)", 10, 1000, || {
+        let mut g = vec![8usize; 1024];
+        trim_gammas(&mut g, 512);
+        assert!(g.iter().sum::<usize>() <= 1024); // γ ≥ 1 floor binds
+    });
+    println!("{}", s.report());
+
+    let mut rng = Rng::seed_from_u64(13);
+    let mut arena = PlacementArena::new();
+    let (mut pool, avail) = mk_pool(256, &mut arena, &mut rng);
+    let batch: Vec<usize> = (0..16).collect();
+    let cands: Vec<Candidate> = avail[..16].to_vec();
+    let s = stats::bench("pool remove+reinsert 16 of 256", 10, 500, || {
+        pool.remove_batch(&batch);
+        for c in &cands {
+            pool.insert(*c);
+        }
+        assert_eq!(pool.len(), 256);
+    });
+    println!("{}", s.report());
+}

@@ -2,6 +2,8 @@
 //! examples and the criterion benches — one source of truth for how each
 //! paper table/figure is generated.
 
+pub mod sched;
+
 use anyhow::Result;
 
 use crate::config::CosineConfig;

@@ -1,0 +1,434 @@
+//! `cosine bench` backend: a timing-only serving simulation that drives
+//! the *real* scheduling stack — [`CandidatePool`], [`Scheduler`],
+//! [`PlacementArena`], [`ResourcePool`] with queue-aware sharding, priced
+//! by a synthetic [`SchedCostModel`] — over a deep-pool online workload.
+//! No PJRT, no artifacts: token outcomes are synthetic (a fixed accepted
+//! count per round), so the measured wall time is pure coordinator cost
+//! and the harness runs anywhere, CI included.
+//!
+//! Two modes share one deterministic workload (same seeds, same routing
+//! RNG, same snapshots), so their schedules are bit-identical and the
+//! events/sec ratio is a pure hot-path speedup:
+//!
+//! * `incremental` — the persistent-pool solver the engine runs
+//!   ([`Scheduler::assign_incremental`]).
+//! * `naive` — the pre-refactor shape: rescan every request per event,
+//!   clone each candidate's routed set, re-sort, and evaluate every
+//!   prefix from scratch ([`Scheduler::assign_reference`]).
+
+use std::collections::{BTreeMap, HashMap};
+use std::time::Instant;
+
+use crate::config::SchedulerConfig;
+use crate::coordinator::engine::{collect_ready, EventKind, EventQueue};
+use crate::coordinator::pipeline::ResourcePool;
+use crate::coordinator::scheduler::{
+    Candidate, CandidatePool, PlacementArena, PlacementId, SchedCostModel, Scheduler,
+};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+/// Synthetic deep-pool workload knobs.
+#[derive(Debug, Clone)]
+pub struct SchedBenchSpec {
+    pub n_requests: usize,
+    /// arrival spacing (virtual seconds) — small, so the pool floods
+    pub arrival_dt: f64,
+    pub prompt_len: usize,
+    pub gen_len: usize,
+    /// per-request draft budget γ
+    pub gamma: usize,
+    /// accepted drafts per round (committed tokens = accept + 1)
+    pub accept: usize,
+    pub n_nodes: usize,
+    pub n_replicas: usize,
+    /// drafters per request (placement set size)
+    pub k: usize,
+    pub max_batch: usize,
+    pub seed: u64,
+}
+
+impl SchedBenchSpec {
+    /// The acceptance-gate workload: ≥ 256 requests in flight while the
+    /// scheduler runs.
+    pub fn deep() -> Self {
+        Self {
+            n_requests: 512,
+            arrival_dt: 1e-3,
+            prompt_len: 256,
+            gen_len: 64,
+            gamma: 6,
+            accept: 3,
+            n_nodes: 6,
+            n_replicas: 2,
+            k: 3,
+            max_batch: 16,
+            seed: 7,
+        }
+    }
+
+    /// Smaller variant for the per-PR CI smoke gate.
+    pub fn smoke() -> Self {
+        Self {
+            n_requests: 384,
+            gen_len: 24,
+            ..Self::deep()
+        }
+    }
+}
+
+/// One mode's measurements over the shared workload.
+#[derive(Debug, Clone)]
+pub struct SchedBenchReport {
+    pub mode: String,
+    pub events: u64,
+    pub rounds: u64,
+    pub sched_invocations: u64,
+    pub wall_s: f64,
+    pub sched_s: f64,
+    pub events_per_s: f64,
+    pub sched_ns_per_event: f64,
+    /// candidate-set clones (naive) / pool inserts + interned sets
+    /// (incremental) — a proxy for hot-path heap churn
+    pub alloc_proxy: u64,
+    pub peak_pool_depth: usize,
+    pub makespan_s: f64,
+    pub throughput_tps: f64,
+    pub p50_latency_s: f64,
+    pub p99_latency_s: f64,
+    pub tokens: u64,
+}
+
+impl SchedBenchReport {
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("mode".to_string(), Json::Str(self.mode.clone()));
+        m.insert("events".to_string(), Json::Num(self.events as f64));
+        m.insert("rounds".to_string(), Json::Num(self.rounds as f64));
+        m.insert(
+            "sched_invocations".to_string(),
+            Json::Num(self.sched_invocations as f64),
+        );
+        m.insert("wall_s".to_string(), Json::Num(self.wall_s));
+        m.insert("sched_s".to_string(), Json::Num(self.sched_s));
+        m.insert("events_per_s".to_string(), Json::Num(self.events_per_s));
+        m.insert(
+            "sched_ns_per_event".to_string(),
+            Json::Num(self.sched_ns_per_event),
+        );
+        m.insert("alloc_proxy".to_string(), Json::Num(self.alloc_proxy as f64));
+        m.insert(
+            "peak_pool_depth".to_string(),
+            Json::Num(self.peak_pool_depth as f64),
+        );
+        m.insert("makespan_s".to_string(), Json::Num(self.makespan_s));
+        m.insert("throughput_tps".to_string(), Json::Num(self.throughput_tps));
+        m.insert("p50_latency_s".to_string(), Json::Num(self.p50_latency_s));
+        m.insert("p99_latency_s".to_string(), Json::Num(self.p99_latency_s));
+        m.insert("tokens".to_string(), Json::Num(self.tokens as f64));
+        Json::Obj(m)
+    }
+}
+
+/// Same modeled schedule in both modes? (The solvers are property-tested
+/// assignment-identical; this is the end-to-end cross-check over measured
+/// quantities — round/event counts and the latency distribution all
+/// derive from the dispatch decisions, not from the workload spec.)
+pub fn schedule_identical(a: &SchedBenchReport, b: &SchedBenchReport) -> bool {
+    a.rounds == b.rounds
+        && a.events == b.events
+        && (a.makespan_s - b.makespan_s).abs() < 1e-9
+        && (a.p50_latency_s - b.p50_latency_s).abs() < 1e-9
+        && (a.p99_latency_s - b.p99_latency_s).abs() < 1e-9
+}
+
+struct SimReq {
+    ctx_len: usize,
+    remaining: usize,
+    arrival_s: f64,
+    ready_at: f64,
+    finish_s: Option<f64>,
+    placement: PlacementId,
+}
+
+/// Run the workload through the scheduling stack; `incremental` selects
+/// the solver (and its bookkeeping shape).
+pub fn run_sched_bench(spec: &SchedBenchSpec, incremental: bool) -> SchedBenchReport {
+    let cost = SchedCostModel::synthetic("l", spec.n_nodes);
+    let sched_cfg = SchedulerConfig {
+        max_batch: spec.max_batch,
+        ..SchedulerConfig::default()
+    };
+    let mut scheduler = Scheduler::new(sched_cfg, true);
+    let mut rng = Rng::seed_from_u64(spec.seed);
+    let mut arena = PlacementArena::new();
+    let mut cpool = CandidatePool::new();
+    let mut res = ResourcePool::new(spec.n_nodes, spec.n_replicas.max(1));
+    res.allgather_step_s = cost.network.allgather_step_s(spec.max_batch.max(1));
+    let mut queue = EventQueue::new();
+    let mut inflight: HashMap<u64, Vec<usize>> = HashMap::new();
+
+    let mut reqs: Vec<SimReq> = (0..spec.n_requests)
+        .map(|i| SimReq {
+            ctx_len: spec.prompt_len,
+            remaining: spec.gen_len.max(1),
+            arrival_s: i as f64 * spec.arrival_dt,
+            ready_at: i as f64 * spec.arrival_dt,
+            finish_s: None,
+            placement: PlacementId::EMPTY,
+        })
+        .collect();
+    for (i, r) in reqs.iter().enumerate() {
+        queue.push(r.arrival_s, EventKind::Arrival(i));
+    }
+
+    let mut unfinished = reqs.len();
+    let mut ready_count = 0usize;
+    let mut round_id: u64 = 0;
+    let mut events: u64 = 0;
+    let mut rounds: u64 = 0;
+    let mut sched_invocations: u64 = 0;
+    let mut sched_ns: u64 = 0;
+    let mut alloc_proxy: u64 = 0;
+    let mut peak_depth = 0usize;
+    let mut newly_ready: Vec<usize> = Vec::new();
+    let mut set_buf: Vec<usize> = (0..spec.n_nodes.max(1)).collect();
+    let k = spec.k.clamp(1, spec.n_nodes.max(1));
+
+    let wall0 = Instant::now();
+    while let Some((now, kind)) = queue.pop() {
+        events += 1;
+        newly_ready.clear();
+        collect_ready(kind, &mut inflight, &mut newly_ready);
+        while queue.next_at().is_some_and(|t| t <= now) {
+            if let Some((_, k2)) = queue.pop() {
+                events += 1;
+                collect_ready(k2, &mut inflight, &mut newly_ready);
+            }
+        }
+
+        // route the newly-ready requests (same RNG draws in both modes)
+        newly_ready.sort_unstable();
+        for &ri in &newly_ready {
+            let r = &mut reqs[ri];
+            if r.finish_s.is_some() {
+                continue;
+            }
+            rng.partial_shuffle(&mut set_buf, k);
+            r.placement = arena.intern(&set_buf[..k]);
+            ready_count += 1;
+            if incremental {
+                cpool.insert(Candidate {
+                    idx: ri,
+                    ctx_len: r.ctx_len,
+                    gamma: spec.gamma.min(r.remaining.max(1)),
+                    ready_at: r.ready_at,
+                    arrival_s: r.arrival_s,
+                    placement: r.placement,
+                });
+                alloc_proxy += 1;
+                peak_depth = peak_depth.max(cpool.len());
+            } else {
+                peak_depth = peak_depth.max(ready_count);
+            }
+        }
+
+        // schedule while candidates and their nodes are free at `now`
+        loop {
+            if unfinished == 0 {
+                break;
+            }
+            let t0 = Instant::now();
+            let assign = if incremental {
+                scheduler.assign_incremental(&cost, &arena, &cpool, k, |cand| {
+                    res.nodes_free_at(arena.get(cand.placement), now)
+                })
+            } else {
+                // pre-refactor hot path: rescan every request, clone each
+                // candidate's routed set, re-sort, evaluate from scratch
+                let mut avail: Vec<Candidate> = Vec::new();
+                let mut cloned_sets: Vec<Vec<usize>> = Vec::new();
+                for (i, r) in reqs.iter().enumerate() {
+                    if r.finish_s.is_some() || r.ready_at > now + 1e-9 {
+                        continue;
+                    }
+                    if !res.nodes_free_at(arena.get(r.placement), now) {
+                        continue;
+                    }
+                    cloned_sets.push(arena.get(r.placement).to_vec());
+                    avail.push(Candidate {
+                        idx: i,
+                        ctx_len: r.ctx_len,
+                        gamma: spec.gamma.min(r.remaining.max(1)),
+                        ready_at: r.ready_at,
+                        arrival_s: r.arrival_s,
+                        placement: r.placement,
+                    });
+                }
+                alloc_proxy += cloned_sets.len() as u64;
+                std::hint::black_box(&cloned_sets);
+                if avail.is_empty() {
+                    None
+                } else {
+                    Some(scheduler.assign_reference(&cost, &arena, &avail, k))
+                }
+            };
+            sched_invocations += 1;
+            sched_ns += t0.elapsed().as_nanos() as u64;
+            let Some(assign) = assign else {
+                break;
+            };
+
+            // virtual timing: per-request draft reservations, then a
+            // queue-aware sharded verify round
+            let b = assign.batch.len();
+            let mut ctx_crit = 1usize;
+            let mut draft_end = 0.0f64;
+            for (pos, &ri) in assign.batch.iter().enumerate() {
+                let r = &reqs[ri];
+                ctx_crit = ctx_crit.max(r.ctx_len);
+                let gamma = assign.gammas[pos].max(1);
+                let set = arena.get(assign.placement[pos]);
+                let t_i = cost.t_draft_s(1, gamma, r.ctx_len)
+                    + gamma as f64 * cost.network.fusion_round_s(set.len().max(1), 1);
+                let (_, e_i) = res.draft_on(set, r.ready_at, t_i);
+                for &node in set {
+                    queue.push(e_i, EventKind::DraftDone(round_id, node));
+                }
+                draft_end = draft_end.max(e_i);
+            }
+            let big_gamma: usize = assign.gammas.iter().map(|g| g + 1).sum();
+            let g_eff = (big_gamma as f64 / b as f64).ceil().max(1.0) as usize;
+            let durs: Vec<f64> = (1..=spec.n_replicas.max(1))
+                .map(|s| {
+                    let bs = b.div_ceil(s);
+                    cost.t_verify_s(bs, g_eff, ctx_crit)
+                        + cost.network.verify_exchange_s(bs, cost.g1)
+                })
+                .collect();
+            let others = ready_count.saturating_sub(b);
+            let pending = others.div_ceil(b.max(1)).min(2 * spec.n_replicas.max(1));
+            let sv = res.verify_sharded_queued(b, draft_end, &durs, pending);
+            queue.push(sv.end, EventKind::VerifyDone(round_id));
+            rounds += 1;
+
+            // synthetic commit: accept + bonus tokens per round
+            for &ri in &assign.batch {
+                let r = &mut reqs[ri];
+                let take = (spec.accept + 1).min(r.remaining);
+                r.remaining -= take;
+                r.ctx_len += take;
+                r.ready_at = sv.end;
+                if r.remaining == 0 {
+                    r.finish_s = Some(sv.end);
+                    unfinished -= 1;
+                }
+            }
+            ready_count -= b;
+            if incremental {
+                cpool.remove_batch(&assign.batch);
+            }
+            inflight.insert(round_id, assign.batch);
+            round_id += 1;
+        }
+
+        // safety net, mirroring the engine: ready work + drained queue
+        if queue.is_empty() && unfinished > 0 && ready_count > 0 {
+            let free_t = res
+                .drafters
+                .iter()
+                .chain(res.verifiers.iter())
+                .map(|r| r.free_at)
+                .filter(|&t| t > now + 1e-9)
+                .fold(f64::INFINITY, f64::min);
+            if free_t.is_finite() {
+                queue.push(free_t, EventKind::SchedTick);
+            }
+        }
+    }
+    let wall_s = wall0.elapsed().as_secs_f64();
+
+    assert_eq!(unfinished, 0, "sched bench drained with unfinished requests");
+    let mut lats: Vec<f64> = reqs
+        .iter()
+        .filter_map(|r| r.finish_s.map(|f| f - r.arrival_s))
+        .collect();
+    lats.sort_by(|a, b| a.total_cmp(b));
+    let pct = |p: f64| -> f64 {
+        if lats.is_empty() {
+            0.0
+        } else {
+            lats[((lats.len() as f64 * p) as usize).min(lats.len() - 1)]
+        }
+    };
+    let tokens = (spec.n_requests * spec.gen_len) as u64;
+    let makespan = res.makespan();
+    if incremental {
+        alloc_proxy += arena.len() as u64;
+    }
+    SchedBenchReport {
+        mode: if incremental { "incremental" } else { "naive" }.to_string(),
+        events,
+        rounds,
+        sched_invocations,
+        wall_s,
+        sched_s: sched_ns as f64 / 1e9,
+        events_per_s: if wall_s > 0.0 { events as f64 / wall_s } else { 0.0 },
+        sched_ns_per_event: if events > 0 {
+            sched_ns as f64 / events as f64
+        } else {
+            0.0
+        },
+        alloc_proxy,
+        peak_pool_depth: peak_depth,
+        makespan_s: makespan,
+        throughput_tps: if makespan > 0.0 {
+            tokens as f64 / makespan
+        } else {
+            0.0
+        },
+        p50_latency_s: pct(0.5),
+        p99_latency_s: pct(0.99),
+        tokens,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn incremental_and_naive_produce_identical_schedules() {
+        let spec = SchedBenchSpec {
+            n_requests: 48,
+            gen_len: 12,
+            ..SchedBenchSpec::deep()
+        };
+        let inc = run_sched_bench(&spec, true);
+        let naive = run_sched_bench(&spec, false);
+        assert!(
+            schedule_identical(&inc, &naive),
+            "schedules diverged: inc makespan {} rounds {} vs naive {} {}",
+            inc.makespan_s,
+            inc.rounds,
+            naive.makespan_s,
+            naive.rounds
+        );
+        assert_eq!(inc.tokens, 48 * 12);
+        assert!(inc.p99_latency_s >= inc.p50_latency_s);
+    }
+
+    #[test]
+    fn deep_spec_floods_the_pool() {
+        let spec = SchedBenchSpec {
+            gen_len: 16,
+            ..SchedBenchSpec::deep()
+        };
+        let r = run_sched_bench(&spec, true);
+        assert!(
+            r.peak_pool_depth >= 256,
+            "deep workload must keep ≥256 requests in flight, got {}",
+            r.peak_pool_depth
+        );
+    }
+}

@@ -26,6 +26,13 @@ pub struct GpuProfile {
 }
 
 impl GpuProfile {
+    /// Measured LLM decode rate with the A100 anchor as fallback — the
+    /// single source of the 7.13 tok/s calibration constant every
+    /// verifier-side pricing call shares.
+    pub fn llm_tps(&self) -> f64 {
+        self.llm_tokens_per_s.unwrap_or(7.13)
+    }
+
     pub fn by_name(name: &str) -> Option<Self> {
         match name.to_lowercase().as_str() {
             "2080ti" => Some(Self {

@@ -1,0 +1,83 @@
+//! `cosine bench`: scheduler hot-path wall-clock harness.
+//!
+//! Runs the timing-only deep-pool simulation (`bench::sched`) through the
+//! naive from-scratch Eq. 8 solver and the incremental persistent-pool
+//! solver, cross-checks that both produce bit-identical schedules, and
+//! emits `BENCH_sched.json` — events/sec, scheduler ns/event, an
+//! allocations proxy, and the modeled p50/p99 latency + throughput — the
+//! perf trajectory CI gates on (artifact upload + regression check).
+//! Needs no PJRT artifacts.
+
+use anyhow::Result;
+use cosine::bench::sched::{run_sched_bench, schedule_identical, SchedBenchSpec};
+use cosine::util::json::Json;
+use std::collections::BTreeMap;
+
+pub fn run(out: &str, smoke: bool, requests: Option<usize>) -> Result<()> {
+    let mut spec = if smoke {
+        SchedBenchSpec::smoke()
+    } else {
+        SchedBenchSpec::deep()
+    };
+    if let Some(n) = requests {
+        spec.n_requests = n.max(1);
+    }
+    println!(
+        "sched bench ({}): {} requests, γ={} accept={} nodes={} replicas={} max_batch={}",
+        if smoke { "smoke" } else { "deep" },
+        spec.n_requests,
+        spec.gamma,
+        spec.accept,
+        spec.n_nodes,
+        spec.n_replicas,
+        spec.max_batch,
+    );
+
+    let naive = run_sched_bench(&spec, false);
+    let inc = run_sched_bench(&spec, true);
+    for r in [&naive, &inc] {
+        println!(
+            "{:<12} events={:<6} rounds={:<5} peak_depth={:<4} events/s={:>12.0} sched={:>9.0} ns/ev alloc~{}",
+            r.mode,
+            r.events,
+            r.rounds,
+            r.peak_pool_depth,
+            r.events_per_s,
+            r.sched_ns_per_event,
+            r.alloc_proxy,
+        );
+    }
+    let identical = schedule_identical(&inc, &naive);
+    let speedup = if naive.events_per_s > 0.0 {
+        inc.events_per_s / naive.events_per_s
+    } else {
+        0.0
+    };
+    println!(
+        "speedup(events/s)={speedup:.2}x schedule_identical={identical} modeled p50/p99={:.2}/{:.2}s thr={:.1} tok/s",
+        inc.p50_latency_s, inc.p99_latency_s, inc.throughput_tps,
+    );
+
+    let mut workload = BTreeMap::new();
+    workload.insert("n_requests".to_string(), Json::Num(spec.n_requests as f64));
+    workload.insert("gen_len".to_string(), Json::Num(spec.gen_len as f64));
+    workload.insert("gamma".to_string(), Json::Num(spec.gamma as f64));
+    workload.insert("n_nodes".to_string(), Json::Num(spec.n_nodes as f64));
+    workload.insert("n_replicas".to_string(), Json::Num(spec.n_replicas as f64));
+    workload.insert("max_batch".to_string(), Json::Num(spec.max_batch as f64));
+    workload.insert("smoke".to_string(), Json::Bool(smoke));
+    let mut m = BTreeMap::new();
+    m.insert("schema".to_string(), Json::Num(1.0));
+    m.insert("workload".to_string(), Json::Obj(workload));
+    m.insert("incremental".to_string(), inc.to_json());
+    m.insert("naive".to_string(), naive.to_json());
+    m.insert("speedup_events_per_s".to_string(), Json::Num(speedup));
+    m.insert("schedule_identical".to_string(), Json::Bool(identical));
+    std::fs::write(out, Json::Obj(m).to_string())?;
+    println!("wrote {out}");
+    anyhow::ensure!(
+        identical,
+        "incremental schedule diverged from the naive reference"
+    );
+    Ok(())
+}

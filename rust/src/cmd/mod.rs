@@ -1,6 +1,7 @@
 //! CLI subcommand implementations — one per paper experiment.
 
 pub mod ablation;
+pub mod bench;
 pub mod cost;
 pub mod motivation;
 pub mod offline;

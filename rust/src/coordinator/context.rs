@@ -13,6 +13,8 @@ use crate::cluster::NetworkModel;
 use crate::config::CosineConfig;
 use crate::runtime::{Engine, Model};
 
+use super::scheduler::SchedCostModel;
+
 pub struct ServingContext {
     pub engine: Arc<Engine>,
     pub target: Model,
@@ -81,6 +83,24 @@ impl ServingContext {
         self.engine.constants()
     }
 
+    /// The artifact-free slice of this context the Eq. 8 scheduler prices
+    /// with — built once per run so the hot scheduling path never touches
+    /// the PJRT engine or the manifest.
+    pub fn sched_cost(&self) -> SchedCostModel {
+        let c = self.constants();
+        SchedCostModel {
+            clock: self.clock.clone(),
+            drafter_gpu: self.drafter_gpu.clone(),
+            verifier_gpu: self.verifier_gpu.clone(),
+            network: self.network.clone(),
+            modeled_target: self.modeled_target.clone(),
+            modeled_drafter: self.modeled_drafter.clone(),
+            n_drafter_nodes: self.cfg.cluster.n_drafter_nodes.max(1),
+            g1: c.g1,
+            max_bucket: *c.batch_buckets.iter().max().unwrap_or(&16),
+        }
+    }
+
     // ---- modeled (virtual) latencies ---------------------------------
 
     /// Drafter-side: sequential decode of `g` tokens at batch `b` on one
@@ -119,7 +139,7 @@ impl ServingContext {
             b,
             g,
             ctx,
-            self.verifier_gpu.llm_tokens_per_s.unwrap_or(7.13),
+            self.verifier_gpu.llm_tps(),
         )
     }
 
@@ -132,7 +152,7 @@ impl ServingContext {
             b,
             g,
             ctx,
-            self.verifier_gpu.llm_tokens_per_s.unwrap_or(7.13),
+            self.verifier_gpu.llm_tps(),
         )
     }
 
@@ -145,7 +165,7 @@ impl ServingContext {
             b,
             0,
             ctx,
-            self.verifier_gpu.llm_tokens_per_s.unwrap_or(7.13),
+            self.verifier_gpu.llm_tps(),
         )
     }
 }

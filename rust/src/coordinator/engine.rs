@@ -11,16 +11,25 @@
 //! batch B overlaps verification of batch A *per replica*, and requests
 //! with disjoint routed drafter sets overlap their draft phases.
 //!
-//! Placement is per request, not per gang: each request's routed drafter
-//! set is resolved (load-aware, backlog-penalized) when it becomes a
-//! scheduling candidate, carried through `Assignment::placement`, and
-//! reserved node-by-node with [`ResourcePool::draft_on`] — a node
-//! drafting for q requests serves them as q sequential lock-step phases,
-//! while disjoint sets launch without waiting for a full gang.
-//! Verification is sharded: one round's batch splits across every replica
-//! free at its ready time ([`ResourcePool::verify_sharded`]) with a
-//! modeled all-gather per extra shard, so replicas no longer take whole
-//! rounds.  The vLLM baseline shares the same sharded verify path.
+//! Scheduling is *incremental*: the engine keeps a persistent, sorted
+//! [`CandidatePool`] that event payloads update in place — an `Arrival`
+//! inserts its request, a `VerifyDone` re-inserts its round's requests
+//! (re-routed against fresh backlogs), and a dispatch removes its batch —
+//! so no event re-scans the request pool, re-sorts the frontier, or
+//! re-clones routed sets.  Placement is per request and *interned*: the
+//! router's drafter set is resolved once per round (load-aware,
+//! backlog-penalized), interned as a [`PlacementId`] into a
+//! [`PlacementArena`], carried as a `Copy` handle through candidates and
+//! assignments, and reserved node-by-node with [`ResourcePool::draft_on`]
+//! — a node drafting for q requests serves them as q sequential lock-step
+//! phases, while disjoint sets launch without waiting for a full gang.
+//! Verification is sharded *queue-aware*
+//! ([`ResourcePool::verify_sharded_queued`]): a round splits across free
+//! replicas only when that beats pipelining the waiting backlog of whole
+//! rounds, with a modeled all-gather per extra shard.  The vLLM baseline
+//! shares the same verify path.  The engine's own decision cost is
+//! tracked ([`EngineStats`]: events, scheduler invocations and
+//! wall-nanoseconds) and reported alongside the modeled metrics.
 //!
 //! Determinism: a round's real token-level compute (PJRT drafting,
 //! verification, commit, routing feedback) runs at *schedule* time, and a
@@ -33,22 +42,23 @@
 //! Equivalence: with one drafter node and one verifier replica the
 //! reservations reduce exactly to the legacy two-resource
 //! `VirtualPipeline` (property-tested in `tests/proptest_invariants.rs`),
-//! so single-resource results are bit-identical to the old round loop.
+//! and the incremental solver is property-tested assignment-identical to
+//! the from-scratch Eq. 8 reference it replaced.
 
 use anyhow::Result;
 use std::cmp::Ordering;
-use std::collections::BinaryHeap;
+use std::collections::{BinaryHeap, HashMap};
 use std::time::Instant;
 
 use crate::workload::Trace;
 
 use super::context::ServingContext;
 use super::fusion::{self, DraftMode};
-use super::metrics::RunReport;
+use super::metrics::{EngineStats, RunReport};
 use super::pipeline::{ResourcePool, ShardedVerify};
 use super::request::{Phase, Request, RequestPool};
 use super::router::{RoundFeedback, Router};
-use super::scheduler::{trim_gammas, Candidate, Scheduler};
+use super::scheduler::{Candidate, CandidatePool, PlacementArena, PlacementId, Scheduler};
 use super::serve::{embed_sim, StrategyOpts};
 use super::speculation::AdaptiveSpeculation;
 use super::verifier;
@@ -64,10 +74,11 @@ pub enum EventKind {
     /// the rest of the cluster
     DraftDone(u64, usize),
     /// a round's verification finished on its replica shard(s)
-    /// (payload: round id)
+    /// (payload: round id) — re-inserts the round's requests into the
+    /// candidate pool
     VerifyDone(u64),
     /// re-schedule prod with no resource transition.  The engine arms it
-    /// as a safety net: if ready requests are waiting but the queue has
+    /// as a safety net: if ready candidates are waiting but the queue has
     /// drained (every wake-up coalesced into the current instant), a
     /// SchedTick at the earliest busy resource's free time keeps the loop
     /// live instead of exiting with unfinished requests.  External
@@ -154,13 +165,33 @@ struct PerReq {
     /// pool index
     ri: usize,
     round: fusion::DraftRound,
-    /// the routed drafter set the round ran (and reserves) on
-    set: Vec<usize>,
+    /// interned routed drafter set the round ran (and reserves) on
+    set: PlacementId,
     gamma: usize,
     /// context length when the round was scheduled
     ctx_len: usize,
     /// whether this round paid the request's target prefill
     prefilled: bool,
+}
+
+/// Fold a popped event into the per-instant ready list: arrivals carry
+/// their pool index, verify-completions re-surface their round's batch.
+/// `pub(crate)` so `bench::sched` drives the exact same event-to-ready
+/// semantics as the engine.
+pub(crate) fn collect_ready(
+    kind: EventKind,
+    inflight: &mut HashMap<u64, Vec<usize>>,
+    newly_ready: &mut Vec<usize>,
+) {
+    match kind {
+        EventKind::Arrival(i) => newly_ready.push(i),
+        EventKind::VerifyDone(rid) => {
+            if let Some(batch) = inflight.remove(&rid) {
+                newly_ready.extend(batch);
+            }
+        }
+        EventKind::DraftDone(..) | EventKind::SchedTick => {}
+    }
 }
 
 /// Run any speculative strategy over a trace on the event engine.
@@ -175,6 +206,7 @@ pub fn run_speculative(
         .exec_wall_ns
         .load(std::sync::atomic::Ordering::Relaxed);
     let c = ctx.constants().clone();
+    let cost = ctx.sched_cost();
     let n_drafters = ctx.n_drafters();
     let n_nodes = ctx.cfg.cluster.n_drafter_nodes.max(1);
     let n_replicas = ctx.cfg.cluster.n_verifier_replicas.max(1);
@@ -190,7 +222,7 @@ pub fn run_speculative(
     );
     let mut router = Router::new(ctx.cfg.router.clone(), ctx.cfg.router.seed);
     let sim = embed_sim(ctx)?;
-    let scheduler = Scheduler::new(ctx.cfg.scheduler.clone(), opts.lp_batching);
+    let mut scheduler = Scheduler::new(ctx.cfg.scheduler.clone(), opts.lp_batching);
     let mut spec = AdaptiveSpeculation::new(ctx.cfg.speculation.clone(), opts.k, n_drafters);
     // coupled strategies never occupy the speculation cluster
     let mut res = ResourcePool::new(if opts.decoupled { n_nodes } else { 0 }, n_replicas);
@@ -198,23 +230,77 @@ pub fn run_speculative(
     let mut queue = EventQueue::new();
     let mut round_id: u64 = 0;
 
+    // persistent scheduling state, updated per event instead of rebuilt
+    let mut arena = PlacementArena::new();
+    let mut cpool = CandidatePool::new();
+    let mut inflight: HashMap<u64, Vec<usize>> = HashMap::new();
+    let mut unfinished = pool.unfinished();
+    let mut stats = EngineStats::default();
+    // reusable per-event scratch
+    let mut newly_ready: Vec<usize> = Vec::new();
+    let mut backlog: Vec<f64> = Vec::new();
+    let mut route_scratch: Vec<usize> = Vec::new();
+
     for (i, r) in pool.requests.iter().enumerate() {
         queue.push(r.arrival_s, EventKind::Arrival(i));
     }
 
-    while let Some((now, _kind)) = queue.pop() {
+    while let Some((now, kind)) = queue.pop() {
+        stats.events_processed += 1;
+        newly_ready.clear();
+        collect_ready(kind, &mut inflight, &mut newly_ready);
         // Coalesce every event at this timestamp before scheduling, so a
         // batch formed at time t sees all requests ready by t (events
         // carry no deferred state: reservations happen at schedule time).
         while queue.next_at().is_some_and(|t| t <= now) {
-            queue.pop();
+            if let Some((_, k2)) = queue.pop() {
+                stats.events_processed += 1;
+                stats.events_coalesced += 1;
+                collect_ready(k2, &mut inflight, &mut newly_ready);
+            }
+        }
+
+        // Resolve placement for the requests that became ready at this
+        // instant and insert them into the persistent candidate pool.
+        // Routing is load-aware over the current per-node backlogs and
+        // happens exactly once per round, in pool-index order (the
+        // exploration RNG advances deterministically).
+        if !newly_ready.is_empty() {
+            newly_ready.sort_unstable();
+            res.drafter_backlog_into(now, &mut backlog);
+            let k_now = if opts.adaptive { spec.k_nodes } else { opts.k };
+            for &ri in &newly_ready {
+                let r = &mut pool.requests[ri];
+                if r.is_finished() {
+                    continue;
+                }
+                let set_id = if opts.routing {
+                    let set = router.route(r, n_drafters, k_now, &backlog);
+                    arena.intern(&set)
+                } else if opts.k == 1 {
+                    arena.intern(&[(r.id as usize) % n_drafters])
+                } else {
+                    route_scratch.clear();
+                    route_scratch.extend(0..k_now.min(n_drafters));
+                    arena.intern(&route_scratch)
+                };
+                r.routed_set = Some(set_id);
+                cpool.insert(Candidate {
+                    idx: ri,
+                    ctx_len: r.prompt.len() + r.generated.len(),
+                    gamma: r.gamma.min(r.remaining().max(1)).min(c.gamma_max),
+                    ready_at: r.ready_at,
+                    arrival_s: r.arrival_s,
+                    placement: if opts.decoupled { set_id } else { PlacementId::EMPTY },
+                });
+            }
         }
 
         // Invoke the scheduler while resources and candidates are free at
         // `now` — several rounds can launch at one instant on disjoint
         // node sets / replicas.
         loop {
-            if pool.unfinished() == 0 {
+            if unfinished == 0 || cpool.is_empty() {
                 break;
             }
             let k_now = if opts.adaptive { spec.k_nodes } else { opts.k };
@@ -222,60 +308,23 @@ pub fn run_speculative(
                 break;
             }
 
-            // Resolve (and cache) per-request drafter placement for every
-            // ready request; routing is load-aware over the current
-            // per-node backlogs.  The cache holds until the request's
-            // round commits, so the exploration RNG advances once per
-            // round exactly as it did under the gang model.
-            let backlog = res.drafter_backlog(now);
-            for r in pool.requests.iter_mut() {
-                if r.is_finished() || r.ready_at > now + 1e-9 || r.routed_set.is_some() {
-                    continue;
-                }
-                let set = if opts.routing {
-                    router.route(r, n_drafters, k_now, &backlog)
-                } else if opts.k == 1 {
-                    vec![(r.id as usize) % n_drafters]
-                } else {
-                    (0..k_now.min(n_drafters)).collect()
-                };
-                r.routed_set = Some(set);
-            }
-
-            // Candidates: ready requests whose routed node set is free at
-            // `now`.  Requests with disjoint sets launch without waiting
-            // for a full gang; a request on busy nodes wakes at those
-            // nodes' DraftDone events.
-            let cands: Vec<Candidate> = pool
-                .requests
-                .iter()
-                .enumerate()
-                .filter(|(_, r)| !r.is_finished() && r.ready_at <= now + 1e-9)
-                .filter(|(_, r)| {
-                    !opts.decoupled
-                        || res.nodes_free_at(r.routed_set.as_deref().unwrap_or(&[]), now)
-                })
-                .map(|(i, r)| Candidate {
-                    idx: i,
-                    ctx_len: r.prompt.len() + r.generated.len(),
-                    gamma: r.gamma.min(r.remaining().max(1)).min(c.gamma_max),
-                    ready_at: r.ready_at,
-                    arrival_s: r.arrival_s,
-                    drafter_set: if opts.decoupled {
-                        r.routed_set.clone().unwrap_or_default()
-                    } else {
-                        Vec::new()
-                    },
-                })
-                .collect();
-            if cands.is_empty() {
+            // One incremental sweep over the persistent pool; eligibility
+            // (is the candidate's routed node set free *right now*?) is
+            // the only per-event predicate.  A request on busy nodes
+            // wakes at those nodes' DraftDone events.
+            let t_sched = Instant::now();
+            let assign = scheduler.assign_incremental(&cost, &arena, &cpool, k_now, |cand| {
+                !opts.decoupled || res.nodes_free_at(arena.get(cand.placement), now)
+            });
+            stats.sched_invocations += 1;
+            stats.sched_wall_ns += t_sched.elapsed().as_nanos() as u64;
+            let Some(assign) = assign else {
                 break;
-            }
-            let assign = scheduler.assign(ctx, &cands, k_now);
+            };
             if debug_sched {
                 eprintln!(
                     "sched@{now:.3}: avail={} chosen={} k={} t_d={:.3} t_v={:.3} obj={:.4}",
-                    cands.len(),
+                    cpool.len(),
                     assign.batch.len(),
                     k_now,
                     assign.t_draft,
@@ -285,8 +334,6 @@ pub fn run_speculative(
             }
 
             // -------- per-request cooperative drafting (real compute) ----
-            let mut round_gammas = assign.gammas.clone();
-            trim_gammas(&mut round_gammas, ctx.cfg.scheduler.gamma_total_max);
             let mode = if opts.fusion {
                 DraftMode::Fused
             } else {
@@ -297,7 +344,8 @@ pub fn run_speculative(
             let mut ctx_crit = 1usize;
 
             for (pos, &ri) in assign.batch.iter().enumerate() {
-                let gamma = round_gammas[pos].max(1);
+                // assignment gammas are already Γ_max-trimmed
+                let gamma = assign.gammas[pos].max(1);
                 let mut prefilled = false;
                 // target prefill (also commits the first token)
                 if pool.requests[ri].target_state.is_none() {
@@ -313,18 +361,19 @@ pub fn run_speculative(
                 ctx_crit = ctx_crit.max(ctx_len);
                 // the assignment's placement; coupled candidates carry no
                 // placement, so fall back to the cached routed set
-                let set = if !assign.placement[pos].is_empty() {
-                    assign.placement[pos].clone()
+                let pid = if !arena.get(assign.placement[pos]).is_empty() {
+                    assign.placement[pos]
+                } else if let Some(p) = req.routed_set {
+                    p
                 } else {
-                    req.routed_set
-                        .clone()
-                        .unwrap_or_else(|| vec![(req.id as usize) % n_drafters])
+                    arena.intern(&[(req.id as usize) % n_drafters])
                 };
+                let set = arena.get(pid);
                 let priors: Vec<f64> = set.iter().map(|&d| req.routing[d]).collect();
                 let round = fusion::run_draft_round(
                     ctx,
                     req,
-                    &set,
+                    set,
                     gamma,
                     mode,
                     if opts.routing { Some(&priors) } else { None },
@@ -332,7 +381,7 @@ pub fn run_speculative(
                 per_req.push(PerReq {
                     ri,
                     round,
-                    set,
+                    set: pid,
                     gamma,
                     ctx_len,
                     prefilled,
@@ -402,8 +451,8 @@ pub fn run_speculative(
 
                 // drafter KV resync
                 let fed: Vec<Vec<i32>> = match mode {
-                    DraftMode::Fused => pr
-                        .set
+                    DraftMode::Fused => arena
+                        .get(pr.set)
                         .iter()
                         .map(|_| {
                             let mut f = pr.round.main.tokens.clone();
@@ -424,7 +473,7 @@ pub fn run_speculative(
                 };
                 fusion::resync_after_commit(
                     req,
-                    &pr.set,
+                    arena.get(pr.set),
                     &fed,
                     &outcome.committed_drafts,
                     outcome.before_len,
@@ -455,7 +504,8 @@ pub fn run_speculative(
                 let mut draft_end = batch_ready;
                 for pr in &per_req {
                     let steps = pr.gamma + pr.round.catchup_steps;
-                    let coop = pr.set.len().max(1);
+                    let set = arena.get(pr.set);
+                    let coop = set.len().max(1);
                     let mut t_i = ctx.t_draft_s(1, steps.max(1), pr.ctx_len);
                     if opts.fusion {
                         t_i += pr.gamma as f64 * ctx.network.fusion_round_s(coop, 1);
@@ -463,8 +513,8 @@ pub fn run_speculative(
                     if pr.prefilled {
                         t_i += ctx.t_draft_prefill_s(1, c.prompt_len);
                     }
-                    let (s_i, e_i) = res.draft_on(&pr.set, pool.requests[pr.ri].ready_at, t_i);
-                    for &node in &pr.set {
+                    let (s_i, e_i) = res.draft_on(set, pool.requests[pr.ri].ready_at, t_i);
+                    for &node in set {
                         queue.push(e_i, EventKind::DraftDone(round_id, node));
                     }
                     draft_start = draft_start.min(s_i);
@@ -494,7 +544,14 @@ pub fn run_speculative(
                     })
                     .collect();
                 let sv = if opts.sharded_verify {
-                    res.verify_sharded(b, draft_end, &durs)
+                    // queue-aware: tell the shard policy how many more
+                    // verify rounds the remaining ready candidates imply,
+                    // so it can leave replicas free to pipeline them
+                    let others = cpool.len().saturating_sub(assign.batch.len());
+                    let pending = others
+                        .div_ceil(assign.batch.len().max(1))
+                        .min(2 * n_replicas);
+                    res.verify_sharded_queued(b, draft_end, &durs, pending)
                 } else {
                     let (_, start, end) = res.verify(draft_end, durs[0]);
                     ShardedVerify {
@@ -537,6 +594,7 @@ pub fn run_speculative(
                     b, t_draft, t_verify, batch_ready, new_prefills, shards
                 );
             }
+            let rid = round_id;
             round_id += 1;
 
             if debug_route {
@@ -546,7 +604,7 @@ pub fn run_speculative(
                         "route: req={} dom={} set={:?} l_acc={:.2} M={:?} acc_ratio={:.2}",
                         r.id,
                         r.domain,
-                        pr.set,
+                        arena.get(pr.set),
                         r.l_acc,
                         r.routing
                             .iter()
@@ -579,31 +637,31 @@ pub fn run_speculative(
                 if req.is_finished() && req.finish_s.is_none() {
                     req.finish_s = Some(verify_end);
                     req.phase = Phase::Finished;
+                    unfinished -= 1;
                 }
             }
+            // the batch leaves the candidate pool until its VerifyDone
+            // re-inserts the survivors
+            cpool.remove_batch(&assign.batch);
+            inflight.insert(rid, assign.batch);
         }
 
         // SchedTick safety net: every busy resource already has a
         // DraftDone/VerifyDone wake-up queued by construction, but if
-        // ready work is waiting and the queue has drained anyway, prod
-        // the scheduler when the earliest busy resource frees instead of
-        // letting the run exit with unfinished requests.
-        if queue.is_empty() && pool.unfinished() > 0 {
-            let waiting = pool
-                .requests
+        // ready candidates are waiting and the queue has drained anyway,
+        // prod the scheduler when the earliest busy resource frees instead
+        // of letting the run exit with unfinished requests.
+        if queue.is_empty() && unfinished > 0 && !cpool.is_empty() {
+            let free_t = res
+                .drafters
                 .iter()
-                .any(|r| !r.is_finished() && r.ready_at <= now + 1e-9);
-            if waiting {
-                let free_t = res
-                    .drafters
-                    .iter()
-                    .chain(res.verifiers.iter())
-                    .map(|r| r.free_at)
-                    .filter(|&t| t > now + 1e-9)
-                    .fold(f64::INFINITY, f64::min);
-                if free_t.is_finite() {
-                    queue.push(free_t, EventKind::SchedTick);
-                }
+                .chain(res.verifiers.iter())
+                .map(|r| r.free_at)
+                .filter(|&t| t > now + 1e-9)
+                .fold(f64::INFINITY, f64::min);
+            if free_t.is_finite() {
+                queue.push(free_t, EventKind::SchedTick);
+                stats.sched_ticks += 1;
             }
         }
     }
@@ -633,14 +691,16 @@ pub fn run_speculative(
         opts.decoupled,
         wall0.elapsed().as_secs_f64(),
         (pjrt1 - pjrt0) as f64 / 1e9,
+        stats,
     ))
 }
 
 /// vLLM-style continuous batching (no speculation) on the same event
-/// engine: each round is one batched target decode step, sharded across
-/// the verifier replicas free at its ready time exactly like the
-/// speculative strategies it is compared against (the roofline decides
-/// whether splitting a stream-bound decode actually pays).
+/// engine: each round is one batched target decode step, dispatched
+/// through the same queue-aware sharded verify path as the speculative
+/// strategies it is compared against (the roofline decides whether
+/// splitting a stream-bound decode actually pays, and a waiting backlog
+/// keeps replicas free to pipeline whole rounds).
 pub fn run_vllm(ctx: &ServingContext, trace: &Trace) -> Result<RunReport> {
     let wall0 = Instant::now();
     let pjrt0 = ctx
@@ -666,39 +726,58 @@ pub fn run_vllm(ctx: &ServingContext, trace: &Trace) -> Result<RunReport> {
     let mut queue = EventQueue::new();
     let mut round_id: u64 = 0;
 
+    // persistent FIFO candidate pool + in-flight rounds (same event-driven
+    // bookkeeping as the speculative engine, minus routing)
+    let mut cpool = CandidatePool::new();
+    let mut inflight: HashMap<u64, Vec<usize>> = HashMap::new();
+    let mut unfinished = pool.unfinished();
+    let mut stats = EngineStats::default();
+    let mut newly_ready: Vec<usize> = Vec::new();
+
     for (i, r) in pool.requests.iter().enumerate() {
         queue.push(r.arrival_s, EventKind::Arrival(i));
     }
 
-    while let Some((now, _kind)) = queue.pop() {
+    while let Some((now, kind)) = queue.pop() {
+        stats.events_processed += 1;
+        newly_ready.clear();
+        collect_ready(kind, &mut inflight, &mut newly_ready);
         while queue.next_at().is_some_and(|t| t <= now) {
-            queue.pop();
+            if let Some((_, k2)) = queue.pop() {
+                stats.events_processed += 1;
+                stats.events_coalesced += 1;
+                collect_ready(k2, &mut inflight, &mut newly_ready);
+            }
+        }
+        newly_ready.sort_unstable();
+        for &ri in &newly_ready {
+            let r = &pool.requests[ri];
+            if r.is_finished() {
+                continue;
+            }
+            cpool.insert(Candidate {
+                idx: ri,
+                ctx_len: r.prompt.len() + r.generated.len(),
+                gamma: 1,
+                ready_at: r.ready_at,
+                arrival_s: r.arrival_s,
+                placement: PlacementId::EMPTY,
+            });
         }
 
         loop {
-            if pool.unfinished() == 0 {
+            if unfinished == 0 || cpool.is_empty() {
                 break;
             }
             if !res.verifier_free_at(now) {
                 break;
             }
-            // continuous batching: arrived, unfinished requests up to max_b
-            let mut idxs: Vec<usize> = pool
-                .requests
-                .iter()
-                .enumerate()
-                .filter(|(_, r)| !r.is_finished() && r.ready_at <= now + 1e-9)
-                .map(|(i, _)| i)
-                .collect();
-            if idxs.is_empty() {
-                break;
-            }
-            idxs.sort_by(|&a, &b| {
-                pool.requests[a]
-                    .arrival_s
-                    .total_cmp(&pool.requests[b].arrival_s)
-            });
-            idxs.truncate(max_b);
+            // continuous batching: oldest arrivals first, up to max_b —
+            // read straight off the persistent FIFO ordering
+            let t_sched = Instant::now();
+            let idxs: Vec<usize> = cpool.iter_arrival().take(max_b).map(|x| x.idx).collect();
+            stats.sched_invocations += 1;
+            stats.sched_wall_ns += t_sched.elapsed().as_nanos() as u64;
 
             let mut new_prefills = 0usize;
             let mut ctx_crit = 1usize;
@@ -715,7 +794,8 @@ pub fn run_vllm(ctx: &ServingContext, trace: &Trace) -> Result<RunReport> {
             }
 
             // modeled: one batched decode step (+ prefills) at every shard
-            // count; verify_sharded picks the fastest placement
+            // count; the queue-aware policy picks the fastest placement
+            // given the rounds still waiting behind this one
             let b = idxs.len();
             let durs: Vec<f64> = (1..=n_replicas)
                 .map(|s| {
@@ -731,8 +811,11 @@ pub fn run_vllm(ctx: &ServingContext, trace: &Trace) -> Result<RunReport> {
                 .iter()
                 .map(|&i| pool.requests[i].ready_at)
                 .fold(0.0f64, f64::max);
-            let sv = res.verify_sharded(b, ready, &durs);
+            let others = cpool.len().saturating_sub(b);
+            let pending = others.div_ceil(b.max(1)).min(2 * n_replicas);
+            let sv = res.verify_sharded_queued(b, ready, &durs, pending);
             queue.push(sv.end, EventKind::VerifyDone(round_id));
+            let rid = round_id;
             round_id += 1;
             for &i in &idxs {
                 let r = &mut pool.requests[i];
@@ -743,8 +826,11 @@ pub fn run_vllm(ctx: &ServingContext, trace: &Trace) -> Result<RunReport> {
                 if r.is_finished() && r.finish_s.is_none() {
                     r.finish_s = Some(sv.end);
                     r.phase = Phase::Finished;
+                    unfinished -= 1;
                 }
             }
+            cpool.remove_batch(&idxs);
+            inflight.insert(rid, idxs);
         }
     }
     anyhow::ensure!(
@@ -769,5 +855,6 @@ pub fn run_vllm(ctx: &ServingContext, trace: &Trace) -> Result<RunReport> {
         false,
         wall0.elapsed().as_secs_f64(),
         (pjrt1 - pjrt0) as f64 / 1e9,
+        stats,
     ))
 }

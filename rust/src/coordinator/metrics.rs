@@ -10,6 +10,25 @@ use crate::cluster::node::GpuProfile;
 use super::pipeline::ResourcePool;
 use super::request::Request;
 
+/// Engine self-cost counters: what the serving loop itself spent, as
+/// opposed to the modeled hardware time.  The scheduler runs at every
+/// event, so its per-event wall cost is the one coordinator overhead that
+/// scales with traffic — `cosine online` prints it next to the modeled
+/// metrics and `cosine bench` gates on it.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct EngineStats {
+    /// events popped from the queue (including coalesced ones)
+    pub events_processed: u64,
+    /// events that coalesced into an already-popped instant
+    pub events_coalesced: u64,
+    /// SchedTick safety-net wake-ups armed
+    pub sched_ticks: u64,
+    /// scheduler `assign` invocations
+    pub sched_invocations: u64,
+    /// real wall-clock nanoseconds spent inside the scheduler
+    pub sched_wall_ns: u64,
+}
+
 #[derive(Debug, Clone, Default)]
 pub struct RunReport {
     pub strategy: String,
@@ -73,6 +92,9 @@ pub struct RunReport {
     pub wall_s: f64,
     /// real wall-clock spent inside PJRT execute
     pub pjrt_wall_s: f64,
+    /// engine self-cost counters (events, scheduler invocations and
+    /// wall-nanoseconds, coalesced events, SchedTicks armed)
+    pub engine: EngineStats,
 }
 
 impl RunReport {
@@ -90,6 +112,7 @@ impl RunReport {
         uses_cluster: bool,
         wall_s: f64,
         pjrt_wall_s: f64,
+        engine: EngineStats,
     ) -> Self {
         let tokens: u64 = requests.iter().map(|r| r.generated.len() as u64).sum();
         let latencies: Vec<f64> = requests
@@ -171,6 +194,18 @@ impl RunReport {
             latencies_s: latencies,
             wall_s,
             pjrt_wall_s,
+            engine,
+        }
+    }
+
+    /// Real scheduler nanoseconds per processed event — the decision cost
+    /// SpecServe identifies as the high-rate bottleneck; the incremental
+    /// solver exists to keep this flat as the pool deepens.
+    pub fn sched_ns_per_event(&self) -> f64 {
+        if self.engine.events_processed == 0 {
+            0.0
+        } else {
+            self.engine.sched_wall_ns as f64 / self.engine.events_processed as f64
         }
     }
 
@@ -215,7 +250,7 @@ impl RunReport {
 
     pub fn summary_row(&self) -> String {
         format!(
-            "{:<10} pair={} n={:<3} tok={:<6} lat={:>8.1} ms/tok thr={:>8.1} tok/s acc={:>4.2} cost/tok=${:.6} idle(srv)={:.0}% qwait={:.2}s shards={:.2} wall={:.1}s",
+            "{:<10} pair={} n={:<3} tok={:<6} lat={:>8.1} ms/tok thr={:>8.1} tok/s acc={:>4.2} cost/tok=${:.6} idle(srv)={:.0}% qwait={:.2}s shards={:.2} sched={:.0}ns/ev wall={:.1}s",
             self.strategy,
             self.pair,
             self.n_requests,
@@ -227,6 +262,7 @@ impl RunReport {
             self.server_idle_frac * 100.0,
             self.verify_queue_delay_s,
             self.mean_verify_shards(),
+            self.sched_ns_per_event(),
             self.wall_s,
         )
     }

@@ -123,10 +123,13 @@ pub struct ShardedVerify {
 /// replicas.  Draft phases reserve exactly the request's routed drafter
 /// set ([`Self::draft_on`]; the legacy earliest-free gang model survives
 /// as [`Self::draft`] for the equivalence tests), and verify phases either
-/// occupy the earliest-free replica ([`Self::verify`]) or shard one round
-/// across all free replicas ([`Self::verify_sharded`]) — which is what
-/// lets the event engine run continuous (iteration-level) batching across
-/// replicas without replicas taking whole rounds.
+/// occupy the earliest-free replica ([`Self::verify`]), shard one round
+/// across all free replicas ([`Self::verify_sharded`]), or shard
+/// *queue-aware* ([`Self::verify_sharded_queued`]: leave replicas to
+/// pipeline a waiting backlog of whole rounds whenever that finishes the
+/// backlog earlier) — which is what lets the event engine run continuous
+/// (iteration-level) batching across replicas without replicas taking
+/// whole rounds.
 #[derive(Debug, Clone)]
 pub struct ResourcePool {
     pub drafters: Vec<Resource>,
@@ -149,6 +152,9 @@ pub struct ResourcePool {
     /// counts a sharded round once, so `+ verify_shard_saved_s` recovers
     /// what the same rounds would have cost unsharded
     pub verify_round_time_s: f64,
+    /// scratch replica timeline for the queue-aware shard lookahead
+    /// (reused across rounds; never observable from outside)
+    sim_scratch: Vec<f64>,
 }
 
 impl ResourcePool {
@@ -167,6 +173,7 @@ impl ResourcePool {
             verify_shards_total: 0,
             verify_shard_saved_s: 0.0,
             verify_round_time_s: 0.0,
+            sim_scratch: Vec::new(),
         }
     }
 
@@ -213,6 +220,13 @@ impl ResourcePool {
     /// still reserved past `t` (the router's load signal).
     pub fn drafter_backlog(&self, t: f64) -> Vec<f64> {
         self.drafters.iter().map(|r| (r.free_at - t).max(0.0)).collect()
+    }
+
+    /// Allocation-free [`Self::drafter_backlog`]: fills `out` in place so
+    /// the engine's per-event routing reuses one scratch buffer.
+    pub fn drafter_backlog_into(&self, t: f64, out: &mut Vec<f64>) {
+        out.clear();
+        out.extend(self.drafters.iter().map(|r| (r.free_at - t).max(0.0)));
     }
 
     /// Spread of drafter backlogs (max − min `free_at`): the load-balance
@@ -313,45 +327,124 @@ impl ResourcePool {
     /// to [`Self::verify`].
     pub fn verify_sharded(&mut self, b: usize, ready_at: f64, durs: &[f64]) -> ShardedVerify {
         assert!(!durs.is_empty(), "durs must model at least the unsharded duration");
-        // effective start: when the earliest replica frees, or ready_at
-        let t0 = ready_at.max(
+        let t0 = self.verify_t0(ready_at);
+        let n_free = self.free_replicas_at(t0);
+        // shard count minimizing the modeled round duration (latency-greedy)
+        let (s_best, d_best) = shard_choice(n_free, b, durs, self.allgather_step_s);
+        self.dispatch_shards(ready_at, t0, s_best, d_best, durs)
+    }
+
+    /// Queue-aware sharding: like [`Self::verify_sharded`], but told how
+    /// many *other* verify rounds are ready behind this one
+    /// (`pending_rounds`).  Grabbing every free replica is latency-greedy
+    /// for one round, yet when a backlog is waiting it can beat the
+    /// backlog's total makespan to pipeline whole rounds across replicas
+    /// instead.  The policy simulates each candidate shard count (the
+    /// greedy choice, an even split leaving replicas for the backlog, and
+    /// whole-round pipelining) followed by a greedy dispatch of the
+    /// pending rounds on a scratch copy of the replica timeline, and keeps
+    /// the one with the earliest simulated completion — preferring the
+    /// greedy choice on ties, so with `pending_rounds == 0` (or one
+    /// replica) this reduces exactly to [`Self::verify_sharded`].  For a
+    /// backlog of identical rounds the simulation is exact, which is why
+    /// the queue-aware dispatch can never finish a backlog later than the
+    /// latency-greedy one (property-tested).
+    pub fn verify_sharded_queued(
+        &mut self,
+        b: usize,
+        ready_at: f64,
+        durs: &[f64],
+        pending_rounds: usize,
+    ) -> ShardedVerify {
+        assert!(!durs.is_empty(), "durs must model at least the unsharded duration");
+        let t0 = self.verify_t0(ready_at);
+        let n_free = self.free_replicas_at(t0);
+        let ag = self.allgather_step_s;
+        let (s_greedy, d_greedy) = shard_choice(n_free, b, durs, ag);
+        if pending_rounds == 0 || s_greedy <= 1 {
+            return self.dispatch_shards(ready_at, t0, s_greedy, d_greedy, durs);
+        }
+        let s_max = n_free.min(b.max(1)).min(durs.len());
+        let s_even = (n_free / (pending_rounds + 1)).clamp(1, s_max);
+        let cands = [s_greedy, s_even, 1];
+        let mut best_s = s_greedy;
+        let mut best_mk = f64::INFINITY;
+        for (i, &s) in cands.iter().enumerate() {
+            if cands[..i].contains(&s) {
+                continue;
+            }
+            self.sim_scratch.clear();
+            self.sim_scratch.extend(self.verifiers.iter().map(|r| r.free_at));
+            sim_dispatch(&mut self.sim_scratch, b, ready_at, durs, ag, Some(s));
+            for _ in 0..pending_rounds {
+                sim_dispatch(&mut self.sim_scratch, b, ready_at, durs, ag, None);
+            }
+            let mk = self
+                .sim_scratch
+                .iter()
+                .copied()
+                .fold(f64::NEG_INFINITY, f64::max);
+            if mk < best_mk - 1e-12 {
+                best_mk = mk;
+                best_s = s;
+            }
+        }
+        let d_best = if best_s <= 1 {
+            durs[0]
+        } else {
+            durs[best_s - 1] + ag * (best_s - 1) as f64
+        };
+        self.dispatch_shards(ready_at, t0, best_s, d_best, durs)
+    }
+
+    /// Effective start of a verify round: its ready time, or the earliest
+    /// replica-free time if every replica is still busy then.
+    fn verify_t0(&self, ready_at: f64) -> f64 {
+        ready_at.max(
             self.verifiers
                 .iter()
                 .map(|r| r.free_at)
                 .fold(f64::INFINITY, f64::min),
-        );
-        let free: Vec<usize> = self
-            .verifiers
-            .iter()
-            .enumerate()
-            .filter(|(_, r)| r.free_at <= t0 + 1e-9)
-            .map(|(i, _)| i)
-            .collect();
-        // shard count minimizing the modeled round duration (latency-greedy)
-        let s_max = free.len().min(b.max(1)).min(durs.len());
-        let mut s_best = 1usize;
-        let mut d_best = durs[0];
-        for s in 2..=s_max {
-            let d = durs[s - 1] + self.allgather_step_s * (s - 1) as f64;
-            if d < d_best - 1e-12 {
-                s_best = s;
-                d_best = d;
-            }
-        }
-        if s_best <= 1 {
+        )
+    }
+
+    fn free_replicas_at(&self, t0: f64) -> usize {
+        self.verifiers.iter().filter(|r| r.free_at <= t0 + 1e-9).count()
+    }
+
+    /// Occupy the chosen shard count for real: `s ≤ 1` falls back to the
+    /// earliest-free single replica ([`Self::verify`]), `s > 1` reserves
+    /// the first `s` replicas free at `t0` for the sharded duration `d`
+    /// and books the shard-efficiency stats.
+    fn dispatch_shards(
+        &mut self,
+        ready_at: f64,
+        t0: f64,
+        s: usize,
+        d: f64,
+        durs: &[f64],
+    ) -> ShardedVerify {
+        if s <= 1 {
             let (_, start, end) = self.verify(ready_at, durs[0]);
             return ShardedVerify { start, end, shards: 1 };
         }
-        for &i in free.iter().take(s_best) {
-            self.verifiers[i].occupy(t0, d_best);
+        let mut taken = 0usize;
+        for r in self.verifiers.iter_mut() {
+            if taken == s {
+                break;
+            }
+            if r.free_at <= t0 + 1e-9 {
+                r.occupy(t0, d);
+                taken += 1;
+            }
         }
         self.verify_wait += t0 - ready_at;
         self.verify_phases += 1;
-        self.verify_round_time_s += d_best;
+        self.verify_round_time_s += d;
         self.verify_shard_rounds += 1;
-        self.verify_shards_total += s_best as u64;
-        self.verify_shard_saved_s += durs[0] - d_best;
-        ShardedVerify { start: t0, end: t0 + d_best, shards: s_best }
+        self.verify_shards_total += s as u64;
+        self.verify_shard_saved_s += durs[0] - d;
+        ShardedVerify { start: t0, end: t0 + d, shards: s }
     }
 
     /// Coupled execution: draft + verify back-to-back on one verifier
@@ -435,4 +528,75 @@ impl ResourcePool {
             self.draft_wait / self.draft_phases as f64
         }
     }
+}
+
+/// Latency-greedy shard count over `n_free` replicas: the `s` minimizing
+/// the caller-modeled round duration `durs[s-1]` plus one all-gather step
+/// per extra shard, preferring fewer shards on (near-)ties.  Shared by the
+/// real dispatch and the queue-aware lookahead so both price identically.
+fn shard_choice(n_free: usize, b: usize, durs: &[f64], allgather_step_s: f64) -> (usize, f64) {
+    let s_max = n_free.min(b.max(1)).min(durs.len());
+    let mut s_best = 1usize;
+    let mut d_best = durs[0];
+    for s in 2..=s_max {
+        let d = durs[s - 1] + allgather_step_s * (s - 1) as f64;
+        if d < d_best - 1e-12 {
+            s_best = s;
+            d_best = d;
+        }
+    }
+    (s_best, d_best)
+}
+
+/// Dispatch one verify round on a bare replica timeline — the simulation
+/// twin of the real reservation arithmetic, used by the queue-aware
+/// lookahead.  `forced_s` pins the shard count (clamped to what is
+/// feasible); `None` applies the latency-greedy rule, exactly as
+/// [`ResourcePool::verify_sharded`] would.
+fn sim_dispatch(
+    free_at: &mut [f64],
+    b: usize,
+    ready_at: f64,
+    durs: &[f64],
+    allgather_step_s: f64,
+    forced_s: Option<usize>,
+) -> f64 {
+    let t0 = ready_at.max(free_at.iter().copied().fold(f64::INFINITY, f64::min));
+    let n_free = free_at.iter().filter(|&&f| f <= t0 + 1e-9).count();
+    let s_max = n_free.min(b.max(1)).min(durs.len());
+    let (s_greedy, _) = shard_choice(n_free, b, durs, allgather_step_s);
+    let s = match forced_s {
+        Some(s) => s.clamp(1, s_max.max(1)),
+        None => s_greedy,
+    };
+    if s <= 1 {
+        // earliest-free replica (first strictly-minimal, like
+        // `ResourcePool::verify`)
+        let mut i_min = 0usize;
+        for (i, f) in free_at.iter().enumerate() {
+            if *f < free_at[i_min] {
+                i_min = i;
+            }
+        }
+        let start = ready_at.max(free_at[i_min]);
+        let end = start + durs[0];
+        free_at[i_min] = end;
+        return end;
+    }
+    let d = durs[s - 1] + allgather_step_s * (s - 1) as f64;
+    let mut taken = 0usize;
+    let mut end = t0 + d;
+    for f in free_at.iter_mut() {
+        if taken == s {
+            break;
+        }
+        if *f <= t0 + 1e-9 {
+            // mirrors `Resource::occupy(t0, d)` bit-for-bit
+            let e = t0.max(*f) + d;
+            *f = e;
+            end = end.max(e);
+            taken += 1;
+        }
+    }
+    end
 }

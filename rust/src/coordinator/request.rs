@@ -7,6 +7,8 @@ use std::collections::HashMap;
 use crate::runtime::BatchState;
 use crate::workload::TraceRequest;
 
+use super::scheduler::PlacementId;
+
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Phase {
     /// waiting in the pool, not yet prefetched
@@ -50,9 +52,10 @@ pub struct Request {
     /// routing vector M_r (score per drafter)
     pub routing: Vec<f64>,
     /// the drafter set routed for the request's next round (placement),
-    /// cached from candidate-build time until the round commits so the
-    /// exploration RNG advances once per round
-    pub routed_set: Option<Vec<usize>>,
+    /// interned in the engine's `PlacementArena` and cached from
+    /// candidate-insert time until the round commits so the exploration
+    /// RNG advances once per round
+    pub routed_set: Option<PlacementId>,
     /// EWMA of recent acceptance length L_acc
     pub l_acc: f64,
     /// current per-request draft budget γ_i (Alg. 2)

@@ -4,18 +4,188 @@
 //! batch, minimizing `T_ttl/b + λΓ` subject to the latency, memory, and
 //! verified-token-budget constraints.  Batched execution latency is
 //! dominated by the longest request and the batch size (Eq. 5), so the
-//! solver groups length-compatible requests.  We solve the (small) integer
-//! program exactly along the sorted-by-length frontier: for each candidate
-//! batch size b, the optimal choice is a contiguous prefix of the
-//! shortest-first ordering — evaluate every (prefix, bucket) pair and take
-//! the arg-min.
+//! solver groups length-compatible requests: for each candidate batch size
+//! b, the optimal choice is a contiguous prefix of the shortest-first
+//! ordering.
+//!
+//! Two solvers live here:
+//!
+//! * [`Scheduler::assign_incremental`] — the serving hot path.  It walks a
+//!   *persistent* sorted [`CandidatePool`] (updated per event: insert on
+//!   arrival/re-ready, remove on dispatch) and prices every prefix with
+//!   O(1)-per-step aggregate extensions: the critical context is the
+//!   current (sorted) candidate, the per-node draft depth vector grows by
+//!   one routed set, the KV footprint is a running sum, and the trimmed
+//!   Σγ/max γ come from a γ-value histogram ([`trimmed_stats`]) instead of
+//!   re-running Alg. 2 per prefix.  One event costs O(n + nodes) with no
+//!   allocation (scratch buffers are reused; drafter sets are interned
+//!   [`PlacementId`] handles into a [`PlacementArena`], not `Vec` clones).
+//! * [`Scheduler::assign_reference`] — the naive from-scratch solver the
+//!   engine ran before the incremental refactor (sort every call, clone
+//!   and re-trim gammas per prefix, rebuild the depth vector per prefix).
+//!   Kept as the oracle: the incremental solver is property-tested
+//!   assignment-identical to it, and `cosine bench` measures the speedup.
+//!
+//! Pricing goes through [`SchedCostModel`] — the artifact-free slice of
+//! the hardware model the scheduler needs — so benches and property tests
+//! exercise the exact serving arithmetic without loading PJRT artifacts.
 
+use std::cmp::Ordering;
+use std::collections::HashMap;
+
+use crate::cluster::node::{GpuProfile, ModeledModel};
+use crate::cluster::simclock::{Phase, SimClock};
+use crate::cluster::NetworkModel;
 use crate::config::SchedulerConfig;
 
-use super::context::ServingContext;
+// ---------------------------------------------------------------------------
+// Pricing model
+// ---------------------------------------------------------------------------
 
-/// A scheduling candidate (immutable snapshot of a pool request).
+/// The artifact-free slice of the hardware model the Eq. 8 solver prices
+/// with: roofline clock + GPU profiles + network.  `ServingContext`
+/// produces one via `sched_cost()`; benches and tests build a
+/// [`SchedCostModel::synthetic`] without any PJRT artifacts.
 #[derive(Debug, Clone)]
+pub struct SchedCostModel {
+    pub clock: SimClock,
+    pub drafter_gpu: GpuProfile,
+    pub verifier_gpu: GpuProfile,
+    pub network: NetworkModel,
+    pub modeled_target: ModeledModel,
+    pub modeled_drafter: ModeledModel,
+    /// drafter nodes in the speculation cluster (≥ 1)
+    pub n_drafter_nodes: usize,
+    /// verify-window upper bound γ_max + 1 (manifest `g1`)
+    pub g1: usize,
+    /// largest AOT batch bucket (caps the batch size)
+    pub max_bucket: usize,
+}
+
+impl SchedCostModel {
+    /// A manifest-free cost model over the paper's default hardware —
+    /// what `cosine bench` and the scheduler property tests price with.
+    pub fn synthetic(pair: &str, n_drafter_nodes: usize) -> Self {
+        let (modeled_target, modeled_drafter) = ModeledModel::pair(pair);
+        Self {
+            clock: SimClock::default(),
+            drafter_gpu: GpuProfile::by_name("2080ti").unwrap(),
+            verifier_gpu: GpuProfile::by_name("a100").unwrap(),
+            network: NetworkModel::default(),
+            modeled_target,
+            modeled_drafter,
+            n_drafter_nodes: n_drafter_nodes.max(1),
+            g1: 9,
+            max_bucket: 16,
+        }
+    }
+
+    /// Drafter-side: sequential decode of `g` tokens at batch `b` on one
+    /// drafter node (same formula as `ServingContext::t_draft_s`).
+    pub fn t_draft_s(&self, b: usize, g: usize, ctx: usize) -> f64 {
+        self.clock.phase_s(
+            &self.modeled_drafter,
+            &self.drafter_gpu,
+            Phase::Decode,
+            b,
+            g,
+            ctx,
+            self.drafter_gpu.ssm_tokens_per_s,
+        )
+    }
+
+    /// Verification of `g`-token windows at batch `b` on the server.
+    pub fn t_verify_s(&self, b: usize, g: usize, ctx: usize) -> f64 {
+        self.clock.phase_s(
+            &self.modeled_target,
+            &self.verifier_gpu,
+            Phase::Verify,
+            b,
+            g,
+            ctx,
+            self.verifier_gpu.llm_tps(),
+        )
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Interned placements
+// ---------------------------------------------------------------------------
+
+/// Handle to an interned drafter set in a [`PlacementArena`] — candidates
+/// and assignments carry this `Copy` index instead of cloning
+/// `Vec<usize>` sets through the hot path.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct PlacementId(u32);
+
+impl PlacementId {
+    /// The empty set (strategies that never occupy the speculation
+    /// cluster) — pre-interned at index 0 of every arena.
+    pub const EMPTY: PlacementId = PlacementId(0);
+}
+
+/// Deduplicating arena of routed drafter sets.  Routing resolves a
+/// `Vec<usize>` once per round; the arena interns it so every later
+/// consumer (candidates, assignments, reservations, resync) works with a
+/// 4-byte handle and a borrowed slice.
+#[derive(Debug, Clone)]
+pub struct PlacementArena {
+    sets: Vec<Vec<usize>>,
+    index: HashMap<Vec<usize>, u32>,
+}
+
+impl PlacementArena {
+    pub fn new() -> Self {
+        let mut arena = Self {
+            sets: Vec::new(),
+            index: HashMap::new(),
+        };
+        arena.intern(&[]);
+        arena
+    }
+
+    /// Intern `set`, returning the existing handle if it was seen before.
+    /// A miss copies the set into both the slab and the lookup map — paid
+    /// once per *distinct* set over a whole run (with k-of-n routing that
+    /// is at most C(n, k) sets), never per event or per round.
+    pub fn intern(&mut self, set: &[usize]) -> PlacementId {
+        if let Some(&i) = self.index.get(set) {
+            return PlacementId(i);
+        }
+        let i = self.sets.len() as u32;
+        self.sets.push(set.to_vec());
+        self.index.insert(set.to_vec(), i);
+        PlacementId(i)
+    }
+
+    pub fn get(&self, id: PlacementId) -> &[usize] {
+        &self.sets[id.0 as usize]
+    }
+
+    /// Distinct sets interned so far (the empty set counts).
+    pub fn len(&self) -> usize {
+        self.sets.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.sets.is_empty()
+    }
+}
+
+impl Default for PlacementArena {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Candidates and the persistent pool
+// ---------------------------------------------------------------------------
+
+/// A scheduling candidate (immutable snapshot of a pool request).  All
+/// fields are scalars — candidates are `Copy` and live in the persistent
+/// pool from the moment a request becomes ready until it dispatches.
+#[derive(Debug, Clone, Copy)]
 pub struct Candidate {
     /// pool index
     pub idx: usize,
@@ -26,10 +196,90 @@ pub struct Candidate {
     /// virtual time the request becomes ready
     pub ready_at: f64,
     pub arrival_s: f64,
-    /// the request's routed drafter set (per-request placement); empty
-    /// for strategies that never occupy the speculation cluster
-    pub drafter_set: Vec<usize>,
+    /// interned routed drafter set (per-request placement);
+    /// [`PlacementId::EMPTY`] for strategies that never occupy the
+    /// speculation cluster
+    pub placement: PlacementId,
 }
+
+fn len_order(a: &Candidate, b: &Candidate) -> Ordering {
+    a.ctx_len
+        .cmp(&b.ctx_len)
+        .then_with(|| a.arrival_s.total_cmp(&b.arrival_s))
+        .then_with(|| a.idx.cmp(&b.idx))
+}
+
+fn arrival_order(a: &Candidate, b: &Candidate) -> Ordering {
+    a.arrival_s
+        .total_cmp(&b.arrival_s)
+        .then_with(|| a.idx.cmp(&b.idx))
+}
+
+/// Persistent, sorted candidate pool — the engine inserts a candidate when
+/// its request becomes ready (arrival or verify-done) and removes the
+/// dispatched batch, so no event ever re-sorts or re-builds the frontier.
+/// Two orderings are maintained: shortest-context-first (the Eq. 8 prefix
+/// frontier) and FIFO-by-arrival (the non-optimizing baselines).
+#[derive(Debug, Clone, Default)]
+pub struct CandidatePool {
+    by_len: Vec<Candidate>,
+    by_arrival: Vec<Candidate>,
+    remove_scratch: Vec<usize>,
+}
+
+impl CandidatePool {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.by_len.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.by_len.is_empty()
+    }
+
+    /// Candidates in shortest-context-first frontier order.
+    pub fn iter_len(&self) -> impl Iterator<Item = &Candidate> {
+        self.by_len.iter()
+    }
+
+    /// Candidates in FIFO (arrival) order.
+    pub fn iter_arrival(&self) -> impl Iterator<Item = &Candidate> {
+        self.by_arrival.iter()
+    }
+
+    /// O(n) sorted insert (binary-searched position, no comparison sort,
+    /// no allocation beyond the vec's amortized growth).
+    pub fn insert(&mut self, c: Candidate) {
+        let i = self
+            .by_len
+            .partition_point(|x| len_order(x, &c) == Ordering::Less);
+        self.by_len.insert(i, c);
+        let j = self
+            .by_arrival
+            .partition_point(|x| arrival_order(x, &c) == Ordering::Less);
+        self.by_arrival.insert(j, c);
+    }
+
+    /// Remove the dispatched batch in one retain pass per ordering.
+    pub fn remove_batch(&mut self, idxs: &[usize]) {
+        if idxs.is_empty() {
+            return;
+        }
+        self.remove_scratch.clear();
+        self.remove_scratch.extend_from_slice(idxs);
+        self.remove_scratch.sort_unstable();
+        let rs = &self.remove_scratch;
+        self.by_len.retain(|c| rs.binary_search(&c.idx).is_err());
+        self.by_arrival.retain(|c| rs.binary_search(&c.idx).is_err());
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Assignment
+// ---------------------------------------------------------------------------
 
 #[derive(Debug, Clone)]
 pub struct Assignment {
@@ -37,9 +287,9 @@ pub struct Assignment {
     pub batch: Vec<usize>,
     /// per-chosen-request draft budgets after Γ_max trimming
     pub gammas: Vec<usize>,
-    /// per-chosen-request routed drafter sets (parallel to `batch`); the
-    /// engine's draft reservations consume exactly these nodes
-    pub placement: Vec<Vec<usize>>,
+    /// per-chosen-request interned drafter sets (parallel to `batch`);
+    /// the engine's draft reservations consume exactly these nodes
+    pub placement: Vec<PlacementId>,
     /// predicted draft/verify latencies (seconds, modeled)
     pub t_draft: f64,
     pub t_verify: f64,
@@ -50,26 +300,46 @@ pub struct Scheduler {
     pub cfg: SchedulerConfig,
     /// enable the Eq. 8 solver; false = plain FIFO up-to-max-batch
     pub optimize: bool,
+    // --- reusable scratch (no per-event allocation) ---
+    /// per-node draft queue depth for the current sweep
+    depth: Vec<usize>,
+    /// nodes touched this sweep (O(touched) reset)
+    touched: Vec<usize>,
+    /// γ-value histogram of the current prefix
+    hist: Vec<u32>,
+    /// eligible candidates accumulated along the sweep
+    chosen: Vec<Candidate>,
 }
 
 impl Scheduler {
     pub fn new(cfg: SchedulerConfig, optimize: bool) -> Self {
-        Self { cfg, optimize }
+        Self {
+            cfg,
+            optimize,
+            depth: Vec::new(),
+            touched: Vec::new(),
+            hist: Vec::new(),
+            chosen: Vec::new(),
+        }
     }
 
-    /// Predicted phase latencies for a prospective batch.
+    /// Predicted phase latencies for a prospective batch — the from-scratch
+    /// O(b · nodes) evaluation the reference solver runs per prefix (the
+    /// incremental sweep computes the same quantities by extension).
     fn predict(
         &self,
-        ctx: &ServingContext,
-        chosen: &[&Candidate],
+        cost: &SchedCostModel,
+        arena: &PlacementArena,
+        chosen: &[Candidate],
         gammas: &[usize],
         k_nodes: usize,
     ) -> (f64, f64) {
         let b = chosen.len();
         let crit_ctx = chosen.iter().map(|c| c.ctx_len).max().unwrap_or(1);
         let gamma_max = gammas.iter().copied().max().unwrap_or(1);
-        let nodes = ctx.cfg.cluster.n_drafter_nodes.max(1);
-        let t_draft = if chosen.iter().any(|c| !c.drafter_set.is_empty()) {
+        let nodes = cost.n_drafter_nodes.max(1);
+        let any_placed = chosen.iter().any(|c| !arena.get(c.placement).is_empty());
+        let t_draft = if any_placed {
             // per-request placement: a node drafting for q requests runs
             // them as q sequential lock-step phases, so the round's draft
             // latency is priced by the deepest per-node queue — this is
@@ -77,7 +347,7 @@ impl Scheduler {
             // onto one hot node
             let mut depth = vec![0usize; nodes];
             for c in chosen {
-                for &d in &c.drafter_set {
+                for &d in arena.get(c.placement) {
                     if d < nodes {
                         depth[d] += 1;
                     }
@@ -85,20 +355,20 @@ impl Scheduler {
             }
             let q_max = depth.iter().copied().max().unwrap_or(0).max(1);
             q_max as f64
-                * (ctx.t_draft_s(1, gamma_max, crit_ctx)
-                    + gamma_max as f64 * ctx.network.fusion_round_s(k_nodes, 1))
+                * (cost.t_draft_s(1, gamma_max, crit_ctx)
+                    + gamma_max as f64 * cost.network.fusion_round_s(k_nodes, 1))
         } else {
             // no placement information (coupled strategies): the legacy
             // gang estimate over the k cooperating drafters
             let gang = k_nodes.clamp(1, nodes);
             let per_node_b = (b * k_nodes).div_ceil(gang).max(1);
-            ctx.t_draft_s(per_node_b, gamma_max, crit_ctx)
-                + gamma_max as f64 * ctx.network.fusion_round_s(k_nodes, b)
+            cost.t_draft_s(per_node_b, gamma_max, crit_ctx)
+                + gamma_max as f64 * cost.network.fusion_round_s(k_nodes, b)
         };
         let big_gamma: usize = gammas.iter().map(|g| g + 1).sum();
         let g_eff = (big_gamma as f64 / b as f64).ceil().max(1.0) as usize;
-        let t_verify = ctx.t_verify_s(b, g_eff, crit_ctx)
-            + ctx.network.verify_exchange_s(b, ctx.constants().g1);
+        let t_verify =
+            cost.t_verify_s(b, g_eff, crit_ctx) + cost.network.verify_exchange_s(b, cost.g1);
         (t_draft, t_verify)
     }
 
@@ -108,38 +378,200 @@ impl Scheduler {
         t_ttl / b as f64 + self.cfg.lambda * big_gamma as f64
     }
 
-    /// Choose the next batch from `avail` (must be non-empty).
-    pub fn assign(
+    /// Choose the next batch from the persistent pool in one sweep.
+    ///
+    /// `eligible` filters candidates whose resources are free right now
+    /// (the pool holds every *ready* request; freeness is a property of
+    /// the instant).  Returns `None` when no candidate is eligible.
+    ///
+    /// Assignment-identical to [`Self::assign_reference`] over the
+    /// eligible candidates (property-tested), but each prefix extension is
+    /// O(1): sorted order makes the critical context the current
+    /// candidate, the KV footprint and Σγ are running sums, the per-node
+    /// depth vector absorbs one interned set, and the trimmed Σγ / max γ
+    /// come from the γ histogram instead of re-running Alg. 2.
+    pub fn assign_incremental(
+        &mut self,
+        cost: &SchedCostModel,
+        arena: &PlacementArena,
+        pool: &CandidatePool,
+        k_nodes: usize,
+        eligible: impl Fn(&Candidate) -> bool,
+    ) -> Option<Assignment> {
+        let max_b = self.cfg.max_batch.min(cost.max_bucket);
+        if !self.optimize {
+            // FIFO: oldest-arrival first, up to max batch (one pricing
+            // pass, no per-prefix search)
+            self.chosen.clear();
+            for c in pool.iter_arrival() {
+                if self.chosen.len() >= max_b {
+                    break;
+                }
+                if eligible(c) {
+                    self.chosen.push(*c);
+                }
+            }
+            if self.chosen.is_empty() {
+                return None;
+            }
+            let chosen = std::mem::take(&mut self.chosen);
+            let mut gammas: Vec<usize> = chosen.iter().map(|c| c.gamma).collect();
+            trim_gammas(&mut gammas, self.cfg.gamma_total_max);
+            let (t_d, t_v) = self.predict(cost, arena, &chosen, &gammas, k_nodes);
+            let big_gamma = gammas.iter().map(|g| g + 1).sum();
+            let assignment = Assignment {
+                batch: chosen.iter().map(|c| c.idx).collect(),
+                placement: chosen.iter().map(|c| c.placement).collect(),
+                t_draft: t_d,
+                t_verify: t_v,
+                objective: self.objective(t_d, t_v, chosen.len(), big_gamma),
+                gammas,
+            };
+            self.chosen = chosen;
+            return Some(assignment);
+        }
+
+        // --- Eq. 8 sweep along the shortest-context-first frontier ---
+        let nodes = cost.n_drafter_nodes.max(1);
+        if self.depth.len() < nodes {
+            self.depth.resize(nodes, 0);
+        }
+        for &d in &self.touched {
+            self.depth[d] = 0;
+        }
+        self.touched.clear();
+        for h in self.hist.iter_mut() {
+            *h = 0;
+        }
+        self.chosen.clear();
+
+        let mut b = 0usize;
+        let mut crit = 0usize;
+        let mut q_max = 0usize;
+        let mut any_placed = false;
+        let mut sum_g = 0usize;
+        let mut max_g = 0usize;
+        let mut mem_mb = 0.0f64;
+        let mut best: Option<(f64, usize, f64, f64)> = None; // (obj, b, t_d, t_v)
+
+        for c in pool.iter_len() {
+            if b >= max_b {
+                break;
+            }
+            if !eligible(c) {
+                continue;
+            }
+            b += 1;
+            self.chosen.push(*c);
+
+            // O(1) prefix extensions
+            crit = crit.max(c.ctx_len);
+            mem_mb += cost.modeled_target.kv_bytes_per_token * c.ctx_len as f64 / 1e6;
+            let over_mem = mem_mb > self.cfg.m_max_mb;
+            if over_mem && b > 1 {
+                break; // prefixes only grow (Eq. 7 memory constraint)
+            }
+            if c.gamma >= self.hist.len() {
+                self.hist.resize(c.gamma + 1, 0);
+            }
+            self.hist[c.gamma] += 1;
+            sum_g += c.gamma;
+            max_g = max_g.max(c.gamma);
+            let (tsum, tmax) =
+                trimmed_stats(&self.hist, b, sum_g, max_g, self.cfg.gamma_total_max);
+            let set = arena.get(c.placement);
+            if !set.is_empty() {
+                any_placed = true;
+            }
+            for &d in set {
+                if d < nodes {
+                    if self.depth[d] == 0 {
+                        self.touched.push(d);
+                    }
+                    self.depth[d] += 1;
+                    q_max = q_max.max(self.depth[d]);
+                }
+            }
+
+            // price this prefix (same arithmetic as `predict`, fed by the
+            // extended aggregates)
+            let t_d = if any_placed {
+                q_max.max(1) as f64
+                    * (cost.t_draft_s(1, tmax, crit)
+                        + tmax as f64 * cost.network.fusion_round_s(k_nodes, 1))
+            } else {
+                let gang = k_nodes.clamp(1, nodes);
+                let per_node_b = (b * k_nodes).div_ceil(gang).max(1);
+                cost.t_draft_s(per_node_b, tmax, crit)
+                    + tmax as f64 * cost.network.fusion_round_s(k_nodes, b)
+            };
+            let big_gamma = tsum + b;
+            let g_eff = (big_gamma as f64 / b as f64).ceil().max(1.0) as usize;
+            let t_v =
+                cost.t_verify_s(b, g_eff, crit) + cost.network.verify_exchange_s(b, cost.g1);
+
+            // latency budget (Eq. 7): longer prefixes may still fit, so
+            // skip rather than stop; the single-request batch is always
+            // admissible (the reference's fallback)
+            if !((t_d + t_v) * 1e3 > self.cfg.t_max_ms && b > 1) {
+                let obj = self.objective(t_d, t_v, b, big_gamma);
+                if best.as_ref().is_none_or(|&(o, _, _, _)| obj < o) {
+                    best = Some((obj, b, t_d, t_v));
+                }
+            }
+            if over_mem {
+                break; // b == 1: priced (fallback semantics), then stop
+            }
+        }
+
+        let (obj, best_b, t_d, t_v) = best?;
+        let chosen = &self.chosen[..best_b];
+        let mut gammas: Vec<usize> = chosen.iter().map(|c| c.gamma).collect();
+        trim_gammas(&mut gammas, self.cfg.gamma_total_max);
+        Some(Assignment {
+            batch: chosen.iter().map(|c| c.idx).collect(),
+            gammas,
+            placement: chosen.iter().map(|c| c.placement).collect(),
+            t_draft: t_d,
+            t_verify: t_v,
+            objective: obj,
+        })
+    }
+
+    /// The pre-refactor from-scratch solver: sort `avail` every call and
+    /// evaluate every (prefix, size) pair with fresh per-prefix trims and
+    /// depth vectors.  `avail` must be non-empty.  Kept as the oracle for
+    /// the incremental solver's equivalence property and as the baseline
+    /// `cosine bench` measures the hot-path speedup against.
+    pub fn assign_reference(
         &self,
-        ctx: &ServingContext,
+        cost: &SchedCostModel,
+        arena: &PlacementArena,
         avail: &[Candidate],
         k_nodes: usize,
     ) -> Assignment {
-        let max_b = self
-            .cfg
-            .max_batch
-            .min(*ctx.constants().batch_buckets.iter().max().unwrap_or(&16));
+        let max_b = self.cfg.max_batch.min(cost.max_bucket);
         if !self.optimize {
             // FIFO: oldest-arrival first, up to max batch
-            let mut sorted: Vec<&Candidate> = avail.iter().collect();
+            let mut sorted: Vec<Candidate> = avail.to_vec();
             sorted.sort_by(|a, b| a.arrival_s.total_cmp(&b.arrival_s));
             sorted.truncate(max_b);
             let mut gammas: Vec<usize> = sorted.iter().map(|c| c.gamma).collect();
             trim_gammas(&mut gammas, self.cfg.gamma_total_max);
-            let (t_d, t_v) = self.predict(ctx, &sorted, &gammas, k_nodes);
+            let (t_d, t_v) = self.predict(cost, arena, &sorted, &gammas, k_nodes);
             let big_gamma = gammas.iter().map(|g| g + 1).sum();
             return Assignment {
                 batch: sorted.iter().map(|c| c.idx).collect(),
-                gammas: gammas.clone(),
-                placement: sorted.iter().map(|c| c.drafter_set.clone()).collect(),
+                placement: sorted.iter().map(|c| c.placement).collect(),
                 t_draft: t_d,
                 t_verify: t_v,
                 objective: self.objective(t_d, t_v, sorted.len(), big_gamma),
+                gammas,
             };
         }
 
         // Eq. 8 solver: shortest-context-first frontier × batch size
-        let mut sorted: Vec<&Candidate> = avail.iter().collect();
+        let mut sorted: Vec<Candidate> = avail.to_vec();
         sorted.sort_by(|a, b| {
             a.ctx_len
                 .cmp(&b.ctx_len)
@@ -153,14 +585,12 @@ impl Scheduler {
             // memory constraint (Eq. 7): modeled KV footprint
             let mem_mb: f64 = chosen
                 .iter()
-                .map(|c| {
-                    ctx.modeled_target.kv_bytes_per_token * c.ctx_len as f64 / 1e6
-                })
+                .map(|c| cost.modeled_target.kv_bytes_per_token * c.ctx_len as f64 / 1e6)
                 .sum();
             if mem_mb > self.cfg.m_max_mb {
                 break; // prefixes only grow
             }
-            let (t_d, t_v) = self.predict(ctx, chosen, &gammas, k_nodes);
+            let (t_d, t_v) = self.predict(cost, arena, chosen, &gammas, k_nodes);
             if (t_d + t_v) * 1e3 > self.cfg.t_max_ms && b > 1 {
                 continue;
             }
@@ -170,7 +600,7 @@ impl Scheduler {
                 best = Some(Assignment {
                     batch: chosen.iter().map(|c| c.idx).collect(),
                     gammas,
-                    placement: chosen.iter().map(|c| c.drafter_set.clone()).collect(),
+                    placement: chosen.iter().map(|c| c.placement).collect(),
                     t_draft: t_d,
                     t_verify: t_v,
                     objective: obj,
@@ -179,20 +609,17 @@ impl Scheduler {
         }
         best.unwrap_or_else(|| {
             // every prefix violated a constraint: serve the shortest
-            // request alone, priced with its real single-request
-            // latencies — the old fallback returned zeros with an
-            // infinite objective, which poisoned the adaptive-γ
-            // controller's (t_draft, t_verify) observations
+            // request alone, priced with its real single-request latencies
             let c = sorted[0];
             let single = [c];
             let mut gammas = vec![c.gamma];
             trim_gammas(&mut gammas, self.cfg.gamma_total_max);
-            let (t_d, t_v) = self.predict(ctx, &single, &gammas, k_nodes);
+            let (t_d, t_v) = self.predict(cost, arena, &single, &gammas, k_nodes);
             let big_gamma = gammas[0] + 1;
             Assignment {
                 batch: vec![c.idx],
                 gammas,
-                placement: vec![c.drafter_set.clone()],
+                placement: vec![c.placement],
                 t_draft: t_d,
                 t_verify: t_v,
                 objective: self.objective(t_d, t_v, 1, big_gamma),
@@ -201,9 +628,100 @@ impl Scheduler {
     }
 }
 
-/// Alg. 2 AdaptiveSpeculation inner loop: enforce Σ γ_i ≤ Γ_max by
-/// repeatedly decrementing the largest budget.
+/// (trimmed Σγ, trimmed max γ) of a prefix described by its γ-value
+/// histogram, without materializing the trimmed vector — the
+/// O(1)-per-step core of the incremental sweep.  `b` is the prefix size,
+/// `sum_g`/`max_g` the untrimmed sum and max.  Exactly matches applying
+/// [`trim_gammas`] to the prefix and taking sum/max.
+fn trimmed_stats(
+    hist: &[u32],
+    b: usize,
+    sum_g: usize,
+    max_g: usize,
+    budget: usize,
+) -> (usize, usize) {
+    if sum_g <= budget {
+        return (sum_g, max_g);
+    }
+    let zeros = hist.first().copied().unwrap_or(0) as usize;
+    let target = budget.max(b - zeros); // γ_i ≥ 1 floor (zeros never move)
+    if sum_g <= target {
+        return (sum_g, max_g);
+    }
+    // walk the cap C upward: Σ min(γ, C) = below + C · (b − cnt_lt)
+    let mut below = 0usize; // Σ of values < C
+    let mut cnt_lt = zeros; // count of values < C
+    let mut cap = 1usize;
+    let mut s_cap = b - zeros; // Σ min(γ, 1)
+    for c in 1..max_g {
+        let h = hist.get(c).copied().unwrap_or(0) as usize;
+        below += c * h;
+        cnt_lt += h;
+        let s = below + (c + 1) * (b - cnt_lt);
+        if s <= target {
+            cap = c + 1;
+            s_cap = s;
+        } else {
+            break;
+        }
+    }
+    // entries above the cap level to `cap`, except the remainder that
+    // stays at cap+1 — so the trimmed max is cap+1 iff a remainder exists
+    let gmax = if target > s_cap { cap + 1 } else { cap };
+    (target, gmax)
+}
+
+/// Alg. 2 AdaptiveSpeculation inner loop: enforce Σ γ_i ≤ Γ_max with a
+/// γ_i ≥ 1 floor.  Closed form of the one-decrement-at-a-time reference
+/// (kept as [`trim_gammas_reference`] under `#[cfg(test)]`): repeatedly
+/// decrementing the *last* largest budget levels the multiset down to a
+/// cap `C` — binary-searched here — with the leftmost over-cap entries
+/// keeping `C + 1` until the budget is met.  O(n log Γ) instead of the
+/// reference's O(n · Σγ), and property-tested element-identical to it.
 pub fn trim_gammas(gammas: &mut [usize], gamma_total_max: usize) {
+    let sum: usize = gammas.iter().sum();
+    if sum <= gamma_total_max {
+        return;
+    }
+    // the reference loop never decrements an entry below 1 (γ_i ≥ 1,
+    // Eq. 6) and never touches an initial 0
+    let floor: usize = gammas.iter().map(|&g| g.min(1)).sum();
+    let target = gamma_total_max.max(floor);
+    if sum <= target {
+        return;
+    }
+    let max_g = gammas.iter().copied().max().unwrap_or(0);
+    let capped_sum = |c: usize| gammas.iter().map(|&g| g.min(c)).sum::<usize>();
+    // largest C with Σ min(γ, C) ≤ target; invariant: lo feasible, hi not
+    let (mut lo, mut hi) = (1usize, max_g);
+    while lo + 1 < hi {
+        let mid = lo + (hi - lo) / 2;
+        if capped_sum(mid) <= target {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    let cap = lo;
+    // the reference trims right-to-left at each level, so the *leftmost*
+    // over-cap entries keep cap+1
+    let mut extra = target - capped_sum(cap);
+    for g in gammas.iter_mut() {
+        if *g > cap {
+            *g = if extra > 0 {
+                extra -= 1;
+                cap + 1
+            } else {
+                cap
+            };
+        }
+    }
+}
+
+/// The seed's literal decrement loop — O(n · Σγ) — kept as the oracle the
+/// closed form is property-tested against.
+#[cfg(test)]
+pub fn trim_gammas_reference(gammas: &mut [usize], gamma_total_max: usize) {
     loop {
         let sum: usize = gammas.iter().sum();
         if sum <= gamma_total_max {
@@ -219,5 +737,109 @@ pub fn trim_gammas(gammas: &mut [usize], gamma_total_max: usize) {
             return; // γ_i >= 1 constraint (Eq. 6)
         }
         gammas[j] -= 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn trim_closed_form_matches_reference_loop() {
+        // element-identical (not just sum-identical): the per-request
+        // budgets feed the engine's draft rounds directly
+        for seed in 0..400u64 {
+            let mut rng = Rng::seed_from_u64(0x7131 ^ (seed * 0x9E3779B9));
+            let n = 1 + rng.usize(24);
+            let g: Vec<usize> = (0..n).map(|_| rng.usize(10)).collect();
+            let budget = rng.usize(90);
+            let mut fast = g.clone();
+            let mut slow = g.clone();
+            trim_gammas(&mut fast, budget);
+            trim_gammas_reference(&mut slow, budget);
+            assert_eq!(fast, slow, "seed {seed}: {g:?} budget {budget}");
+        }
+    }
+
+    #[test]
+    fn trim_known_tie_breaks() {
+        // the reference decrements the *last* maximum first, so the
+        // leftmost of equal maxima keeps the higher value
+        let mut g = vec![3, 3];
+        trim_gammas(&mut g, 5);
+        assert_eq!(g, vec![3, 2]);
+        let mut g = vec![4, 4, 4];
+        trim_gammas(&mut g, 10);
+        assert_eq!(g, vec![4, 3, 3]);
+        let mut g = vec![2, 5, 4, 5];
+        trim_gammas(&mut g, 13);
+        assert_eq!(g, vec![2, 4, 4, 3]);
+    }
+
+    #[test]
+    fn trimmed_stats_matches_materialized_trim() {
+        for seed in 0..300u64 {
+            let mut rng = Rng::seed_from_u64(0x5EED ^ (seed * 0x9E3779B9));
+            let n = 1 + rng.usize(20);
+            let g: Vec<usize> = (0..n).map(|_| rng.usize(9)).collect();
+            let budget = rng.usize(80);
+            let mut hist = vec![0u32; 10];
+            for &x in &g {
+                hist[x] += 1;
+            }
+            let sum: usize = g.iter().sum();
+            let max = g.iter().copied().max().unwrap();
+            let (tsum, tmax) = trimmed_stats(&hist, n, sum, max, budget);
+            let mut trimmed = g.clone();
+            trim_gammas(&mut trimmed, budget);
+            assert_eq!(tsum, trimmed.iter().sum::<usize>(), "seed {seed}: {g:?}");
+            assert_eq!(
+                tmax,
+                trimmed.iter().copied().max().unwrap(),
+                "seed {seed}: {g:?} budget {budget}"
+            );
+        }
+    }
+
+    #[test]
+    fn arena_interns_and_dedups() {
+        let mut a = PlacementArena::new();
+        assert_eq!(a.get(PlacementId::EMPTY), &[] as &[usize]);
+        let p1 = a.intern(&[0, 2, 4]);
+        let p2 = a.intern(&[1]);
+        let p3 = a.intern(&[0, 2, 4]);
+        assert_eq!(p1, p3, "identical sets must intern to one handle");
+        assert_ne!(p1, p2);
+        assert_eq!(a.get(p1), &[0, 2, 4]);
+        assert_eq!(a.get(p2), &[1]);
+        assert_eq!(a.len(), 3, "empty + two distinct sets");
+    }
+
+    #[test]
+    fn pool_keeps_both_orders_and_removes_batches() {
+        let mut pool = CandidatePool::new();
+        let c = |idx, ctx_len, arrival_s| Candidate {
+            idx,
+            ctx_len,
+            gamma: 4,
+            ready_at: arrival_s,
+            arrival_s,
+            placement: PlacementId::EMPTY,
+        };
+        pool.insert(c(0, 30, 2.0));
+        pool.insert(c(1, 10, 3.0));
+        pool.insert(c(2, 30, 1.0));
+        pool.insert(c(3, 10, 3.0)); // ties with 1 on (ctx, arrival): idx order
+        let by_len: Vec<usize> = pool.iter_len().map(|c| c.idx).collect();
+        assert_eq!(by_len, vec![1, 3, 2, 0]);
+        let by_arr: Vec<usize> = pool.iter_arrival().map(|c| c.idx).collect();
+        assert_eq!(by_arr, vec![2, 0, 1, 3]);
+        pool.remove_batch(&[3, 2]);
+        assert_eq!(pool.len(), 2);
+        let by_len: Vec<usize> = pool.iter_len().map(|c| c.idx).collect();
+        assert_eq!(by_len, vec![1, 0]);
+        let by_arr: Vec<usize> = pool.iter_arrival().map(|c| c.idx).collect();
+        assert_eq!(by_arr, vec![0, 1]);
     }
 }

@@ -9,6 +9,7 @@
 //!   table2       Table 2 / Fig. 3a drafter-domain acceptance matrix
 //!   cost         Table 1 / Table 3 cost-efficiency report
 //!   ablation     component ablation (Fig. 8)
+//!   bench        scheduler hot-path harness (BENCH_sched.json)
 //!
 //! Global options: --artifacts DIR  --pair l|q  --config FILE.json
 //!                 --replicas N (verifier replicas for the event engine)
@@ -38,6 +39,9 @@ COMMANDS:
                                      Table 2 acceptance matrix
   cost       [--table1]              Table 1 + Table 3 cost efficiency
   ablation   [--nodes 1,2,4,6,8]     Fig. 8 component ablation
+  bench      [--smoke] [--out FILE] [--requests N]
+                                     scheduler hot-path harness: emits
+                                     BENCH_sched.json (no artifacts needed)
 ";
 
 fn main() -> Result<()> {
@@ -78,6 +82,14 @@ fn main() -> Result<()> {
         Some("table2") => cmd::table2::run(&cfg, args.get_usize("prompts-per-domain", 8)?),
         Some("cost") => cmd::cost::run(&cfg, args.has_flag("table1")),
         Some("ablation") => cmd::ablation::run(&cfg, &args.get_or("nodes", "1,2,4,6,8")),
+        Some("bench") => {
+            let requests = args.get_usize("requests", 0)?;
+            cmd::bench::run(
+                &args.get_or("out", "BENCH_sched.json"),
+                args.has_flag("smoke"),
+                if requests == 0 { None } else { Some(requests) },
+            )
+        }
         _ => {
             eprint!("{USAGE}");
             std::process::exit(2);

@@ -388,6 +388,59 @@ fn sharded_verify_respects_allgather_and_stream_bound_rounds() {
 }
 
 #[test]
+fn queue_aware_sharding_pipelines_whole_rounds() {
+    use cosine::coordinator::pipeline::ResourcePool;
+    // Two identical compute-bound rounds, two replicas.  Latency-greedy
+    // shards round 1 across both replicas (2.2s) and round 2 behind it:
+    // total 4.4s.  Queue-aware sees the backlog, keeps both rounds whole
+    // and pipelines them on separate replicas: total 4.0s — the ROADMAP's
+    // named open item.
+    let mut greedy = ResourcePool::new(0, 2);
+    greedy.verify_sharded(8, 0.0, &[4.0, 2.2]);
+    greedy.verify_sharded(8, 0.0, &[4.0, 2.2]);
+    assert!((greedy.makespan() - 4.4).abs() < 1e-9);
+
+    let mut aware = ResourcePool::new(0, 2);
+    let sv1 = aware.verify_sharded_queued(8, 0.0, &[4.0, 2.2], 1);
+    let sv2 = aware.verify_sharded_queued(8, 0.0, &[4.0, 2.2], 0);
+    assert_eq!(sv1.shards, 1, "backlog-aware round must stay whole");
+    assert_eq!(sv2.shards, 1, "second round takes the other replica");
+    assert!((sv2.end - 4.0).abs() < 1e-9);
+    assert!(
+        aware.makespan() < greedy.makespan(),
+        "queue-aware must beat greedy on this backlog: {} vs {}",
+        aware.makespan(),
+        greedy.makespan()
+    );
+    // both replicas worked, one round each
+    assert_eq!(aware.verifiers[0].phases, 1);
+    assert_eq!(aware.verifiers[1].phases, 1);
+
+    // with no backlog the policy is exactly latency-greedy
+    let mut lone = ResourcePool::new(0, 2);
+    let sv = lone.verify_sharded_queued(8, 0.0, &[4.0, 2.2], 0);
+    assert_eq!(sv.shards, 2);
+    assert!((sv.end - 2.2).abs() < 1e-9);
+}
+
+#[test]
+fn queue_aware_sharding_still_shards_when_it_wins() {
+    use cosine::coordinator::pipeline::ResourcePool;
+    // Perfect 2-way scaling, 3 rounds on 2 replicas: sharding every round
+    // (3 × 2.0 = 6.0) ties the best mixed plan, so the aware policy keeps
+    // the greedy split on ties and never does worse than 6.0 — where
+    // whole-round pipelining alone would need two 4.0s waves (8.0).
+    let mut aware = ResourcePool::new(0, 2);
+    let sv1 = aware.verify_sharded_queued(8, 0.0, &[4.0, 2.0], 2);
+    let sv2 = aware.verify_sharded_queued(8, 0.0, &[4.0, 2.0], 1);
+    let sv3 = aware.verify_sharded_queued(8, 0.0, &[4.0, 2.0], 0);
+    assert_eq!(sv1.shards, 2, "profitable split must survive queue-awareness");
+    assert_eq!(sv2.shards, 2);
+    assert_eq!(sv3.shards, 2);
+    assert!((aware.makespan() - 6.0).abs() < 1e-9);
+}
+
+#[test]
 fn resource_pool_free_queries() {
     use cosine::coordinator::pipeline::ResourcePool;
     let mut p = ResourcePool::new(1, 1);

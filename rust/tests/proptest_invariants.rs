@@ -184,7 +184,13 @@ fn prop_placed_pool_1x1_equals_virtual_pipeline() {
             assert!((ls - ps).abs() < 1e-12, "seed {seed} step {step}: draft start");
             assert!((le - pe).abs() < 1e-12, "seed {seed} step {step}: draft end");
             let (lvs, lve) = legacy.verify(le, tv);
-            let sv = pool.verify_sharded(b, pe, &[tv]);
+            // queue-aware and latency-greedy sharding are both exercised:
+            // with one replica neither may deviate from plain verify
+            let sv = if rng.bool(0.5) {
+                pool.verify_sharded(b, pe, &[tv])
+            } else {
+                pool.verify_sharded_queued(b, pe, &[tv], rng.usize(4))
+            };
             assert_eq!(sv.shards, 1, "seed {seed} step {step}: 1 replica can never shard");
             assert!((lvs - sv.start).abs() < 1e-12, "seed {seed} step {step}: verify start");
             assert!((lve - sv.end).abs() < 1e-12, "seed {seed} step {step}: verify end");
@@ -271,6 +277,134 @@ fn prop_sharded_verify_never_later_than_single() {
             assert!(sv.shards >= 1 && sv.shards <= nrep.min(b), "seed {seed} step {step}");
         }
         for r in &pool.verifiers {
+            assert!(r.busy <= r.free_at + 1e-9, "seed {seed}: overcommitted replica");
+        }
+    });
+}
+
+#[test]
+fn prop_incremental_assign_matches_reference() {
+    // The persistent-pool incremental Eq. 8 solver must pick the exact
+    // same batch, trimmed gammas, placement handles, and modeled
+    // latencies/objective as the naive from-scratch reference, over
+    // random pools, random eligibility masks, both FIFO and optimizing
+    // modes, and binding/non-binding latency + memory + Γ budgets.
+    use cosine::config::SchedulerConfig;
+    use cosine::coordinator::scheduler::{
+        Candidate, CandidatePool, PlacementArena, PlacementId, SchedCostModel, Scheduler,
+    };
+    cases(150, |rng, seed| {
+        let n_nodes = 1 + rng.usize(6);
+        let cost = SchedCostModel::synthetic(if rng.bool(0.5) { "l" } else { "q" }, n_nodes);
+        let cfg = SchedulerConfig {
+            max_batch: 1 + rng.usize(16),
+            gamma_total_max: 1 + rng.usize(64),
+            t_max_ms: if rng.bool(0.3) { 0.5 } else { 4000.0 },
+            m_max_mb: if rng.bool(0.3) { 1.0 + rng.f64() * 4.0 } else { 64_000.0 },
+            ..SchedulerConfig::default()
+        };
+        let optimize = rng.bool(0.7);
+        let mut arena = PlacementArena::new();
+        let mut pool = CandidatePool::new();
+        let n = 1 + rng.usize(40);
+        let mut avail: Vec<Candidate> = Vec::new();
+        let mut blocked = vec![false; n];
+        for (i, b) in blocked.iter_mut().enumerate() {
+            let k = 1 + rng.usize(3.min(n_nodes));
+            let mut nodes: Vec<usize> = (0..n_nodes).collect();
+            rng.partial_shuffle(&mut nodes, k);
+            let pid = if rng.bool(0.8) {
+                arena.intern(&nodes[..k])
+            } else {
+                PlacementId::EMPTY
+            };
+            let c = Candidate {
+                idx: i,
+                ctx_len: 1 + rng.usize(2000),
+                gamma: 1 + rng.usize(8),
+                ready_at: 0.0,
+                // coarse arrival values force sort-key ties
+                arrival_s: rng.usize(8) as f64,
+                placement: pid,
+            };
+            *b = !rng.bool(0.8);
+            pool.insert(c);
+            if !*b {
+                avail.push(c);
+            }
+        }
+        if avail.is_empty() {
+            return;
+        }
+        let k_nodes = 1 + rng.usize(4);
+        let mut sched = Scheduler::new(cfg.clone(), optimize);
+        let inc = sched
+            .assign_incremental(&cost, &arena, &pool, k_nodes, |c| !blocked[c.idx])
+            .expect("eligible candidates must yield an assignment");
+        let sref = Scheduler::new(cfg, optimize);
+        let refa = sref.assign_reference(&cost, &arena, &avail, k_nodes);
+        assert_eq!(inc.batch, refa.batch, "seed {seed}: batch diverged");
+        assert_eq!(inc.gammas, refa.gammas, "seed {seed}: gammas diverged");
+        assert_eq!(inc.placement, refa.placement, "seed {seed}: placement diverged");
+        assert!(
+            (inc.t_draft - refa.t_draft).abs() < 1e-12,
+            "seed {seed}: t_draft {} vs {}",
+            inc.t_draft,
+            refa.t_draft
+        );
+        assert!(
+            (inc.t_verify - refa.t_verify).abs() < 1e-12,
+            "seed {seed}: t_verify {} vs {}",
+            inc.t_verify,
+            refa.t_verify
+        );
+        assert!(
+            (inc.objective - refa.objective).abs() < 1e-12,
+            "seed {seed}: objective {} vs {}",
+            inc.objective,
+            refa.objective
+        );
+    });
+}
+
+#[test]
+fn prop_queue_aware_sharding_never_later_on_backlogs() {
+    // A backlog of identical verify rounds dispatched queue-aware (each
+    // round told how many more are waiting) must never finish later than
+    // the latency-greedy dispatch, from any starting replica state: the
+    // policy only deviates from greedy when its lookahead — exact for
+    // identical rounds — predicts a strictly earlier completion.
+    cases(200, |rng, seed| {
+        let nrep = 1 + rng.usize(5);
+        let mut pool = ResourcePool::new(0, nrep);
+        pool.allgather_step_s = rng.f64() * 0.02;
+        // random pre-existing replica occupancy
+        for _ in 0..rng.usize(6) {
+            pool.verify(rng.f64() * 2.0, 0.05 + rng.f64());
+        }
+        let q = 1 + rng.usize(8);
+        let b = 1 + rng.usize(16);
+        let ready = rng.f64() * 3.0;
+        // caller-modeled shard durations: nonincreasing in shard count
+        let base = 0.05 + rng.f64();
+        let mut durs = vec![base];
+        for s in 2..=nrep {
+            let prev = durs[s - 2];
+            durs.push(prev * (0.45 + 0.55 * rng.f64()));
+        }
+        let mut greedy = pool.clone();
+        let mut aware = pool;
+        for i in 0..q {
+            greedy.verify_sharded(b, ready, &durs);
+            aware.verify_sharded_queued(b, ready, &durs, q - 1 - i);
+        }
+        assert!(
+            aware.makespan() <= greedy.makespan() + 1e-9,
+            "seed {seed}: queue-aware {} later than greedy {} (q={q}, nrep={nrep})",
+            aware.makespan(),
+            greedy.makespan()
+        );
+        for r in &aware.verifiers {
             assert!(r.busy <= r.free_at + 1e-9, "seed {seed}: overcommitted replica");
         }
     });
