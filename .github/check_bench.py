@@ -4,10 +4,18 @@ committed baseline.
 
 Usage: check_bench.py BENCH_sched.json bench-baseline.json
 
-Two gates:
-  * machine-independent: the incremental solver must keep a
+Gates:
+  * machine-independent: the frontier (incremental) solver must keep a
     >= min_speedup_events_per_s events/sec advantage over the naive
-    from-scratch reference, and both must produce identical schedules;
+    from-scratch reference, and every mode must produce identical
+    schedules (base workload and deep-pool scenario);
+  * machine-independent: at the >=1024-in-flight deep-pool scenario the
+    mean eligibility candidates touched per event must stay sublinear in
+    pool depth (<= max_elig_touch_frac x peak depth) — the O(affected)
+    guarantee;
+  * same-run relative: the frontier path at >=1024 in flight must not be
+    slower than the closure-filtered (PR 4) path at the base >=256-depth
+    workload, within the standard 20% runner-noise allowance;
   * machine-dependent (armed once the baseline records events_per_s for
     this runner class): absolute events/sec must not regress > 20%.
 """
@@ -22,13 +30,45 @@ def main() -> None:
         base = json.load(f)
 
     if not cur["schedule_identical"]:
-        sys.exit("incremental schedule diverged from the naive reference")
+        sys.exit("frontier schedule diverged from the closure/naive reference")
 
     speedup = cur["speedup_events_per_s"]
     min_speedup = base.get("min_speedup_events_per_s", 2.0)
     if speedup < min_speedup:
         sys.exit(f"events/sec speedup {speedup:.2f}x below required {min_speedup}x")
     print(f"speedup {speedup:.2f}x >= {min_speedup}x")
+
+    # deep-pool O(affected) gates
+    deep = cur["deep"]
+    if not deep["schedule_identical"]:
+        sys.exit("deep-pool frontier schedule diverged from the closure reference")
+    fr = deep["incremental"]
+    depth = fr["peak_pool_depth"]
+    if depth < 1024:
+        sys.exit(f"deep-pool scenario reached only {depth} in flight (< 1024)")
+    frac = base.get("max_elig_touch_frac", 0.25)
+    touches = fr["elig_touched_per_event"]
+    if touches > frac * depth:
+        sys.exit(
+            f"eligibility touches/event {touches:.1f} superlinear: "
+            f"> {frac} x depth {depth}"
+        )
+    print(
+        f"deep pool: depth {depth}, {touches:.1f} elig touches/ev "
+        f"<= {frac} x depth"
+    )
+    closure_base = cur["closure"]["events_per_s"]
+    deep_ev = fr["events_per_s"]
+    if deep_ev < 0.8 * closure_base:
+        sys.exit(
+            f"frontier at depth {depth} ({deep_ev:.0f} ev/s) slower than the "
+            f"closure path at the base workload ({closure_base:.0f} ev/s) "
+            "beyond the 20% noise allowance"
+        )
+    print(
+        f"frontier at depth {depth}: {deep_ev:.0f} ev/s vs closure base "
+        f"{closure_base:.0f} ev/s"
+    )
 
     baseline_ev = base.get("events_per_s")
     cur_ev = cur["incremental"]["events_per_s"]

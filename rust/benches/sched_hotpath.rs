@@ -1,6 +1,7 @@
-//! Bench: the Eq. 8 scheduler hot path in isolation — the incremental
-//! persistent-pool solver vs the naive from-scratch reference at several
-//! pool depths, the closed-form `trim_gammas`, and candidate-pool churn.
+//! Bench: the Eq. 8 scheduler hot path in isolation — the node-indexed
+//! frontier solver vs the closure-filtered sweep vs the naive
+//! from-scratch reference at several pool depths, the closed-form
+//! `trim_gammas`, candidate-pool churn, and eligibility-index flips.
 //! The full event-loop comparison (events/sec, BENCH_sched.json) lives in
 //! `cosine bench`; this one isolates the per-invocation solver cost.
 //!
@@ -13,14 +14,16 @@ use cosine::coordinator::scheduler::{
 use cosine::util::rng::Rng;
 use cosine::util::stats;
 
+const NODES: usize = 6;
+
 fn mk_pool(
     n: usize,
     arena: &mut PlacementArena,
     rng: &mut Rng,
 ) -> (CandidatePool, Vec<Candidate>) {
-    let mut pool = CandidatePool::new();
+    let mut pool = CandidatePool::new(NODES);
     let mut avail = Vec::with_capacity(n);
-    let mut nodes: Vec<usize> = (0..6).collect();
+    let mut nodes: Vec<usize> = (0..NODES).collect();
     for i in 0..n {
         rng.partial_shuffle(&mut nodes, 3);
         let pid = arena.intern(&nodes[..3]);
@@ -32,14 +35,14 @@ fn mk_pool(
             arrival_s: rng.f64() * 10.0,
             placement: pid,
         };
-        pool.insert(c);
+        pool.insert(c, arena);
         avail.push(c);
     }
     (pool, avail)
 }
 
 fn main() {
-    let cost = SchedCostModel::synthetic("l", 6);
+    let cost = SchedCostModel::synthetic("l", NODES);
 
     for depth in [64usize, 256, 1024] {
         let mut rng = Rng::seed_from_u64(11);
@@ -47,12 +50,23 @@ fn main() {
         let (pool, avail) = mk_pool(depth, &mut arena, &mut rng);
         let mut sched = Scheduler::new(SchedulerConfig::default(), true);
         let s = stats::bench(
-            &format!("assign_incremental (depth {depth})"),
+            &format!("assign_incremental frontier (depth {depth})"),
             10,
             200,
             || {
-                let a = sched
-                    .assign_incremental(&cost, &arena, &pool, 3, |_| true)
+                let a = sched.assign_incremental(&cost, &arena, &pool, 3).unwrap();
+                assert!(!a.batch.is_empty());
+            },
+        );
+        println!("{}", s.report());
+        let mut sched_cl = Scheduler::new(SchedulerConfig::default(), true);
+        let s = stats::bench(
+            &format!("assign_incremental closure  (depth {depth})"),
+            10,
+            200,
+            || {
+                let a = sched_cl
+                    .assign_incremental_filtered(&cost, &arena, &pool, 3, |_| true)
                     .unwrap();
                 assert!(!a.batch.is_empty());
             },
@@ -60,7 +74,7 @@ fn main() {
         println!("{}", s.report());
         let sched_ref = Scheduler::new(SchedulerConfig::default(), true);
         let s = stats::bench(
-            &format!("assign_reference   (depth {depth})"),
+            &format!("assign_reference            (depth {depth})"),
             10,
             200,
             || {
@@ -86,9 +100,21 @@ fn main() {
     let s = stats::bench("pool remove+reinsert 16 of 256", 10, 500, || {
         pool.remove_batch(&batch);
         for c in &cands {
-            pool.insert(*c);
+            pool.insert(*c, &arena);
         }
         assert_eq!(pool.len(), 256);
+    });
+    println!("{}", s.report());
+
+    // one node busy/free cycle at depth 1024: the O(affected) flip cost a
+    // DraftDone event pays (≈ depth·k/nodes candidates touched per flip)
+    let mut rng = Rng::seed_from_u64(17);
+    let mut arena = PlacementArena::new();
+    let (mut pool, _) = mk_pool(1024, &mut arena, &mut rng);
+    let s = stats::bench("eligibility flip node 0 (depth 1024)", 10, 500, || {
+        pool.on_node_busy(0);
+        pool.on_node_freed(0);
+        assert_eq!(pool.eligible_len(), 1024);
     });
     println!("{}", s.report());
 }

@@ -6,27 +6,57 @@
 //! count per round), so the measured wall time is pure coordinator cost
 //! and the harness runs anywhere, CI included.
 //!
-//! Two modes share one deterministic workload (same seeds, same routing
-//! RNG, same snapshots), so their schedules are bit-identical and the
+//! Three modes share one deterministic workload (same seeds, same routing
+//! RNG, same snapshots), so their schedules are bit-identical and any
 //! events/sec ratio is a pure hot-path speedup:
 //!
-//! * `incremental` — the persistent-pool solver the engine runs
-//!   ([`Scheduler::assign_incremental`]).
-//! * `naive` — the pre-refactor shape: rescan every request per event,
-//!   clone each candidate's routed set, re-sort, and evaluate every
-//!   prefix from scratch ([`Scheduler::assign_reference`]).
+//! * [`BenchMode::Frontier`] — the serving hot path the engine runs:
+//!   node-indexed eligibility fed by resource transitions, swept via
+//!   [`Scheduler::assign_incremental`].  O(affected) per event.
+//! * [`BenchMode::Closure`] — the PR 4 shape: the same persistent pool,
+//!   but every event filters all ready candidates through a
+//!   `nodes_free_at` closure ([`Scheduler::assign_incremental_filtered`]).
+//!   O(in-flight) per event.
+//! * [`BenchMode::Naive`] — the pre-PR 4 shape: rescan every request per
+//!   event, clone each candidate's routed set, re-sort, and evaluate
+//!   every prefix from scratch ([`Scheduler::assign_reference`]).
+//!
+//! Every mode reports an eligibility-work counter: index touches for
+//! `Frontier`, predicate evaluations for `Closure`/`Naive` — the
+//! per-event mean is what the deep-pool CI gate holds sublinear in pool
+//! depth.
 
+use std::cell::Cell;
 use std::collections::{BTreeMap, HashMap};
 use std::time::Instant;
 
 use crate::config::SchedulerConfig;
-use crate::coordinator::engine::{collect_ready, EventKind, EventQueue};
+use crate::coordinator::engine::{chunk_pending_rounds, collect_ready, EventKind, EventQueue};
 use crate::coordinator::pipeline::ResourcePool;
 use crate::coordinator::scheduler::{
     Candidate, CandidatePool, PlacementArena, PlacementId, SchedCostModel, Scheduler,
 };
 use crate::util::json::Json;
 use crate::util::rng::Rng;
+
+/// Which scheduling path the harness drives (shared workload, identical
+/// schedules — see module docs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BenchMode {
+    Naive,
+    Closure,
+    Frontier,
+}
+
+impl BenchMode {
+    pub fn name(&self) -> &'static str {
+        match self {
+            BenchMode::Naive => "naive",
+            BenchMode::Closure => "closure",
+            BenchMode::Frontier => "frontier",
+        }
+    }
+}
 
 /// Synthetic deep-pool workload knobs.
 #[derive(Debug, Clone)]
@@ -49,8 +79,8 @@ pub struct SchedBenchSpec {
 }
 
 impl SchedBenchSpec {
-    /// The acceptance-gate workload: ≥ 256 requests in flight while the
-    /// scheduler runs.
+    /// The PR 4 acceptance-gate workload: ≥ 256 requests in flight while
+    /// the scheduler runs.
     pub fn deep() -> Self {
         Self {
             n_requests: 512,
@@ -75,6 +105,27 @@ impl SchedBenchSpec {
             ..Self::deep()
         }
     }
+
+    /// The O(affected) acceptance-gate workload: ≥ 1024 requests in
+    /// flight across many nodes, where per-event eligibility work — not
+    /// prefix pricing — dominates the closure-filtered path.  Short
+    /// generations keep the event count CI-friendly while the arrival
+    /// flood holds the pool above 1024.
+    pub fn deep1024() -> Self {
+        Self {
+            n_requests: 2048,
+            arrival_dt: 1e-4,
+            prompt_len: 256,
+            gen_len: 8,
+            gamma: 6,
+            accept: 3,
+            n_nodes: 24,
+            n_replicas: 4,
+            k: 2,
+            max_batch: 16,
+            seed: 13,
+        }
+    }
 }
 
 /// One mode's measurements over the shared workload.
@@ -89,8 +140,15 @@ pub struct SchedBenchReport {
     pub events_per_s: f64,
     pub sched_ns_per_event: f64,
     /// candidate-set clones (naive) / pool inserts + interned sets
-    /// (incremental) — a proxy for hot-path heap churn
+    /// (closure, frontier) — a proxy for hot-path heap churn
     pub alloc_proxy: u64,
+    /// eligibility work: index-maintenance candidate touches (frontier)
+    /// or per-candidate freeness evaluations (closure, naive)
+    pub elig_touched: u64,
+    pub elig_touched_per_event: f64,
+    /// wall ns spent applying resource transitions to the eligibility
+    /// index, per event (frontier only; 0 elsewhere)
+    pub index_ns_per_event: f64,
     pub peak_pool_depth: usize,
     pub makespan_s: f64,
     pub throughput_tps: f64,
@@ -117,6 +175,15 @@ impl SchedBenchReport {
             Json::Num(self.sched_ns_per_event),
         );
         m.insert("alloc_proxy".to_string(), Json::Num(self.alloc_proxy as f64));
+        m.insert("elig_touched".to_string(), Json::Num(self.elig_touched as f64));
+        m.insert(
+            "elig_touched_per_event".to_string(),
+            Json::Num(self.elig_touched_per_event),
+        );
+        m.insert(
+            "index_ns_per_event".to_string(),
+            Json::Num(self.index_ns_per_event),
+        );
         m.insert(
             "peak_pool_depth".to_string(),
             Json::Num(self.peak_pool_depth as f64),
@@ -151,9 +218,9 @@ struct SimReq {
     placement: PlacementId,
 }
 
-/// Run the workload through the scheduling stack; `incremental` selects
-/// the solver (and its bookkeeping shape).
-pub fn run_sched_bench(spec: &SchedBenchSpec, incremental: bool) -> SchedBenchReport {
+/// Run the workload through the scheduling stack; `mode` selects the
+/// solver and its bookkeeping shape (see module docs).
+pub fn run_sched_bench(spec: &SchedBenchSpec, mode: BenchMode) -> SchedBenchReport {
     let cost = SchedCostModel::synthetic("l", spec.n_nodes);
     let sched_cfg = SchedulerConfig {
         max_batch: spec.max_batch,
@@ -162,7 +229,14 @@ pub fn run_sched_bench(spec: &SchedBenchSpec, incremental: bool) -> SchedBenchRe
     let mut scheduler = Scheduler::new(sched_cfg, true);
     let mut rng = Rng::seed_from_u64(spec.seed);
     let mut arena = PlacementArena::new();
-    let mut cpool = CandidatePool::new();
+    // the persistent modes maintain the pool (Frontier also drives its
+    // eligibility index); Naive models the pre-pool shape and rebuilds
+    // everything from scratch per event
+    let mut cpool = CandidatePool::new(if mode == BenchMode::Frontier {
+        spec.n_nodes
+    } else {
+        0
+    });
     let mut res = ResourcePool::new(spec.n_nodes, spec.n_replicas.max(1));
     res.allgather_step_s = cost.network.allgather_step_s(spec.max_batch.max(1));
     let mut queue = EventQueue::new();
@@ -183,15 +257,23 @@ pub fn run_sched_bench(spec: &SchedBenchSpec, incremental: bool) -> SchedBenchRe
     }
 
     let mut unfinished = reqs.len();
+    // naive-mode bookkeeping (the pre-pool shape tracks only a count)
     let mut ready_count = 0usize;
     let mut round_id: u64 = 0;
     let mut events: u64 = 0;
     let mut rounds: u64 = 0;
     let mut sched_invocations: u64 = 0;
     let mut sched_ns: u64 = 0;
+    let mut index_ns: u64 = 0;
     let mut alloc_proxy: u64 = 0;
+    // closure/naive eligibility-predicate evaluations (frontier reads the
+    // pool's own touch counter instead)
+    let elig_evals = Cell::new(0u64);
     let mut peak_depth = 0usize;
     let mut newly_ready: Vec<usize> = Vec::new();
+    let mut trans: Vec<(usize, bool)> = Vec::new();
+    let mut pending_durs: Vec<f64> = Vec::new();
+    let mut batch_sorted: Vec<usize> = Vec::new();
     let mut set_buf: Vec<usize> = (0..spec.n_nodes.max(1)).collect();
     let k = spec.k.clamp(1, spec.n_nodes.max(1));
 
@@ -207,7 +289,16 @@ pub fn run_sched_bench(spec: &SchedBenchSpec, incremental: bool) -> SchedBenchRe
             }
         }
 
-        // route the newly-ready requests (same RNG draws in both modes)
+        // frontier: flip exactly the candidates on the nodes whose
+        // reservations ended at this instant
+        if mode == BenchMode::Frontier {
+            let t0 = Instant::now();
+            res.drafter_transitions(now, &mut trans);
+            cpool.apply_transitions(&trans);
+            index_ns += t0.elapsed().as_nanos() as u64;
+        }
+
+        // route the newly-ready requests (same RNG draws in every mode)
         newly_ready.sort_unstable();
         for &ri in &newly_ready {
             let r = &mut reqs[ri];
@@ -216,20 +307,23 @@ pub fn run_sched_bench(spec: &SchedBenchSpec, incremental: bool) -> SchedBenchRe
             }
             rng.partial_shuffle(&mut set_buf, k);
             r.placement = arena.intern(&set_buf[..k]);
-            ready_count += 1;
-            if incremental {
-                cpool.insert(Candidate {
-                    idx: ri,
-                    ctx_len: r.ctx_len,
-                    gamma: spec.gamma.min(r.remaining.max(1)),
-                    ready_at: r.ready_at,
-                    arrival_s: r.arrival_s,
-                    placement: r.placement,
-                });
+            if mode == BenchMode::Naive {
+                ready_count += 1;
+                peak_depth = peak_depth.max(ready_count);
+            } else {
+                cpool.insert(
+                    Candidate {
+                        idx: ri,
+                        ctx_len: r.ctx_len,
+                        gamma: spec.gamma.min(r.remaining.max(1)),
+                        ready_at: r.ready_at,
+                        arrival_s: r.arrival_s,
+                        placement: r.placement,
+                    },
+                    &arena,
+                );
                 alloc_proxy += 1;
                 peak_depth = peak_depth.max(cpool.len());
-            } else {
-                peak_depth = peak_depth.max(ready_count);
             }
         }
 
@@ -238,39 +332,53 @@ pub fn run_sched_bench(spec: &SchedBenchSpec, incremental: bool) -> SchedBenchRe
             if unfinished == 0 {
                 break;
             }
+            // naive mode rebuilds the full ready list per invocation (its
+            // backlog estimate comes from this from-scratch list too)
+            let mut ready_all: Vec<Candidate> = Vec::new();
             let t0 = Instant::now();
-            let assign = if incremental {
-                scheduler.assign_incremental(&cost, &arena, &cpool, k, |cand| {
-                    res.nodes_free_at(arena.get(cand.placement), now)
-                })
-            } else {
-                // pre-refactor hot path: rescan every request, clone each
-                // candidate's routed set, re-sort, evaluate from scratch
-                let mut avail: Vec<Candidate> = Vec::new();
-                let mut cloned_sets: Vec<Vec<usize>> = Vec::new();
-                for (i, r) in reqs.iter().enumerate() {
-                    if r.finish_s.is_some() || r.ready_at > now + 1e-9 {
-                        continue;
-                    }
-                    if !res.nodes_free_at(arena.get(r.placement), now) {
-                        continue;
-                    }
-                    cloned_sets.push(arena.get(r.placement).to_vec());
-                    avail.push(Candidate {
-                        idx: i,
-                        ctx_len: r.ctx_len,
-                        gamma: spec.gamma.min(r.remaining.max(1)),
-                        ready_at: r.ready_at,
-                        arrival_s: r.arrival_s,
-                        placement: r.placement,
-                    });
+            let assign = match mode {
+                BenchMode::Frontier => scheduler.assign_incremental(&cost, &arena, &cpool, k),
+                BenchMode::Closure => {
+                    // PR 4 hot path: sweep every pooled candidate through
+                    // the freeness predicate
+                    scheduler.assign_incremental_filtered(&cost, &arena, &cpool, k, |cand| {
+                        elig_evals.set(elig_evals.get() + 1);
+                        res.nodes_free_at(arena.get(cand.placement), now)
+                    })
                 }
-                alloc_proxy += cloned_sets.len() as u64;
-                std::hint::black_box(&cloned_sets);
-                if avail.is_empty() {
-                    None
-                } else {
-                    Some(scheduler.assign_reference(&cost, &arena, &avail, k))
+                BenchMode::Naive => {
+                    // pre-PR 4 hot path: rescan every request, clone each
+                    // candidate's routed set, re-sort, evaluate from
+                    // scratch
+                    let mut avail: Vec<Candidate> = Vec::new();
+                    let mut cloned_sets: Vec<Vec<usize>> = Vec::new();
+                    for (i, r) in reqs.iter().enumerate() {
+                        if r.finish_s.is_some() || r.ready_at > now + 1e-9 {
+                            continue;
+                        }
+                        let cand = Candidate {
+                            idx: i,
+                            ctx_len: r.ctx_len,
+                            gamma: spec.gamma.min(r.remaining.max(1)),
+                            ready_at: r.ready_at,
+                            arrival_s: r.arrival_s,
+                            placement: r.placement,
+                        };
+                        ready_all.push(cand);
+                        elig_evals.set(elig_evals.get() + 1);
+                        if !res.nodes_free_at(arena.get(r.placement), now) {
+                            continue;
+                        }
+                        cloned_sets.push(arena.get(r.placement).to_vec());
+                        avail.push(cand);
+                    }
+                    alloc_proxy += cloned_sets.len() as u64;
+                    std::hint::black_box(&cloned_sets);
+                    if avail.is_empty() {
+                        None
+                    } else {
+                        Some(scheduler.assign_reference(&cost, &arena, &avail, k))
+                    }
                 }
             };
             sched_invocations += 1;
@@ -306,9 +414,46 @@ pub fn run_sched_bench(spec: &SchedBenchSpec, incremental: bool) -> SchedBenchRe
                         + cost.network.verify_exchange_s(bs, cost.g1)
                 })
                 .collect();
-            let others = ready_count.saturating_sub(b);
-            let pending = others.div_ceil(b.max(1)).min(2 * spec.n_replicas.max(1));
-            let sv = res.verify_sharded_queued(b, draft_end, &durs, pending);
+            batch_sorted.clear();
+            batch_sorted.extend_from_slice(&assign.batch);
+            batch_sorted.sort_unstable();
+            // sharp backlog estimate, identical across modes by
+            // construction (synthetic requests owe no prefill; naive
+            // rebuilds the sorted ready list from scratch, per its shape)
+            let bench_price = |pb: usize, sum_g1: usize, crit: usize, _pf: usize| -> f64 {
+                let g_eff = (sum_g1 as f64 / pb as f64).ceil().max(1.0) as usize;
+                cost.t_verify_s(pb, g_eff, crit) + cost.network.verify_exchange_s(pb, cost.g1)
+            };
+            let max_rounds = 2 * spec.n_replicas.max(1);
+            if mode == BenchMode::Naive {
+                // same (ctx, arrival, idx) order the pool maintains
+                ready_all.sort_by(|a, b| {
+                    a.ctx_len
+                        .cmp(&b.ctx_len)
+                        .then(a.arrival_s.total_cmp(&b.arrival_s))
+                        .then(a.idx.cmp(&b.idx))
+                });
+                chunk_pending_rounds(
+                    ready_all.iter(),
+                    &batch_sorted,
+                    b,
+                    max_rounds,
+                    |_| false,
+                    bench_price,
+                    &mut pending_durs,
+                );
+            } else {
+                chunk_pending_rounds(
+                    cpool.iter_len(),
+                    &batch_sorted,
+                    b,
+                    max_rounds,
+                    |_| false,
+                    bench_price,
+                    &mut pending_durs,
+                );
+            }
+            let sv = res.verify_sharded_queued_with(b, draft_end, &durs, &pending_durs);
             queue.push(sv.end, EventKind::VerifyDone(round_id));
             rounds += 1;
 
@@ -324,16 +469,28 @@ pub fn run_sched_bench(spec: &SchedBenchSpec, incremental: bool) -> SchedBenchRe
                     unfinished -= 1;
                 }
             }
-            ready_count -= b;
-            if incremental {
+            if mode == BenchMode::Naive {
+                ready_count -= b;
+            } else {
                 cpool.remove_batch(&assign.batch);
+            }
+            if mode == BenchMode::Frontier {
+                let t0 = Instant::now();
+                res.drafter_transitions(now, &mut trans);
+                cpool.apply_transitions(&trans);
+                index_ns += t0.elapsed().as_nanos() as u64;
             }
             inflight.insert(round_id, assign.batch);
             round_id += 1;
         }
 
         // safety net, mirroring the engine: ready work + drained queue
-        if queue.is_empty() && unfinished > 0 && ready_count > 0 {
+        let have_ready = if mode == BenchMode::Naive {
+            ready_count > 0
+        } else {
+            !cpool.is_empty()
+        };
+        if queue.is_empty() && unfinished > 0 && have_ready {
             let free_t = res
                 .drafters
                 .iter()
@@ -363,11 +520,15 @@ pub fn run_sched_bench(spec: &SchedBenchSpec, incremental: bool) -> SchedBenchRe
     };
     let tokens = (spec.n_requests * spec.gen_len) as u64;
     let makespan = res.makespan();
-    if incremental {
+    if mode != BenchMode::Naive {
         alloc_proxy += arena.len() as u64;
     }
+    let elig_touched = match mode {
+        BenchMode::Frontier => cpool.elig_touched(),
+        _ => elig_evals.get(),
+    };
     SchedBenchReport {
-        mode: if incremental { "incremental" } else { "naive" }.to_string(),
+        mode: mode.name().to_string(),
         events,
         rounds,
         sched_invocations,
@@ -380,6 +541,17 @@ pub fn run_sched_bench(spec: &SchedBenchSpec, incremental: bool) -> SchedBenchRe
             0.0
         },
         alloc_proxy,
+        elig_touched,
+        elig_touched_per_event: if events > 0 {
+            elig_touched as f64 / events as f64
+        } else {
+            0.0
+        },
+        index_ns_per_event: if events > 0 {
+            index_ns as f64 / events as f64
+        } else {
+            0.0
+        },
         peak_pool_depth: peak_depth,
         makespan_s: makespan,
         throughput_tps: if makespan > 0.0 {
@@ -398,24 +570,48 @@ mod tests {
     use super::*;
 
     #[test]
-    fn incremental_and_naive_produce_identical_schedules() {
+    fn all_three_modes_produce_identical_schedules() {
         let spec = SchedBenchSpec {
             n_requests: 48,
             gen_len: 12,
             ..SchedBenchSpec::deep()
         };
-        let inc = run_sched_bench(&spec, true);
-        let naive = run_sched_bench(&spec, false);
+        let frontier = run_sched_bench(&spec, BenchMode::Frontier);
+        let closure = run_sched_bench(&spec, BenchMode::Closure);
+        let naive = run_sched_bench(&spec, BenchMode::Naive);
+        for other in [&closure, &naive] {
+            assert!(
+                schedule_identical(&frontier, other),
+                "schedules diverged: frontier makespan {} rounds {} vs {} {} {}",
+                frontier.makespan_s,
+                frontier.rounds,
+                other.mode,
+                other.makespan_s,
+                other.rounds
+            );
+        }
+        assert_eq!(frontier.tokens, 48 * 12);
+        assert!(frontier.p99_latency_s >= frontier.p50_latency_s);
+    }
+
+    #[test]
+    fn frontier_and_closure_agree_on_the_deep1024_shape() {
+        // many nodes + k=2, the regime the node index targets
+        let spec = SchedBenchSpec {
+            n_requests: 96,
+            gen_len: 8,
+            ..SchedBenchSpec::deep1024()
+        };
+        let frontier = run_sched_bench(&spec, BenchMode::Frontier);
+        let closure = run_sched_bench(&spec, BenchMode::Closure);
         assert!(
-            schedule_identical(&inc, &naive),
-            "schedules diverged: inc makespan {} rounds {} vs naive {} {}",
-            inc.makespan_s,
-            inc.rounds,
-            naive.makespan_s,
-            naive.rounds
+            schedule_identical(&frontier, &closure),
+            "frontier {} rounds {} vs closure {} {}",
+            frontier.makespan_s,
+            frontier.rounds,
+            closure.makespan_s,
+            closure.rounds
         );
-        assert_eq!(inc.tokens, 48 * 12);
-        assert!(inc.p99_latency_s >= inc.p50_latency_s);
     }
 
     #[test]
@@ -424,10 +620,27 @@ mod tests {
             gen_len: 16,
             ..SchedBenchSpec::deep()
         };
-        let r = run_sched_bench(&spec, true);
+        let r = run_sched_bench(&spec, BenchMode::Frontier);
         assert!(
             r.peak_pool_depth >= 256,
             "deep workload must keep ≥256 requests in flight, got {}",
+            r.peak_pool_depth
+        );
+    }
+
+    #[test]
+    fn deep1024_spec_floods_the_pool_and_touches_sublinearly() {
+        let spec = SchedBenchSpec::deep1024();
+        let r = run_sched_bench(&spec, BenchMode::Frontier);
+        assert!(
+            r.peak_pool_depth >= 1024,
+            "deep1024 workload must keep ≥1024 requests in flight, got {}",
+            r.peak_pool_depth
+        );
+        assert!(
+            r.elig_touched_per_event <= 0.25 * r.peak_pool_depth as f64,
+            "eligibility touches must stay sublinear in pool depth: {}/ev vs depth {}",
+            r.elig_touched_per_event,
             r.peak_pool_depth
         );
     }

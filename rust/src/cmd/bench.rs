@@ -1,17 +1,34 @@
 //! `cosine bench`: scheduler hot-path wall-clock harness.
 //!
-//! Runs the timing-only deep-pool simulation (`bench::sched`) through the
-//! naive from-scratch Eq. 8 solver and the incremental persistent-pool
-//! solver, cross-checks that both produce bit-identical schedules, and
-//! emits `BENCH_sched.json` — events/sec, scheduler ns/event, an
-//! allocations proxy, and the modeled p50/p99 latency + throughput — the
-//! perf trajectory CI gates on (artifact upload + regression check).
-//! Needs no PJRT artifacts.
+//! Runs the timing-only deep-pool simulation (`bench::sched`) through
+//! three scheduling paths on one base workload — the naive from-scratch
+//! Eq. 8 solver, the PR 4 closure-filtered incremental solver, and the
+//! node-indexed frontier solver the engine runs — cross-checks that all
+//! produce bit-identical schedules, then repeats frontier vs closure on a
+//! ≥1024-in-flight deep-pool scenario where per-event eligibility work
+//! dominates.  Emits `BENCH_sched.json` — events/sec, scheduler ns/event,
+//! eligibility touches/event, an allocations proxy, and the modeled
+//! p50/p99 latency + throughput — the perf trajectory CI gates on
+//! (artifact upload + regression check).  Needs no PJRT artifacts.
 
 use anyhow::Result;
-use cosine::bench::sched::{run_sched_bench, schedule_identical, SchedBenchSpec};
+use cosine::bench::sched::{run_sched_bench, schedule_identical, BenchMode, SchedBenchSpec};
 use cosine::util::json::Json;
 use std::collections::BTreeMap;
+
+fn print_report(r: &cosine::bench::sched::SchedBenchReport) {
+    println!(
+        "{:<9} events={:<6} rounds={:<5} peak_depth={:<4} events/s={:>12.0} sched={:>9.0} ns/ev elig={:>7.1}/ev alloc~{}",
+        r.mode,
+        r.events,
+        r.rounds,
+        r.peak_pool_depth,
+        r.events_per_s,
+        r.sched_ns_per_event,
+        r.elig_touched_per_event,
+        r.alloc_proxy,
+    );
+}
 
 pub fn run(out: &str, smoke: bool, requests: Option<usize>) -> Result<()> {
     let mut spec = if smoke {
@@ -33,29 +50,43 @@ pub fn run(out: &str, smoke: bool, requests: Option<usize>) -> Result<()> {
         spec.max_batch,
     );
 
-    let naive = run_sched_bench(&spec, false);
-    let inc = run_sched_bench(&spec, true);
-    for r in [&naive, &inc] {
-        println!(
-            "{:<12} events={:<6} rounds={:<5} peak_depth={:<4} events/s={:>12.0} sched={:>9.0} ns/ev alloc~{}",
-            r.mode,
-            r.events,
-            r.rounds,
-            r.peak_pool_depth,
-            r.events_per_s,
-            r.sched_ns_per_event,
-            r.alloc_proxy,
-        );
+    let naive = run_sched_bench(&spec, BenchMode::Naive);
+    let closure = run_sched_bench(&spec, BenchMode::Closure);
+    let frontier = run_sched_bench(&spec, BenchMode::Frontier);
+    for r in [&naive, &closure, &frontier] {
+        print_report(r);
     }
-    let identical = schedule_identical(&inc, &naive);
+    let identical =
+        schedule_identical(&frontier, &naive) && schedule_identical(&frontier, &closure);
     let speedup = if naive.events_per_s > 0.0 {
-        inc.events_per_s / naive.events_per_s
+        frontier.events_per_s / naive.events_per_s
     } else {
         0.0
     };
     println!(
         "speedup(events/s)={speedup:.2}x schedule_identical={identical} modeled p50/p99={:.2}/{:.2}s thr={:.1} tok/s",
-        inc.p50_latency_s, inc.p99_latency_s, inc.throughput_tps,
+        frontier.p50_latency_s, frontier.p99_latency_s, frontier.throughput_tps,
+    );
+
+    // deep-pool scenario: ≥1024 in flight across many nodes — the regime
+    // where the closure filter pays O(in-flight) per event and the node
+    // index pays O(affected)
+    let deep_spec = SchedBenchSpec::deep1024();
+    println!(
+        "deep-pool scenario: {} requests, nodes={} replicas={} k={}",
+        deep_spec.n_requests, deep_spec.n_nodes, deep_spec.n_replicas, deep_spec.k,
+    );
+    let deep_closure = run_sched_bench(&deep_spec, BenchMode::Closure);
+    let deep_frontier = run_sched_bench(&deep_spec, BenchMode::Frontier);
+    for r in [&deep_closure, &deep_frontier] {
+        print_report(r);
+    }
+    let deep_identical = schedule_identical(&deep_frontier, &deep_closure);
+    println!(
+        "deep schedule_identical={deep_identical} elig-touches/ev {:.1} (depth {}) vs closure evals/ev {:.1}",
+        deep_frontier.elig_touched_per_event,
+        deep_frontier.peak_pool_depth,
+        deep_closure.elig_touched_per_event,
     );
 
     let mut workload = BTreeMap::new();
@@ -66,18 +97,24 @@ pub fn run(out: &str, smoke: bool, requests: Option<usize>) -> Result<()> {
     workload.insert("n_replicas".to_string(), Json::Num(spec.n_replicas as f64));
     workload.insert("max_batch".to_string(), Json::Num(spec.max_batch as f64));
     workload.insert("smoke".to_string(), Json::Bool(smoke));
+    let mut deep = BTreeMap::new();
+    deep.insert("closure".to_string(), deep_closure.to_json());
+    deep.insert("incremental".to_string(), deep_frontier.to_json());
+    deep.insert("schedule_identical".to_string(), Json::Bool(deep_identical));
     let mut m = BTreeMap::new();
-    m.insert("schema".to_string(), Json::Num(1.0));
+    m.insert("schema".to_string(), Json::Num(2.0));
     m.insert("workload".to_string(), Json::Obj(workload));
-    m.insert("incremental".to_string(), inc.to_json());
+    m.insert("incremental".to_string(), frontier.to_json());
+    m.insert("closure".to_string(), closure.to_json());
     m.insert("naive".to_string(), naive.to_json());
+    m.insert("deep".to_string(), Json::Obj(deep));
     m.insert("speedup_events_per_s".to_string(), Json::Num(speedup));
     m.insert("schedule_identical".to_string(), Json::Bool(identical));
     std::fs::write(out, Json::Obj(m).to_string())?;
     println!("wrote {out}");
     anyhow::ensure!(
-        identical,
-        "incremental schedule diverged from the naive reference"
+        identical && deep_identical,
+        "frontier schedule diverged from the closure/naive reference"
     );
     Ok(())
 }

@@ -11,12 +11,21 @@
 //! batch B overlaps verification of batch A *per replica*, and requests
 //! with disjoint routed drafter sets overlap their draft phases.
 //!
-//! Scheduling is *incremental*: the engine keeps a persistent, sorted
-//! [`CandidatePool`] that event payloads update in place — an `Arrival`
-//! inserts its request, a `VerifyDone` re-inserts its round's requests
-//! (re-routed against fresh backlogs), and a dispatch removes its batch —
-//! so no event re-scans the request pool, re-sorts the frontier, or
-//! re-clones routed sets.  Placement is per request and *interned*: the
+//! Scheduling is *incremental* and events are *O(affected)*: the engine
+//! keeps a persistent, sorted [`CandidatePool`] that event payloads
+//! update in place — an `Arrival` inserts its request, a `VerifyDone`
+//! re-inserts its round's requests (re-routed against fresh backlogs),
+//! and a dispatch removes its batch — so no event re-scans the request
+//! pool, re-sorts the frontier, or re-clones routed sets.  The pool also
+//! indexes candidates by routed node: at each event instant the engine
+//! asks the resource pool which drafter nodes changed busy/free state
+//! ([`ResourcePool::drafter_transitions`], O(nodes)) and feeds the pairs
+//! to the index, which flips eligibility for exactly the candidates
+//! placed on those nodes — a `DraftDone` on node d touches the
+//! candidates on d, never the whole in-flight set, and the scheduler
+//! sweeps a maintained eligible frontier instead of filtering the pool
+//! with a per-candidate freeness closure.  Placement is per request and
+//! *interned*: the
 //! router's drafter set is resolved once per round (load-aware,
 //! backlog-penalized), interned as a [`PlacementId`] into a
 //! [`PlacementArena`], carried as a `Copy` handle through candidates and
@@ -194,6 +203,49 @@ pub(crate) fn collect_ready(
     }
 }
 
+/// Chunk the ready candidates — minus the current batch, which is still
+/// pooled at estimate time — into `bsz`-sized waiting verify rounds and
+/// price each one: the shared scaffolding behind the sharp queue-aware
+/// backlog estimate (speculative engine, vLLM baseline, and
+/// `bench::sched` all feed `ResourcePool::verify_sharded_queued_with`
+/// through this fold).  `needs_prefill` reports whether a pool index
+/// still owes its target prefill; `price` maps one chunk's (size,
+/// Σ(γ+1), critical ctx, outstanding prefills) to its modeled unsharded
+/// duration.  Stops after `max_rounds` chunks, so the scan is
+/// O(batch × rounds), not O(pool).
+pub(crate) fn chunk_pending_rounds<'a>(
+    cands: impl Iterator<Item = &'a Candidate>,
+    batch_sorted: &[usize],
+    bsz: usize,
+    max_rounds: usize,
+    mut needs_prefill: impl FnMut(usize) -> bool,
+    mut price: impl FnMut(usize, usize, usize, usize) -> f64,
+    out: &mut Vec<f64>,
+) {
+    out.clear();
+    let bsz = bsz.max(1);
+    let (mut cb, mut sum_g1, mut crit, mut pf) = (0usize, 0usize, 1usize, 0usize);
+    for c in cands {
+        if out.len() >= max_rounds {
+            return;
+        }
+        if batch_sorted.binary_search(&c.idx).is_ok() {
+            continue;
+        }
+        cb += 1;
+        sum_g1 += c.gamma + 1;
+        crit = crit.max(c.ctx_len);
+        pf += usize::from(needs_prefill(c.idx));
+        if cb == bsz {
+            out.push(price(cb, sum_g1, crit, pf));
+            (cb, sum_g1, crit, pf) = (0, 0, 1, 0);
+        }
+    }
+    if cb > 0 && out.len() < max_rounds {
+        out.push(price(cb, sum_g1, crit, pf));
+    }
+}
+
 /// Run any speculative strategy over a trace on the event engine.
 pub fn run_speculative(
     ctx: &ServingContext,
@@ -230,9 +282,12 @@ pub fn run_speculative(
     let mut queue = EventQueue::new();
     let mut round_id: u64 = 0;
 
-    // persistent scheduling state, updated per event instead of rebuilt
+    // persistent scheduling state, updated per event instead of rebuilt.
+    // The candidate pool indexes candidates by routed node (coupled
+    // strategies never occupy the cluster, so their pool indexes nothing
+    // and every candidate stays eligible).
     let mut arena = PlacementArena::new();
-    let mut cpool = CandidatePool::new();
+    let mut cpool = CandidatePool::new(if opts.decoupled { n_nodes } else { 0 });
     let mut inflight: HashMap<u64, Vec<usize>> = HashMap::new();
     let mut unfinished = pool.unfinished();
     let mut stats = EngineStats::default();
@@ -240,6 +295,10 @@ pub fn run_speculative(
     let mut newly_ready: Vec<usize> = Vec::new();
     let mut backlog: Vec<f64> = Vec::new();
     let mut route_scratch: Vec<usize> = Vec::new();
+    let mut trans: Vec<(usize, bool)> = Vec::new();
+    let mut pending_durs: Vec<f64> = Vec::new();
+    let mut batch_sorted: Vec<usize> = Vec::new();
+    let mut priors_scratch: Vec<f64> = Vec::new();
 
     for (i, r) in pool.requests.iter().enumerate() {
         queue.push(r.arrival_s, EventKind::Arrival(i));
@@ -258,6 +317,17 @@ pub fn run_speculative(
                 stats.events_coalesced += 1;
                 collect_ready(k2, &mut inflight, &mut newly_ready);
             }
+        }
+
+        // O(affected) eligibility: ask the resource pool which drafter
+        // nodes changed state at this instant (the DraftDone reservations
+        // that just ended) and flip exactly the candidates indexed on
+        // them — no per-candidate freeness predicate runs anywhere.
+        if opts.decoupled {
+            let t_idx = Instant::now();
+            res.drafter_transitions(now, &mut trans);
+            cpool.apply_transitions(&trans);
+            stats.index_wall_ns += t_idx.elapsed().as_nanos() as u64;
         }
 
         // Resolve placement for the requests that became ready at this
@@ -285,14 +355,17 @@ pub fn run_speculative(
                     arena.intern(&route_scratch)
                 };
                 r.routed_set = Some(set_id);
-                cpool.insert(Candidate {
-                    idx: ri,
-                    ctx_len: r.prompt.len() + r.generated.len(),
-                    gamma: r.gamma.min(r.remaining().max(1)).min(c.gamma_max),
-                    ready_at: r.ready_at,
-                    arrival_s: r.arrival_s,
-                    placement: if opts.decoupled { set_id } else { PlacementId::EMPTY },
-                });
+                cpool.insert(
+                    Candidate {
+                        idx: ri,
+                        ctx_len: r.prompt.len() + r.generated.len(),
+                        gamma: r.gamma.min(r.remaining().max(1)).min(c.gamma_max),
+                        ready_at: r.ready_at,
+                        arrival_s: r.arrival_s,
+                        placement: if opts.decoupled { set_id } else { PlacementId::EMPTY },
+                    },
+                    &arena,
+                );
             }
         }
 
@@ -308,14 +381,13 @@ pub fn run_speculative(
                 break;
             }
 
-            // One incremental sweep over the persistent pool; eligibility
-            // (is the candidate's routed node set free *right now*?) is
-            // the only per-event predicate.  A request on busy nodes
-            // wakes at those nodes' DraftDone events.
+            // One incremental sweep over the pool's eligible frontier —
+            // the node-indexed set of candidates whose routed nodes are
+            // free right now, maintained by the transitions above instead
+            // of a per-candidate predicate.  A request on busy nodes
+            // re-surfaces at those nodes' DraftDone transitions.
             let t_sched = Instant::now();
-            let assign = scheduler.assign_incremental(&cost, &arena, &cpool, k_now, |cand| {
-                !opts.decoupled || res.nodes_free_at(arena.get(cand.placement), now)
-            });
+            let assign = scheduler.assign_incremental(&cost, &arena, &cpool, k_now);
             stats.sched_invocations += 1;
             stats.sched_wall_ns += t_sched.elapsed().as_nanos() as u64;
             let Some(assign) = assign else {
@@ -369,14 +441,17 @@ pub fn run_speculative(
                     arena.intern(&[(req.id as usize) % n_drafters])
                 };
                 let set = arena.get(pid);
-                let priors: Vec<f64> = set.iter().map(|&d| req.routing[d]).collect();
+                // reused scratch: the per-request priors never allocate on
+                // the hot path
+                priors_scratch.clear();
+                priors_scratch.extend(set.iter().map(|&d| req.routing[d]));
                 let round = fusion::run_draft_round(
                     ctx,
                     req,
                     set,
                     gamma,
                     mode,
-                    if opts.routing { Some(&priors) } else { None },
+                    if opts.routing { Some(&priors_scratch) } else { None },
                 )?;
                 per_req.push(PerReq {
                     ri,
@@ -544,14 +619,36 @@ pub fn run_speculative(
                     })
                     .collect();
                 let sv = if opts.sharded_verify {
-                    // queue-aware: tell the shard policy how many more
-                    // verify rounds the remaining ready candidates imply,
-                    // so it can leave replicas free to pipeline them
-                    let others = cpool.len().saturating_sub(assign.batch.len());
-                    let pending = others
-                        .div_ceil(assign.batch.len().max(1))
-                        .min(2 * n_replicas);
-                    res.verify_sharded_queued(b, draft_end, &durs, pending)
+                    // queue-aware with a *sharp* backlog estimate: chunk
+                    // the remaining ready candidates (shortest-first, the
+                    // frontier the next batches will actually come from)
+                    // into batch-sized waiting rounds and price each from
+                    // its own γ and context, instead of assuming every
+                    // waiting round costs what this one costs.  Bounded
+                    // work: the scan stops after 2×replicas rounds.
+                    batch_sorted.clear();
+                    batch_sorted.extend_from_slice(&assign.batch);
+                    batch_sorted.sort_unstable();
+                    chunk_pending_rounds(
+                        cpool.iter_len(),
+                        &batch_sorted,
+                        assign.batch.len(),
+                        2 * n_replicas,
+                        |ri| pool.requests[ri].target_state.is_none(),
+                        |pb, sum_g1, crit, prefills| {
+                            let g_eff = (sum_g1 as f64 / pb as f64).ceil().max(1.0) as usize;
+                            let g_p = if opts.tree { g_eff * k_now } else { g_eff };
+                            let mut t = ctx.t_verify_s(pb, g_p, crit);
+                            if prefills > 0 {
+                                // unserved waiting requests pay their target
+                                // prefill, exactly as this round's `durs` do
+                                t += ctx.t_target_prefill_s(prefills, c.prompt_len);
+                            }
+                            t + ctx.network.verify_exchange_s(pb, c.g1)
+                        },
+                        &mut pending_durs,
+                    );
+                    res.verify_sharded_queued_with(b, draft_end, &durs, &pending_durs)
                 } else {
                     let (_, start, end) = res.verify(draft_end, durs[0]);
                     ShardedVerify {
@@ -641,8 +738,17 @@ pub fn run_speculative(
                 }
             }
             // the batch leaves the candidate pool until its VerifyDone
-            // re-inserts the survivors
+            // re-inserts the survivors, and the nodes its draft
+            // reservations just occupied report busy — flipping exactly
+            // the still-pooled candidates placed on them before the next
+            // sweep at this instant
             cpool.remove_batch(&assign.batch);
+            if opts.decoupled {
+                let t_idx = Instant::now();
+                res.drafter_transitions(now, &mut trans);
+                cpool.apply_transitions(&trans);
+                stats.index_wall_ns += t_idx.elapsed().as_nanos() as u64;
+            }
             inflight.insert(rid, assign.batch);
         }
 
@@ -675,6 +781,7 @@ pub fn run_speculative(
         .engine
         .exec_wall_ns
         .load(std::sync::atomic::Ordering::Relaxed);
+    stats.elig_touched = cpool.elig_touched();
     Ok(RunReport::assemble(
         &opts.name,
         &ctx.cfg.pair,
@@ -727,12 +834,15 @@ pub fn run_vllm(ctx: &ServingContext, trace: &Trace) -> Result<RunReport> {
     let mut round_id: u64 = 0;
 
     // persistent FIFO candidate pool + in-flight rounds (same event-driven
-    // bookkeeping as the speculative engine, minus routing)
-    let mut cpool = CandidatePool::new();
+    // bookkeeping as the speculative engine, minus routing; no drafter
+    // nodes, so every candidate is always eligible)
+    let arena = PlacementArena::new();
+    let mut cpool = CandidatePool::new(0);
     let mut inflight: HashMap<u64, Vec<usize>> = HashMap::new();
     let mut unfinished = pool.unfinished();
     let mut stats = EngineStats::default();
     let mut newly_ready: Vec<usize> = Vec::new();
+    let mut pending_durs: Vec<f64> = Vec::new();
 
     for (i, r) in pool.requests.iter().enumerate() {
         queue.push(r.arrival_s, EventKind::Arrival(i));
@@ -755,14 +865,17 @@ pub fn run_vllm(ctx: &ServingContext, trace: &Trace) -> Result<RunReport> {
             if r.is_finished() {
                 continue;
             }
-            cpool.insert(Candidate {
-                idx: ri,
-                ctx_len: r.prompt.len() + r.generated.len(),
-                gamma: 1,
-                ready_at: r.ready_at,
-                arrival_s: r.arrival_s,
-                placement: PlacementId::EMPTY,
-            });
+            cpool.insert(
+                Candidate {
+                    idx: ri,
+                    ctx_len: r.prompt.len() + r.generated.len(),
+                    gamma: 1,
+                    ready_at: r.ready_at,
+                    arrival_s: r.arrival_s,
+                    placement: PlacementId::EMPTY,
+                },
+                &arena,
+            );
         }
 
         loop {
@@ -811,9 +924,26 @@ pub fn run_vllm(ctx: &ServingContext, trace: &Trace) -> Result<RunReport> {
                 .iter()
                 .map(|&i| pool.requests[i].ready_at)
                 .fold(0.0f64, f64::max);
-            let others = cpool.len().saturating_sub(b);
-            let pending = others.div_ceil(b.max(1)).min(2 * n_replicas);
-            let sv = res.verify_sharded_queued(b, ready, &durs, pending);
+            // sharp backlog estimate: the batch is the FIFO head, so the
+            // waiting rounds are exactly the next arrival-order chunks —
+            // price each from its own contexts and outstanding prefills
+            // (bounded at 2×replicas; skip(b) already excludes the batch)
+            chunk_pending_rounds(
+                cpool.iter_arrival().skip(b),
+                &[],
+                b,
+                2 * n_replicas,
+                |ri| pool.requests[ri].target_state.is_none(),
+                |pb, _sum_g1, crit, prefills| {
+                    let mut t = ctx.t_target_decode_s(pb, 1, crit);
+                    if prefills > 0 {
+                        t += ctx.t_target_prefill_s(prefills, c.prompt_len);
+                    }
+                    t
+                },
+                &mut pending_durs,
+            );
+            let sv = res.verify_sharded_queued_with(b, ready, &durs, &pending_durs);
             queue.push(sv.end, EventKind::VerifyDone(round_id));
             let rid = round_id;
             round_id += 1;
@@ -843,6 +973,7 @@ pub fn run_vllm(ctx: &ServingContext, trace: &Trace) -> Result<RunReport> {
         .engine
         .exec_wall_ns
         .load(std::sync::atomic::Ordering::Relaxed);
+    stats.elig_touched = cpool.elig_touched();
     Ok(RunReport::assemble(
         "vllm",
         &ctx.cfg.pair,

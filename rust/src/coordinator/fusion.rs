@@ -127,12 +127,77 @@ pub fn run_draft_round(
     let mut fused_tokens = Vec::with_capacity(gamma);
     let mut fused_confs = Vec::with_capacity(gamma);
 
+    // Hoist the per-token `req.drafters[&d]` map lookups out of the γ
+    // loop: each participant's sync state leaves the request's map once,
+    // the round runs against the local slots, and the states go back
+    // before any error propagates — the map is touched 2·k times per
+    // round instead of 2·k·γ times.
+    let mut syncs: Vec<DrafterSync> = drafter_set
+        .iter()
+        .map(|&d| {
+            req.drafters
+                .remove(&d)
+                .expect("catch_up populated the drafter sync")
+        })
+        .collect();
+    let looped = draft_loop(
+        ctx,
+        drafter_set,
+        &mut syncs,
+        gamma,
+        mode,
+        priors,
+        &mut paths,
+        &mut fused_tokens,
+        &mut fused_confs,
+        &mut wall,
+    );
+    for (&d, sync) in drafter_set.iter().zip(syncs) {
+        req.drafters.insert(d, sync);
+    }
+    looped?;
+
+    let main = match mode {
+        DraftMode::Fused => DraftPath {
+            drafter: usize::MAX,
+            tokens: fused_tokens,
+            confs: fused_confs,
+        },
+        // Independent mode: primary path is the first drafter's own path;
+        // baselines pick their own winner from `paths`
+        DraftMode::Independent => paths[0].clone(),
+    };
+
+    Ok(DraftRound {
+        main,
+        paths,
+        wall,
+        catchup_steps,
+    })
+}
+
+/// The γ-iteration inner loop of [`run_draft_round`], operating on the
+/// hoisted [`DrafterSync`] slots (`syncs[pi]` belongs to
+/// `drafter_set[pi]`) so the hot path never touches the request's drafter
+/// map per token.
+#[allow(clippy::too_many_arguments)]
+fn draft_loop(
+    ctx: &ServingContext,
+    drafter_set: &[usize],
+    syncs: &mut [DrafterSync],
+    gamma: usize,
+    mode: DraftMode,
+    priors: Option<&[f64]>,
+    paths: &mut [DraftPath],
+    fused_tokens: &mut Vec<i32>,
+    fused_confs: &mut Vec<f32>,
+    wall: &mut Duration,
+) -> Result<()> {
     for i in 0..gamma {
         // gather proposals (Alg. 1 TokenFusion: aggregate + argmax P(x),
         // reliability-weighted by the routing prior)
         let mut best: Option<(f64, f32, i32)> = None;
-        for (pi, &d) in drafter_set.iter().enumerate() {
-            let sync = &req.drafters[&d];
+        for (pi, sync) in syncs.iter().enumerate() {
             let logits = sync.logits.as_ref().expect("fresh logits");
             let (tok, p) = top_prob(logits);
             paths[pi].tokens.push(tok);
@@ -155,31 +220,14 @@ pub fn run_draft_round(
                     DraftMode::Independent => paths[pi].tokens[i],
                 };
                 let model = &ctx.drafters[d];
-                let sync = req.drafters.get_mut(&d).unwrap();
+                let sync = &mut syncs[pi];
                 let out = model.decode(&mut sync.state, &[feed])?;
-                wall += out.wall;
+                *wall += out.wall;
                 sync.logits = Some(out.logits);
             }
         }
     }
-
-    let main = match mode {
-        DraftMode::Fused => DraftPath {
-            drafter: usize::MAX,
-            tokens: fused_tokens,
-            confs: fused_confs,
-        },
-        // Independent mode: primary path is the first drafter's own path;
-        // baselines pick their own winner from `paths`
-        DraftMode::Independent => paths[0].clone(),
-    };
-
-    Ok(DraftRound {
-        main,
-        paths,
-        wall,
-        catchup_steps,
-    })
+    Ok(())
 }
 
 /// After a verify outcome commits `accepted` drafts (+bonus), mark which

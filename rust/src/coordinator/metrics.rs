@@ -27,6 +27,14 @@ pub struct EngineStats {
     pub sched_invocations: u64,
     /// real wall-clock nanoseconds spent inside the scheduler
     pub sched_wall_ns: u64,
+    /// candidates touched by node→candidate eligibility-index maintenance
+    /// (pool inserts + busy/free flips) — the O(affected) work that
+    /// replaced the per-event O(in-flight) eligibility filter; `cosine
+    /// bench` gates its per-event mean sublinear in pool depth
+    pub elig_touched: u64,
+    /// real wall-clock nanoseconds spent applying resource transitions to
+    /// the eligibility index (flip + dispatch maintenance)
+    pub index_wall_ns: u64,
 }
 
 #[derive(Debug, Clone, Default)]
@@ -209,6 +217,27 @@ impl RunReport {
         }
     }
 
+    /// Mean candidates touched by eligibility-index maintenance per event
+    /// — the per-event cost the node index keeps O(affected) while the old
+    /// closure filter paid O(in-flight).
+    pub fn elig_touched_per_event(&self) -> f64 {
+        if self.engine.events_processed == 0 {
+            0.0
+        } else {
+            self.engine.elig_touched as f64 / self.engine.events_processed as f64
+        }
+    }
+
+    /// Mean wall nanoseconds spent applying resource transitions to the
+    /// eligibility index, per event.
+    pub fn index_ns_per_event(&self) -> f64 {
+        if self.engine.events_processed == 0 {
+            0.0
+        } else {
+            self.engine.index_wall_ns as f64 / self.engine.events_processed as f64
+        }
+    }
+
     /// Mean replicas per verify round (1.0 = never sharded, 0 = no verify
     /// rounds ran).
     pub fn mean_verify_shards(&self) -> f64 {
@@ -250,7 +279,7 @@ impl RunReport {
 
     pub fn summary_row(&self) -> String {
         format!(
-            "{:<10} pair={} n={:<3} tok={:<6} lat={:>8.1} ms/tok thr={:>8.1} tok/s acc={:>4.2} cost/tok=${:.6} idle(srv)={:.0}% qwait={:.2}s shards={:.2} sched={:.0}ns/ev wall={:.1}s",
+            "{:<10} pair={} n={:<3} tok={:<6} lat={:>8.1} ms/tok thr={:>8.1} tok/s acc={:>4.2} cost/tok=${:.6} idle(srv)={:.0}% qwait={:.2}s shards={:.2} sched={:.0}ns/ev elig={:.1}/ev idx={:.0}ns/ev wall={:.1}s",
             self.strategy,
             self.pair,
             self.n_requests,
@@ -263,6 +292,8 @@ impl RunReport {
             self.verify_queue_delay_s,
             self.mean_verify_shards(),
             self.sched_ns_per_event(),
+            self.elig_touched_per_event(),
+            self.index_ns_per_event(),
             self.wall_s,
         )
     }

@@ -155,6 +155,14 @@ pub struct ResourcePool {
     /// scratch replica timeline for the queue-aware shard lookahead
     /// (reused across rounds; never observable from outside)
     sim_scratch: Vec<f64>,
+    /// last per-drafter free/busy states reported by
+    /// [`Self::drafter_transitions`] (free = true); lets the engine learn
+    /// *which* nodes changed state at an event in O(nodes) instead of
+    /// re-testing every candidate's set
+    notified_free: Vec<bool>,
+    /// scratch backlog-durations buffer for the count-based
+    /// [`Self::verify_sharded_queued`] wrapper
+    pending_scratch: Vec<f64>,
 }
 
 impl ResourcePool {
@@ -174,6 +182,8 @@ impl ResourcePool {
             verify_shard_saved_s: 0.0,
             verify_round_time_s: 0.0,
             sim_scratch: Vec::new(),
+            notified_free: vec![true; n_drafters],
+            pending_scratch: Vec::new(),
         }
     }
 
@@ -214,6 +224,26 @@ impl ResourcePool {
         }
         set.iter()
             .all(|&i| self.drafters.get(i).is_none_or(|r| r.free_at <= t + 1e-9))
+    }
+
+    /// Report which drafter nodes changed busy/free state since the last
+    /// call, as seen at virtual time `now` (free = `free_at <= now + 1e-9`,
+    /// the same ε as [`Self::nodes_free_at`]).  O(nodes), no allocation
+    /// beyond `out`'s reuse.  The engine calls this when an event instant
+    /// opens (nodes whose reservations just ended report free) and after
+    /// dispatching a batch (the reserved nodes report busy), and feeds the
+    /// pairs to the candidate pool's node→candidate eligibility index —
+    /// so per-event eligibility work is O(affected candidates), not
+    /// O(in-flight).
+    pub fn drafter_transitions(&mut self, now: f64, out: &mut Vec<(usize, bool)>) {
+        out.clear();
+        for (d, r) in self.drafters.iter().enumerate() {
+            let free = r.free_at <= now + 1e-9;
+            if free != self.notified_free[d] {
+                self.notified_free[d] = free;
+                out.push((d, free));
+            }
+        }
     }
 
     /// Per-node backlog at virtual time `t`: how long each drafter node is
@@ -330,25 +360,16 @@ impl ResourcePool {
         let t0 = self.verify_t0(ready_at);
         let n_free = self.free_replicas_at(t0);
         // shard count minimizing the modeled round duration (latency-greedy)
-        let (s_best, d_best) = shard_choice(n_free, b, durs, self.allgather_step_s);
+        let (s_best, d_best) = shard_choice(n_free, b, durs, self.allgather_step_s, 1.0);
         self.dispatch_shards(ready_at, t0, s_best, d_best, durs)
     }
 
-    /// Queue-aware sharding: like [`Self::verify_sharded`], but told how
-    /// many *other* verify rounds are ready behind this one
-    /// (`pending_rounds`).  Grabbing every free replica is latency-greedy
-    /// for one round, yet when a backlog is waiting it can beat the
-    /// backlog's total makespan to pipeline whole rounds across replicas
-    /// instead.  The policy simulates each candidate shard count (the
-    /// greedy choice, an even split leaving replicas for the backlog, and
-    /// whole-round pipelining) followed by a greedy dispatch of the
-    /// pending rounds on a scratch copy of the replica timeline, and keeps
-    /// the one with the earliest simulated completion — preferring the
-    /// greedy choice on ties, so with `pending_rounds == 0` (or one
-    /// replica) this reduces exactly to [`Self::verify_sharded`].  For a
-    /// backlog of identical rounds the simulation is exact, which is why
-    /// the queue-aware dispatch can never finish a backlog later than the
-    /// latency-greedy one (property-tested).
+    /// Queue-aware sharding with an *identical-rounds* backlog estimate:
+    /// `pending_rounds` waiting rounds, each assumed to cost exactly what
+    /// this round costs.  Kept as the coarse entry point (and the shape
+    /// the never-later-than-greedy property is stated over); delegates to
+    /// [`Self::verify_sharded_queued_with`] with a constant-duration
+    /// backlog, which it matches bit-for-bit.
     pub fn verify_sharded_queued(
         &mut self,
         b: usize,
@@ -357,15 +378,50 @@ impl ResourcePool {
         pending_rounds: usize,
     ) -> ShardedVerify {
         assert!(!durs.is_empty(), "durs must model at least the unsharded duration");
+        let mut pend = std::mem::take(&mut self.pending_scratch);
+        pend.clear();
+        pend.resize(pending_rounds, durs[0]);
+        let sv = self.verify_sharded_queued_with(b, ready_at, durs, &pend);
+        self.pending_scratch = pend;
+        sv
+    }
+
+    /// Queue-aware sharding: like [`Self::verify_sharded`], but told the
+    /// modeled unsharded durations of the *other* verify rounds ready
+    /// behind this one (`pending_durs`, one entry per waiting round — the
+    /// engine prices them from the actual waiting candidates' γ and
+    /// context instead of assuming identical rounds).  Grabbing every free
+    /// replica is latency-greedy for one round, yet when a backlog is
+    /// waiting it can beat the backlog's total makespan to pipeline whole
+    /// rounds across replicas instead.  The policy simulates each
+    /// candidate shard count (the greedy choice, an even split leaving
+    /// replicas for the backlog, and whole-round pipelining) followed by a
+    /// greedy dispatch of the pending rounds — each at its own duration,
+    /// scaled over this round's shard profile — on a scratch copy of the
+    /// replica timeline, and keeps the one with the earliest simulated
+    /// completion, preferring the greedy choice on ties.  With an empty
+    /// backlog (or one replica) this reduces exactly to
+    /// [`Self::verify_sharded`]; for a backlog of identical rounds the
+    /// simulation is exact, which is why the queue-aware dispatch can
+    /// never finish such a backlog later than the latency-greedy one
+    /// (property-tested).
+    pub fn verify_sharded_queued_with(
+        &mut self,
+        b: usize,
+        ready_at: f64,
+        durs: &[f64],
+        pending_durs: &[f64],
+    ) -> ShardedVerify {
+        assert!(!durs.is_empty(), "durs must model at least the unsharded duration");
         let t0 = self.verify_t0(ready_at);
         let n_free = self.free_replicas_at(t0);
         let ag = self.allgather_step_s;
-        let (s_greedy, d_greedy) = shard_choice(n_free, b, durs, ag);
-        if pending_rounds == 0 || s_greedy <= 1 {
+        let (s_greedy, d_greedy) = shard_choice(n_free, b, durs, ag, 1.0);
+        if pending_durs.is_empty() || s_greedy <= 1 {
             return self.dispatch_shards(ready_at, t0, s_greedy, d_greedy, durs);
         }
         let s_max = n_free.min(b.max(1)).min(durs.len());
-        let s_even = (n_free / (pending_rounds + 1)).clamp(1, s_max);
+        let s_even = (n_free / (pending_durs.len() + 1)).clamp(1, s_max);
         let cands = [s_greedy, s_even, 1];
         let mut best_s = s_greedy;
         let mut best_mk = f64::INFINITY;
@@ -375,9 +431,12 @@ impl ResourcePool {
             }
             self.sim_scratch.clear();
             self.sim_scratch.extend(self.verifiers.iter().map(|r| r.free_at));
-            sim_dispatch(&mut self.sim_scratch, b, ready_at, durs, ag, Some(s));
-            for _ in 0..pending_rounds {
-                sim_dispatch(&mut self.sim_scratch, b, ready_at, durs, ag, None);
+            sim_dispatch(&mut self.sim_scratch, b, ready_at, durs, ag, 1.0, Some(s));
+            for &pd in pending_durs {
+                // a waiting round keeps this round's relative shard
+                // speedups but its own absolute magnitude
+                let scale = if durs[0] > 0.0 { pd / durs[0] } else { 1.0 };
+                sim_dispatch(&mut self.sim_scratch, b, ready_at, durs, ag, scale, None);
             }
             let mk = self
                 .sim_scratch
@@ -531,15 +590,23 @@ impl ResourcePool {
 }
 
 /// Latency-greedy shard count over `n_free` replicas: the `s` minimizing
-/// the caller-modeled round duration `durs[s-1]` plus one all-gather step
-/// per extra shard, preferring fewer shards on (near-)ties.  Shared by the
-/// real dispatch and the queue-aware lookahead so both price identically.
-fn shard_choice(n_free: usize, b: usize, durs: &[f64], allgather_step_s: f64) -> (usize, f64) {
+/// the caller-modeled round duration `durs[s-1] * scale` plus one
+/// all-gather step per extra shard, preferring fewer shards on
+/// (near-)ties.  Shared by the real dispatch (`scale == 1.0`) and the
+/// queue-aware lookahead (which re-scales the profile to each waiting
+/// round's own magnitude) so both price identically.
+fn shard_choice(
+    n_free: usize,
+    b: usize,
+    durs: &[f64],
+    allgather_step_s: f64,
+    scale: f64,
+) -> (usize, f64) {
     let s_max = n_free.min(b.max(1)).min(durs.len());
     let mut s_best = 1usize;
-    let mut d_best = durs[0];
+    let mut d_best = durs[0] * scale;
     for s in 2..=s_max {
-        let d = durs[s - 1] + allgather_step_s * (s - 1) as f64;
+        let d = durs[s - 1] * scale + allgather_step_s * (s - 1) as f64;
         if d < d_best - 1e-12 {
             s_best = s;
             d_best = d;
@@ -550,21 +617,25 @@ fn shard_choice(n_free: usize, b: usize, durs: &[f64], allgather_step_s: f64) ->
 
 /// Dispatch one verify round on a bare replica timeline — the simulation
 /// twin of the real reservation arithmetic, used by the queue-aware
-/// lookahead.  `forced_s` pins the shard count (clamped to what is
-/// feasible); `None` applies the latency-greedy rule, exactly as
-/// [`ResourcePool::verify_sharded`] would.
+/// lookahead.  `scale` multiplies the compute profile `durs` (a waiting
+/// round's own magnitude over this round's shard-speedup shape; the
+/// all-gather step is a network cost and stays unscaled).  `forced_s`
+/// pins the shard count (clamped to what is feasible); `None` applies the
+/// latency-greedy rule, exactly as [`ResourcePool::verify_sharded`]
+/// would.
 fn sim_dispatch(
     free_at: &mut [f64],
     b: usize,
     ready_at: f64,
     durs: &[f64],
     allgather_step_s: f64,
+    scale: f64,
     forced_s: Option<usize>,
 ) -> f64 {
     let t0 = ready_at.max(free_at.iter().copied().fold(f64::INFINITY, f64::min));
     let n_free = free_at.iter().filter(|&&f| f <= t0 + 1e-9).count();
     let s_max = n_free.min(b.max(1)).min(durs.len());
-    let (s_greedy, _) = shard_choice(n_free, b, durs, allgather_step_s);
+    let (s_greedy, _) = shard_choice(n_free, b, durs, allgather_step_s, scale);
     let s = match forced_s {
         Some(s) => s.clamp(1, s_max.max(1)),
         None => s_greedy,
@@ -579,11 +650,11 @@ fn sim_dispatch(
             }
         }
         let start = ready_at.max(free_at[i_min]);
-        let end = start + durs[0];
+        let end = start + durs[0] * scale;
         free_at[i_min] = end;
         return end;
     }
-    let d = durs[s - 1] + allgather_step_s * (s - 1) as f64;
+    let d = durs[s - 1] * scale + allgather_step_s * (s - 1) as f64;
     let mut taken = 0usize;
     let mut end = t0 + d;
     for f in free_at.iter_mut() {

@@ -8,30 +8,40 @@
 //! b, the optimal choice is a contiguous prefix of the shortest-first
 //! ordering.
 //!
-//! Two solvers live here:
+//! Three solvers live here:
 //!
-//! * [`Scheduler::assign_incremental`] — the serving hot path.  It walks a
-//!   *persistent* sorted [`CandidatePool`] (updated per event: insert on
-//!   arrival/re-ready, remove on dispatch) and prices every prefix with
+//! * [`Scheduler::assign_incremental`] — the serving hot path.  It sweeps
+//!   the *eligible frontier* of a persistent [`CandidatePool`]: the pool
+//!   is updated per event (insert on arrival/re-ready, remove on
+//!   dispatch) and additionally indexes candidates by routed node, so a
+//!   node busy/free transition flips eligibility for exactly the
+//!   candidates placed on that node — the solver never evaluates a
+//!   per-candidate freeness predicate.  Every prefix is priced with
 //!   O(1)-per-step aggregate extensions: the critical context is the
 //!   current (sorted) candidate, the per-node draft depth vector grows by
 //!   one routed set, the KV footprint is a running sum, and the trimmed
 //!   Σγ/max γ come from a γ-value histogram ([`trimmed_stats`]) instead of
-//!   re-running Alg. 2 per prefix.  One event costs O(n + nodes) with no
-//!   allocation (scratch buffers are reused; drafter sets are interned
-//!   [`PlacementId`] handles into a [`PlacementArena`], not `Vec` clones).
+//!   re-running Alg. 2 per prefix.  One event costs O(affected + batch)
+//!   with reused scratch (drafter sets are interned [`PlacementId`]
+//!   handles into a [`PlacementArena`], not `Vec` clones).
+//! * [`Scheduler::assign_incremental_filtered`] — the pre-index shape:
+//!   the same sweep over *all* ready candidates filtered by an
+//!   `eligible` closure, O(in-flight) per event.  Kept as the oracle the
+//!   frontier sweep is property-tested batch-identical to (a closure can
+//!   express masks no node state can), and as the `cosine bench`
+//!   closure-mode baseline.
 //! * [`Scheduler::assign_reference`] — the naive from-scratch solver the
 //!   engine ran before the incremental refactor (sort every call, clone
 //!   and re-trim gammas per prefix, rebuild the depth vector per prefix).
-//!   Kept as the oracle: the incremental solver is property-tested
-//!   assignment-identical to it, and `cosine bench` measures the speedup.
+//!   Kept as the deepest oracle: the incremental solvers are
+//!   property-tested assignment-identical to it, and `cosine bench`
+//!   measures the speedup.
 //!
 //! Pricing goes through [`SchedCostModel`] — the artifact-free slice of
 //! the hardware model the scheduler needs — so benches and property tests
 //! exercise the exact serving arithmetic without loading PJRT artifacts.
 
-use std::cmp::Ordering;
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
 
 use crate::cluster::node::{GpuProfile, ModeledModel};
 use crate::cluster::simclock::{Phase, SimClock};
@@ -202,78 +212,290 @@ pub struct Candidate {
     pub placement: PlacementId,
 }
 
-fn len_order(a: &Candidate, b: &Candidate) -> Ordering {
-    a.ctx_len
-        .cmp(&b.ctx_len)
-        .then_with(|| a.arrival_s.total_cmp(&b.arrival_s))
-        .then_with(|| a.idx.cmp(&b.idx))
+/// `f64::total_cmp`-equivalent integer key (the sign-folded bit trick), so
+/// BTree iteration over packed keys matches the comparator orderings.
+fn total_order_bits(x: f64) -> i64 {
+    let b = x.to_bits() as i64;
+    b ^ (((b >> 63) as u64) >> 1) as i64
 }
 
-fn arrival_order(a: &Candidate, b: &Candidate) -> Ordering {
-    a.arrival_s
-        .total_cmp(&b.arrival_s)
-        .then_with(|| a.idx.cmp(&b.idx))
+/// Total-order key for the shortest-context-first Eq. 8 frontier:
+/// (ctx_len, arrival, idx), derived `Ord` = lexicographic.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+struct LenKey {
+    ctx_len: usize,
+    arrival: i64,
+    idx: usize,
 }
 
-/// Persistent, sorted candidate pool — the engine inserts a candidate when
-/// its request becomes ready (arrival or verify-done) and removes the
-/// dispatched batch, so no event ever re-sorts or re-builds the frontier.
-/// Two orderings are maintained: shortest-context-first (the Eq. 8 prefix
-/// frontier) and FIFO-by-arrival (the non-optimizing baselines).
+impl LenKey {
+    fn of(c: &Candidate) -> Self {
+        Self {
+            ctx_len: c.ctx_len,
+            arrival: total_order_bits(c.arrival_s),
+            idx: c.idx,
+        }
+    }
+}
+
+/// Total-order key for the FIFO (arrival) ordering: (arrival, idx).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+struct ArrKey {
+    arrival: i64,
+    idx: usize,
+}
+
+impl ArrKey {
+    fn of(c: &Candidate) -> Self {
+        Self {
+            arrival: total_order_bits(c.arrival_s),
+            idx: c.idx,
+        }
+    }
+}
+
+/// One node-index entry: which candidate, and from which insertion
+/// generation (stale entries — removed or re-inserted candidates — are
+/// dropped lazily the next time their node flips state).
+#[derive(Debug, Clone, Copy)]
+struct NodeEntry {
+    idx: u32,
+    gen: u32,
+}
+
+/// Live per-candidate state behind the orderings: the candidate snapshot
+/// plus how many of its routed nodes are currently busy (eligible ⇔ 0).
+#[derive(Debug, Clone, Copy)]
+struct Slot {
+    gen: u32,
+    busy_cnt: u32,
+    cand: Candidate,
+}
+
+/// Persistent, sorted candidate pool with a node→candidate eligibility
+/// index — the engine inserts a candidate when its request becomes ready
+/// (arrival or verify-done) and removes the dispatched batch, so no event
+/// ever re-sorts or re-builds the frontier.
+///
+/// Two orderings are maintained twice each: over *all* ready candidates
+/// (shortest-context-first for backlog estimation, FIFO-by-arrival for
+/// the non-optimizing baselines) and over the *eligible frontier* — the
+/// candidates whose routed node sets are entirely free right now.
+/// Eligibility is not re-evaluated per candidate per event: each
+/// candidate carries a busy-node count, and a node busy/free transition
+/// (fed from [`super::pipeline::ResourcePool::drafter_transitions`])
+/// walks only `node_index[d]` — the candidates actually placed on the
+/// node that changed — moving the ones whose count crosses zero in or out
+/// of the eligible maps.  A `DraftDone` on node d therefore costs
+/// O(candidates on d · log n) instead of the closure-filtered sweep's
+/// O(in-flight); the per-candidate work is tracked in
+/// [`Self::elig_touched`] and CI-gated sublinear by `cosine bench`.
 #[derive(Debug, Clone, Default)]
 pub struct CandidatePool {
-    by_len: Vec<Candidate>,
-    by_arrival: Vec<Candidate>,
-    remove_scratch: Vec<usize>,
+    /// nodes the index covers; placement entries ≥ `n_nodes` are ignored,
+    /// matching `ResourcePool::nodes_free_at` (and a pool built with 0
+    /// nodes — coupled strategies, vLLM — keeps every candidate eligible)
+    n_nodes: usize,
+    /// busy/free mirror per node, driven by applied transitions
+    node_busy: Vec<bool>,
+    /// node → (candidate idx, generation) index entries
+    node_index: Vec<Vec<NodeEntry>>,
+    /// per-idx live slot; `None` between removal and re-insertion
+    slots: Vec<Option<Slot>>,
+    /// per-idx insertion generation (survives removal so stale node-index
+    /// entries can never resurrect a re-inserted candidate)
+    gens: Vec<u32>,
+    all_len: BTreeMap<LenKey, Candidate>,
+    all_arr: BTreeMap<ArrKey, Candidate>,
+    elig_len: BTreeMap<LenKey, Candidate>,
+    elig_arr: BTreeMap<ArrKey, Candidate>,
+    /// candidates touched by index maintenance (inserts + busy/free
+    /// flips) — the O(affected) work replacing the per-event filter
+    touched: u64,
 }
 
 impl CandidatePool {
-    pub fn new() -> Self {
-        Self::default()
+    pub fn new(n_nodes: usize) -> Self {
+        Self {
+            n_nodes,
+            node_busy: vec![false; n_nodes],
+            node_index: vec![Vec::new(); n_nodes],
+            ..Self::default()
+        }
     }
 
+    /// Ready candidates (eligible or not).
     pub fn len(&self) -> usize {
-        self.by_len.len()
+        self.all_len.len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.by_len.is_empty()
+        self.all_len.is_empty()
     }
 
-    /// Candidates in shortest-context-first frontier order.
+    /// Candidates whose routed node sets are entirely free right now.
+    pub fn eligible_len(&self) -> usize {
+        if self.n_nodes == 0 {
+            self.all_len.len()
+        } else {
+            self.elig_len.len()
+        }
+    }
+
+    /// Cumulative candidates touched by eligibility-index maintenance.
+    pub fn elig_touched(&self) -> u64 {
+        self.touched
+    }
+
+    /// All ready candidates in shortest-context-first order.
     pub fn iter_len(&self) -> impl Iterator<Item = &Candidate> {
-        self.by_len.iter()
+        self.all_len.values()
     }
 
-    /// Candidates in FIFO (arrival) order.
+    /// All ready candidates in FIFO (arrival) order.
     pub fn iter_arrival(&self) -> impl Iterator<Item = &Candidate> {
-        self.by_arrival.iter()
+        self.all_arr.values()
     }
 
-    /// O(n) sorted insert (binary-searched position, no comparison sort,
-    /// no allocation beyond the vec's amortized growth).
-    pub fn insert(&mut self, c: Candidate) {
-        let i = self
-            .by_len
-            .partition_point(|x| len_order(x, &c) == Ordering::Less);
-        self.by_len.insert(i, c);
-        let j = self
-            .by_arrival
-            .partition_point(|x| arrival_order(x, &c) == Ordering::Less);
-        self.by_arrival.insert(j, c);
+    /// The eligible frontier in shortest-context-first order — what
+    /// [`Scheduler::assign_incremental`] sweeps.  A pool without node
+    /// resources aliases the all-candidate ordering (everything is
+    /// always eligible; no duplicate maps are maintained).
+    pub fn iter_len_eligible(&self) -> impl Iterator<Item = &Candidate> {
+        if self.n_nodes == 0 {
+            self.all_len.values()
+        } else {
+            self.elig_len.values()
+        }
     }
 
-    /// Remove the dispatched batch in one retain pass per ordering.
+    /// The eligible frontier in FIFO (arrival) order.
+    pub fn iter_arrival_eligible(&self) -> impl Iterator<Item = &Candidate> {
+        if self.n_nodes == 0 {
+            self.all_arr.values()
+        } else {
+            self.elig_arr.values()
+        }
+    }
+
+    /// O(log n + |set|) insert: the candidate joins both orderings, its
+    /// routed set is indexed per node, and its busy-node count is seeded
+    /// from the current node states (eligible iff zero).
+    pub fn insert(&mut self, c: Candidate, arena: &PlacementArena) {
+        if self.slots.get(c.idx).is_some_and(|s| s.is_some()) {
+            self.remove_one(c.idx);
+        }
+        if c.idx >= self.slots.len() {
+            self.slots.resize_with(c.idx + 1, || None);
+            self.gens.resize(c.idx + 1, 0);
+        }
+        self.gens[c.idx] = self.gens[c.idx].wrapping_add(1);
+        let gen = self.gens[c.idx];
+        let mut busy_cnt = 0u32;
+        for &d in arena.get(c.placement) {
+            if d < self.n_nodes {
+                self.node_index[d].push(NodeEntry {
+                    idx: c.idx as u32,
+                    gen,
+                });
+                if self.node_busy[d] {
+                    busy_cnt += 1;
+                }
+            }
+        }
+        self.slots[c.idx] = Some(Slot { gen, busy_cnt, cand: c });
+        self.all_len.insert(LenKey::of(&c), c);
+        self.all_arr.insert(ArrKey::of(&c), c);
+        // node-less pools alias the eligible orderings to the all-candidate
+        // maps instead of duplicating every entry
+        if self.n_nodes > 0 && busy_cnt == 0 {
+            self.elig_len.insert(LenKey::of(&c), c);
+            self.elig_arr.insert(ArrKey::of(&c), c);
+        }
+        self.touched += 1;
+    }
+
+    fn remove_one(&mut self, idx: usize) {
+        let Some(slot) = self.slots.get_mut(idx).and_then(|s| s.take()) else {
+            return;
+        };
+        let c = slot.cand;
+        self.all_len.remove(&LenKey::of(&c));
+        self.all_arr.remove(&ArrKey::of(&c));
+        if self.n_nodes > 0 && slot.busy_cnt == 0 {
+            self.elig_len.remove(&LenKey::of(&c));
+            self.elig_arr.remove(&ArrKey::of(&c));
+        }
+        // node-index entries die lazily (generation mismatch) at the next
+        // flip of their node — no per-removal index walk
+    }
+
+    /// Remove the dispatched batch (O(log n) per member).
     pub fn remove_batch(&mut self, idxs: &[usize]) {
-        if idxs.is_empty() {
+        for &i in idxs {
+            self.remove_one(i);
+        }
+    }
+
+    /// Apply node state transitions reported by the resource pool:
+    /// `(node, became_free)` pairs.
+    pub fn apply_transitions(&mut self, trans: &[(usize, bool)]) {
+        for &(d, free) in trans {
+            if free {
+                self.on_node_freed(d);
+            } else {
+                self.on_node_busy(d);
+            }
+        }
+    }
+
+    /// Node `d` became free: decrement the busy count of exactly the
+    /// candidates placed on it, surfacing the ones that reach zero into
+    /// the eligible frontier.  Idempotent; out-of-range nodes are ignored.
+    pub fn on_node_freed(&mut self, d: usize) {
+        if d >= self.n_nodes || !self.node_busy[d] {
             return;
         }
-        self.remove_scratch.clear();
-        self.remove_scratch.extend_from_slice(idxs);
-        self.remove_scratch.sort_unstable();
-        let rs = &self.remove_scratch;
-        self.by_len.retain(|c| rs.binary_search(&c.idx).is_err());
-        self.by_arrival.retain(|c| rs.binary_search(&c.idx).is_err());
+        self.node_busy[d] = false;
+        let mut entries = std::mem::take(&mut self.node_index[d]);
+        entries.retain(|e| match self.slots.get_mut(e.idx as usize) {
+            Some(Some(s)) if s.gen == e.gen => {
+                self.touched += 1;
+                s.busy_cnt -= 1;
+                if s.busy_cnt == 0 {
+                    let c = s.cand;
+                    self.elig_len.insert(LenKey::of(&c), c);
+                    self.elig_arr.insert(ArrKey::of(&c), c);
+                }
+                true
+            }
+            _ => false,
+        });
+        self.node_index[d] = entries;
+    }
+
+    /// Node `d` became busy: the candidates placed on it leave the
+    /// eligible frontier (when this was their last free node dependency).
+    pub fn on_node_busy(&mut self, d: usize) {
+        if d >= self.n_nodes || self.node_busy[d] {
+            return;
+        }
+        self.node_busy[d] = true;
+        let mut entries = std::mem::take(&mut self.node_index[d]);
+        entries.retain(|e| match self.slots.get_mut(e.idx as usize) {
+            Some(Some(s)) if s.gen == e.gen => {
+                self.touched += 1;
+                if s.busy_cnt == 0 {
+                    let c = s.cand;
+                    self.elig_len.remove(&LenKey::of(&c));
+                    self.elig_arr.remove(&ArrKey::of(&c));
+                }
+                s.busy_cnt += 1;
+                true
+            }
+            _ => false,
+        });
+        self.node_index[d] = entries;
     }
 }
 
@@ -378,19 +600,39 @@ impl Scheduler {
         t_ttl / b as f64 + self.cfg.lambda * big_gamma as f64
     }
 
-    /// Choose the next batch from the persistent pool in one sweep.
+    /// Choose the next batch from the persistent pool in one sweep over
+    /// its node-indexed *eligible frontier* (the candidates whose routed
+    /// node sets are free right now, maintained by resource transitions
+    /// instead of a per-candidate predicate).  Returns `None` when no
+    /// candidate is eligible.  The serving hot path: one event costs
+    /// O(batch + affected) rather than O(in-flight).
     ///
-    /// `eligible` filters candidates whose resources are free right now
-    /// (the pool holds every *ready* request; freeness is a property of
-    /// the instant).  Returns `None` when no candidate is eligible.
-    ///
-    /// Assignment-identical to [`Self::assign_reference`] over the
-    /// eligible candidates (property-tested), but each prefix extension is
-    /// O(1): sorted order makes the critical context the current
-    /// candidate, the KV footprint and Σγ are running sums, the per-node
-    /// depth vector absorbs one interned set, and the trimmed Σγ / max γ
-    /// come from the γ histogram instead of re-running Alg. 2.
+    /// Assignment-identical to [`Self::assign_incremental_filtered`] with
+    /// a free-node predicate (property-tested), and hence to
+    /// [`Self::assign_reference`].
     pub fn assign_incremental(
+        &mut self,
+        cost: &SchedCostModel,
+        arena: &PlacementArena,
+        pool: &CandidatePool,
+        k_nodes: usize,
+    ) -> Option<Assignment> {
+        self.assign_swept(
+            cost,
+            arena,
+            k_nodes,
+            pool.iter_len_eligible(),
+            pool.iter_arrival_eligible(),
+        )
+    }
+
+    /// The PR 4 shape of the incremental solver: sweep *all* ready
+    /// candidates, testing each against an `eligible` closure.  O(n) per
+    /// event — kept as the oracle [`Self::assign_incremental`] is
+    /// property-tested against (and as the `cosine bench` closure-mode
+    /// baseline), since a closure can express eligibility masks no node
+    /// state can.
+    pub fn assign_incremental_filtered(
         &mut self,
         cost: &SchedCostModel,
         arena: &PlacementArena,
@@ -398,18 +640,39 @@ impl Scheduler {
         k_nodes: usize,
         eligible: impl Fn(&Candidate) -> bool,
     ) -> Option<Assignment> {
+        self.assign_swept(
+            cost,
+            arena,
+            k_nodes,
+            pool.iter_len().filter(|c| eligible(c)),
+            pool.iter_arrival().filter(|c| eligible(c)),
+        )
+    }
+
+    /// Shared sweep body over pre-filtered candidate iterators (frontier
+    /// order + FIFO order).  Each prefix extension is O(1): sorted order
+    /// makes the critical context the current candidate, the KV footprint
+    /// and Σγ are running sums, the per-node depth vector absorbs one
+    /// interned set, and the trimmed Σγ / max γ come from the γ histogram
+    /// instead of re-running Alg. 2.
+    fn assign_swept<'a>(
+        &mut self,
+        cost: &SchedCostModel,
+        arena: &PlacementArena,
+        k_nodes: usize,
+        len_iter: impl Iterator<Item = &'a Candidate>,
+        arr_iter: impl Iterator<Item = &'a Candidate>,
+    ) -> Option<Assignment> {
         let max_b = self.cfg.max_batch.min(cost.max_bucket);
         if !self.optimize {
             // FIFO: oldest-arrival first, up to max batch (one pricing
             // pass, no per-prefix search)
             self.chosen.clear();
-            for c in pool.iter_arrival() {
+            for c in arr_iter {
                 if self.chosen.len() >= max_b {
                     break;
                 }
-                if eligible(c) {
-                    self.chosen.push(*c);
-                }
+                self.chosen.push(*c);
             }
             if self.chosen.is_empty() {
                 return None;
@@ -454,12 +717,9 @@ impl Scheduler {
         let mut mem_mb = 0.0f64;
         let mut best: Option<(f64, usize, f64, f64)> = None; // (obj, b, t_d, t_v)
 
-        for c in pool.iter_len() {
+        for c in len_iter {
             if b >= max_b {
                 break;
-            }
-            if !eligible(c) {
-                continue;
             }
             b += 1;
             self.chosen.push(*c);
@@ -818,7 +1078,8 @@ mod tests {
 
     #[test]
     fn pool_keeps_both_orders_and_removes_batches() {
-        let mut pool = CandidatePool::new();
+        let arena = PlacementArena::new();
+        let mut pool = CandidatePool::new(0);
         let c = |idx, ctx_len, arrival_s| Candidate {
             idx,
             ctx_len,
@@ -827,19 +1088,116 @@ mod tests {
             arrival_s,
             placement: PlacementId::EMPTY,
         };
-        pool.insert(c(0, 30, 2.0));
-        pool.insert(c(1, 10, 3.0));
-        pool.insert(c(2, 30, 1.0));
-        pool.insert(c(3, 10, 3.0)); // ties with 1 on (ctx, arrival): idx order
+        pool.insert(c(0, 30, 2.0), &arena);
+        pool.insert(c(1, 10, 3.0), &arena);
+        pool.insert(c(2, 30, 1.0), &arena);
+        pool.insert(c(3, 10, 3.0), &arena); // ties with 1 on (ctx, arrival): idx order
         let by_len: Vec<usize> = pool.iter_len().map(|c| c.idx).collect();
         assert_eq!(by_len, vec![1, 3, 2, 0]);
         let by_arr: Vec<usize> = pool.iter_arrival().map(|c| c.idx).collect();
         assert_eq!(by_arr, vec![2, 0, 1, 3]);
+        // a pool without node resources keeps everything eligible, in the
+        // same orders
+        let el: Vec<usize> = pool.iter_len_eligible().map(|c| c.idx).collect();
+        assert_eq!(el, by_len);
         pool.remove_batch(&[3, 2]);
         assert_eq!(pool.len(), 2);
         let by_len: Vec<usize> = pool.iter_len().map(|c| c.idx).collect();
         assert_eq!(by_len, vec![1, 0]);
         let by_arr: Vec<usize> = pool.iter_arrival().map(|c| c.idx).collect();
         assert_eq!(by_arr, vec![0, 1]);
+        assert_eq!(pool.eligible_len(), 2);
+    }
+
+    #[test]
+    fn total_order_bits_matches_total_cmp() {
+        let vals = [0.0f64, -0.0, 1.5, -1.5, 1e-300, 1e300, f64::INFINITY];
+        for &a in &vals {
+            for &b in &vals {
+                assert_eq!(
+                    total_order_bits(a).cmp(&total_order_bits(b)),
+                    a.total_cmp(&b),
+                    "{a} vs {b}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn node_flip_touches_only_affected_candidates() {
+        // A DraftDone on node d must flip eligibility for exactly the
+        // candidates placed on d — the touch counter is the CI-gated
+        // O(affected) evidence.
+        let mut arena = PlacementArena::new();
+        let p01 = arena.intern(&[0, 1]);
+        let p2 = arena.intern(&[2]);
+        let p0 = arena.intern(&[0]);
+        let mut pool = CandidatePool::new(3);
+        let c = |idx, placement| Candidate {
+            idx,
+            ctx_len: 10 + idx,
+            gamma: 4,
+            ready_at: 0.0,
+            arrival_s: idx as f64,
+            placement,
+        };
+        pool.insert(c(0, p01), &arena);
+        pool.insert(c(1, p2), &arena);
+        pool.insert(c(2, p0), &arena);
+        pool.insert(c(3, PlacementId::EMPTY), &arena);
+        assert_eq!(pool.eligible_len(), 4, "all nodes free at start");
+
+        let t0 = pool.elig_touched();
+        pool.on_node_busy(0);
+        assert_eq!(
+            pool.elig_touched() - t0,
+            2,
+            "only the candidates placed on node 0 may be touched"
+        );
+        let el: Vec<usize> = pool.iter_len_eligible().map(|c| c.idx).collect();
+        assert_eq!(el, vec![1, 3], "candidates 0 and 2 depend on busy node 0");
+
+        // partial overlap: node 1 busy keeps candidate 0 ineligible even
+        // after node 0 frees
+        pool.on_node_busy(1);
+        let t1 = pool.elig_touched();
+        pool.on_node_freed(0);
+        assert_eq!(pool.elig_touched() - t1, 2);
+        let el: Vec<usize> = pool.iter_len_eligible().map(|c| c.idx).collect();
+        assert_eq!(el, vec![1, 2, 3], "candidate 0 still waits on node 1");
+        pool.on_node_freed(1);
+        assert_eq!(pool.eligible_len(), 4);
+
+        // flipping an already-free node is a no-op and touches nothing
+        let t2 = pool.elig_touched();
+        pool.on_node_freed(2);
+        assert_eq!(pool.elig_touched() - t2, 0);
+    }
+
+    #[test]
+    fn stale_index_entries_never_resurrect_candidates() {
+        // remove + re-insert with a different placement: the old node's
+        // lazy index entry must not flip the re-inserted candidate
+        let mut arena = PlacementArena::new();
+        let p0 = arena.intern(&[0]);
+        let p1 = arena.intern(&[1]);
+        let mut pool = CandidatePool::new(2);
+        let c = |placement| Candidate {
+            idx: 7,
+            ctx_len: 10,
+            gamma: 4,
+            ready_at: 0.0,
+            arrival_s: 0.0,
+            placement,
+        };
+        pool.insert(c(p0), &arena);
+        pool.remove_batch(&[7]);
+        pool.insert(c(p1), &arena); // re-routed onto node 1
+        pool.on_node_busy(0); // stale entry for idx 7 is dropped here
+        assert_eq!(pool.eligible_len(), 1, "node 0 no longer affects idx 7");
+        pool.on_node_busy(1);
+        assert_eq!(pool.eligible_len(), 0);
+        pool.on_node_freed(1);
+        assert_eq!(pool.eligible_len(), 1);
     }
 }

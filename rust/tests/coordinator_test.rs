@@ -441,6 +441,53 @@ fn queue_aware_sharding_still_shards_when_it_wins() {
 }
 
 #[test]
+fn drafter_transitions_report_only_changes() {
+    use cosine::coordinator::pipeline::ResourcePool;
+    let mut p = ResourcePool::new(3, 1);
+    let mut tr = Vec::new();
+    p.drafter_transitions(0.0, &mut tr);
+    assert!(tr.is_empty(), "all nodes start free; nothing changed");
+    p.draft_on(&[0, 2], 0.0, 1.0);
+    p.drafter_transitions(0.0, &mut tr);
+    assert_eq!(tr, vec![(0, false), (2, false)], "reserved nodes report busy once");
+    p.drafter_transitions(0.5, &mut tr);
+    assert!(tr.is_empty(), "no state change mid-reservation");
+    p.drafter_transitions(1.0, &mut tr);
+    assert_eq!(tr, vec![(0, true), (2, true)], "ended reservations report free");
+    p.drafter_transitions(2.0, &mut tr);
+    assert!(tr.is_empty(), "free is reported exactly once");
+}
+
+#[test]
+fn queue_aware_sharding_with_actual_backlog_durations() {
+    use cosine::coordinator::pipeline::ResourcePool;
+    // Current round: 4.0s whole / 2.2s split across 2 replicas.  The
+    // identical-rounds estimate assumes the waiting round also costs
+    // 4.0s, so it keeps this round whole and pipelines (4.0 total).  The
+    // sharp estimate knows the waiting round is tiny (0.1s): sharding now
+    // (2.2s) then running the tiny round (≈0.1s) finishes far earlier, so
+    // the profitable split survives.
+    let mut coarse = ResourcePool::new(0, 2);
+    let sv = coarse.verify_sharded_queued_with(8, 0.0, &[4.0, 2.2], &[4.0]);
+    assert_eq!(sv.shards, 1, "identical-rounds estimate pipelines whole rounds");
+    assert!((sv.end - 4.0).abs() < 1e-9);
+
+    let mut sharp = ResourcePool::new(0, 2);
+    let sv = sharp.verify_sharded_queued_with(8, 0.0, &[4.0, 2.2], &[0.1]);
+    assert_eq!(sv.shards, 2, "a tiny waiting round must not suppress the split");
+    assert!((sv.end - 2.2).abs() < 1e-9);
+
+    // the count-based wrapper is bit-identical to a constant backlog
+    let mut a = ResourcePool::new(0, 3);
+    let mut b = ResourcePool::new(0, 3);
+    let sva = a.verify_sharded_queued(8, 0.0, &[4.0, 2.2, 1.9], 2);
+    let svb = b.verify_sharded_queued_with(8, 0.0, &[4.0, 2.2, 1.9], &[4.0, 4.0]);
+    assert_eq!(sva.shards, svb.shards);
+    assert!((sva.end - svb.end).abs() < 1e-12);
+    assert!((a.makespan() - b.makespan()).abs() < 1e-12);
+}
+
+#[test]
 fn resource_pool_free_queries() {
     use cosine::coordinator::pipeline::ResourcePool;
     let mut p = ResourcePool::new(1, 1);

@@ -284,11 +284,13 @@ fn prop_sharded_verify_never_later_than_single() {
 
 #[test]
 fn prop_incremental_assign_matches_reference() {
-    // The persistent-pool incremental Eq. 8 solver must pick the exact
-    // same batch, trimmed gammas, placement handles, and modeled
-    // latencies/objective as the naive from-scratch reference, over
-    // random pools, random eligibility masks, both FIFO and optimizing
-    // modes, and binding/non-binding latency + memory + Γ budgets.
+    // The persistent-pool incremental Eq. 8 solver (closure-filtered
+    // shape — the oracle the node-indexed frontier is tested against
+    // below) must pick the exact same batch, trimmed gammas, placement
+    // handles, and modeled latencies/objective as the naive from-scratch
+    // reference, over random pools, random eligibility masks, both FIFO
+    // and optimizing modes, and binding/non-binding latency + memory + Γ
+    // budgets.
     use cosine::config::SchedulerConfig;
     use cosine::coordinator::scheduler::{
         Candidate, CandidatePool, PlacementArena, PlacementId, SchedCostModel, Scheduler,
@@ -305,7 +307,7 @@ fn prop_incremental_assign_matches_reference() {
         };
         let optimize = rng.bool(0.7);
         let mut arena = PlacementArena::new();
-        let mut pool = CandidatePool::new();
+        let mut pool = CandidatePool::new(n_nodes);
         let n = 1 + rng.usize(40);
         let mut avail: Vec<Candidate> = Vec::new();
         let mut blocked = vec![false; n];
@@ -328,7 +330,7 @@ fn prop_incremental_assign_matches_reference() {
                 placement: pid,
             };
             *b = !rng.bool(0.8);
-            pool.insert(c);
+            pool.insert(c, &arena);
             if !*b {
                 avail.push(c);
             }
@@ -339,7 +341,7 @@ fn prop_incremental_assign_matches_reference() {
         let k_nodes = 1 + rng.usize(4);
         let mut sched = Scheduler::new(cfg.clone(), optimize);
         let inc = sched
-            .assign_incremental(&cost, &arena, &pool, k_nodes, |c| !blocked[c.idx])
+            .assign_incremental_filtered(&cost, &arena, &pool, k_nodes, |c| !blocked[c.idx])
             .expect("eligible candidates must yield an assignment");
         let sref = Scheduler::new(cfg, optimize);
         let refa = sref.assign_reference(&cost, &arena, &avail, k_nodes);
@@ -364,6 +366,122 @@ fn prop_incremental_assign_matches_reference() {
             inc.objective,
             refa.objective
         );
+    });
+}
+
+#[test]
+fn prop_frontier_assign_matches_closure_filtered() {
+    // The node-indexed eligible frontier must yield batch-identical
+    // assignments — and identical traces across a sequence of node
+    // busy/free transitions, dispatch removals, and re-inserts — to the
+    // closure-filtered sweep evaluating "is every routed node free?" per
+    // candidate, on random pools, placements, and free-sets.
+    use cosine::config::SchedulerConfig;
+    use cosine::coordinator::scheduler::{
+        Candidate, CandidatePool, PlacementArena, PlacementId, SchedCostModel, Scheduler,
+    };
+    cases(150, |rng, seed| {
+        let n_nodes = 1 + rng.usize(8);
+        let cost = SchedCostModel::synthetic(if rng.bool(0.5) { "l" } else { "q" }, n_nodes);
+        let cfg = SchedulerConfig {
+            max_batch: 1 + rng.usize(16),
+            gamma_total_max: 1 + rng.usize(64),
+            t_max_ms: if rng.bool(0.3) { 0.5 } else { 4000.0 },
+            m_max_mb: if rng.bool(0.3) { 1.0 + rng.f64() * 4.0 } else { 64_000.0 },
+            ..SchedulerConfig::default()
+        };
+        let optimize = rng.bool(0.7);
+        let k_nodes = 1 + rng.usize(4);
+        let mut arena = PlacementArena::new();
+        let mut pool = CandidatePool::new(n_nodes);
+        let n = 1 + rng.usize(50);
+        let mut next_idx = 0usize;
+        let mk_cand = |rng: &mut Rng, arena: &mut PlacementArena, idx: usize| {
+            let k = 1 + rng.usize(3.min(n_nodes));
+            let mut nodes: Vec<usize> = (0..n_nodes).collect();
+            rng.partial_shuffle(&mut nodes, k);
+            let pid = if rng.bool(0.85) {
+                arena.intern(&nodes[..k])
+            } else {
+                PlacementId::EMPTY
+            };
+            Candidate {
+                idx,
+                ctx_len: 1 + rng.usize(2000),
+                gamma: 1 + rng.usize(8),
+                ready_at: 0.0,
+                arrival_s: rng.usize(8) as f64,
+                placement: pid,
+            }
+        };
+        for _ in 0..n {
+            let c = mk_cand(rng, &mut arena, next_idx);
+            next_idx += 1;
+            pool.insert(c, &arena);
+        }
+        // random initial free-set, mirrored in both representations
+        let mut busy = vec![false; n_nodes];
+        for (d, b) in busy.iter_mut().enumerate() {
+            if rng.bool(0.4) {
+                *b = true;
+                pool.on_node_busy(d);
+            }
+        }
+
+        for step in 0..6 {
+            // random transitions: flip a few nodes both ways
+            for _ in 0..rng.usize(3) {
+                let d = rng.usize(n_nodes);
+                if busy[d] {
+                    busy[d] = false;
+                    pool.on_node_freed(d);
+                } else {
+                    busy[d] = true;
+                    pool.on_node_busy(d);
+                }
+            }
+            let mut s_front = Scheduler::new(cfg.clone(), optimize);
+            let mut s_clos = Scheduler::new(cfg.clone(), optimize);
+            let front = s_front.assign_incremental(&cost, &arena, &pool, k_nodes);
+            let clos = s_clos.assign_incremental_filtered(&cost, &arena, &pool, k_nodes, |c| {
+                arena
+                    .get(c.placement)
+                    .iter()
+                    .all(|&d| d >= n_nodes || !busy[d])
+            });
+            match (&front, &clos) {
+                (None, None) => {}
+                (Some(f), Some(c)) => {
+                    assert_eq!(f.batch, c.batch, "seed {seed} step {step}: batch diverged");
+                    assert_eq!(f.gammas, c.gammas, "seed {seed} step {step}: gammas diverged");
+                    assert_eq!(
+                        f.placement, c.placement,
+                        "seed {seed} step {step}: placement diverged"
+                    );
+                    assert!(
+                        (f.objective - c.objective).abs() < 1e-12,
+                        "seed {seed} step {step}: objective {} vs {}",
+                        f.objective,
+                        c.objective
+                    );
+                }
+                _ => panic!(
+                    "seed {seed} step {step}: frontier {:?} vs closure {:?}",
+                    front.as_ref().map(|a| &a.batch),
+                    clos.as_ref().map(|a| &a.batch)
+                ),
+            }
+            // event-trace step: dispatch removes the batch, and some
+            // requests come back re-routed (fresh placements)
+            if let Some(a) = front {
+                pool.remove_batch(&a.batch);
+                for _ in 0..rng.usize(3) {
+                    let c = mk_cand(rng, &mut arena, next_idx);
+                    next_idx += 1;
+                    pool.insert(c, &arena);
+                }
+            }
+        }
     });
 }
 
