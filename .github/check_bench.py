@@ -16,6 +16,10 @@ Gates:
   * same-run relative: the frontier path at >=1024 in flight must not be
     slower than the closure-filtered (PR 4) path at the base >=256-depth
     workload, within the standard 20% runner-noise allowance;
+  * machine-independent (schema 3): the sharded parallel engine core must
+    produce bit-identical schedules at every swept worker thread count
+    (base and deep-pool scenarios), and the deep-pool sweep must reach
+    >= min_shard_speedup x events/sec at the max thread count vs 1 thread;
   * machine-dependent (armed once the baseline records events_per_s for
     this runner class): absolute events/sec must not regress > 20%.
 """
@@ -68,6 +72,24 @@ def main() -> None:
     print(
         f"frontier at depth {depth}: {deep_ev:.0f} ev/s vs closure base "
         f"{closure_base:.0f} ev/s"
+    )
+
+    # sharded parallel engine core gates (schema 3)
+    sharded = cur["sharded"]
+    if not sharded["identical"]:
+        sys.exit("sharded engine schedules diverged across thread counts")
+    deep_sweep = sharded["deep"]
+    min_shard = base.get("min_shard_speedup", 1.5)
+    shard_speedup = deep_sweep["speedup_max_threads"]
+    max_threads = int(deep_sweep["max_threads"])
+    if max_threads > 1 and shard_speedup < min_shard:
+        sys.exit(
+            f"sharded deep-pool speedup {shard_speedup:.2f}x at "
+            f"{max_threads} threads below required {min_shard}x"
+        )
+    print(
+        f"sharded: schedules identical across thread counts; deep-pool "
+        f"{shard_speedup:.2f}x at {max_threads} threads >= {min_shard}x"
     )
 
     baseline_ev = base.get("events_per_s")

@@ -117,4 +117,20 @@ fn main() {
         assert_eq!(pool.eligible_len(), 1024);
     });
     println!("{}", s.report());
+
+    // full busy/free cycle over every node: the frontier orders are arena
+    // skip-lists with an intrusive free list, so steady-state flip churn
+    // relinks slab nodes instead of allocating — this is the whole-pool
+    // worst case (every candidate flipped out and back per iteration)
+    let s = stats::bench("eligibility flip sweep, all nodes (depth 1024)", 10, 200, || {
+        for d in 0..NODES {
+            pool.on_node_busy(d);
+        }
+        assert_eq!(pool.eligible_len(), 0);
+        for d in 0..NODES {
+            pool.on_node_freed(d);
+        }
+        assert_eq!(pool.eligible_len(), 1024);
+    });
+    println!("{}", s.report());
 }

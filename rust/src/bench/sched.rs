@@ -6,9 +6,9 @@
 //! count per round), so the measured wall time is pure coordinator cost
 //! and the harness runs anywhere, CI included.
 //!
-//! Three modes share one deterministic workload (same seeds, same routing
-//! RNG, same snapshots), so their schedules are bit-identical and any
-//! events/sec ratio is a pure hot-path speedup:
+//! Three modes share one deterministic workload (same seeds, same
+//! per-request routing streams, same snapshots), so their schedules are
+//! bit-identical and any events/sec ratio is a pure hot-path speedup:
 //!
 //! * [`BenchMode::Frontier`] — the serving hot path the engine runs:
 //!   node-indexed eligibility fed by resource transitions, swept via
@@ -36,6 +36,7 @@ use crate::coordinator::pipeline::ResourcePool;
 use crate::coordinator::scheduler::{
     Candidate, CandidatePool, PlacementArena, PlacementId, SchedCostModel, Scheduler,
 };
+use crate::coordinator::shard::{request_rng, route_draw, ShardWorkload};
 use crate::util::json::Json;
 use crate::util::rng::Rng;
 
@@ -124,6 +125,27 @@ impl SchedBenchSpec {
             k: 2,
             max_batch: 16,
             seed: 13,
+        }
+    }
+
+    /// The same workload knobs as a grouped [`ShardWorkload`] for the
+    /// sharded engine core.  With `n_groups = 1` (and the per-request
+    /// routing streams both loops share) the sharded run reproduces this
+    /// spec's classic single-pool schedule exactly.
+    pub fn shard_workload(&self, n_groups: usize) -> ShardWorkload {
+        ShardWorkload {
+            n_requests: self.n_requests,
+            arrival_dt: self.arrival_dt,
+            prompt_len: self.prompt_len,
+            gen_len: self.gen_len,
+            gamma: self.gamma,
+            accept: self.accept,
+            n_nodes: self.n_nodes,
+            n_replicas: self.n_replicas,
+            k: self.k,
+            max_batch: self.max_batch,
+            seed: self.seed,
+            n_groups,
         }
     }
 }
@@ -216,6 +238,10 @@ struct SimReq {
     ready_at: f64,
     finish_s: Option<f64>,
     placement: PlacementId,
+    /// private routing stream (see `coordinator::shard::request_rng`):
+    /// draws depend only on (seed, request id), never on other requests'
+    /// progress, so the same workload decomposes across engine shards
+    rng: Rng,
 }
 
 /// Run the workload through the scheduling stack; `mode` selects the
@@ -227,7 +253,6 @@ pub fn run_sched_bench(spec: &SchedBenchSpec, mode: BenchMode) -> SchedBenchRepo
         ..SchedulerConfig::default()
     };
     let mut scheduler = Scheduler::new(sched_cfg, true);
-    let mut rng = Rng::seed_from_u64(spec.seed);
     let mut arena = PlacementArena::new();
     // the persistent modes maintain the pool (Frontier also drives its
     // eligibility index); Naive models the pre-pool shape and rebuilds
@@ -250,6 +275,7 @@ pub fn run_sched_bench(spec: &SchedBenchSpec, mode: BenchMode) -> SchedBenchRepo
             ready_at: i as f64 * spec.arrival_dt,
             finish_s: None,
             placement: PlacementId::EMPTY,
+            rng: request_rng(spec.seed, i),
         })
         .collect();
     for (i, r) in reqs.iter().enumerate() {
@@ -274,7 +300,8 @@ pub fn run_sched_bench(spec: &SchedBenchSpec, mode: BenchMode) -> SchedBenchRepo
     let mut trans: Vec<(usize, bool)> = Vec::new();
     let mut pending_durs: Vec<f64> = Vec::new();
     let mut batch_sorted: Vec<usize> = Vec::new();
-    let mut set_buf: Vec<usize> = (0..spec.n_nodes.max(1)).collect();
+    let canonical_nodes: Vec<usize> = (0..spec.n_nodes.max(1)).collect();
+    let mut set_buf: Vec<usize> = Vec::new();
     let k = spec.k.clamp(1, spec.n_nodes.max(1));
 
     let wall0 = Instant::now();
@@ -298,15 +325,16 @@ pub fn run_sched_bench(spec: &SchedBenchSpec, mode: BenchMode) -> SchedBenchRepo
             index_ns += t0.elapsed().as_nanos() as u64;
         }
 
-        // route the newly-ready requests (same RNG draws in every mode)
+        // route the newly-ready requests (same per-request stream draws
+        // in every mode)
         newly_ready.sort_unstable();
         for &ri in &newly_ready {
             let r = &mut reqs[ri];
             if r.finish_s.is_some() {
                 continue;
             }
-            rng.partial_shuffle(&mut set_buf, k);
-            r.placement = arena.intern(&set_buf[..k]);
+            route_draw(&mut r.rng, &canonical_nodes, k, &mut set_buf);
+            r.placement = arena.intern(&set_buf);
             if mode == BenchMode::Naive {
                 ready_count += 1;
                 peak_depth = peak_depth.max(ready_count);

@@ -6,15 +6,26 @@
 //! node-indexed frontier solver the engine runs — cross-checks that all
 //! produce bit-identical schedules, then repeats frontier vs closure on a
 //! ≥1024-in-flight deep-pool scenario where per-event eligibility work
-//! dominates.  Emits `BENCH_sched.json` — events/sec, scheduler ns/event,
-//! eligibility touches/event, an allocations proxy, and the modeled
-//! p50/p99 latency + throughput — the perf trajectory CI gates on
+//! dominates.  A `--shards` sweep then drives the sharded parallel engine
+//! core (`coordinator::shard`) over both scenarios at 1/2/4 worker
+//! threads, cross-checks that every thread count produces bit-identical
+//! schedules (same `schedule_hash`, same per-request finish times), and
+//! records the events/sec scaling.  Emits `BENCH_sched.json` (schema 3) —
+//! events/sec, scheduler ns/event, eligibility touches/event, an
+//! allocations proxy, modeled p50/p99 latency + throughput, and the
+//! multi-thread scaling block — the perf trajectory CI gates on
 //! (artifact upload + regression check).  Needs no PJRT artifacts.
 
 use anyhow::Result;
 use cosine::bench::sched::{run_sched_bench, schedule_identical, BenchMode, SchedBenchSpec};
+use cosine::coordinator::shard::{identical, run_sharded, ShardedReport};
 use cosine::util::json::Json;
 use std::collections::BTreeMap;
+
+/// Logical shard (drafter node group) count for the scaling sweep: a
+/// workload parameter held fixed while the thread count varies, so the
+/// sweep isolates execution parallelism from workload shape.
+const SWEEP_GROUPS: usize = 4;
 
 fn print_report(r: &cosine::bench::sched::SchedBenchReport) {
     println!(
@@ -30,7 +41,53 @@ fn print_report(r: &cosine::bench::sched::SchedBenchReport) {
     );
 }
 
-pub fn run(out: &str, smoke: bool, requests: Option<usize>) -> Result<()> {
+fn print_sharded(r: &ShardedReport) {
+    println!(
+        "shards x{:<2} events={:<6} rounds={:<5} events/s={:>12.0} xmsg={:<6} stall={:>7.1}ms hash={:016x}",
+        r.n_threads,
+        r.events,
+        r.rounds,
+        r.events_per_s,
+        r.cross_shard_msgs,
+        r.merge_stall_ms(),
+        r.schedule_hash,
+    );
+}
+
+/// Sweep one spec's sharded workload over the requested thread counts;
+/// returns (per-thread reports, all-identical flag).
+fn shard_sweep(spec: &SchedBenchSpec, threads: &[usize]) -> (Vec<ShardedReport>, bool) {
+    let w = spec.shard_workload(SWEEP_GROUPS);
+    let reports: Vec<ShardedReport> = threads.iter().map(|&t| run_sharded(&w, t)).collect();
+    for r in &reports {
+        print_sharded(r);
+    }
+    let all_identical = reports.windows(2).all(|p| identical(&p[0], &p[1]));
+    (reports, all_identical)
+}
+
+fn sweep_json(reports: &[ShardedReport], all_identical: bool) -> Json {
+    let mut m = BTreeMap::new();
+    for r in reports {
+        m.insert(format!("t{}", r.n_threads), r.to_json());
+    }
+    m.insert("identical".to_string(), Json::Bool(all_identical));
+    if let (Some(first), Some(last)) = (reports.first(), reports.last()) {
+        let speedup = if first.events_per_s > 0.0 {
+            last.events_per_s / first.events_per_s
+        } else {
+            0.0
+        };
+        m.insert("speedup_max_threads".to_string(), Json::Num(speedup));
+        m.insert(
+            "max_threads".to_string(),
+            Json::Num(last.n_threads as f64),
+        );
+    }
+    Json::Obj(m)
+}
+
+pub fn run(out: &str, smoke: bool, requests: Option<usize>, shards: &str) -> Result<()> {
     let mut spec = if smoke {
         SchedBenchSpec::smoke()
     } else {
@@ -39,6 +96,17 @@ pub fn run(out: &str, smoke: bool, requests: Option<usize>) -> Result<()> {
     if let Some(n) = requests {
         spec.n_requests = n.max(1);
     }
+    let threads: Vec<usize> = shards
+        .split(',')
+        .filter(|s| !s.trim().is_empty())
+        .map(|s| {
+            s.trim()
+                .parse::<usize>()
+                .map_err(|e| anyhow::anyhow!("bad --shards entry {s:?}: {e}"))
+                .map(|n| n.max(1))
+        })
+        .collect::<Result<_>>()?;
+    anyhow::ensure!(!threads.is_empty(), "--shards needs at least one thread count");
     println!(
         "sched bench ({}): {} requests, γ={} accept={} nodes={} replicas={} max_batch={}",
         if smoke { "smoke" } else { "deep" },
@@ -56,7 +124,7 @@ pub fn run(out: &str, smoke: bool, requests: Option<usize>) -> Result<()> {
     for r in [&naive, &closure, &frontier] {
         print_report(r);
     }
-    let identical =
+    let identical_modes =
         schedule_identical(&frontier, &naive) && schedule_identical(&frontier, &closure);
     let speedup = if naive.events_per_s > 0.0 {
         frontier.events_per_s / naive.events_per_s
@@ -64,7 +132,7 @@ pub fn run(out: &str, smoke: bool, requests: Option<usize>) -> Result<()> {
         0.0
     };
     println!(
-        "speedup(events/s)={speedup:.2}x schedule_identical={identical} modeled p50/p99={:.2}/{:.2}s thr={:.1} tok/s",
+        "speedup(events/s)={speedup:.2}x schedule_identical={identical_modes} modeled p50/p99={:.2}/{:.2}s thr={:.1} tok/s",
         frontier.p50_latency_s, frontier.p99_latency_s, frontier.throughput_tps,
     );
 
@@ -89,6 +157,27 @@ pub fn run(out: &str, smoke: bool, requests: Option<usize>) -> Result<()> {
         deep_closure.elig_touched_per_event,
     );
 
+    // sharded engine core: same workloads, n_groups fixed, thread count
+    // swept — schedules must be bit-identical at every thread count
+    println!(
+        "sharded engine sweep: {SWEEP_GROUPS} groups, threads {:?} (base scenario)",
+        threads
+    );
+    let (base_sweep, base_identical) = shard_sweep(&spec, &threads);
+    println!(
+        "sharded engine sweep: {SWEEP_GROUPS} groups, threads {:?} (deep-pool scenario)",
+        threads
+    );
+    let (deep_sweep, deep_sweep_identical) = shard_sweep(&deep_spec, &threads);
+    let shard_speedup = match (deep_sweep.first(), deep_sweep.last()) {
+        (Some(a), Some(b)) if a.events_per_s > 0.0 => b.events_per_s / a.events_per_s,
+        _ => 0.0,
+    };
+    println!(
+        "sharded identical: base={base_identical} deep={deep_sweep_identical} deep speedup({}t vs 1t)={shard_speedup:.2}x",
+        deep_sweep.last().map(|r| r.n_threads).unwrap_or(1),
+    );
+
     let mut workload = BTreeMap::new();
     workload.insert("n_requests".to_string(), Json::Num(spec.n_requests as f64));
     workload.insert("gen_len".to_string(), Json::Num(spec.gen_len as f64));
@@ -101,20 +190,39 @@ pub fn run(out: &str, smoke: bool, requests: Option<usize>) -> Result<()> {
     deep.insert("closure".to_string(), deep_closure.to_json());
     deep.insert("incremental".to_string(), deep_frontier.to_json());
     deep.insert("schedule_identical".to_string(), Json::Bool(deep_identical));
+    let mut sharded = BTreeMap::new();
+    sharded.insert("n_groups".to_string(), Json::Num(SWEEP_GROUPS as f64));
+    sharded.insert("base".to_string(), sweep_json(&base_sweep, base_identical));
+    sharded.insert(
+        "deep".to_string(),
+        sweep_json(&deep_sweep, deep_sweep_identical),
+    );
+    sharded.insert(
+        "identical".to_string(),
+        Json::Bool(base_identical && deep_sweep_identical),
+    );
     let mut m = BTreeMap::new();
-    m.insert("schema".to_string(), Json::Num(2.0));
+    m.insert("schema".to_string(), Json::Num(3.0));
     m.insert("workload".to_string(), Json::Obj(workload));
     m.insert("incremental".to_string(), frontier.to_json());
     m.insert("closure".to_string(), closure.to_json());
     m.insert("naive".to_string(), naive.to_json());
     m.insert("deep".to_string(), Json::Obj(deep));
+    m.insert("sharded".to_string(), Json::Obj(sharded));
     m.insert("speedup_events_per_s".to_string(), Json::Num(speedup));
-    m.insert("schedule_identical".to_string(), Json::Bool(identical));
+    m.insert(
+        "schedule_identical".to_string(),
+        Json::Bool(identical_modes),
+    );
     std::fs::write(out, Json::Obj(m).to_string())?;
     println!("wrote {out}");
     anyhow::ensure!(
-        identical && deep_identical,
+        identical_modes && deep_identical,
         "frontier schedule diverged from the closure/naive reference"
+    );
+    anyhow::ensure!(
+        base_identical && deep_sweep_identical,
+        "sharded engine schedules diverged across thread counts"
     );
     Ok(())
 }

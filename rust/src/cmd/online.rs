@@ -25,10 +25,10 @@ pub fn run(cfg: &CosineConfig, modes: &str, minutes: f64) -> Result<()> {
     );
 
     println!(
-        "\nmode      | strategy   | mean lat (s) | p99 (s) | ms/token | tok/s | idle% | qwait(s) | shards | shard-eff% | sched ns/ev | elig/ev | cost/tok"
+        "\nmode      | strategy   | mean lat (s) | p99 (s) | ms/token | tok/s | idle% | qwait(s) | shards | shard-eff% | sched ns/ev | elig/ev | eng | xmsg | stall ms | cost/tok"
     );
     println!(
-        "----------+------------+--------------+---------+----------+-------+-------+----------+--------+------------+-------------+---------+---------"
+        "----------+------------+--------------+---------+----------+-------+-------+----------+--------+------------+-------------+---------+-----+------+----------+---------"
     );
     for mode_s in modes.split(',') {
         let mode = ArrivalMode::from_str(mode_s)?;
@@ -38,7 +38,7 @@ pub fn run(cfg: &CosineConfig, modes: &str, minutes: f64) -> Result<()> {
         for strat in ["cosine", "specinfer", "pipeinfer", "vanilla", "vllm"] {
             let r = cosine::bench::run(&ctx, &trace, strat)?;
             println!(
-                "{:<9} | {:<10} | {:>12.2} | {:>7.2} | {:>8.1} | {:>5.1} | {:>5.0} | {:>8.3} | {:>6.2} | {:>10.1} | {:>11.0} | {:>7.1} | ${:.6}",
+                "{:<9} | {:<10} | {:>12.2} | {:>7.2} | {:>8.1} | {:>5.1} | {:>5.0} | {:>8.3} | {:>6.2} | {:>10.1} | {:>11.0} | {:>7.1} | {:>3} | {:>4} | {:>8.1} | ${:.6}",
                 mode_s.trim(),
                 strat,
                 r.mean_latency_s(),
@@ -51,6 +51,9 @@ pub fn run(cfg: &CosineConfig, modes: &str, minutes: f64) -> Result<()> {
                 r.shard_efficiency() * 100.0,
                 r.sched_ns_per_event(),
                 r.elig_touched_per_event(),
+                r.engine.n_shards.max(1),
+                r.engine.cross_shard_msgs,
+                r.merge_stall_ms(),
                 r.cost_per_token,
             );
         }

@@ -154,6 +154,24 @@ impl EventQueue {
         self.heap.push(Event { at, seq, kind });
     }
 
+    /// Reserve the next sequence number without pushing an event.  The
+    /// sharded engine claims a `VerifyDone`'s tie-break slot at dispatch
+    /// submission — exactly where the single-threaded loop pushes the
+    /// event — and fills it in with [`Self::push_at_seq`] when the
+    /// completion comes back from the verify hub, so FIFO-within-timestamp
+    /// ordering is identical in both execution modes.
+    pub fn reserve_seq(&mut self) -> u64 {
+        let seq = self.seq;
+        self.seq += 1;
+        seq
+    }
+
+    /// Push an event under a sequence number from [`Self::reserve_seq`].
+    pub fn push_at_seq(&mut self, at: f64, seq: u64, kind: EventKind) {
+        debug_assert!(seq < self.seq, "seq {seq} was never reserved");
+        self.heap.push(Event { at, seq, kind });
+    }
+
     pub fn pop(&mut self) -> Option<(f64, EventKind)> {
         self.heap.pop().map(|e| (e.at, e.kind))
     }
@@ -782,6 +800,8 @@ pub fn run_speculative(
         .exec_wall_ns
         .load(std::sync::atomic::Ordering::Relaxed);
     stats.elig_touched = cpool.elig_touched();
+    stats.shard_events = vec![stats.events_processed];
+    stats.n_shards = 1;
     Ok(RunReport::assemble(
         &opts.name,
         &ctx.cfg.pair,
@@ -974,6 +994,8 @@ pub fn run_vllm(ctx: &ServingContext, trace: &Trace) -> Result<RunReport> {
         .exec_wall_ns
         .load(std::sync::atomic::Ordering::Relaxed);
     stats.elig_touched = cpool.elig_touched();
+    stats.shard_events = vec![stats.events_processed];
+    stats.n_shards = 1;
     Ok(RunReport::assemble(
         "vllm",
         &ctx.cfg.pair,

@@ -15,7 +15,7 @@ use super::request::Request;
 /// event, so its per-event wall cost is the one coordinator overhead that
 /// scales with traffic — `cosine online` prints it next to the modeled
 /// metrics and `cosine bench` gates on it.
-#[derive(Debug, Clone, Copy, Default)]
+#[derive(Debug, Clone, Default)]
 pub struct EngineStats {
     /// events popped from the queue (including coalesced ones)
     pub events_processed: u64,
@@ -35,6 +35,19 @@ pub struct EngineStats {
     /// real wall-clock nanoseconds spent applying resource transitions to
     /// the eligibility index (flip + dispatch maintenance)
     pub index_wall_ns: u64,
+    /// events processed per engine shard (drafter node group); the
+    /// classic single-threaded loop reports one entry.  Deterministic —
+    /// the group decomposition, not the worker-thread mapping, owns the
+    /// events, so the vector is identical at any `--shards` count
+    pub shard_events: Vec<u64>,
+    /// cross-shard messages through the sequenced verify hub (dispatch
+    /// submissions + completion deliveries); 0 for the classic loop
+    pub cross_shard_msgs: u64,
+    /// real wall ns worker threads spent blocked on the deterministic
+    /// cross-shard merge (conservative-bound waits); 0 when single-threaded
+    pub merge_stall_ns: u64,
+    /// worker threads the engine ran on (1 = single-threaded)
+    pub n_shards: usize,
 }
 
 #[derive(Debug, Clone, Default)]
@@ -238,6 +251,23 @@ impl RunReport {
         }
     }
 
+    /// Largest per-shard share of processed events (1.0 = one shard did
+    /// everything; 1/G = perfectly balanced over G groups).
+    pub fn shard_event_imbalance(&self) -> f64 {
+        let total: u64 = self.engine.shard_events.iter().sum();
+        if total == 0 {
+            return 0.0;
+        }
+        let max = self.engine.shard_events.iter().copied().max().unwrap_or(0);
+        max as f64 / total as f64
+    }
+
+    /// Wall milliseconds worker threads spent blocked on the cross-shard
+    /// merge.
+    pub fn merge_stall_ms(&self) -> f64 {
+        self.engine.merge_stall_ns as f64 / 1e6
+    }
+
     /// Mean replicas per verify round (1.0 = never sharded, 0 = no verify
     /// rounds ran).
     pub fn mean_verify_shards(&self) -> f64 {
@@ -279,7 +309,7 @@ impl RunReport {
 
     pub fn summary_row(&self) -> String {
         format!(
-            "{:<10} pair={} n={:<3} tok={:<6} lat={:>8.1} ms/tok thr={:>8.1} tok/s acc={:>4.2} cost/tok=${:.6} idle(srv)={:.0}% qwait={:.2}s shards={:.2} sched={:.0}ns/ev elig={:.1}/ev idx={:.0}ns/ev wall={:.1}s",
+            "{:<10} pair={} n={:<3} tok={:<6} lat={:>8.1} ms/tok thr={:>8.1} tok/s acc={:>4.2} cost/tok=${:.6} idle(srv)={:.0}% qwait={:.2}s shards={:.2} sched={:.0}ns/ev elig={:.1}/ev idx={:.0}ns/ev eng={}x xmsg={} stall={:.1}ms wall={:.1}s",
             self.strategy,
             self.pair,
             self.n_requests,
@@ -294,6 +324,9 @@ impl RunReport {
             self.sched_ns_per_event(),
             self.elig_touched_per_event(),
             self.index_ns_per_event(),
+            self.engine.n_shards.max(1),
+            self.engine.cross_shard_msgs,
+            self.merge_stall_ms(),
             self.wall_s,
         )
     }

@@ -11,6 +11,9 @@
 //!   pipeline plus the per-resource `ResourcePool` generalization.
 //! * `engine` — the event-driven serving loop (binary-heap event queue,
 //!   per-node drafter occupancy, per-replica continuous batching).
+//! * `shard` — the sharded parallel engine core: drafter-group shards on
+//!   worker threads, verifier replicas merged through a sequenced
+//!   cross-shard queue, bit-identical to the single-threaded oracle.
 //! * `verifier` — greedy longest-prefix acceptance + commit bookkeeping
 //!   (the accept/bonus computation itself is fused into the L1 verify
 //!   kernel; this module owns the state updates).
@@ -27,6 +30,7 @@ pub mod request;
 pub mod router;
 pub mod sampling;
 pub mod scheduler;
+pub mod shard;
 pub mod speculation;
 pub mod verifier;
 

@@ -41,7 +41,7 @@
 //! the hardware model the scheduler needs — so benches and property tests
 //! exercise the exact serving arithmetic without loading PJRT artifacts.
 
-use std::collections::{BTreeMap, HashMap};
+use std::collections::HashMap;
 
 use crate::cluster::node::{GpuProfile, ModeledModel};
 use crate::cluster::simclock::{Phase, SimClock};
@@ -220,37 +220,216 @@ fn total_order_bits(x: f64) -> i64 {
 }
 
 /// Total-order key for the shortest-context-first Eq. 8 frontier:
-/// (ctx_len, arrival, idx), derived `Ord` = lexicographic.
-#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
-struct LenKey {
-    ctx_len: usize,
-    arrival: i64,
-    idx: usize,
+/// (ctx_len, arrival, idx), compared lexicographically.
+fn len_key(c: &Candidate) -> [i64; 3] {
+    [
+        c.ctx_len as i64,
+        total_order_bits(c.arrival_s),
+        c.idx as i64,
+    ]
 }
 
-impl LenKey {
-    fn of(c: &Candidate) -> Self {
+/// Total-order key for the FIFO (arrival) ordering: (arrival, idx).
+fn arr_key(c: &Candidate) -> [i64; 3] {
+    [total_order_bits(c.arrival_s), c.idx as i64, 0]
+}
+
+// ---------------------------------------------------------------------------
+// Arena skip-list orderings
+// ---------------------------------------------------------------------------
+
+/// Tallest tower a [`SkipOrder`] node can have.  With the deterministic
+/// p = 1/4 level draw this covers ~4^11 keys before the top level
+/// saturates — far past the deepest bench pool.
+const SKIP_MAX_LEVEL: usize = 12;
+/// Null link (and free-list terminator).
+const SKIP_NIL: u32 = u32::MAX;
+
+/// One skip-list tower in the arena.  Freed towers stay in the slab and
+/// are threaded through `next[0]` onto the free list, so a steady-state
+/// remove→insert churn (exactly what eligibility flips are) recycles
+/// slots instead of allocating.
+#[derive(Debug, Clone)]
+struct SkipNode {
+    key: [i64; 3],
+    cand: Candidate,
+    /// forward links per level (`SKIP_NIL` = end); only `..level` are live
+    next: [u32; SKIP_MAX_LEVEL],
+    /// tower height (1..=SKIP_MAX_LEVEL), a pure function of the key
+    level: u8,
+}
+
+const DUMMY_CAND: Candidate = Candidate {
+    idx: 0,
+    ctx_len: 0,
+    gamma: 0,
+    ready_at: 0.0,
+    arrival_s: 0.0,
+    placement: PlacementId::EMPTY,
+};
+
+/// Deterministic sorted ordering over [`Candidate`]s: an arena skip-list
+/// with an intrusive free list.  Replaces the former `BTreeMap` orderings
+/// so that the per-flip frontier maintenance — remove a candidate from
+/// the eligible lists, re-insert it later — is allocation-free once the
+/// slab is warm: removal pushes the tower onto the free list, insertion
+/// pops it back.  Tower heights derive from the key (hash → geometric),
+/// not from an RNG, so the structure is identical across runs and across
+/// engine shards regardless of operation interleaving.
+#[derive(Debug, Clone)]
+struct SkipOrder {
+    /// slab; index 0 is the head sentinel (never freed)
+    nodes: Vec<SkipNode>,
+    /// free-list head into `nodes` (`SKIP_NIL` = empty)
+    free: u32,
+    len: usize,
+}
+
+impl Default for SkipOrder {
+    fn default() -> Self {
         Self {
-            ctx_len: c.ctx_len,
-            arrival: total_order_bits(c.arrival_s),
-            idx: c.idx,
+            nodes: vec![SkipNode {
+                key: [i64::MIN; 3],
+                cand: DUMMY_CAND,
+                next: [SKIP_NIL; SKIP_MAX_LEVEL],
+                level: SKIP_MAX_LEVEL as u8,
+            }],
+            free: SKIP_NIL,
+            len: 0,
         }
     }
 }
 
-/// Total-order key for the FIFO (arrival) ordering: (arrival, idx).
-#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
-struct ArrKey {
-    arrival: i64,
-    idx: usize,
+impl SkipOrder {
+    /// Deterministic tower height: SplitMix64 of the key, two hash bits
+    /// per level (p = 1/4).
+    fn level_for(key: &[i64; 3]) -> u8 {
+        let mut x = (key[0] as u64)
+            .wrapping_mul(0x9E3779B97F4A7C15)
+            .wrapping_add((key[1] as u64).rotate_left(21))
+            .wrapping_add((key[2] as u64).rotate_left(42));
+        x = (x ^ (x >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        x = (x ^ (x >> 27)).wrapping_mul(0x94D049BB133111EB);
+        x ^= x >> 31;
+        (1 + (x.trailing_zeros() / 2) as usize).min(SKIP_MAX_LEVEL) as u8
+    }
+
+    fn len(&self) -> usize {
+        self.len
+    }
+
+    fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Fill `update` with, per level, the last tower whose key is < `key`.
+    fn find_update(&self, key: &[i64; 3], update: &mut [u32; SKIP_MAX_LEVEL]) {
+        let mut x = 0u32;
+        for lvl in (0..SKIP_MAX_LEVEL).rev() {
+            loop {
+                let nxt = self.nodes[x as usize].next[lvl];
+                if nxt != SKIP_NIL && self.nodes[nxt as usize].key < *key {
+                    x = nxt;
+                } else {
+                    break;
+                }
+            }
+            update[lvl] = x;
+        }
+    }
+
+    /// Insert a candidate under `key`.  Keys are unique by construction
+    /// (they embed the pool idx); inserting a duplicate is a logic error
+    /// upstream and only checked in debug builds.
+    fn insert(&mut self, key: [i64; 3], cand: Candidate) {
+        let mut update = [0u32; SKIP_MAX_LEVEL];
+        self.find_update(&key, &mut update);
+        debug_assert!(
+            {
+                let at = self.nodes[update[0] as usize].next[0];
+                at == SKIP_NIL || self.nodes[at as usize].key != key
+            },
+            "duplicate skip-list key {key:?}"
+        );
+        let level = Self::level_for(&key);
+        let idx = if self.free != SKIP_NIL {
+            let idx = self.free;
+            self.free = self.nodes[idx as usize].next[0];
+            idx
+        } else {
+            self.nodes.push(SkipNode {
+                key,
+                cand,
+                next: [SKIP_NIL; SKIP_MAX_LEVEL],
+                level,
+            });
+            (self.nodes.len() - 1) as u32
+        };
+        let node = &mut self.nodes[idx as usize];
+        node.key = key;
+        node.cand = cand;
+        node.level = level;
+        node.next = [SKIP_NIL; SKIP_MAX_LEVEL];
+        for lvl in 0..level as usize {
+            let prev = update[lvl] as usize;
+            self.nodes[idx as usize].next[lvl] = self.nodes[prev].next[lvl];
+            self.nodes[prev].next[lvl] = idx;
+        }
+        self.len += 1;
+    }
+
+    /// Remove the tower under `key`; returns whether it was present.  The
+    /// freed slot is pushed onto the free list for the next insert.
+    fn remove(&mut self, key: &[i64; 3]) -> bool {
+        let mut update = [0u32; SKIP_MAX_LEVEL];
+        self.find_update(key, &mut update);
+        let tgt = self.nodes[update[0] as usize].next[0];
+        if tgt == SKIP_NIL || self.nodes[tgt as usize].key != *key {
+            return false;
+        }
+        for lvl in 0..self.nodes[tgt as usize].level as usize {
+            let prev = update[lvl] as usize;
+            if self.nodes[prev].next[lvl] == tgt {
+                self.nodes[prev].next[lvl] = self.nodes[tgt as usize].next[lvl];
+            }
+        }
+        self.nodes[tgt as usize].next[0] = self.free;
+        self.free = tgt;
+        self.len -= 1;
+        true
+    }
+
+    /// In-order candidate iteration (level-0 chain).
+    fn iter(&self) -> SkipIter<'_> {
+        SkipIter {
+            order: self,
+            at: self.nodes[0].next[0],
+        }
+    }
+
+    /// Slab capacity (head sentinel included) — exposed so tests can pin
+    /// the free-list reuse: churn at steady depth must not grow the slab.
+    #[cfg(test)]
+    fn slab_len(&self) -> usize {
+        self.nodes.len()
+    }
 }
 
-impl ArrKey {
-    fn of(c: &Candidate) -> Self {
-        Self {
-            arrival: total_order_bits(c.arrival_s),
-            idx: c.idx,
+struct SkipIter<'a> {
+    order: &'a SkipOrder,
+    at: u32,
+}
+
+impl<'a> Iterator for SkipIter<'a> {
+    type Item = &'a Candidate;
+
+    fn next(&mut self) -> Option<&'a Candidate> {
+        if self.at == SKIP_NIL {
+            return None;
         }
+        let node = &self.order.nodes[self.at as usize];
+        self.at = node.next[0];
+        Some(&node.cand)
     }
 }
 
@@ -286,7 +465,9 @@ struct Slot {
 /// (fed from [`super::pipeline::ResourcePool::drafter_transitions`])
 /// walks only `node_index[d]` — the candidates actually placed on the
 /// node that changed — moving the ones whose count crosses zero in or out
-/// of the eligible maps.  A `DraftDone` on node d therefore costs
+/// of the eligible orderings.  The orderings are [`SkipOrder`] arena
+/// skip-lists with intrusive free lists, so that churn recycles towers
+/// instead of allocating BTree nodes.  A `DraftDone` on node d costs
 /// O(candidates on d · log n) instead of the closure-filtered sweep's
 /// O(in-flight); the per-candidate work is tracked in
 /// [`Self::elig_touched`] and CI-gated sublinear by `cosine bench`.
@@ -305,10 +486,10 @@ pub struct CandidatePool {
     /// per-idx insertion generation (survives removal so stale node-index
     /// entries can never resurrect a re-inserted candidate)
     gens: Vec<u32>,
-    all_len: BTreeMap<LenKey, Candidate>,
-    all_arr: BTreeMap<ArrKey, Candidate>,
-    elig_len: BTreeMap<LenKey, Candidate>,
-    elig_arr: BTreeMap<ArrKey, Candidate>,
+    all_len: SkipOrder,
+    all_arr: SkipOrder,
+    elig_len: SkipOrder,
+    elig_arr: SkipOrder,
     /// candidates touched by index maintenance (inserts + busy/free
     /// flips) — the O(affected) work replacing the per-event filter
     touched: u64,
@@ -349,32 +530,32 @@ impl CandidatePool {
 
     /// All ready candidates in shortest-context-first order.
     pub fn iter_len(&self) -> impl Iterator<Item = &Candidate> {
-        self.all_len.values()
+        self.all_len.iter()
     }
 
     /// All ready candidates in FIFO (arrival) order.
     pub fn iter_arrival(&self) -> impl Iterator<Item = &Candidate> {
-        self.all_arr.values()
+        self.all_arr.iter()
     }
 
     /// The eligible frontier in shortest-context-first order — what
     /// [`Scheduler::assign_incremental`] sweeps.  A pool without node
     /// resources aliases the all-candidate ordering (everything is
-    /// always eligible; no duplicate maps are maintained).
+    /// always eligible; no duplicate lists are maintained).
     pub fn iter_len_eligible(&self) -> impl Iterator<Item = &Candidate> {
         if self.n_nodes == 0 {
-            self.all_len.values()
+            self.all_len.iter()
         } else {
-            self.elig_len.values()
+            self.elig_len.iter()
         }
     }
 
     /// The eligible frontier in FIFO (arrival) order.
     pub fn iter_arrival_eligible(&self) -> impl Iterator<Item = &Candidate> {
         if self.n_nodes == 0 {
-            self.all_arr.values()
+            self.all_arr.iter()
         } else {
-            self.elig_arr.values()
+            self.elig_arr.iter()
         }
     }
 
@@ -404,13 +585,13 @@ impl CandidatePool {
             }
         }
         self.slots[c.idx] = Some(Slot { gen, busy_cnt, cand: c });
-        self.all_len.insert(LenKey::of(&c), c);
-        self.all_arr.insert(ArrKey::of(&c), c);
+        self.all_len.insert(len_key(&c), c);
+        self.all_arr.insert(arr_key(&c), c);
         // node-less pools alias the eligible orderings to the all-candidate
-        // maps instead of duplicating every entry
+        // lists instead of duplicating every entry
         if self.n_nodes > 0 && busy_cnt == 0 {
-            self.elig_len.insert(LenKey::of(&c), c);
-            self.elig_arr.insert(ArrKey::of(&c), c);
+            self.elig_len.insert(len_key(&c), c);
+            self.elig_arr.insert(arr_key(&c), c);
         }
         self.touched += 1;
     }
@@ -420,11 +601,11 @@ impl CandidatePool {
             return;
         };
         let c = slot.cand;
-        self.all_len.remove(&LenKey::of(&c));
-        self.all_arr.remove(&ArrKey::of(&c));
+        self.all_len.remove(&len_key(&c));
+        self.all_arr.remove(&arr_key(&c));
         if self.n_nodes > 0 && slot.busy_cnt == 0 {
-            self.elig_len.remove(&LenKey::of(&c));
-            self.elig_arr.remove(&ArrKey::of(&c));
+            self.elig_len.remove(&len_key(&c));
+            self.elig_arr.remove(&arr_key(&c));
         }
         // node-index entries die lazily (generation mismatch) at the next
         // flip of their node — no per-removal index walk
@@ -464,8 +645,8 @@ impl CandidatePool {
                 s.busy_cnt -= 1;
                 if s.busy_cnt == 0 {
                     let c = s.cand;
-                    self.elig_len.insert(LenKey::of(&c), c);
-                    self.elig_arr.insert(ArrKey::of(&c), c);
+                    self.elig_len.insert(len_key(&c), c);
+                    self.elig_arr.insert(arr_key(&c), c);
                 }
                 true
             }
@@ -487,8 +668,8 @@ impl CandidatePool {
                 self.touched += 1;
                 if s.busy_cnt == 0 {
                     let c = s.cand;
-                    self.elig_len.remove(&LenKey::of(&c));
-                    self.elig_arr.remove(&ArrKey::of(&c));
+                    self.elig_len.remove(&len_key(&c));
+                    self.elig_arr.remove(&arr_key(&c));
                 }
                 s.busy_cnt += 1;
                 true
@@ -1107,6 +1288,106 @@ mod tests {
         let by_arr: Vec<usize> = pool.iter_arrival().map(|c| c.idx).collect();
         assert_eq!(by_arr, vec![0, 1]);
         assert_eq!(pool.eligible_len(), 2);
+    }
+
+    #[test]
+    fn skip_order_matches_btree_reference() {
+        // random insert/remove interleavings: the arena skip-list must
+        // agree with a BTreeMap over the same keys at every step
+        use std::collections::BTreeMap;
+        for seed in 0..200u64 {
+            let mut rng = Rng::seed_from_u64(0x51CF ^ (seed * 0x9E3779B9));
+            let mut skip = SkipOrder::default();
+            let mut tree: BTreeMap<[i64; 3], usize> = BTreeMap::new();
+            for step in 0..120 {
+                let idx = rng.usize(40);
+                let c = Candidate {
+                    idx,
+                    ctx_len: rng.usize(8),
+                    gamma: 4,
+                    ready_at: 0.0,
+                    arrival_s: rng.usize(4) as f64,
+                    placement: PlacementId::EMPTY,
+                };
+                let key = len_key(&c);
+                if tree.contains_key(&key) {
+                    assert!(skip.remove(&key), "step {step}: present key must remove");
+                    tree.remove(&key);
+                } else if rng.bool(0.7) {
+                    skip.insert(key, c);
+                    tree.insert(key, idx);
+                } else {
+                    assert!(!skip.remove(&key), "step {step}: absent key must miss");
+                }
+                assert_eq!(skip.len(), tree.len());
+                let got: Vec<usize> = skip.iter().map(|c| c.idx).collect();
+                let want: Vec<usize> = tree.values().copied().collect();
+                assert_eq!(got, want, "seed {seed} step {step}");
+            }
+        }
+    }
+
+    #[test]
+    fn skip_order_churn_reuses_the_slab() {
+        // the free list must make steady-state flip churn allocation-free:
+        // after a warm-up fill, remove→insert cycles never grow the slab
+        let mut skip = SkipOrder::default();
+        let c = |idx: usize| Candidate {
+            idx,
+            ctx_len: idx % 17,
+            gamma: 4,
+            ready_at: 0.0,
+            arrival_s: idx as f64,
+            placement: PlacementId::EMPTY,
+        };
+        for i in 0..256 {
+            skip.insert(len_key(&c(i)), c(i));
+        }
+        let warm = skip.slab_len();
+        for round in 0..50 {
+            for i in (round % 4) * 64..(round % 4) * 64 + 64 {
+                assert!(skip.remove(&len_key(&c(i))));
+            }
+            for i in (round % 4) * 64..(round % 4) * 64 + 64 {
+                skip.insert(len_key(&c(i)), c(i));
+            }
+        }
+        assert_eq!(
+            skip.slab_len(),
+            warm,
+            "remove→insert churn at steady depth must recycle towers"
+        );
+        assert_eq!(skip.len(), 256);
+    }
+
+    #[test]
+    fn pool_flip_churn_is_allocation_free_after_warmup() {
+        // end-to-end: eligibility flips through the pool API recycle
+        // towers in the eligible orderings (the bench microbench pins the
+        // same path's wall cost)
+        let mut arena = PlacementArena::new();
+        let p0 = arena.intern(&[0]);
+        let mut pool = CandidatePool::new(2);
+        let c = |idx: usize| Candidate {
+            idx,
+            ctx_len: 10 + idx,
+            gamma: 4,
+            ready_at: 0.0,
+            arrival_s: idx as f64,
+            placement: p0,
+        };
+        for i in 0..128 {
+            pool.insert(c(i), &arena);
+        }
+        pool.on_node_busy(0);
+        pool.on_node_freed(0);
+        let warm = pool.elig_len.slab_len();
+        for _ in 0..100 {
+            pool.on_node_busy(0);
+            pool.on_node_freed(0);
+        }
+        assert_eq!(pool.elig_len.slab_len(), warm);
+        assert_eq!(pool.eligible_len(), 128);
     }
 
     #[test]

@@ -1,0 +1,1092 @@
+//! Sharded parallel engine core: the virtual-time serving simulation
+//! partitioned by drafter node *group*, executed on worker threads with a
+//! deterministic cross-shard merge — the multi-core platform the ROADMAP's
+//! scale targets (≥1M simulated requests, 10–100× clusters) run on.
+//!
+//! # Decomposition
+//!
+//! The cluster's drafter nodes are partitioned into `n_groups` groups
+//! (node `d` → group `d % n_groups`), and requests are pinned to groups
+//! the same way (`ri % n_groups`).  Each group is one *logical shard*
+//! owning everything its events touch:
+//!
+//! * its slice of the request set, with a **per-request routing stream**
+//!   ([`request_rng`]) replacing a single global RNG — routing draws
+//!   depend only on (workload seed, request id, draw number), so the
+//!   schedule decomposes across groups instead of coupling through a
+//!   shared RNG cursor;
+//! * its own [`CandidatePool`] (including the node-indexed eligible
+//!   frontier, fed by its own [`ResourcePool::drafter_transitions`]);
+//! * its own [`EventQueue`] (arrivals, per-node `DraftDone`s, its rounds'
+//!   `VerifyDone`s, `SchedTick`s).
+//!
+//! The group count is a **workload parameter** (like the node count), not
+//! an execution detail: `--shards N` picks how many *worker threads*
+//! execute the groups, and any thread count yields bit-identical
+//! schedules, timelines, and reports for a fixed group decomposition.
+//! `n_groups = 1` reproduces the single-pool legacy semantics exactly
+//! (the 1-node + 1-replica corner is property-tested against the classic
+//! loop in `bench::sched`).
+//!
+//! # The sequenced verify hub
+//!
+//! Verifier replicas are shared: every round dispatch crosses shards
+//! through a hub that applies dispatches to the shared replica state in a
+//! **total order on (virtual dispatch time, shard id, dispatch seq)** —
+//! the same order the rounds would hit the replicas in on one thread.
+//! Dispatch times are clamped monotone per shard by a watermark over
+//! processed event instants (draft reservations may start in the past, so
+//! raw heap time is not monotone), which makes within-shard merge order
+//! exactly submission order and the cross-shard order a pure function of
+//! the workload.
+//!
+//! Worker threads advance independently between these synchronization
+//! points under a conservative-lookahead rule: each shard publishes a
+//! lower bound on any dispatch key it can still produce —
+//! `max(watermark, min(next local event time, earliest in-flight round's
+//! modeled draft completion))` — and the hub applies a pending dispatch
+//! only once it precedes every *other* shard's bound.  The lookahead
+//! window comes from the modeled draft latency: a submitted round's
+//! verify readiness is its known draft end, which lower-bounds every
+//! event (hence every later dispatch) the round can cause.  The verify
+//! reservation returns asynchronously; its `VerifyDone` is pushed under
+//! an event seq *reserved at submission* ([`EventQueue::reserve_seq`]),
+//! so FIFO-within-timestamp tie-breaks match the classic loop exactly.
+//!
+//! Deadlock freedom: if every shard is blocked, the globally minimal
+//! pending dispatch precedes every other shard's bound (bounds are
+//! watermark-clamped and per-shard keys strictly increase), so the hub
+//! can always apply it — see `try_apply`.
+//!
+//! [`run_single`] is [`run_sharded`] driven by one worker thread: the
+//! same shard/hub code executed sequentially, kept as the oracle the
+//! property tests and the `cosine bench --shards` sweep hold N-thread
+//! runs bit-identical to.
+
+use std::collections::HashMap;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::config::SchedulerConfig;
+use crate::coordinator::engine::{chunk_pending_rounds, collect_ready, EventKind, EventQueue};
+use crate::coordinator::pipeline::{ResourcePool, ShardedVerify};
+use crate::coordinator::scheduler::{
+    Candidate, CandidatePool, PlacementArena, PlacementId, SchedCostModel, Scheduler,
+};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+// ---------------------------------------------------------------------------
+// Workload
+// ---------------------------------------------------------------------------
+
+/// A deterministic synthetic serving workload over a grouped cluster —
+/// the sharded counterpart of `bench::sched::SchedBenchSpec` (which
+/// converts into one via `SchedBenchSpec::shard_workload`).
+#[derive(Debug, Clone)]
+pub struct ShardWorkload {
+    pub n_requests: usize,
+    /// arrival spacing (virtual seconds)
+    pub arrival_dt: f64,
+    pub prompt_len: usize,
+    pub gen_len: usize,
+    /// per-request draft budget γ
+    pub gamma: usize,
+    /// accepted drafts per round (committed tokens = accept + 1)
+    pub accept: usize,
+    pub n_nodes: usize,
+    pub n_replicas: usize,
+    /// drafters per request (clamped to the group size)
+    pub k: usize,
+    pub max_batch: usize,
+    pub seed: u64,
+    /// drafter node groups = logical engine shards.  Part of the modeled
+    /// workload: changing it changes the schedule; changing the *thread*
+    /// count never does.
+    pub n_groups: usize,
+}
+
+impl ShardWorkload {
+    /// Effective group count (clamped to the node count, ≥ 1).
+    pub fn groups(&self) -> usize {
+        self.n_groups.clamp(1, self.n_nodes.max(1))
+    }
+}
+
+/// Deterministic per-request routing stream: draws depend only on the
+/// workload seed and the request id, never on other requests' progress —
+/// the property that lets the schedule decompose across shards.
+pub fn request_rng(seed: u64, ri: usize) -> Rng {
+    Rng::seed_from_u64(seed.wrapping_add((ri as u64).wrapping_mul(0x9E3779B97F4A7C15)))
+}
+
+/// One routing draw: pick `k` of `nodes` into `scratch` (a fresh partial
+/// shuffle of the canonical node list each draw).
+pub fn route_draw(rng: &mut Rng, nodes: &[usize], k: usize, scratch: &mut Vec<usize>) {
+    scratch.clear();
+    scratch.extend_from_slice(nodes);
+    let k = k.min(nodes.len());
+    rng.partial_shuffle(scratch, k);
+    scratch.truncate(k);
+}
+
+// ---------------------------------------------------------------------------
+// Cross-shard merge keys and hub messages
+// ---------------------------------------------------------------------------
+
+/// Total-order key of a round dispatch: (virtual dispatch time, shard id,
+/// per-shard dispatch seq).  Within a shard keys strictly increase (the
+/// time component is watermark-clamped), so the merged order is exactly
+/// the one-thread interleaving.
+#[derive(Debug, Clone, Copy)]
+struct MergeKey {
+    t: f64,
+    group: u32,
+    seq: u64,
+}
+
+impl MergeKey {
+    const FLOOR: MergeKey = MergeKey {
+        t: f64::NEG_INFINITY,
+        group: 0,
+        seq: 0,
+    };
+
+    fn lt(&self, other: &MergeKey) -> bool {
+        self.t
+            .total_cmp(&other.t)
+            .then(self.group.cmp(&other.group))
+            .then(self.seq.cmp(&other.seq))
+            .is_lt()
+    }
+}
+
+/// A round dispatch crossing to the verify hub.
+struct Dispatch {
+    key: MergeKey,
+    /// batch size
+    b: usize,
+    /// draft completion = verify readiness (known at submission)
+    ready: f64,
+    /// per-shard-count verify durations (replica sharding menu)
+    durs: Vec<f64>,
+    /// backlog round durations for the queue-aware sharding choice
+    pending_durs: Vec<f64>,
+    /// shard-local round id
+    rid: u64,
+    /// event seq reserved for the `VerifyDone` at submission
+    reserved_seq: u64,
+}
+
+/// A verify reservation coming back from the hub.
+struct RoundResult {
+    rid: u64,
+    /// event seq reserved at submission for the `VerifyDone`
+    seq: u64,
+    sv: ShardedVerify,
+}
+
+/// Shared verify stage: the replica [`ResourcePool`] plus the
+/// conservative merge state.  All access is under one mutex; a worker
+/// blocks on the condvar only when every shard it owns is gated (that
+/// blocked wall time is what `merge_stall_ns` reports).
+struct Hub {
+    state: Mutex<HubState>,
+    cv: Condvar,
+}
+
+struct HubState {
+    /// verifier replicas (no drafters — those are shard-owned)
+    res: ResourcePool,
+    /// per-group lower bound on any future dispatch key
+    bounds: Vec<MergeKey>,
+    /// per-group FIFO of submitted, not-yet-applied dispatches (keys
+    /// strictly increase within a group)
+    pending: Vec<Vec<Dispatch>>,
+    /// per-group inbox of applied verify reservations
+    results: Vec<Vec<RoundResult>>,
+}
+
+impl Hub {
+    fn new(w: &ShardWorkload, allgather_step_s: f64) -> Self {
+        let groups = w.groups();
+        let mut res = ResourcePool::new(0, w.n_replicas.max(1));
+        res.allgather_step_s = allgather_step_s;
+        Hub {
+            state: Mutex::new(HubState {
+                res,
+                bounds: vec![MergeKey::FLOOR; groups],
+                pending: (0..groups).map(|_| Vec::new()).collect(),
+                results: (0..groups).map(|_| Vec::new()).collect(),
+            }),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Apply, in global key order, every pending dispatch that precedes
+    /// all other groups' bounds.  Returns whether anything applied.
+    fn try_apply(st: &mut HubState) -> bool {
+        let mut any = false;
+        loop {
+            let mut best: Option<(usize, MergeKey)> = None;
+            for (g, q) in st.pending.iter().enumerate() {
+                if let Some(d) = q.first() {
+                    if best.is_none_or(|(_, k)| d.key.lt(&k)) {
+                        best = Some((g, d.key));
+                    }
+                }
+            }
+            let Some((g, key)) = best else { break };
+            let gated = st.bounds.iter().enumerate().any(|(g2, b)| g2 != g && !key.lt(b));
+            if gated {
+                break;
+            }
+            let d = st.pending[g].remove(0);
+            let sv = st.res.verify_sharded_queued_with(d.b, d.ready, &d.durs, &d.pending_durs);
+            st.results[g].push(RoundResult {
+                rid: d.rid,
+                seq: d.reserved_seq,
+                sv,
+            });
+            any = true;
+        }
+        any
+    }
+
+    /// Submit a dispatch and advance the group's bound past it.
+    fn submit(&self, d: Dispatch, bound: MergeKey) {
+        let mut st = self.state.lock().unwrap();
+        let g = d.key.group as usize;
+        debug_assert!(
+            st.pending[g].last().is_none_or(|p| p.key.lt(&d.key)),
+            "dispatch keys must strictly increase within a shard"
+        );
+        st.pending[g].push(d);
+        st.bounds[g] = bound;
+        Self::try_apply(&mut st);
+        drop(st);
+        self.cv.notify_all();
+    }
+
+    /// Publish a fresh bound for `g`, apply whatever that unlocks, and
+    /// drain `g`'s result inbox into `out`.
+    fn sync(&self, g: usize, bound: MergeKey, out: &mut Vec<RoundResult>) {
+        let mut st = self.state.lock().unwrap();
+        st.bounds[g] = bound;
+        let applied = Self::try_apply(&mut st);
+        out.append(&mut st.results[g]);
+        drop(st);
+        if applied {
+            self.cv.notify_all();
+        }
+    }
+
+    /// Block until any of `owned` has results; accumulates blocked wall
+    /// time into `stall_ns`.  The timeout re-check is a liveness belt:
+    /// correctness never depends on it (see the deadlock-freedom note in
+    /// the module docs).
+    fn wait_for_progress(&self, owned: &[usize], stall_ns: &mut u64) {
+        let t0 = Instant::now();
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if Self::try_apply(&mut st) {
+                self.cv.notify_all();
+            }
+            if owned.iter().any(|&g| !st.results[g].is_empty()) {
+                break;
+            }
+            let (guard, _timeout) = self.cv.wait_timeout(st, Duration::from_millis(50)).unwrap();
+            st = guard;
+        }
+        drop(st);
+        *stall_ns += t0.elapsed().as_nanos() as u64;
+    }
+
+    /// Tear down into the shared replica pool (for makespan accounting).
+    /// Panics if dispatches were left pending.
+    fn into_res(self) -> ResourcePool {
+        let st = self.state.into_inner().unwrap();
+        assert!(
+            st.pending.iter().all(|q| q.is_empty()),
+            "verify hub torn down with pending dispatches"
+        );
+        st.res
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Shard simulation
+// ---------------------------------------------------------------------------
+
+struct ShardReq {
+    ctx_len: usize,
+    remaining: usize,
+    arrival_s: f64,
+    ready_at: f64,
+    finish_s: Option<f64>,
+    placement: PlacementId,
+    rng: Rng,
+}
+
+/// A round submitted to the hub whose result has not yet been drained
+/// into the local event heap.
+struct Outstanding {
+    rid: u64,
+    /// draft completion = verify readiness; lower-bounds the round's
+    /// `VerifyDone` time (the conservative lookahead term)
+    ready: f64,
+}
+
+/// One logical shard: a group's drafter nodes, requests, candidate pool,
+/// and event heap, advanced by [`ShardSim::process_instant`] — the same
+/// instant body as the classic single-threaded loop, with round dispatch
+/// and completion crossing through the [`Hub`].
+struct ShardSim {
+    g: usize,
+    w: ShardWorkload,
+    k: usize,
+    group_nodes: Vec<usize>,
+    cost: SchedCostModel,
+    scheduler: Scheduler,
+    arena: PlacementArena,
+    cpool: CandidatePool,
+    /// drafter timeline (global node indexing; only this group's nodes
+    /// ever hold reservations — the verifier slots stay untouched, the
+    /// shared verify state lives in the hub)
+    res: ResourcePool,
+    queue: EventQueue,
+    inflight: HashMap<u64, Vec<usize>>,
+    reqs: Vec<ShardReq>,
+    unfinished: usize,
+    outstanding: Vec<Outstanding>,
+    /// monotone ratchet over processed instant times — the clamp that
+    /// keeps dispatch keys monotone even when past-started draft
+    /// reservations warp heap time backward
+    watermark: f64,
+    dispatch_seq: u64,
+    round_id: u64,
+    done: bool,
+    // counters
+    events: u64,
+    rounds: u64,
+    sched_invocations: u64,
+    sched_ns: u64,
+    index_ns: u64,
+    alloc_proxy: u64,
+    peak_depth: usize,
+    cross_msgs: u64,
+    // scratch
+    newly_ready: Vec<usize>,
+    trans: Vec<(usize, bool)>,
+    pending_durs: Vec<f64>,
+    batch_sorted: Vec<usize>,
+    set_buf: Vec<usize>,
+}
+
+impl ShardSim {
+    fn new(w: &ShardWorkload, g: usize) -> Self {
+        let groups = w.groups();
+        let cost = SchedCostModel::synthetic("l", w.n_nodes);
+        let sched_cfg = SchedulerConfig {
+            max_batch: w.max_batch,
+            ..SchedulerConfig::default()
+        };
+        let mut res = ResourcePool::new(w.n_nodes, w.n_replicas.max(1));
+        res.allgather_step_s = cost.network.allgather_step_s(w.max_batch.max(1));
+        let group_nodes: Vec<usize> = (0..w.n_nodes).filter(|d| d % groups == g).collect();
+        let k = w.k.clamp(1, group_nodes.len().max(1));
+        let reqs: Vec<ShardReq> = (0..w.n_requests)
+            .map(|i| ShardReq {
+                ctx_len: w.prompt_len,
+                remaining: w.gen_len.max(1),
+                arrival_s: i as f64 * w.arrival_dt,
+                ready_at: i as f64 * w.arrival_dt,
+                finish_s: None,
+                placement: PlacementId::EMPTY,
+                rng: request_rng(w.seed, i),
+            })
+            .collect();
+        let mut queue = EventQueue::new();
+        let mut unfinished = 0usize;
+        for (i, r) in reqs.iter().enumerate() {
+            if i % groups == g {
+                queue.push(r.arrival_s, EventKind::Arrival(i));
+                unfinished += 1;
+            }
+        }
+        ShardSim {
+            g,
+            w: w.clone(),
+            k,
+            group_nodes,
+            cost,
+            scheduler: Scheduler::new(sched_cfg, true),
+            arena: PlacementArena::new(),
+            cpool: CandidatePool::new(w.n_nodes),
+            res,
+            queue,
+            inflight: HashMap::new(),
+            reqs,
+            unfinished,
+            outstanding: Vec::new(),
+            watermark: f64::NEG_INFINITY,
+            dispatch_seq: 0,
+            round_id: 0,
+            done: false,
+            events: 0,
+            rounds: 0,
+            sched_invocations: 0,
+            sched_ns: 0,
+            index_ns: 0,
+            alloc_proxy: 0,
+            peak_depth: 0,
+            cross_msgs: 0,
+            newly_ready: Vec::new(),
+            trans: Vec::new(),
+            pending_durs: Vec::new(),
+            batch_sorted: Vec::new(),
+            set_buf: Vec::new(),
+        }
+    }
+
+    /// Earliest verify readiness among rounds whose results have not yet
+    /// been drained: a lower bound on every pending `VerifyDone` time.
+    fn outstanding_gate(&self) -> f64 {
+        self.outstanding.iter().fold(f64::INFINITY, |m, o| m.min(o.ready))
+    }
+
+    /// May the next local instant be processed without waiting on the
+    /// hub?  Strict `<`: a pending `VerifyDone` landing at exactly the
+    /// next event time carries an earlier reserved seq and must pop
+    /// first.
+    fn runnable(&self) -> bool {
+        match self.queue.next_at() {
+            Some(t) => t < self.outstanding_gate(),
+            None => false,
+        }
+    }
+
+    /// Lower bound on any dispatch key this shard can still produce.
+    fn current_bound(&self) -> MergeKey {
+        let t = self.queue.next_at().unwrap_or(f64::INFINITY).min(self.outstanding_gate());
+        MergeKey {
+            t: t.max(self.watermark),
+            group: self.g as u32,
+            seq: self.dispatch_seq,
+        }
+    }
+
+    /// Drain one applied round: commit its synthetic token outcome and
+    /// push the `VerifyDone` under the seq reserved at submission.
+    /// Committing at drain time (not schedule time) is equivalent to the
+    /// classic loop: a request sits in at most one round at a time, and
+    /// nothing reads its committed state before the `VerifyDone` pops.
+    fn apply_result(&mut self, rr: RoundResult) {
+        let batch = self.inflight.get(&rr.rid).expect("verify result for unknown round");
+        for &ri in batch {
+            let r = &mut self.reqs[ri];
+            let take = (self.w.accept + 1).min(r.remaining);
+            r.remaining -= take;
+            r.ctx_len += take;
+            r.ready_at = rr.sv.end;
+            if r.remaining == 0 {
+                r.finish_s = Some(rr.sv.end);
+                self.unfinished -= 1;
+            }
+        }
+        self.queue.push_at_seq(rr.sv.end, rr.seq, EventKind::VerifyDone(rr.rid));
+        let pos = self
+            .outstanding
+            .iter()
+            .position(|o| o.rid == rr.rid)
+            .expect("drained round was not outstanding");
+        self.outstanding.swap_remove(pos);
+        self.cross_msgs += 1;
+    }
+
+    /// Process one event instant: the classic loop body (coalesced pops,
+    /// frontier transitions, routing, the scheduling loop, the tick
+    /// safety net), with verify rounds submitted to the hub instead of
+    /// reserved on a local verifier pool.
+    fn process_instant(&mut self, hub: &Hub) {
+        let Some((now, kind)) = self.queue.pop() else {
+            return;
+        };
+        self.events += 1;
+        self.watermark = self.watermark.max(now);
+        self.newly_ready.clear();
+        collect_ready(kind, &mut self.inflight, &mut self.newly_ready);
+        while self.queue.next_at().is_some_and(|t| t <= now) {
+            if let Some((_, k2)) = self.queue.pop() {
+                self.events += 1;
+                collect_ready(k2, &mut self.inflight, &mut self.newly_ready);
+            }
+        }
+
+        // flip exactly the candidates on nodes whose reservations ended
+        let t0 = Instant::now();
+        self.res.drafter_transitions(now, &mut self.trans);
+        self.cpool.apply_transitions(&self.trans);
+        self.index_ns += t0.elapsed().as_nanos() as u64;
+
+        // route the newly-ready requests on their private streams
+        self.newly_ready.sort_unstable();
+        for &ri in &self.newly_ready {
+            let r = &mut self.reqs[ri];
+            if r.finish_s.is_some() {
+                continue;
+            }
+            route_draw(&mut r.rng, &self.group_nodes, self.k, &mut self.set_buf);
+            r.placement = self.arena.intern(&self.set_buf);
+            self.cpool.insert(
+                Candidate {
+                    idx: ri,
+                    ctx_len: r.ctx_len,
+                    gamma: self.w.gamma.min(r.remaining.max(1)),
+                    ready_at: r.ready_at,
+                    arrival_s: r.arrival_s,
+                    placement: r.placement,
+                },
+                &self.arena,
+            );
+            self.alloc_proxy += 1;
+            self.peak_depth = self.peak_depth.max(self.cpool.len());
+        }
+
+        // schedule while candidates and their nodes are free at `now`
+        loop {
+            if self.unfinished == 0 {
+                break;
+            }
+            let t0 = Instant::now();
+            let assign =
+                self.scheduler
+                    .assign_incremental(&self.cost, &self.arena, &self.cpool, self.k);
+            self.sched_invocations += 1;
+            self.sched_ns += t0.elapsed().as_nanos() as u64;
+            let Some(assign) = assign else {
+                break;
+            };
+
+            // per-request draft reservations on this group's nodes
+            let b = assign.batch.len();
+            let mut ctx_crit = 1usize;
+            let mut draft_end = 0.0f64;
+            for (pos, &ri) in assign.batch.iter().enumerate() {
+                let r = &self.reqs[ri];
+                ctx_crit = ctx_crit.max(r.ctx_len);
+                let gamma = assign.gammas[pos].max(1);
+                let set = self.arena.get(assign.placement[pos]);
+                let t_i = self.cost.t_draft_s(1, gamma, r.ctx_len)
+                    + gamma as f64 * self.cost.network.fusion_round_s(set.len().max(1), 1);
+                let (_, e_i) = self.res.draft_on(set, r.ready_at, t_i);
+                for &node in set {
+                    self.queue.push(e_i, EventKind::DraftDone(self.round_id, node));
+                }
+                draft_end = draft_end.max(e_i);
+            }
+            let big_gamma: usize = assign.gammas.iter().map(|g| g + 1).sum();
+            let g_eff = (big_gamma as f64 / b as f64).ceil().max(1.0) as usize;
+            let durs: Vec<f64> = (1..=self.w.n_replicas.max(1))
+                .map(|s| {
+                    let bs = b.div_ceil(s);
+                    self.cost.t_verify_s(bs, g_eff, ctx_crit)
+                        + self.cost.network.verify_exchange_s(bs, self.cost.g1)
+                })
+                .collect();
+            self.batch_sorted.clear();
+            self.batch_sorted.extend_from_slice(&assign.batch);
+            self.batch_sorted.sort_unstable();
+            let cost = &self.cost;
+            let price = |pb: usize, sum_g1: usize, crit: usize, _pf: usize| -> f64 {
+                let g_eff = (sum_g1 as f64 / pb as f64).ceil().max(1.0) as usize;
+                cost.t_verify_s(pb, g_eff, crit) + cost.network.verify_exchange_s(pb, cost.g1)
+            };
+            chunk_pending_rounds(
+                self.cpool.iter_len(),
+                &self.batch_sorted,
+                b,
+                2 * self.w.n_replicas.max(1),
+                |_| false,
+                price,
+                &mut self.pending_durs,
+            );
+
+            // cross to the hub: reserve the VerifyDone's tie-break slot
+            // now (where the classic loop pushes the event), key the
+            // dispatch under the watermark clamp
+            let seq = self.queue.reserve_seq();
+            let key = MergeKey {
+                t: self.watermark,
+                group: self.g as u32,
+                seq: self.dispatch_seq,
+            };
+            self.dispatch_seq += 1;
+            self.rounds += 1;
+            self.cross_msgs += 1;
+            self.outstanding.push(Outstanding {
+                rid: self.round_id,
+                ready: draft_end,
+            });
+            let bound = self.current_bound();
+            hub.submit(
+                Dispatch {
+                    key,
+                    b,
+                    ready: draft_end,
+                    durs,
+                    pending_durs: self.pending_durs.clone(),
+                    rid: self.round_id,
+                    reserved_seq: seq,
+                },
+                bound,
+            );
+
+            self.cpool.remove_batch(&assign.batch);
+            let t0 = Instant::now();
+            self.res.drafter_transitions(now, &mut self.trans);
+            self.cpool.apply_transitions(&self.trans);
+            self.index_ns += t0.elapsed().as_nanos() as u64;
+            self.inflight.insert(self.round_id, assign.batch);
+            self.round_id += 1;
+        }
+
+        // safety net, mirroring the classic loop: ready work + drained
+        // queue + nothing in flight at the hub
+        if self.queue.is_empty()
+            && self.outstanding.is_empty()
+            && self.unfinished > 0
+            && !self.cpool.is_empty()
+        {
+            let free_t = self
+                .res
+                .drafters
+                .iter()
+                .chain(self.res.verifiers.iter())
+                .map(|r| r.free_at)
+                .filter(|&t| t > now + 1e-9)
+                .fold(f64::INFINITY, f64::min);
+            if free_t.is_finite() {
+                self.queue.push(free_t, EventKind::SchedTick);
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Parallel driver
+// ---------------------------------------------------------------------------
+
+/// How many instants a worker advances a shard between hub syncs: large
+/// enough to amortize the lock, small enough to keep peers' bounds fresh.
+const SYNC_BURST: usize = 64;
+
+fn worker(hub: &Hub, mut shards: Vec<ShardSim>) -> (Vec<ShardSim>, u64) {
+    let owned: Vec<usize> = shards.iter().map(|s| s.g).collect();
+    let mut results: Vec<RoundResult> = Vec::new();
+    let mut stall_ns = 0u64;
+    loop {
+        let mut progressed = false;
+        for sh in shards.iter_mut() {
+            if sh.done {
+                continue;
+            }
+            results.clear();
+            hub.sync(sh.g, sh.current_bound(), &mut results);
+            if !results.is_empty() {
+                progressed = true;
+                for rr in results.drain(..) {
+                    sh.apply_result(rr);
+                }
+            }
+            let mut steps = 0;
+            while steps < SYNC_BURST && sh.runnable() {
+                sh.process_instant(hub);
+                steps += 1;
+            }
+            if steps > 0 {
+                progressed = true;
+            }
+            if sh.queue.is_empty() && sh.outstanding.is_empty() {
+                assert_eq!(
+                    sh.unfinished, 0,
+                    "shard {} drained with {} unfinished requests",
+                    sh.g, sh.unfinished
+                );
+                sh.done = true;
+                // final bound (t = ∞): never gate another shard again
+                results.clear();
+                hub.sync(sh.g, sh.current_bound(), &mut results);
+                debug_assert!(results.is_empty());
+                progressed = true;
+            }
+        }
+        if shards.iter().all(|s| s.done) {
+            return (shards, stall_ns);
+        }
+        if !progressed {
+            hub.wait_for_progress(&owned, &mut stall_ns);
+        }
+    }
+}
+
+/// Aggregate report of a sharded run.  For a fixed workload (including
+/// its `n_groups`), every field except the wall-clock-derived ones is
+/// bit-identical across thread counts — [`identical`] is the cross-check
+/// the bench sweep and the property tests enforce.
+#[derive(Debug, Clone)]
+pub struct ShardedReport {
+    pub n_groups: usize,
+    pub n_threads: usize,
+    pub events: u64,
+    pub rounds: u64,
+    pub sched_invocations: u64,
+    pub wall_s: f64,
+    pub sched_s: f64,
+    pub events_per_s: f64,
+    pub sched_ns_per_event: f64,
+    pub alloc_proxy: u64,
+    pub elig_touched: u64,
+    pub elig_touched_per_event: f64,
+    pub index_ns_per_event: f64,
+    pub peak_pool_depth: usize,
+    pub makespan_s: f64,
+    pub throughput_tps: f64,
+    pub p50_latency_s: f64,
+    pub p99_latency_s: f64,
+    pub tokens: u64,
+    /// events processed per logical shard (thread-count independent)
+    pub shard_events: Vec<u64>,
+    /// dispatches + results crossing the verify hub
+    pub cross_shard_msgs: u64,
+    /// wall ns workers spent blocked on the cross-shard merge
+    pub merge_stall_ns: u64,
+    /// exact per-request finish times, global request order
+    pub finish_s: Vec<f64>,
+    /// order-sensitive fold over the full schedule (finish bits, rounds,
+    /// events, per-shard events) — one number to compare runs by
+    pub schedule_hash: u64,
+}
+
+/// Bit-identical schedules? Exact equality on every virtual-time output
+/// (no tolerance: determinism is the contract, not approximation).
+pub fn identical(a: &ShardedReport, b: &ShardedReport) -> bool {
+    a.n_groups == b.n_groups
+        && a.events == b.events
+        && a.rounds == b.rounds
+        && a.sched_invocations == b.sched_invocations
+        && a.shard_events == b.shard_events
+        && a.makespan_s.to_bits() == b.makespan_s.to_bits()
+        && a.finish_s.len() == b.finish_s.len()
+        && a.finish_s.iter().zip(&b.finish_s).all(|(x, y)| x.to_bits() == y.to_bits())
+        && a.schedule_hash == b.schedule_hash
+}
+
+fn fold_hash(mut h: u64, v: u64) -> u64 {
+    h ^= v;
+    h = h.wrapping_mul(0x100000001B3);
+    h
+}
+
+impl ShardedReport {
+    pub fn merge_stall_ms(&self) -> f64 {
+        self.merge_stall_ns as f64 / 1e6
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("n_groups".to_string(), Json::Num(self.n_groups as f64));
+        m.insert("n_threads".to_string(), Json::Num(self.n_threads as f64));
+        m.insert("events".to_string(), Json::Num(self.events as f64));
+        m.insert("rounds".to_string(), Json::Num(self.rounds as f64));
+        m.insert(
+            "sched_invocations".to_string(),
+            Json::Num(self.sched_invocations as f64),
+        );
+        m.insert("wall_s".to_string(), Json::Num(self.wall_s));
+        m.insert("sched_s".to_string(), Json::Num(self.sched_s));
+        m.insert("events_per_s".to_string(), Json::Num(self.events_per_s));
+        m.insert(
+            "sched_ns_per_event".to_string(),
+            Json::Num(self.sched_ns_per_event),
+        );
+        m.insert("alloc_proxy".to_string(), Json::Num(self.alloc_proxy as f64));
+        m.insert("elig_touched".to_string(), Json::Num(self.elig_touched as f64));
+        m.insert(
+            "elig_touched_per_event".to_string(),
+            Json::Num(self.elig_touched_per_event),
+        );
+        m.insert(
+            "index_ns_per_event".to_string(),
+            Json::Num(self.index_ns_per_event),
+        );
+        m.insert(
+            "peak_pool_depth".to_string(),
+            Json::Num(self.peak_pool_depth as f64),
+        );
+        m.insert("makespan_s".to_string(), Json::Num(self.makespan_s));
+        m.insert("throughput_tps".to_string(), Json::Num(self.throughput_tps));
+        m.insert("p50_latency_s".to_string(), Json::Num(self.p50_latency_s));
+        m.insert("p99_latency_s".to_string(), Json::Num(self.p99_latency_s));
+        m.insert("tokens".to_string(), Json::Num(self.tokens as f64));
+        m.insert(
+            "shard_events".to_string(),
+            Json::Arr(self.shard_events.iter().map(|&e| Json::Num(e as f64)).collect()),
+        );
+        m.insert(
+            "cross_shard_msgs".to_string(),
+            Json::Num(self.cross_shard_msgs as f64),
+        );
+        m.insert("merge_stall_ms".to_string(), Json::Num(self.merge_stall_ms()));
+        m.insert(
+            "schedule_hash".to_string(),
+            Json::Str(format!("{:016x}", self.schedule_hash)),
+        );
+        Json::Obj(m)
+    }
+}
+
+/// Run the workload's logical shards on `n_threads` worker threads
+/// (clamped to the group count; shards are distributed round-robin).
+/// Any thread count produces a bit-identical report — `n_threads` buys
+/// wall-clock only.
+pub fn run_sharded(w: &ShardWorkload, n_threads: usize) -> ShardedReport {
+    let groups = w.groups();
+    let n_threads = n_threads.clamp(1, groups);
+    let cost = SchedCostModel::synthetic("l", w.n_nodes);
+    let hub = Hub::new(w, cost.network.allgather_step_s(w.max_batch.max(1)));
+    let mut per_thread: Vec<Vec<ShardSim>> = (0..n_threads).map(|_| Vec::new()).collect();
+    for g in 0..groups {
+        per_thread[g % n_threads].push(ShardSim::new(w, g));
+    }
+
+    let wall0 = Instant::now();
+    let mut shards: Vec<ShardSim> = Vec::with_capacity(groups);
+    let mut merge_stall_ns = 0u64;
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = per_thread
+            .drain(..)
+            .map(|owned| {
+                let hub = &hub;
+                scope.spawn(move || worker(hub, owned))
+            })
+            .collect();
+        for h in handles {
+            let (shs, stall) = h.join().expect("shard worker panicked");
+            merge_stall_ns += stall;
+            shards.extend(shs);
+        }
+    });
+    let wall_s = wall0.elapsed().as_secs_f64();
+    shards.sort_by_key(|s| s.g);
+
+    let hub_res = hub.into_res();
+    let mut events = 0u64;
+    let mut rounds = 0u64;
+    let mut sched_invocations = 0u64;
+    let mut sched_ns = 0u64;
+    let mut index_ns = 0u64;
+    let mut alloc_proxy = 0u64;
+    let mut elig_touched = 0u64;
+    let mut cross_shard_msgs = 0u64;
+    let mut peak_depth = 0usize;
+    let mut makespan = hub_res.makespan();
+    let mut shard_events = Vec::with_capacity(groups);
+    for sh in &shards {
+        events += sh.events;
+        rounds += sh.rounds;
+        sched_invocations += sh.sched_invocations;
+        sched_ns += sh.sched_ns;
+        index_ns += sh.index_ns;
+        alloc_proxy += sh.alloc_proxy + sh.arena.len() as u64;
+        elig_touched += sh.cpool.elig_touched();
+        cross_shard_msgs += sh.cross_msgs;
+        peak_depth = peak_depth.max(sh.peak_depth);
+        makespan = makespan.max(sh.res.makespan());
+        shard_events.push(sh.events);
+    }
+
+    // per-request finishes, stitched back into global request order from
+    // each request's owning shard
+    let finish_s: Vec<f64> = (0..w.n_requests)
+        .map(|ri| {
+            shards[ri % groups].reqs[ri]
+                .finish_s
+                .expect("request never finished")
+        })
+        .collect();
+    let mut lats: Vec<f64> = finish_s
+        .iter()
+        .enumerate()
+        .map(|(ri, f)| f - ri as f64 * w.arrival_dt)
+        .collect();
+    lats.sort_by(|a, b| a.total_cmp(b));
+    let pct = |p: f64| -> f64 {
+        if lats.is_empty() {
+            0.0
+        } else {
+            lats[((lats.len() as f64 * p) as usize).min(lats.len() - 1)]
+        }
+    };
+
+    let mut h = 0xcbf29ce484222325u64;
+    for f in &finish_s {
+        h = fold_hash(h, f.to_bits());
+    }
+    h = fold_hash(h, rounds);
+    h = fold_hash(h, events);
+    for &e in &shard_events {
+        h = fold_hash(h, e);
+    }
+
+    let tokens = (w.n_requests * w.gen_len) as u64;
+    ShardedReport {
+        n_groups: groups,
+        n_threads,
+        events,
+        rounds,
+        sched_invocations,
+        wall_s,
+        sched_s: sched_ns as f64 / 1e9,
+        events_per_s: if wall_s > 0.0 {
+            events as f64 / wall_s
+        } else {
+            0.0
+        },
+        sched_ns_per_event: if events > 0 {
+            sched_ns as f64 / events as f64
+        } else {
+            0.0
+        },
+        alloc_proxy,
+        elig_touched,
+        elig_touched_per_event: if events > 0 {
+            elig_touched as f64 / events as f64
+        } else {
+            0.0
+        },
+        index_ns_per_event: if events > 0 {
+            index_ns as f64 / events as f64
+        } else {
+            0.0
+        },
+        peak_pool_depth: peak_depth,
+        makespan_s: makespan,
+        throughput_tps: if makespan > 0.0 {
+            tokens as f64 / makespan
+        } else {
+            0.0
+        },
+        p50_latency_s: pct(0.5),
+        p99_latency_s: pct(0.99),
+        tokens,
+        shard_events,
+        cross_shard_msgs,
+        merge_stall_ns,
+        finish_s,
+        schedule_hash: h,
+    }
+}
+
+/// The single-threaded oracle: the same shard/hub code on one worker.
+pub fn run_single(w: &ShardWorkload) -> ShardedReport {
+    run_sharded(w, 1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench::sched::{run_sched_bench, BenchMode, SchedBenchSpec};
+
+    fn small_spec() -> SchedBenchSpec {
+        SchedBenchSpec {
+            n_requests: 48,
+            gen_len: 12,
+            ..SchedBenchSpec::deep()
+        }
+    }
+
+    #[test]
+    fn one_group_matches_the_classic_single_threaded_loop() {
+        let spec = small_spec();
+        let classic = run_sched_bench(&spec, BenchMode::Frontier);
+        let sharded = run_single(&spec.shard_workload(1));
+        assert_eq!(sharded.rounds, classic.rounds, "round counts diverged");
+        assert_eq!(sharded.events, classic.events, "event counts diverged");
+        assert_eq!(sharded.tokens, classic.tokens);
+        assert_eq!(sharded.peak_pool_depth, classic.peak_pool_depth);
+        assert_eq!(
+            sharded.makespan_s.to_bits(),
+            classic.makespan_s.to_bits(),
+            "makespan diverged: {} vs {}",
+            sharded.makespan_s,
+            classic.makespan_s
+        );
+        assert_eq!(sharded.p50_latency_s.to_bits(), classic.p50_latency_s.to_bits());
+        assert_eq!(sharded.p99_latency_s.to_bits(), classic.p99_latency_s.to_bits());
+    }
+
+    #[test]
+    fn one_node_one_replica_legacy_corner_matches_the_classic_loop() {
+        let spec = SchedBenchSpec {
+            n_requests: 24,
+            gen_len: 8,
+            n_nodes: 1,
+            n_replicas: 1,
+            k: 1,
+            ..SchedBenchSpec::deep()
+        };
+        let classic = run_sched_bench(&spec, BenchMode::Frontier);
+        let sharded = run_single(&spec.shard_workload(1));
+        assert_eq!(sharded.rounds, classic.rounds);
+        assert_eq!(sharded.events, classic.events);
+        assert_eq!(sharded.makespan_s.to_bits(), classic.makespan_s.to_bits());
+        assert_eq!(sharded.p99_latency_s.to_bits(), classic.p99_latency_s.to_bits());
+    }
+
+    #[test]
+    fn thread_count_never_changes_the_schedule() {
+        let w = small_spec().shard_workload(4);
+        let r1 = run_sharded(&w, 1);
+        let r2 = run_sharded(&w, 2);
+        let r4 = run_sharded(&w, 4);
+        assert!(
+            identical(&r1, &r2),
+            "1 vs 2 threads diverged: {:016x} vs {:016x}",
+            r1.schedule_hash,
+            r2.schedule_hash
+        );
+        assert!(
+            identical(&r1, &r4),
+            "1 vs 4 threads diverged: {:016x} vs {:016x}",
+            r1.schedule_hash,
+            r4.schedule_hash
+        );
+        assert_eq!(r1.shard_events.len(), 4);
+        assert!(r1.shard_events.iter().all(|&e| e > 0));
+    }
+
+    #[test]
+    fn reruns_are_deterministic() {
+        let w = small_spec().shard_workload(3);
+        let a = run_sharded(&w, 2);
+        let b = run_sharded(&w, 2);
+        assert!(identical(&a, &b));
+        assert_eq!(a.cross_shard_msgs, 2 * a.rounds);
+    }
+
+    #[test]
+    fn request_streams_are_independent_of_draw_order() {
+        // drawing request 7's stream never perturbs request 3's
+        let nodes: Vec<usize> = (0..6).collect();
+        let mut scratch = Vec::new();
+        let mut a = request_rng(42, 3);
+        route_draw(&mut a, &nodes, 3, &mut scratch);
+        let first = scratch.clone();
+        let mut b = request_rng(42, 7);
+        route_draw(&mut b, &nodes, 3, &mut scratch);
+        let mut a2 = request_rng(42, 3);
+        route_draw(&mut a2, &nodes, 3, &mut scratch);
+        assert_eq!(first, scratch);
+    }
+}

@@ -39,9 +39,11 @@ COMMANDS:
                                      Table 2 acceptance matrix
   cost       [--table1]              Table 1 + Table 3 cost efficiency
   ablation   [--nodes 1,2,4,6,8]     Fig. 8 component ablation
-  bench      [--smoke] [--out FILE] [--requests N]
+  bench      [--smoke] [--out FILE] [--requests N] [--shards 1,2,4]
                                      scheduler hot-path harness: emits
-                                     BENCH_sched.json (no artifacts needed)
+                                     BENCH_sched.json (no artifacts needed);
+                                     --shards sweeps the sharded engine core
+                                     over worker thread counts
 ";
 
 fn main() -> Result<()> {
@@ -88,6 +90,7 @@ fn main() -> Result<()> {
                 &args.get_or("out", "BENCH_sched.json"),
                 args.has_flag("smoke"),
                 if requests == 0 { None } else { Some(requests) },
+                &args.get_or("shards", "1,2,4"),
             )
         }
         _ => {

@@ -1,0 +1,201 @@
+//! Property tests for the sharded parallel engine core: for any workload
+//! shape, group decomposition, seed, and replica count, an N-thread run is
+//! bit-identical to the single-threaded oracle — same per-request finish
+//! times, same per-shard event counts, same schedule hash — and the
+//! 1-group corner reproduces the classic single-pool loop in
+//! `bench::sched` exactly.
+//!
+//! Hand-rolled harness (the offline image has no proptest): each property
+//! runs over many seeded random inputs and reports the failing case seed.
+
+use cosine::bench::sched::{run_sched_bench, BenchMode, SchedBenchSpec};
+use cosine::coordinator::shard::{identical, run_sharded, run_single, ShardWorkload};
+use cosine::util::rng::Rng;
+
+/// Run `body(rng, case_index)` for `n` seeded cases; panic with the seed
+/// on failure so the case is reproducible.
+fn cases(n: u64, body: impl Fn(&mut Rng, u64)) {
+    for seed in 0..n {
+        let mut rng = Rng::seed_from_u64(0xC0D1 ^ (seed * 0x9E3779B9));
+        body(&mut rng, seed);
+    }
+}
+
+/// A random but CI-sized workload: enough requests to keep several rounds
+/// in flight per group, small enough that hundreds of cases stay fast.
+fn random_workload(rng: &mut Rng) -> ShardWorkload {
+    let n_nodes = 1 + rng.usize(10);
+    let n_groups = 1 + rng.usize(n_nodes);
+    ShardWorkload {
+        n_requests: 8 + rng.usize(56),
+        arrival_dt: [1e-4, 1e-3, 1e-2][rng.usize(3)],
+        prompt_len: 16 + rng.usize(512),
+        gen_len: 1 + rng.usize(24),
+        gamma: 1 + rng.usize(8),
+        accept: rng.usize(6),
+        n_nodes,
+        n_replicas: 1 + rng.usize(4),
+        k: 1 + rng.usize(4),
+        max_batch: 1 + rng.usize(16),
+        seed: rng.next_u64(),
+        n_groups,
+    }
+}
+
+#[test]
+fn prop_thread_count_never_changes_the_schedule() {
+    cases(120, |rng, seed| {
+        let w = random_workload(rng);
+        let oracle = run_single(&w);
+        for threads in [2, 3, 4] {
+            let r = run_sharded(&w, threads);
+            assert!(
+                identical(&oracle, &r),
+                "seed {seed}: {threads}-thread run diverged from the oracle \
+                 (groups={}, nodes={}, replicas={}, hash {:016x} vs {:016x})",
+                w.groups(),
+                w.n_nodes,
+                w.n_replicas,
+                oracle.schedule_hash,
+                r.schedule_hash,
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_sharded_runs_complete_and_account_for_every_request() {
+    cases(120, |rng, seed| {
+        let w = random_workload(rng);
+        let r = run_sharded(&w, 1 + rng.usize(4));
+        assert_eq!(
+            r.finish_s.len(),
+            w.n_requests,
+            "seed {seed}: missing finish times"
+        );
+        assert!(
+            r.finish_s
+                .iter()
+                .enumerate()
+                .all(|(ri, &f)| f >= ri as f64 * w.arrival_dt),
+            "seed {seed}: a request finished before it arrived"
+        );
+        assert_eq!(r.tokens, (w.n_requests * w.gen_len.max(1)) as u64);
+        assert_eq!(r.shard_events.len(), w.groups(), "seed {seed}");
+        assert_eq!(
+            r.shard_events.iter().sum::<u64>(),
+            r.events,
+            "seed {seed}: per-shard events do not sum to the total"
+        );
+        assert_eq!(r.cross_shard_msgs, 2 * r.rounds, "seed {seed}");
+        assert!(r.makespan_s >= r.finish_s.iter().cloned().fold(0.0, f64::max) - 1e-9);
+    });
+}
+
+#[test]
+fn prop_one_group_matches_the_classic_loop() {
+    // the sharded engine with a single group must reproduce the classic
+    // single-pool loop exactly, across random shapes (including the
+    // 1-node + 1-replica legacy corner below)
+    cases(60, |rng, seed| {
+        let spec = SchedBenchSpec {
+            n_requests: 8 + rng.usize(48),
+            arrival_dt: [1e-4, 1e-3][rng.usize(2)],
+            prompt_len: 16 + rng.usize(256),
+            gen_len: 1 + rng.usize(16),
+            gamma: 1 + rng.usize(8),
+            accept: rng.usize(6),
+            n_nodes: 1 + rng.usize(8),
+            n_replicas: 1 + rng.usize(4),
+            k: 1 + rng.usize(4),
+            max_batch: 1 + rng.usize(16),
+            seed: rng.next_u64(),
+        };
+        let classic = run_sched_bench(&spec, BenchMode::Frontier);
+        let sharded = run_single(&spec.shard_workload(1));
+        assert_eq!(sharded.rounds, classic.rounds, "seed {seed}: rounds");
+        assert_eq!(sharded.events, classic.events, "seed {seed}: events");
+        assert_eq!(
+            sharded.peak_pool_depth, classic.peak_pool_depth,
+            "seed {seed}: pool depth"
+        );
+        assert_eq!(
+            sharded.makespan_s.to_bits(),
+            classic.makespan_s.to_bits(),
+            "seed {seed}: makespan {} vs {}",
+            sharded.makespan_s,
+            classic.makespan_s
+        );
+        assert_eq!(
+            sharded.p50_latency_s.to_bits(),
+            classic.p50_latency_s.to_bits(),
+            "seed {seed}: p50"
+        );
+        assert_eq!(
+            sharded.p99_latency_s.to_bits(),
+            classic.p99_latency_s.to_bits(),
+            "seed {seed}: p99"
+        );
+    });
+}
+
+#[test]
+fn one_node_one_replica_legacy_corner_over_many_seeds() {
+    cases(40, |rng, seed| {
+        let spec = SchedBenchSpec {
+            n_requests: 4 + rng.usize(28),
+            arrival_dt: 1e-3,
+            prompt_len: 32 + rng.usize(128),
+            gen_len: 1 + rng.usize(12),
+            gamma: 1 + rng.usize(6),
+            accept: rng.usize(4),
+            n_nodes: 1,
+            n_replicas: 1,
+            k: 1,
+            max_batch: 1 + rng.usize(8),
+            seed: rng.next_u64(),
+        };
+        let classic = run_sched_bench(&spec, BenchMode::Frontier);
+        let sharded = run_single(&spec.shard_workload(1));
+        assert_eq!(sharded.rounds, classic.rounds, "seed {seed}");
+        assert_eq!(sharded.events, classic.events, "seed {seed}");
+        assert_eq!(
+            sharded.makespan_s.to_bits(),
+            classic.makespan_s.to_bits(),
+            "seed {seed}"
+        );
+    });
+}
+
+#[test]
+fn oversubscribed_thread_counts_clamp_to_the_group_count() {
+    let w = SchedBenchSpec {
+        n_requests: 32,
+        gen_len: 8,
+        ..SchedBenchSpec::deep()
+    }
+    .shard_workload(2);
+    let a = run_sharded(&w, 2);
+    let b = run_sharded(&w, 16);
+    assert_eq!(b.n_threads, 2, "thread count must clamp to the group count");
+    assert!(identical(&a, &b));
+}
+
+#[test]
+fn group_count_is_a_workload_parameter_not_an_execution_detail() {
+    // different group decompositions are different workloads (placements
+    // are drawn from group-local node sets) — but each must still be
+    // internally deterministic
+    let spec = SchedBenchSpec {
+        n_requests: 40,
+        gen_len: 8,
+        ..SchedBenchSpec::deep()
+    };
+    let g1 = run_single(&spec.shard_workload(1));
+    let g3 = run_single(&spec.shard_workload(3));
+    assert_ne!(
+        g1.schedule_hash, g3.schedule_hash,
+        "1-group and 3-group schedules should differ (different placement domains)"
+    );
+    assert!(identical(&g3, &run_sharded(&spec.shard_workload(3), 3)));
+}
