@@ -20,6 +20,10 @@ Gates:
     produce bit-identical schedules at every swept worker thread count
     (base and deep-pool scenarios), and the deep-pool sweep must reach
     >= min_shard_speedup x events/sec at the max thread count vs 1 thread;
+  * machine-independent (schema 4): the unified serving path must report a
+    strategy-level sharded row for every Strategy variant, each
+    bit-identical across thread counts (sharded.strategies +
+    sharded.strategies_identical);
   * machine-dependent (armed once the baseline records events_per_s for
     this runner class): absolute events/sec must not regress > 20%.
 """
@@ -32,6 +36,10 @@ def main() -> None:
         cur = json.load(f)
     with open(sys.argv[2]) as f:
         base = json.load(f)
+
+    schema = int(cur.get("schema", 0))
+    if schema < 4:
+        sys.exit(f"bench schema {schema} < 4: rebuild BENCH_sched.json")
 
     if not cur["schedule_identical"]:
         sys.exit("frontier schedule diverged from the closure/naive reference")
@@ -91,6 +99,20 @@ def main() -> None:
         f"sharded: schedules identical across thread counts; deep-pool "
         f"{shard_speedup:.2f}x at {max_threads} threads >= {min_shard}x"
     )
+
+    # unified serving path gates (schema 4): every strategy has a sharded
+    # row and each is bit-identical across thread counts
+    strategies = sharded["strategies"]
+    expected = {"cosine", "vllm", "vanilla", "pipeinfer", "specinfer"}
+    missing = expected - set(strategies)
+    if missing:
+        sys.exit(f"sharded strategy rows missing: {sorted(missing)}")
+    diverged = sorted(s for s, row in strategies.items() if not row["identical"])
+    if diverged:
+        sys.exit(f"strategies diverged across thread counts: {diverged}")
+    if not sharded["strategies_identical"]:
+        sys.exit("sharded.strategies_identical is false")
+    print(f"strategies: {len(strategies)} sharded rows, all bit-identical")
 
     baseline_ev = base.get("events_per_s")
     cur_ev = cur["incremental"]["events_per_s"]

@@ -7,7 +7,7 @@
 use std::sync::Arc;
 
 use cosine::bench;
-use cosine::coordinator::ServingContext;
+use cosine::coordinator::{ServingContext, Strategy};
 use cosine::{CosineConfig, Engine};
 
 fn main() -> anyhow::Result<()> {
@@ -23,7 +23,7 @@ fn main() -> anyhow::Result<()> {
         let ctx = ServingContext::with_engine(engine.clone(), &cfg_b)?;
         let trace = bench::offline_trace(&ctx, (b * 2).max(8), 100 + b as u64);
         let mut reports = Vec::new();
-        for s in ["cosine", "vllm", "vanilla", "pipeinfer", "specinfer"] {
+        for s in Strategy::ALL {
             let r = bench::run(&ctx, &trace, s)?;
             eprintln!("  [b={b}] {}", r.summary_row());
             reports.push(r);

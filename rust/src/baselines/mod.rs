@@ -1,8 +1,8 @@
 //! Baseline serving strategies (paper §6.1): vLLM (continuous batching, no
-//! speculation), Vanilla speculative decoding, PipeInfer, SpecInfer.  The
-//! three speculative baselines are policy configurations of the shared
-//! event-driven engine (`coordinator::engine`); vLLM runs on the same
-//! event loop without speculation (`coordinator::engine::run_vllm`), so
+//! speculation), Vanilla speculative decoding, PipeInfer, SpecInfer.  Every
+//! baseline is a [`Strategy`](crate::coordinator::serve::Strategy) variant
+//! dispatched through the unified `serve()` entry — these wrappers exist
+//! for call-site readability and delegate to it on the classic backend, so
 //! every comparison shares one timing substrate.
 
 pub mod vllm;
@@ -10,43 +10,24 @@ pub mod vllm;
 use anyhow::Result;
 
 use crate::coordinator::context::ServingContext;
-use crate::coordinator::serve::{run_speculative, StrategyOpts};
+use crate::coordinator::serve::{serve, ServeOptions, Strategy};
 use crate::coordinator::RunReport;
 use crate::workload::Trace;
 
 /// Vanilla speculative inference: one draft model, coupled draft→verify on
 /// the server (the vLLM-extension baseline, [8]).
 pub fn vanilla(ctx: &ServingContext, trace: &Trace) -> Result<RunReport> {
-    run_speculative(ctx, trace, &StrategyOpts::vanilla())
+    serve(ctx, trace, &ServeOptions::single(Strategy::Vanilla))
 }
 
 /// PipeInfer: decoupled asynchronous pipeline, single drafter, no routing
 /// or fusion [20].
 pub fn pipeinfer(ctx: &ServingContext, trace: &Trace) -> Result<RunReport> {
-    run_speculative(ctx, trace, &StrategyOpts::pipeinfer())
+    serve(ctx, trace, &ServeOptions::single(Strategy::PipeInfer))
 }
 
 /// SpecInfer: multiple drafters emit independent paths merged into a token
 /// tree, verified collectively, coupled execution [33].
 pub fn specinfer(ctx: &ServingContext, trace: &Trace) -> Result<RunReport> {
-    let k = ctx.cfg.router.drafters_per_request.min(ctx.n_drafters());
-    run_speculative(ctx, trace, &StrategyOpts::specinfer(k))
-}
-
-/// Dispatch by name (CLI / bench harness).
-pub fn run_strategy(ctx: &ServingContext, trace: &Trace, name: &str) -> Result<RunReport> {
-    match name {
-        "cosine" => {
-            let k = ctx.cfg.router.drafters_per_request;
-            let mut opts = StrategyOpts::cosine(k);
-            opts.fusion = ctx.cfg.speculation.fusion;
-            opts.routing = ctx.cfg.speculation.cooperative && ctx.cfg.router.enabled;
-            run_speculative(ctx, trace, &opts)
-        }
-        "vllm" => vllm::serve(ctx, trace),
-        "vanilla" => vanilla(ctx, trace),
-        "pipeinfer" => pipeinfer(ctx, trace),
-        "specinfer" => specinfer(ctx, trace),
-        other => anyhow::bail!("unknown strategy {other}"),
-    }
+    serve(ctx, trace, &ServeOptions::single(Strategy::SpecInfer))
 }

@@ -8,6 +8,7 @@ use anyhow::Result;
 
 use crate::config::CosineConfig;
 use crate::coordinator::context::ServingContext;
+use crate::coordinator::serve::{serve, ServeOptions, Strategy};
 use crate::coordinator::RunReport;
 use crate::workload::{DomainSampler, Trace};
 
@@ -23,9 +24,10 @@ pub fn offline_trace(ctx: &ServingContext, n: usize, seed: u64) -> Trace {
     Trace::offline(n, &mut sampler, c.gen_len)
 }
 
-/// Run one strategy on a fresh trace and return its report.
-pub fn run(ctx: &ServingContext, trace: &Trace, strategy: &str) -> Result<RunReport> {
-    crate::baselines::run_strategy(ctx, trace, strategy)
+/// Run one strategy on a trace through the unified serving entry
+/// (classic backend) and return its report.
+pub fn run(ctx: &ServingContext, trace: &Trace, strategy: Strategy) -> Result<RunReport> {
+    serve(ctx, trace, &ServeOptions::single(strategy))
 }
 
 /// Format a latency/throughput comparison table (Fig. 6 rows).

@@ -36,7 +36,9 @@ use crate::coordinator::pipeline::ResourcePool;
 use crate::coordinator::scheduler::{
     Candidate, CandidatePool, PlacementArena, PlacementId, SchedCostModel, Scheduler,
 };
-use crate::coordinator::shard::{request_rng, route_draw, ShardWorkload};
+use crate::coordinator::shard::{
+    request_rng, route_draw, ShardRequestSpec, ShardStrategy, ShardWorkload,
+};
 use crate::util::json::Json;
 use crate::util::rng::Rng;
 
@@ -134,10 +136,15 @@ impl SchedBenchSpec {
     /// spec's classic single-pool schedule exactly.
     pub fn shard_workload(&self, n_groups: usize) -> ShardWorkload {
         ShardWorkload {
-            n_requests: self.n_requests,
-            arrival_dt: self.arrival_dt,
-            prompt_len: self.prompt_len,
-            gen_len: self.gen_len,
+            label: "bench".into(),
+            pair: "l".into(),
+            reqs: (0..self.n_requests)
+                .map(|i| ShardRequestSpec {
+                    arrival_s: i as f64 * self.arrival_dt,
+                    prompt_len: self.prompt_len,
+                    gen_len: self.gen_len,
+                })
+                .collect(),
             gamma: self.gamma,
             accept: self.accept,
             n_nodes: self.n_nodes,
@@ -146,6 +153,9 @@ impl SchedBenchSpec {
             max_batch: self.max_batch,
             seed: self.seed,
             n_groups,
+            verifier_gpus: 1,
+            strategy: ShardStrategy::pipelined(),
+            cost: SchedCostModel::synthetic("l", self.n_nodes),
         }
     }
 }

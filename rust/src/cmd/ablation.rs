@@ -4,19 +4,27 @@
 
 use anyhow::Result;
 use cosine::bench;
-use cosine::coordinator::ServingContext;
+use cosine::coordinator::serve::{
+    serve_sharded_swept, shard_workload, Strategy, DEFAULT_SHARD_GROUPS,
+};
+use cosine::coordinator::{RunReport, ServingContext};
 use cosine::{CosineConfig, Engine};
 use std::sync::Arc;
 
-pub fn run(cfg: &CosineConfig, nodes: &str) -> Result<()> {
+pub fn run(cfg: &CosineConfig, nodes: &str, shards: Option<Vec<usize>>) -> Result<()> {
     let engine = Arc::new(Engine::load(std::path::Path::new(&cfg.artifacts_dir))?);
     let node_counts: Vec<usize> = nodes
         .split(',')
         .map(|s| s.trim().parse().unwrap_or(1))
         .collect();
     println!(
-        "\n=== Fig. 8 ablation (pair {}, {} verifier replica(s), event engine) ===",
-        cfg.pair, cfg.cluster.n_verifier_replicas
+        "\n=== Fig. 8 ablation (pair {}, {} verifier replica(s), {}) ===",
+        cfg.pair,
+        cfg.cluster.n_verifier_replicas,
+        match &shards {
+            Some(t) => format!("sharded backend, threads {t:?}"),
+            None => "event engine".to_string(),
+        }
     );
     println!("nodes | variant          | tok/s  | norm  | accept");
     println!("------+------------------+--------+-------+-------");
@@ -28,7 +36,16 @@ pub fn run(cfg: &CosineConfig, nodes: &str) -> Result<()> {
         // baseline for normalization: SpecInfer at this node count
         let ctx = ServingContext::with_engine(engine.clone(), &base_cfg)?;
         let trace = bench::offline_trace(&ctx, 15, 500 + n as u64);
-        let spec = bench::run(&ctx, &trace, "specinfer")?;
+        let run_variant = |vctx: &ServingContext, s: Strategy| -> Result<RunReport> {
+            match &shards {
+                Some(threads) => {
+                    let w = shard_workload(vctx, &trace, s, DEFAULT_SHARD_GROUPS);
+                    serve_sharded_swept(&w, threads)
+                }
+                None => bench::run(vctx, &trace, s),
+            }
+        };
+        let spec = run_variant(&ctx, Strategy::SpecInfer)?;
 
         let variants: Vec<(&str, Box<dyn Fn(&mut CosineConfig)>)> = vec![
             ("cosine (full)", Box::new(|_| {})),
@@ -52,7 +69,7 @@ pub fn run(cfg: &CosineConfig, nodes: &str) -> Result<()> {
             let mut vcfg = base_cfg.clone();
             tweak(&mut vcfg);
             let vctx = ServingContext::with_engine(engine.clone(), &vcfg)?;
-            let r = bench::run(&vctx, &trace, "cosine")?;
+            let r = run_variant(&vctx, Strategy::Cosine)?;
             println!(
                 "{:>5} | {:<16} | {:>6.1} | {:>5.2} | {:>5.2}",
                 n,

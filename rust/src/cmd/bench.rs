@@ -7,18 +7,22 @@
 //! produce bit-identical schedules, then repeats frontier vs closure on a
 //! ≥1024-in-flight deep-pool scenario where per-event eligibility work
 //! dominates.  A `--shards` sweep then drives the sharded parallel engine
-//! core (`coordinator::shard`) over both scenarios at 1/2/4 worker
-//! threads, cross-checks that every thread count produces bit-identical
-//! schedules (same `schedule_hash`, same per-request finish times), and
-//! records the events/sec scaling.  Emits `BENCH_sched.json` (schema 3) —
-//! events/sec, scheduler ns/event, eligibility touches/event, an
-//! allocations proxy, modeled p50/p99 latency + throughput, and the
-//! multi-thread scaling block — the perf trajectory CI gates on
-//! (artifact upload + regression check).  Needs no PJRT artifacts.
+//! core (the `Backend::Sharded` serving backend) over both scenarios at
+//! 1/2/4 worker threads, cross-checks that every thread count produces a
+//! bit-identical `RunReport` (same `schedule_hash`, same per-request
+//! finish times), and records the events/sec scaling.  A per-strategy
+//! block then runs all five `Strategy` variants through the unified
+//! sharded path on a small modeled workload and holds each bit-identical
+//! across thread counts.  Emits `BENCH_sched.json` (schema 4) — the perf
+//! trajectory CI gates on (artifact upload + regression check).  Needs no
+//! PJRT artifacts.
 
 use anyhow::Result;
 use cosine::bench::sched::{run_sched_bench, schedule_identical, BenchMode, SchedBenchSpec};
-use cosine::coordinator::shard::{identical, run_sharded, ShardedReport};
+use cosine::config::{ClusterConfig, CosineConfig};
+use cosine::coordinator::serve::{modeled_workload, Strategy};
+use cosine::coordinator::shard::{identical, run_sharded, ShardRequestSpec};
+use cosine::coordinator::RunReport;
 use cosine::util::json::Json;
 use std::collections::BTreeMap;
 
@@ -41,24 +45,73 @@ fn print_report(r: &cosine::bench::sched::SchedBenchReport) {
     );
 }
 
-fn print_sharded(r: &ShardedReport) {
+fn merge_stall_ms(r: &RunReport) -> f64 {
+    r.engine.merge_stall_ns as f64 / 1e6
+}
+
+fn print_sharded(r: &RunReport) {
     println!(
         "shards x{:<2} events={:<6} rounds={:<5} events/s={:>12.0} xmsg={:<6} stall={:>7.1}ms hash={:016x}",
-        r.n_threads,
-        r.events,
-        r.rounds,
-        r.events_per_s,
-        r.cross_shard_msgs,
-        r.merge_stall_ms(),
-        r.schedule_hash,
+        r.engine.n_shards,
+        r.engine.events_processed,
+        r.engine.rounds_dispatched,
+        r.events_per_s(),
+        r.engine.cross_shard_msgs,
+        merge_stall_ms(r),
+        r.engine.schedule_hash,
     );
+}
+
+/// The sharded-backend slice of a [`RunReport`] as JSON (the bench file's
+/// per-thread-count rows).
+fn sharded_json(r: &RunReport) -> Json {
+    let mut m = BTreeMap::new();
+    m.insert("n_threads".to_string(), Json::Num(r.engine.n_shards as f64));
+    m.insert(
+        "events".to_string(),
+        Json::Num(r.engine.events_processed as f64),
+    );
+    m.insert(
+        "rounds".to_string(),
+        Json::Num(r.engine.rounds_dispatched as f64),
+    );
+    m.insert("events_per_s".to_string(), Json::Num(r.events_per_s()));
+    m.insert(
+        "cross_shard_msgs".to_string(),
+        Json::Num(r.engine.cross_shard_msgs as f64),
+    );
+    m.insert("merge_stall_ms".to_string(), Json::Num(merge_stall_ms(r)));
+    m.insert(
+        "schedule_hash".to_string(),
+        Json::Str(format!("{:016x}", r.engine.schedule_hash)),
+    );
+    m.insert(
+        "shard_events".to_string(),
+        Json::Arr(
+            r.engine
+                .shard_events
+                .iter()
+                .map(|&e| Json::Num(e as f64))
+                .collect(),
+        ),
+    );
+    m.insert(
+        "peak_pool_depth".to_string(),
+        Json::Num(r.engine.peak_pool_depth as f64),
+    );
+    m.insert("makespan_s".to_string(), Json::Num(r.makespan_s));
+    m.insert("throughput_tps".to_string(), Json::Num(r.throughput_tps));
+    m.insert("p50_latency_s".to_string(), Json::Num(r.p50_latency_s()));
+    m.insert("p99_latency_s".to_string(), Json::Num(r.p99_latency_s()));
+    m.insert("tokens".to_string(), Json::Num(r.tokens as f64));
+    Json::Obj(m)
 }
 
 /// Sweep one spec's sharded workload over the requested thread counts;
 /// returns (per-thread reports, all-identical flag).
-fn shard_sweep(spec: &SchedBenchSpec, threads: &[usize]) -> (Vec<ShardedReport>, bool) {
+fn shard_sweep(spec: &SchedBenchSpec, threads: &[usize]) -> (Vec<RunReport>, bool) {
     let w = spec.shard_workload(SWEEP_GROUPS);
-    let reports: Vec<ShardedReport> = threads.iter().map(|&t| run_sharded(&w, t)).collect();
+    let reports: Vec<RunReport> = threads.iter().map(|&t| run_sharded(&w, t)).collect();
     for r in &reports {
         print_sharded(r);
     }
@@ -66,28 +119,74 @@ fn shard_sweep(spec: &SchedBenchSpec, threads: &[usize]) -> (Vec<ShardedReport>,
     (reports, all_identical)
 }
 
-fn sweep_json(reports: &[ShardedReport], all_identical: bool) -> Json {
+fn sweep_json(reports: &[RunReport], all_identical: bool) -> Json {
     let mut m = BTreeMap::new();
     for r in reports {
-        m.insert(format!("t{}", r.n_threads), r.to_json());
+        m.insert(format!("t{}", r.engine.n_shards), sharded_json(r));
     }
     m.insert("identical".to_string(), Json::Bool(all_identical));
     if let (Some(first), Some(last)) = (reports.first(), reports.last()) {
-        let speedup = if first.events_per_s > 0.0 {
-            last.events_per_s / first.events_per_s
+        let speedup = if first.events_per_s() > 0.0 {
+            last.events_per_s() / first.events_per_s()
         } else {
             0.0
         };
         m.insert("speedup_max_threads".to_string(), Json::Num(speedup));
         m.insert(
             "max_threads".to_string(),
-            Json::Num(last.n_threads as f64),
+            Json::Num(last.engine.n_shards as f64),
         );
     }
     Json::Obj(m)
 }
 
-pub fn run(out: &str, smoke: bool, requests: Option<usize>, shards: &str) -> Result<()> {
+/// Every strategy through the unified sharded backend on a small modeled
+/// workload, each held bit-identical across thread counts.  Returns
+/// (per-strategy rows, all-identical flag).
+fn strategy_sweep(threads: &[usize]) -> (Json, bool) {
+    let cfg = CosineConfig {
+        cluster: ClusterConfig {
+            n_verifier_replicas: 2,
+            ..ClusterConfig::default()
+        },
+        ..CosineConfig::default()
+    };
+    let reqs: Vec<ShardRequestSpec> = (0..96)
+        .map(|i| ShardRequestSpec {
+            arrival_s: i as f64 * 1e-3,
+            prompt_len: 128 + 64 * (i % 3),
+            gen_len: 6 + (i % 5),
+        })
+        .collect();
+    let max_t = threads.iter().copied().max().unwrap_or(1);
+    let mut rows = BTreeMap::new();
+    let mut all_identical = true;
+    for s in Strategy::ALL {
+        let w = modeled_workload(&cfg, reqs.clone(), s, SWEEP_GROUPS);
+        let base = run_sharded(&w, 1);
+        let swept = run_sharded(&w, max_t);
+        let same = identical(&base, &swept);
+        all_identical &= same;
+        println!(
+            "strategy {:<9} rounds={:<5} events={:<6} makespan={:>8.3}s hash={:016x} identical_x{}={}",
+            s.name(),
+            base.engine.rounds_dispatched,
+            base.engine.events_processed,
+            base.makespan_s,
+            base.engine.schedule_hash,
+            max_t,
+            same,
+        );
+        let mut row = BTreeMap::new();
+        row.insert("identical".to_string(), Json::Bool(same));
+        row.insert("t1".to_string(), sharded_json(&base));
+        row.insert(format!("t{max_t}"), sharded_json(&swept));
+        rows.insert(s.name().to_string(), Json::Obj(row));
+    }
+    (Json::Obj(rows), all_identical)
+}
+
+pub fn run(out: &str, smoke: bool, requests: Option<usize>, threads: &[usize]) -> Result<()> {
     let mut spec = if smoke {
         SchedBenchSpec::smoke()
     } else {
@@ -96,17 +195,6 @@ pub fn run(out: &str, smoke: bool, requests: Option<usize>, shards: &str) -> Res
     if let Some(n) = requests {
         spec.n_requests = n.max(1);
     }
-    let threads: Vec<usize> = shards
-        .split(',')
-        .filter(|s| !s.trim().is_empty())
-        .map(|s| {
-            s.trim()
-                .parse::<usize>()
-                .map_err(|e| anyhow::anyhow!("bad --shards entry {s:?}: {e}"))
-                .map(|n| n.max(1))
-        })
-        .collect::<Result<_>>()?;
-    anyhow::ensure!(!threads.is_empty(), "--shards needs at least one thread count");
     println!(
         "sched bench ({}): {} requests, γ={} accept={} nodes={} replicas={} max_batch={}",
         if smoke { "smoke" } else { "deep" },
@@ -163,20 +251,24 @@ pub fn run(out: &str, smoke: bool, requests: Option<usize>, shards: &str) -> Res
         "sharded engine sweep: {SWEEP_GROUPS} groups, threads {:?} (base scenario)",
         threads
     );
-    let (base_sweep, base_identical) = shard_sweep(&spec, &threads);
+    let (base_sweep, base_identical) = shard_sweep(&spec, threads);
     println!(
         "sharded engine sweep: {SWEEP_GROUPS} groups, threads {:?} (deep-pool scenario)",
         threads
     );
-    let (deep_sweep, deep_sweep_identical) = shard_sweep(&deep_spec, &threads);
+    let (deep_sweep, deep_sweep_identical) = shard_sweep(&deep_spec, threads);
     let shard_speedup = match (deep_sweep.first(), deep_sweep.last()) {
-        (Some(a), Some(b)) if a.events_per_s > 0.0 => b.events_per_s / a.events_per_s,
+        (Some(a), Some(b)) if a.events_per_s() > 0.0 => b.events_per_s() / a.events_per_s(),
         _ => 0.0,
     };
     println!(
         "sharded identical: base={base_identical} deep={deep_sweep_identical} deep speedup({}t vs 1t)={shard_speedup:.2}x",
-        deep_sweep.last().map(|r| r.n_threads).unwrap_or(1),
+        deep_sweep.last().map(|r| r.engine.n_shards).unwrap_or(1),
     );
+
+    // unified serving path: every strategy through the sharded backend
+    println!("strategy sweep: all strategies × sharded backend ({SWEEP_GROUPS} groups)");
+    let (strategy_rows, strategies_identical) = strategy_sweep(threads);
 
     let mut workload = BTreeMap::new();
     workload.insert("n_requests".to_string(), Json::Num(spec.n_requests as f64));
@@ -197,12 +289,17 @@ pub fn run(out: &str, smoke: bool, requests: Option<usize>, shards: &str) -> Res
         "deep".to_string(),
         sweep_json(&deep_sweep, deep_sweep_identical),
     );
+    sharded.insert("strategies".to_string(), strategy_rows);
+    sharded.insert(
+        "strategies_identical".to_string(),
+        Json::Bool(strategies_identical),
+    );
     sharded.insert(
         "identical".to_string(),
-        Json::Bool(base_identical && deep_sweep_identical),
+        Json::Bool(base_identical && deep_sweep_identical && strategies_identical),
     );
     let mut m = BTreeMap::new();
-    m.insert("schema".to_string(), Json::Num(3.0));
+    m.insert("schema".to_string(), Json::Num(4.0));
     m.insert("workload".to_string(), Json::Obj(workload));
     m.insert("incremental".to_string(), frontier.to_json());
     m.insert("closure".to_string(), closure.to_json());
@@ -223,6 +320,10 @@ pub fn run(out: &str, smoke: bool, requests: Option<usize>, shards: &str) -> Res
     anyhow::ensure!(
         base_identical && deep_sweep_identical,
         "sharded engine schedules diverged across thread counts"
+    );
+    anyhow::ensure!(
+        strategies_identical,
+        "a strategy's sharded schedule diverged across thread counts"
     );
     Ok(())
 }

@@ -7,7 +7,7 @@
 
 use anyhow::Result;
 use cosine::cluster::node::GpuProfile;
-use cosine::coordinator::ServingContext;
+use cosine::coordinator::{ServingContext, Strategy};
 use cosine::workload::{ArrivalMode, DomainSampler, Trace};
 use cosine::CosineConfig;
 use std::str::FromStr;
@@ -51,9 +51,9 @@ pub fn run(cfg: &CosineConfig, table1_only: bool) -> Result<()> {
         let mode = ArrivalMode::from_str(mode_s)?;
         let mut sampler = DomainSampler::new(c.vocab, c.n_slices, c.prompt_len, 31);
         let trace = Trace::online(mode, base_rate, 240.0, &mut sampler, c.gen_len, 13);
-        let vllm = cosine::bench::run(&ctx, &trace, "vllm")?;
+        let vllm = cosine::bench::run(&ctx, &trace, Strategy::Vllm)?;
         let mut cells = Vec::new();
-        for strat in ["specinfer", "pipeinfer", "cosine"] {
+        for strat in [Strategy::SpecInfer, Strategy::PipeInfer, Strategy::Cosine] {
             let r = cosine::bench::run(&ctx, &trace, strat)?;
             cells.push(100.0 * r.cost_per_token / vllm.cost_per_token);
         }

@@ -13,7 +13,7 @@ use cosine::bench;
 use cosine::cluster::SimClock;
 use cosine::coordinator::fusion::{resync_after_commit, run_draft_round, DraftMode};
 use cosine::coordinator::request::Request;
-use cosine::coordinator::serve::{run_speculative, StrategyOpts};
+use cosine::coordinator::serve::{run_speculative, Strategy, StrategyOpts};
 use cosine::coordinator::{verifier, ServingContext};
 use cosine::workload::{DomainSampler, TraceRequest};
 use cosine::CosineConfig;
@@ -76,7 +76,7 @@ pub fn fig2a(ctx: &ServingContext) -> Result<()> {
 pub fn fig2b(ctx: &ServingContext) -> Result<()> {
     println!("\n=== Fig. 2b: speedup across draft structures (vs incremental decode) ===");
     let trace = bench::offline_trace(ctx, 10, 77);
-    let base = bench::run(ctx, &trace, "vllm")?;
+    let base = bench::run(ctx, &trace, Strategy::Vllm)?;
     println!("structure              | tok/s  | speedup");
     println!("-----------------------+--------+--------");
     println!(
@@ -97,7 +97,10 @@ pub fn fig2b(ctx: &ServingContext) -> Result<()> {
             r.throughput_tps / base.throughput_tps
         );
     }
-    for (label, strat) in [("token tree (k=3)", "specinfer"), ("multi-drafter fused", "cosine")] {
+    for (label, strat) in [
+        ("token tree (k=3)", Strategy::SpecInfer),
+        ("multi-drafter fused", Strategy::Cosine),
+    ] {
         let r = bench::run(ctx, &trace, strat)?;
         println!(
             "{:<22} | {:>6.1} | {:>6.2}x",

@@ -3,7 +3,7 @@
 
 use anyhow::Result;
 use cosine::bench;
-use cosine::coordinator::ServingContext;
+use cosine::coordinator::{ServingContext, Strategy};
 use cosine::{CosineConfig, Engine};
 use std::sync::Arc;
 
@@ -12,7 +12,10 @@ pub fn run(cfg: &CosineConfig, batches: &str, requests: usize, strategies: &str)
         .split(',')
         .map(|s| s.trim().parse().unwrap_or(1))
         .collect();
-    let strats: Vec<&str> = strategies.split(',').map(|s| s.trim()).collect();
+    let strats: Vec<Strategy> = strategies
+        .split(',')
+        .map(|s| s.trim().parse())
+        .collect::<Result<_>>()?;
     let engine = Arc::new(Engine::load(std::path::Path::new(&cfg.artifacts_dir))?);
     let mut rows = Vec::new();
     for &b in &batch_sizes {
@@ -22,7 +25,7 @@ pub fn run(cfg: &CosineConfig, batches: &str, requests: usize, strategies: &str)
         let n = requests.max(b * 2);
         let trace = bench::offline_trace(&ctx, n, 100 + b as u64);
         let mut reports = Vec::new();
-        for s in &strats {
+        for &s in &strats {
             let r = bench::run(&ctx, &trace, s)?;
             eprintln!("  [b={b}] {}", r.summary_row());
             reports.push(r);

@@ -5,14 +5,101 @@
 //! processes in *virtual* time (the hardware model clock).  Real compute
 //! per request is unchanged, so use `--minutes` to pick how much of the
 //! window to replay (the full 240 works but takes a while on CPU PJRT).
+//!
+//! `--shards N[,M,…]` routes every strategy through the sharded engine
+//! backend instead of the classic loop, running each listed worker-thread
+//! count and enforcing bit-identical reports across them.  `--smoke` runs
+//! a tiny artifact-free workload through that same unified sharded path
+//! for all strategies (the tier-1 CI exercise).
 
 use anyhow::Result;
-use cosine::coordinator::ServingContext;
+use cosine::coordinator::serve::{
+    modeled_workload, serve_sharded_swept, shard_workload, Strategy, DEFAULT_SHARD_GROUPS,
+};
+use cosine::coordinator::shard::ShardRequestSpec;
+use cosine::coordinator::{RunReport, ServingContext};
 use cosine::workload::{ArrivalMode, DomainSampler, Trace};
 use cosine::CosineConfig;
 use std::str::FromStr;
 
-pub fn run(cfg: &CosineConfig, modes: &str, minutes: f64) -> Result<()> {
+const STRATEGIES: [Strategy; 5] = [
+    Strategy::Cosine,
+    Strategy::SpecInfer,
+    Strategy::PipeInfer,
+    Strategy::Vanilla,
+    Strategy::Vllm,
+];
+
+fn print_header() {
+    println!(
+        "\nmode      | strategy   | mean lat (s) | p99 (s) | ms/token | tok/s | idle% | qwait(s) | shards | shard-eff% | sched ns/ev | elig/ev | eng | xmsg | stall ms | cost/tok"
+    );
+    println!(
+        "----------+------------+--------------+---------+----------+-------+-------+----------+--------+------------+-------------+---------+-----+------+----------+---------"
+    );
+}
+
+fn print_row(mode: &str, r: &RunReport) {
+    println!(
+        "{:<9} | {:<10} | {:>12.2} | {:>7.2} | {:>8.1} | {:>5.1} | {:>5.0} | {:>8.3} | {:>6.2} | {:>10.1} | {:>11.0} | {:>7.1} | {:>3} | {:>4} | {:>8.1} | ${:.6}",
+        mode,
+        r.strategy,
+        r.mean_latency_s(),
+        r.p99_latency_s(),
+        r.ms_per_token,
+        r.throughput_tps,
+        r.server_idle_frac * 100.0,
+        r.verify_queue_delay_s,
+        r.mean_verify_shards(),
+        r.shard_efficiency() * 100.0,
+        r.sched_ns_per_event(),
+        r.elig_touched_per_event(),
+        r.engine.n_shards.max(1),
+        r.engine.cross_shard_msgs,
+        r.merge_stall_ms(),
+        r.cost_per_token,
+    );
+}
+
+/// Artifact-free smoke: every strategy through the unified sharded
+/// backend on a tiny synthetic arrival ramp, bit-identity enforced across
+/// the requested thread counts.  This is what tier-1 CI runs.
+fn run_smoke(cfg: &CosineConfig, threads: &[usize]) -> Result<()> {
+    let reqs: Vec<ShardRequestSpec> = (0..64)
+        .map(|i| ShardRequestSpec {
+            arrival_s: i as f64 * 1e-2,
+            prompt_len: 256,
+            gen_len: 32,
+        })
+        .collect();
+    println!(
+        "online smoke (artifact-free): {} requests, sharded backend, {} groups, threads {:?}",
+        reqs.len(),
+        DEFAULT_SHARD_GROUPS,
+        threads,
+    );
+    print_header();
+    for s in STRATEGIES {
+        let w = modeled_workload(cfg, reqs.clone(), s, DEFAULT_SHARD_GROUPS);
+        let r = serve_sharded_swept(&w, threads)?;
+        print_row("smoke", &r);
+    }
+    println!("all strategies bit-identical across thread counts {threads:?}");
+    Ok(())
+}
+
+pub fn run(
+    cfg: &CosineConfig,
+    modes: &str,
+    minutes: f64,
+    shards: Option<Vec<usize>>,
+    smoke: bool,
+) -> Result<()> {
+    if smoke {
+        let threads = shards.unwrap_or_else(|| vec![1, 2]);
+        return run_smoke(cfg, &threads);
+    }
+
     let ctx = ServingContext::load(cfg)?;
     let c = ctx.constants().clone();
     // base rate chosen relative to modeled serving capacity so "high" loads
@@ -23,39 +110,28 @@ pub fn run(cfg: &CosineConfig, modes: &str, minutes: f64) -> Result<()> {
         "online serving: {:.1} virtual minutes, base rate {:.3} req/s (cap ~{:.1} tok/s), {} verifier replica(s), routing seed {}",
         minutes, base_rate, cap_tps, cfg.cluster.n_verifier_replicas, cfg.router.seed
     );
+    if let Some(threads) = &shards {
+        println!(
+            "sharded backend: {} groups, thread counts {:?} (bit-identity enforced)",
+            DEFAULT_SHARD_GROUPS, threads
+        );
+    }
 
-    println!(
-        "\nmode      | strategy   | mean lat (s) | p99 (s) | ms/token | tok/s | idle% | qwait(s) | shards | shard-eff% | sched ns/ev | elig/ev | eng | xmsg | stall ms | cost/tok"
-    );
-    println!(
-        "----------+------------+--------------+---------+----------+-------+-------+----------+--------+------------+-------------+---------+-----+------+----------+---------"
-    );
+    print_header();
     for mode_s in modes.split(',') {
         let mode = ArrivalMode::from_str(mode_s)?;
         let mut sampler = DomainSampler::new(c.vocab, c.n_slices, c.prompt_len, 3);
         let trace = Trace::online(mode, base_rate, minutes * 60.0, &mut sampler, c.gen_len, 5);
         eprintln!("[{mode_s}] {} requests", trace.len());
-        for strat in ["cosine", "specinfer", "pipeinfer", "vanilla", "vllm"] {
-            let r = cosine::bench::run(&ctx, &trace, strat)?;
-            println!(
-                "{:<9} | {:<10} | {:>12.2} | {:>7.2} | {:>8.1} | {:>5.1} | {:>5.0} | {:>8.3} | {:>6.2} | {:>10.1} | {:>11.0} | {:>7.1} | {:>3} | {:>4} | {:>8.1} | ${:.6}",
-                mode_s.trim(),
-                strat,
-                r.mean_latency_s(),
-                r.p99_latency_s(),
-                r.ms_per_token,
-                r.throughput_tps,
-                r.server_idle_frac * 100.0,
-                r.verify_queue_delay_s,
-                r.mean_verify_shards(),
-                r.shard_efficiency() * 100.0,
-                r.sched_ns_per_event(),
-                r.elig_touched_per_event(),
-                r.engine.n_shards.max(1),
-                r.engine.cross_shard_msgs,
-                r.merge_stall_ms(),
-                r.cost_per_token,
-            );
+        for strat in STRATEGIES {
+            let r = match &shards {
+                Some(threads) => {
+                    let w = shard_workload(&ctx, &trace, strat, DEFAULT_SHARD_GROUPS);
+                    serve_sharded_swept(&w, threads)?
+                }
+                None => cosine::bench::run(&ctx, &trace, strat)?,
+            };
+            print_row(mode_s.trim(), &r);
         }
     }
     Ok(())

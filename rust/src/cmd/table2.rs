@@ -9,6 +9,9 @@
 use anyhow::Result;
 use cosine::coordinator::fusion::{run_draft_round, resync_after_commit, DraftMode};
 use cosine::coordinator::request::Request;
+use cosine::coordinator::serve::{
+    serve_sharded_swept, shard_workload, Strategy, DEFAULT_SHARD_GROUPS,
+};
 use cosine::coordinator::verifier;
 use cosine::coordinator::ServingContext;
 use cosine::workload::{DomainSampler, TraceRequest, N_DOMAINS};
@@ -58,7 +61,11 @@ pub fn acceptance_matrix(
     Ok(matrix)
 }
 
-pub fn run(cfg: &CosineConfig, prompts_per_domain: usize) -> Result<()> {
+pub fn run(
+    cfg: &CosineConfig,
+    prompts_per_domain: usize,
+    shards: Option<Vec<usize>>,
+) -> Result<()> {
     let ctx = ServingContext::load(cfg)?;
     let m = acceptance_matrix(&ctx, prompts_per_domain)?;
     let n_drafters = ctx.drafters.len();
@@ -84,5 +91,25 @@ pub fn run(cfg: &CosineConfig, prompts_per_domain: usize) -> Result<()> {
         println!("  <- best: #{}", best + 1);
     }
     println!("(*synthetic domain analogs — see DESIGN.md §3)");
+
+    // optional sharded-backend pass: serve the same domain mix end-to-end
+    // through the unified multi-core path, bit-identity enforced across
+    // the requested thread counts
+    if let Some(threads) = shards {
+        let n = (prompts_per_domain * N_DOMAINS).max(8);
+        let trace = cosine::bench::offline_trace(&ctx, n, 901);
+        println!(
+            "\nsharded serving pass: {} requests, {} groups, threads {:?}",
+            trace.len(),
+            DEFAULT_SHARD_GROUPS,
+            threads
+        );
+        for s in Strategy::ALL {
+            let w = shard_workload(&ctx, &trace, s, DEFAULT_SHARD_GROUPS);
+            let r = serve_sharded_swept(&w, &threads)?;
+            println!("  {}", r.summary_row());
+        }
+        println!("all strategies bit-identical across thread counts {threads:?}");
+    }
     Ok(())
 }

@@ -385,6 +385,7 @@ pub fn run_speculative(
                     &arena,
                 );
             }
+            stats.peak_pool_depth = stats.peak_pool_depth.max(cpool.len());
         }
 
         // Invoke the scheduler while resources and candidates are free at
@@ -802,6 +803,7 @@ pub fn run_speculative(
     stats.elig_touched = cpool.elig_touched();
     stats.shard_events = vec![stats.events_processed];
     stats.n_shards = 1;
+    stats.rounds_dispatched = round_id;
     Ok(RunReport::assemble(
         &opts.name,
         &ctx.cfg.pair,
@@ -897,6 +899,7 @@ pub fn run_vllm(ctx: &ServingContext, trace: &Trace) -> Result<RunReport> {
                 &arena,
             );
         }
+        stats.peak_pool_depth = stats.peak_pool_depth.max(cpool.len());
 
         loop {
             if unfinished == 0 || cpool.is_empty() {
@@ -996,6 +999,7 @@ pub fn run_vllm(ctx: &ServingContext, trace: &Trace) -> Result<RunReport> {
     stats.elig_touched = cpool.elig_touched();
     stats.shard_events = vec![stats.events_processed];
     stats.n_shards = 1;
+    stats.rounds_dispatched = round_id;
     Ok(RunReport::assemble(
         "vllm",
         &ctx.cfg.pair,

@@ -48,6 +48,15 @@ pub struct EngineStats {
     pub merge_stall_ns: u64,
     /// worker threads the engine ran on (1 = single-threaded)
     pub n_shards: usize,
+    /// batch dispatches (verify rounds launched); request-level round
+    /// participation is `RunReport::rounds`
+    pub rounds_dispatched: u64,
+    /// deepest the candidate pool ever got
+    pub peak_pool_depth: usize,
+    /// order-sensitive fold over the full schedule (finish-time bits,
+    /// rounds, events, per-shard events) — one number to compare runs
+    /// by.  0 when the backend does not compute one (the classic loop).
+    pub schedule_hash: u64,
 }
 
 #[derive(Debug, Clone, Default)]
@@ -299,12 +308,30 @@ impl RunReport {
     }
 
     pub fn p99_latency_s(&self) -> f64 {
+        self.latency_pct(0.99)
+    }
+
+    pub fn p50_latency_s(&self) -> f64 {
+        self.latency_pct(0.5)
+    }
+
+    fn latency_pct(&self, p: f64) -> f64 {
         if self.latencies_s.is_empty() {
             return 0.0;
         }
         let mut v = self.latencies_s.clone();
         v.sort_by(|a, b| a.total_cmp(b));
-        v[((v.len() as f64 * 0.99) as usize).min(v.len() - 1)]
+        v[((v.len() as f64 * p) as usize).min(v.len() - 1)]
+    }
+
+    /// Events processed per real wall second (the bench sweep's scaling
+    /// figure of merit).
+    pub fn events_per_s(&self) -> f64 {
+        if self.wall_s > 0.0 {
+            self.engine.events_processed as f64 / self.wall_s
+        } else {
+            0.0
+        }
     }
 
     pub fn summary_row(&self) -> String {

@@ -39,4 +39,4 @@ pub mod serve;
 pub use context::ServingContext;
 pub use metrics::RunReport;
 pub use request::{Request, RequestPool};
-pub use serve::CoSine;
+pub use serve::{serve, Backend, CoSine, ServeOptions, Strategy};

@@ -116,6 +116,21 @@ impl SchedCostModel {
             self.verifier_gpu.llm_tps(),
         )
     }
+
+    /// Target-side autoregressive decode — the vLLM baseline's round cost
+    /// (same formula as `ServingContext::t_target_decode_s`), so the
+    /// sharded backend prices non-speculative rounds without artifacts.
+    pub fn t_decode_s(&self, b: usize, g: usize, ctx: usize) -> f64 {
+        self.clock.phase_s(
+            &self.modeled_target,
+            &self.verifier_gpu,
+            Phase::Decode,
+            b,
+            g,
+            ctx,
+            self.verifier_gpu.llm_tps(),
+        )
+    }
 }
 
 // ---------------------------------------------------------------------------

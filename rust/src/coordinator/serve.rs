@@ -1,30 +1,370 @@
-//! Strategy definitions for the unified speculative serving engine.
+//! The unified serving API: one entry point, every strategy, both engine
+//! backends.
+//!
+//! There is exactly one way to run a workload — [`serve`] — parameterized
+//! by a typed [`Strategy`] and a [`Backend`]:
+//!
+//! | backend              | loop                            | timing        |
+//! |----------------------|---------------------------------|---------------|
+//! | `Backend::Single`    | classic event loop (`engine.rs`)| real PJRT     |
+//! | `Backend::Sharded{…}` | sharded parallel core (`shard.rs`) | modeled    |
 //!
 //! CoSine and the three speculative baselines differ only in policy knobs
-//! (`StrategyOpts`); they all run the same event-driven loop (see
-//! `coordinator::engine`) — (schedule → cooperative draft → verify →
-//! commit → resync) — over the same runtime and hardware model, which is
-//! what makes the paper's comparisons apples-to-apples:
+//! (`StrategyOpts` on the classic loop, `ShardStrategy` on the sharded
+//! core); they all run the same (schedule → cooperative draft → verify →
+//! commit → resync) loop over the same hardware model, which is what
+//! makes the paper's comparisons apples-to-apples:
 //!
-//! | strategy  | routing | fusion | k | decoupled | adaptive γ | LP batch | sharded |
-//! |-----------|---------|--------|---|-----------|------------|----------|---------|
-//! | CoSine    | yes     | yes    | 3 | yes       | yes        | yes      | yes     |
-//! | Vanilla   | no      | no     | 1 | no        | no         | no       | n/a     |
-//! | PipeInfer | no      | no     | 1 | yes       | no         | no       | yes     |
-//! | SpecInfer | no      | no(tree)| 3| no        | no         | no       | n/a     |
+//! | strategy  | routing | fusion | k | decoupled | adaptive γ | LP batch | tree |
+//! |-----------|---------|--------|---|-----------|------------|----------|------|
+//! | CoSine    | yes     | yes    | 3 | yes       | yes        | yes      | no   |
+//! | Vanilla   | no      | no     | 1 | no        | no         | no       | no   |
+//! | PipeInfer | no      | no     | 1 | yes       | no         | no       | no   |
+//! | SpecInfer | no      | no     | 3 | no        | no         | no       | yes  |
+//! | vLLM      | —       | —      | — | —         | —          | FIFO     | —    |
 //!
-//! (vLLM has no speculation and runs as `engine::run_vllm` on the same
-//! event loop.)
+//! (vLLM has no speculation: `engine::run_vllm` on the classic loop, the
+//! non-speculative dispatch mode on the sharded core.)
+//!
+//! Both backends return the same [`RunReport`]; the sharded backend
+//! additionally fills the per-shard counters in `EngineStats` and is
+//! bit-identical across worker-thread counts (see `shard::identical`,
+//! enforced by [`serve_sharded_swept`]).  Prefer [`serve`] over calling
+//! `shard::run_sharded` / `shard::run_single` directly — those are the
+//! backend internals, kept `pub` for the bench harness and the property
+//! tests.
 
-use anyhow::Result;
+use std::fmt;
+use std::str::FromStr;
 
+use anyhow::{ensure, Result};
+
+use crate::config::CosineConfig;
 use crate::workload::Trace;
 
 use super::context::ServingContext;
 use super::engine;
 use super::metrics::RunReport;
 use super::router::EmbedSim;
+use super::scheduler::SchedCostModel;
+use super::shard::{self, ShardRequestSpec, ShardStrategy, ShardWorkload};
 
+/// Default drafter-group count for sharded runs (the workload-level
+/// decomposition; `--shards` picks the worker-thread count).
+pub const DEFAULT_SHARD_GROUPS: usize = 4;
+
+// ---------------------------------------------------------------------------
+// Strategy
+// ---------------------------------------------------------------------------
+
+/// The serving strategies (paper §6.1): CoSine plus the four baselines.
+/// This enum is the only strategy dispatch in the codebase — CLI strings
+/// come in through [`FromStr`], reports carry [`Strategy::name`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Strategy {
+    /// the paper's system: routed, fused, decoupled, Eq. 8-batched
+    Cosine,
+    /// continuous batching, no speculation (throughput baseline)
+    Vllm,
+    /// single-drafter coupled speculative decoding
+    Vanilla,
+    /// decoupled asynchronous pipeline, single drafter
+    PipeInfer,
+    /// multi-drafter token-tree verification, coupled
+    SpecInfer,
+}
+
+impl Strategy {
+    pub const ALL: [Strategy; 5] = [
+        Strategy::Cosine,
+        Strategy::Vllm,
+        Strategy::Vanilla,
+        Strategy::PipeInfer,
+        Strategy::SpecInfer,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Strategy::Cosine => "cosine",
+            Strategy::Vllm => "vllm",
+            Strategy::Vanilla => "vanilla",
+            Strategy::PipeInfer => "pipeinfer",
+            Strategy::SpecInfer => "specinfer",
+        }
+    }
+
+    /// Classic-loop policy knobs for this strategy under `cfg`.  This is
+    /// the single home of the per-strategy configuration (the cosine
+    /// ablation overrides, the specinfer drafter clamp).  Unused for
+    /// [`Strategy::Vllm`], which maps to the non-speculative loop.
+    pub fn opts(&self, cfg: &CosineConfig, n_drafters: usize) -> StrategyOpts {
+        match self {
+            Strategy::Cosine => {
+                let mut o = StrategyOpts::cosine(cfg.router.drafters_per_request);
+                o.fusion = cfg.speculation.fusion;
+                o.routing = cfg.speculation.cooperative && cfg.router.enabled;
+                o
+            }
+            Strategy::Vanilla => StrategyOpts::vanilla(),
+            Strategy::PipeInfer => StrategyOpts::pipeinfer(),
+            Strategy::SpecInfer => {
+                StrategyOpts::specinfer(cfg.router.drafters_per_request.min(n_drafters.max(1)))
+            }
+            Strategy::Vllm => StrategyOpts {
+                name: "vllm".into(),
+                routing: false,
+                fusion: false,
+                k: 1,
+                decoupled: false,
+                adaptive: false,
+                lp_batching: false,
+                tree: false,
+                sharded_verify: false,
+            },
+        }
+    }
+
+    /// Sharded-core dispatch mode + drafters-per-request for this
+    /// strategy under `cfg` (the modeled reduction of [`Strategy::opts`]).
+    fn shard_policy(&self, cfg: &CosineConfig) -> (ShardStrategy, usize) {
+        let k = cfg.router.drafters_per_request.max(1);
+        match self {
+            Strategy::Cosine => (
+                ShardStrategy {
+                    speculative: true,
+                    decoupled: true,
+                    lp_batching: true,
+                    fusion: cfg.speculation.fusion,
+                    tree: false,
+                },
+                k,
+            ),
+            Strategy::PipeInfer => (
+                ShardStrategy {
+                    speculative: true,
+                    decoupled: true,
+                    lp_batching: false,
+                    fusion: false,
+                    tree: false,
+                },
+                1,
+            ),
+            Strategy::Vanilla => (
+                ShardStrategy {
+                    speculative: true,
+                    decoupled: false,
+                    lp_batching: false,
+                    fusion: false,
+                    tree: false,
+                },
+                1,
+            ),
+            Strategy::SpecInfer => (
+                ShardStrategy {
+                    speculative: true,
+                    decoupled: false,
+                    lp_batching: false,
+                    fusion: false,
+                    tree: true,
+                },
+                k,
+            ),
+            Strategy::Vllm => (
+                ShardStrategy {
+                    speculative: false,
+                    decoupled: false,
+                    lp_batching: false,
+                    fusion: false,
+                    tree: false,
+                },
+                1,
+            ),
+        }
+    }
+}
+
+impl fmt::Display for Strategy {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+impl FromStr for Strategy {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        Strategy::ALL
+            .iter()
+            .find(|st| st.name() == s)
+            .copied()
+            .ok_or_else(|| {
+                let valid: Vec<&str> = Strategy::ALL.iter().map(|s| s.name()).collect();
+                anyhow::anyhow!("unknown strategy {s:?} (valid: {})", valid.join(", "))
+            })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Backend + options
+// ---------------------------------------------------------------------------
+
+/// Which engine executes the run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Backend {
+    /// the classic single-threaded event loop (real PJRT compute)
+    Single,
+    /// the sharded parallel core on `threads` worker threads (modeled
+    /// compute, bit-identical across thread counts)
+    Sharded { threads: usize },
+}
+
+/// Options for [`serve`]: the one way to say what to run and how.
+#[derive(Debug, Clone, Copy)]
+pub struct ServeOptions {
+    pub strategy: Strategy,
+    pub backend: Backend,
+    /// drafter-group decomposition for the sharded backend (a workload
+    /// parameter: changing it changes the schedule; the thread count in
+    /// `Backend::Sharded` never does)
+    pub shard_groups: usize,
+}
+
+impl ServeOptions {
+    pub fn single(strategy: Strategy) -> Self {
+        Self {
+            strategy,
+            backend: Backend::Single,
+            shard_groups: DEFAULT_SHARD_GROUPS,
+        }
+    }
+
+    pub fn sharded(strategy: Strategy, threads: usize) -> Self {
+        Self {
+            strategy,
+            backend: Backend::Sharded { threads },
+            shard_groups: DEFAULT_SHARD_GROUPS,
+        }
+    }
+}
+
+/// Serve a trace: the unified entry every CLI command and experiment goes
+/// through.  Dispatches any [`Strategy`] to the selected [`Backend`] and
+/// returns the one stats surface, [`RunReport`].
+pub fn serve(ctx: &ServingContext, trace: &Trace, o: &ServeOptions) -> Result<RunReport> {
+    match o.backend {
+        Backend::Single => match o.strategy {
+            Strategy::Vllm => engine::run_vllm(ctx, trace),
+            s => run_speculative(ctx, trace, &s.opts(&ctx.cfg, ctx.n_drafters())),
+        },
+        Backend::Sharded { threads } => {
+            let w = shard_workload(ctx, trace, o.strategy, o.shard_groups);
+            Ok(shard::run_sharded(&w, threads))
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// ServingContext → ShardWorkload bridge
+// ---------------------------------------------------------------------------
+
+/// Lower a live context + trace onto the sharded core: per-request
+/// arrival/prompt/generation shapes from the trace, pricing from the
+/// context's calibrated [`SchedCostModel`], topology and policy from the
+/// config.  Speculative token outcomes are modeled (γ from
+/// `speculation.gamma_init`, acceptance at the ⌈γ/2⌉ midpoint) — the
+/// sharded backend is a timing engine, not a token engine.
+pub fn shard_workload(
+    ctx: &ServingContext,
+    trace: &Trace,
+    strategy: Strategy,
+    n_groups: usize,
+) -> ShardWorkload {
+    workload_with_cost(&ctx.cfg, trace_reqs(trace), strategy, n_groups, ctx.sched_cost())
+}
+
+/// The artifact-free bridge: identical to [`shard_workload`] but priced
+/// by the synthetic cost model, so smoke runs and CI exercise the full
+/// unified path without PJRT artifacts.
+pub fn modeled_workload(
+    cfg: &CosineConfig,
+    reqs: Vec<ShardRequestSpec>,
+    strategy: Strategy,
+    n_groups: usize,
+) -> ShardWorkload {
+    let cost = SchedCostModel::synthetic(&cfg.pair, cfg.cluster.n_drafter_nodes.max(1));
+    workload_with_cost(cfg, reqs, strategy, n_groups, cost)
+}
+
+fn trace_reqs(trace: &Trace) -> Vec<ShardRequestSpec> {
+    trace
+        .requests
+        .iter()
+        .map(|r| ShardRequestSpec {
+            arrival_s: r.arrival_s,
+            prompt_len: r.prompt.len(),
+            gen_len: r.max_new_tokens,
+        })
+        .collect()
+}
+
+fn workload_with_cost(
+    cfg: &CosineConfig,
+    reqs: Vec<ShardRequestSpec>,
+    strategy: Strategy,
+    n_groups: usize,
+    cost: SchedCostModel,
+) -> ShardWorkload {
+    let (policy, k) = strategy.shard_policy(cfg);
+    let gamma = cfg.speculation.gamma_init.max(1);
+    ShardWorkload {
+        label: strategy.name().into(),
+        pair: cfg.pair.clone(),
+        reqs,
+        gamma,
+        accept: gamma.div_ceil(2),
+        n_nodes: cfg.cluster.n_drafter_nodes.max(1),
+        n_replicas: cfg.cluster.n_verifier_replicas.max(1),
+        k,
+        max_batch: cfg.scheduler.max_batch.max(1),
+        seed: cfg.router.seed,
+        n_groups,
+        verifier_gpus: cfg.cluster.verifier_gpus.max(1),
+        strategy: policy,
+        cost,
+    }
+}
+
+/// Run a sharded workload at every requested thread count, enforce
+/// bit-identity across all of them, and return the report.  This is what
+/// `--shards 1,2,4` means on the experiment CLIs: one schedule, checked
+/// at each parallelism level.
+pub fn serve_sharded_swept(w: &ShardWorkload, threads: &[usize]) -> Result<RunReport> {
+    let base = shard::run_single(w);
+    for &t in threads {
+        if t <= 1 {
+            continue;
+        }
+        let r = shard::run_sharded(w, t);
+        ensure!(
+            shard::identical(&base, &r),
+            "sharded run diverged across thread counts ({} vs 1 threads) for strategy {}: \
+             schedule hash {:016x} vs {:016x}",
+            t,
+            w.label,
+            r.engine.schedule_hash,
+            base.engine.schedule_hash,
+        );
+    }
+    Ok(base)
+}
+
+// ---------------------------------------------------------------------------
+// Classic-loop policy knobs
+// ---------------------------------------------------------------------------
+
+/// Policy knobs for the classic event loop.  Built via [`Strategy::opts`];
+/// the constructors stay public for ablations that flip single knobs
+/// (e.g. `cmd::motivation`).
 #[derive(Debug, Clone)]
 pub struct StrategyOpts {
     pub name: String,
@@ -115,13 +455,9 @@ impl CoSine {
         Self { ctx }
     }
 
-    /// Serve a trace with the full CoSine stack.
+    /// Serve a trace with the full CoSine stack (classic backend).
     pub fn serve(&self, trace: &Trace) -> Result<RunReport> {
-        let k = self.ctx.cfg.router.drafters_per_request;
-        let mut opts = StrategyOpts::cosine(k);
-        opts.fusion = self.ctx.cfg.speculation.fusion;
-        opts.routing = self.ctx.cfg.speculation.cooperative && self.ctx.cfg.router.enabled;
-        run_speculative(&self.ctx, trace, &opts)
+        serve(&self.ctx, trace, &ServeOptions::single(Strategy::Cosine))
     }
 }
 
@@ -142,4 +478,44 @@ pub fn embed_sim(ctx: &ServingContext) -> Result<EmbedSim> {
         .weights
         .tensor_f32(&format!("{}/embed", ctx.target.instance))?;
     Ok(EmbedSim::new(&embed, arch.vocab, arch.d_model))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strategy_round_trips_through_from_str() {
+        for s in Strategy::ALL {
+            assert_eq!(s.name().parse::<Strategy>().unwrap(), s);
+        }
+    }
+
+    #[test]
+    fn unknown_strategy_lists_the_valid_set() {
+        let err = "turbo".parse::<Strategy>().unwrap_err().to_string();
+        assert!(err.contains("unknown strategy"), "{err}");
+        for s in Strategy::ALL {
+            assert!(err.contains(s.name()), "{err} missing {}", s.name());
+        }
+    }
+
+    #[test]
+    fn modeled_workloads_serve_identically_across_thread_counts() {
+        let cfg = CosineConfig::default();
+        let reqs: Vec<ShardRequestSpec> = (0..40)
+            .map(|i| ShardRequestSpec {
+                arrival_s: i as f64 * 2e-3,
+                prompt_len: 64 + 32 * (i % 3),
+                gen_len: 6 + (i % 5),
+            })
+            .collect();
+        for s in Strategy::ALL {
+            let w = modeled_workload(&cfg, reqs.clone(), s, 3);
+            let r = serve_sharded_swept(&w, &[1, 2, 3]).unwrap();
+            assert_eq!(r.strategy, s.name());
+            assert_eq!(r.n_requests, reqs.len());
+            assert!(r.makespan_s > 0.0);
+        }
+    }
 }

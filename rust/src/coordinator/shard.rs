@@ -1,7 +1,8 @@
 //! Sharded parallel engine core: the virtual-time serving simulation
 //! partitioned by drafter node *group*, executed on worker threads with a
-//! deterministic cross-shard merge — the multi-core platform the ROADMAP's
-//! scale targets (≥1M simulated requests, 10–100× clusters) run on.
+//! deterministic cross-shard merge — the multi-core serving backend every
+//! strategy (`Strategy::{Cosine, Vllm, Vanilla, PipeInfer, SpecInfer}`)
+//! dispatches through when `serve()` is asked for `Backend::Sharded`.
 //!
 //! # Decomposition
 //!
@@ -27,6 +28,25 @@
 //! `n_groups = 1` reproduces the single-pool legacy semantics exactly
 //! (the 1-node + 1-replica corner is property-tested against the classic
 //! loop in `bench::sched`).
+//!
+//! # Strategies
+//!
+//! [`ShardStrategy`] selects the dispatch mode per round:
+//!
+//! * **pipelined speculative** (cosine, pipeinfer): per-request draft
+//!   reservations on the group's drafter nodes, then a replica-sharding
+//!   verify menu through the hub — the PR 6 behavior, now with the
+//!   fusion-exchange term gated on `fusion`;
+//! * **coupled speculative** (vanilla, specinfer): drafting is co-located
+//!   on the server, so the round occupies one replica for the combined
+//!   draft+verify duration (a single-entry menu).  Trees multiply the
+//!   verified window by the branch factor.  Where the classic loop gates
+//!   admission on a replica being free *now*, the sharded backend queues
+//!   rounds at the hub — same policy pressure, deterministic at any
+//!   thread count;
+//! * **non-speculative** (vllm): FIFO continuous batching of one target
+//!   decode step per round, priced by [`SchedCostModel::t_decode_s`],
+//!   sharded queue-aware like the classic `run_vllm`.
 //!
 //! # The sequenced verify hub
 //!
@@ -58,6 +78,14 @@
 //! watermark-clamped and per-shard keys strictly increase), so the hub
 //! can always apply it — see `try_apply`.
 //!
+//! # Reporting
+//!
+//! A sharded run returns the same [`RunReport`] the classic loop emits —
+//! one stats surface.  The backend-specific counters (per-shard event
+//! counts, cross-shard messages, merge-stall ns, schedule hash) live in
+//! [`EngineStats`]; [`identical`] is the bit-identity predicate the bench
+//! sweep and the property tests enforce across thread counts.
+//!
 //! [`run_single`] is [`run_sharded`] driven by one worker thread: the
 //! same shard/hub code executed sequentially, kept as the oracle the
 //! property tests and the `cosine bench --shards` sweep hold N-thread
@@ -69,27 +97,70 @@ use std::time::{Duration, Instant};
 
 use crate::config::SchedulerConfig;
 use crate::coordinator::engine::{chunk_pending_rounds, collect_ready, EventKind, EventQueue};
+use crate::coordinator::metrics::{EngineStats, RunReport};
 use crate::coordinator::pipeline::{ResourcePool, ShardedVerify};
 use crate::coordinator::scheduler::{
     Candidate, CandidatePool, PlacementArena, PlacementId, SchedCostModel, Scheduler,
 };
-use crate::util::json::Json;
 use crate::util::rng::Rng;
 
 // ---------------------------------------------------------------------------
 // Workload
 // ---------------------------------------------------------------------------
 
-/// A deterministic synthetic serving workload over a grouped cluster —
-/// the sharded counterpart of `bench::sched::SchedBenchSpec` (which
-/// converts into one via `SchedBenchSpec::shard_workload`).
-#[derive(Debug, Clone)]
-pub struct ShardWorkload {
-    pub n_requests: usize,
-    /// arrival spacing (virtual seconds)
-    pub arrival_dt: f64,
+/// One request of a sharded workload: when it arrives and how much it
+/// generates.  Heterogeneous per request — `ServingContext → ShardWorkload`
+/// bridges real traces through this.
+#[derive(Debug, Clone, Copy)]
+pub struct ShardRequestSpec {
+    pub arrival_s: f64,
     pub prompt_len: usize,
     pub gen_len: usize,
+}
+
+/// The policy knobs that pick a dispatch mode (the sharded counterpart of
+/// `StrategyOpts`, reduced to what the modeled backend distinguishes).
+#[derive(Debug, Clone, Copy)]
+pub struct ShardStrategy {
+    /// false = vLLM-style continuous batching (one decode token per round)
+    pub speculative: bool,
+    /// true = drafting on the speculation cluster (per-request node
+    /// reservations, pipelined with verification); false = co-located
+    pub decoupled: bool,
+    /// Eq. 8 batch solver; false = FIFO batching
+    pub lp_batching: bool,
+    /// charge the per-token fusion exchange in the draft price
+    pub fusion: bool,
+    /// SpecInfer-style tree verification (×k verified window)
+    pub tree: bool,
+}
+
+impl ShardStrategy {
+    /// The PR 6 bench shape: pipelined speculative drafting with the
+    /// Eq. 8 solver and fusion exchanges — exactly what
+    /// `bench::sched::run_sched_bench` prices, kept as the classic-loop
+    /// equivalence oracle.
+    pub fn pipelined() -> Self {
+        Self {
+            speculative: true,
+            decoupled: true,
+            lp_batching: true,
+            fusion: true,
+            tree: false,
+        }
+    }
+}
+
+/// A deterministic serving workload over a grouped cluster — built from a
+/// bench spec (`SchedBenchSpec::shard_workload`), from a live
+/// `ServingContext` + trace (`serve::shard_workload`), or artifact-free
+/// from a config (`serve::modeled_workload`).
+#[derive(Debug, Clone)]
+pub struct ShardWorkload {
+    /// strategy name the report carries
+    pub label: String,
+    pub pair: String,
+    pub reqs: Vec<ShardRequestSpec>,
     /// per-request draft budget γ
     pub gamma: usize,
     /// accepted drafts per round (committed tokens = accept + 1)
@@ -104,6 +175,12 @@ pub struct ShardWorkload {
     /// workload: changing it changes the schedule; changing the *thread*
     /// count never does.
     pub n_groups: usize,
+    /// GPUs per verification server (rent-model input)
+    pub verifier_gpus: usize,
+    pub strategy: ShardStrategy,
+    /// pricing model (from `ServingContext::sched_cost` or
+    /// `SchedCostModel::synthetic`)
+    pub cost: SchedCostModel,
 }
 
 impl ShardWorkload {
@@ -168,7 +245,9 @@ struct Dispatch {
     b: usize,
     /// draft completion = verify readiness (known at submission)
     ready: f64,
-    /// per-shard-count verify durations (replica sharding menu)
+    /// per-shard-count verify durations (replica sharding menu; coupled
+    /// strategies submit a single-entry menu — the whole round on one
+    /// replica)
     durs: Vec<f64>,
     /// backlog round durations for the queue-aware sharding choice
     pending_durs: Vec<f64>,
@@ -337,6 +416,15 @@ struct Outstanding {
     ready: f64,
 }
 
+/// One planned round about to cross to the hub: who is in it, when its
+/// verification can start, and the priced duration menu.
+struct Planned {
+    batch: Vec<usize>,
+    proposed: u64,
+    ready: f64,
+    durs: Vec<f64>,
+}
+
 /// One logical shard: a group's drafter nodes, requests, candidate pool,
 /// and event heap, advanced by [`ShardSim::process_instant`] — the same
 /// instant body as the classic single-threaded loop, with round dispatch
@@ -352,7 +440,8 @@ struct ShardSim {
     cpool: CandidatePool,
     /// drafter timeline (global node indexing; only this group's nodes
     /// ever hold reservations — the verifier slots stay untouched, the
-    /// shared verify state lives in the hub)
+    /// shared verify state lives in the hub).  Coupled and
+    /// non-speculative strategies never occupy drafters (0-node pool).
     res: ResourcePool,
     queue: EventQueue,
     inflight: HashMap<u64, Vec<usize>>,
@@ -368,11 +457,14 @@ struct ShardSim {
     done: bool,
     // counters
     events: u64,
+    coalesced: u64,
     rounds: u64,
+    req_rounds: u64,
+    drafts_proposed: u64,
+    drafts_accepted: u64,
     sched_invocations: u64,
     sched_ns: u64,
     index_ns: u64,
-    alloc_proxy: u64,
     peak_depth: usize,
     cross_msgs: u64,
     // scratch
@@ -386,21 +478,29 @@ struct ShardSim {
 impl ShardSim {
     fn new(w: &ShardWorkload, g: usize) -> Self {
         let groups = w.groups();
-        let cost = SchedCostModel::synthetic("l", w.n_nodes);
+        let cost = w.cost.clone();
         let sched_cfg = SchedulerConfig {
             max_batch: w.max_batch,
             ..SchedulerConfig::default()
         };
-        let mut res = ResourcePool::new(w.n_nodes, w.n_replicas.max(1));
+        let decoupled = w.strategy.decoupled && w.strategy.speculative;
+        let mut res = ResourcePool::new(if decoupled { w.n_nodes } else { 0 }, w.n_replicas.max(1));
         res.allgather_step_s = cost.network.allgather_step_s(w.max_batch.max(1));
         let group_nodes: Vec<usize> = (0..w.n_nodes).filter(|d| d % groups == g).collect();
-        let k = w.k.clamp(1, group_nodes.len().max(1));
-        let reqs: Vec<ShardReq> = (0..w.n_requests)
-            .map(|i| ShardReq {
-                ctx_len: w.prompt_len,
-                remaining: w.gen_len.max(1),
-                arrival_s: i as f64 * w.arrival_dt,
-                ready_at: i as f64 * w.arrival_dt,
+        let k = if decoupled {
+            w.k.clamp(1, group_nodes.len().max(1))
+        } else {
+            w.k.clamp(1, w.n_nodes.max(1))
+        };
+        let reqs: Vec<ShardReq> = w
+            .reqs
+            .iter()
+            .enumerate()
+            .map(|(i, spec)| ShardReq {
+                ctx_len: spec.prompt_len,
+                remaining: spec.gen_len.max(1),
+                arrival_s: spec.arrival_s,
+                ready_at: spec.arrival_s,
                 finish_s: None,
                 placement: PlacementId::EMPTY,
                 rng: request_rng(w.seed, i),
@@ -416,13 +516,11 @@ impl ShardSim {
         }
         ShardSim {
             g,
-            w: w.clone(),
             k,
             group_nodes,
-            cost,
-            scheduler: Scheduler::new(sched_cfg, true),
+            scheduler: Scheduler::new(sched_cfg, w.strategy.lp_batching),
             arena: PlacementArena::new(),
-            cpool: CandidatePool::new(w.n_nodes),
+            cpool: CandidatePool::new(if decoupled { w.n_nodes } else { 0 }),
             res,
             queue,
             inflight: HashMap::new(),
@@ -434,11 +532,14 @@ impl ShardSim {
             round_id: 0,
             done: false,
             events: 0,
+            coalesced: 0,
             rounds: 0,
+            req_rounds: 0,
+            drafts_proposed: 0,
+            drafts_accepted: 0,
             sched_invocations: 0,
             sched_ns: 0,
             index_ns: 0,
-            alloc_proxy: 0,
             peak_depth: 0,
             cross_msgs: 0,
             newly_ready: Vec::new(),
@@ -446,7 +547,13 @@ impl ShardSim {
             pending_durs: Vec::new(),
             batch_sorted: Vec::new(),
             set_buf: Vec::new(),
+            cost,
+            w: w.clone(),
         }
+    }
+
+    fn decoupled(&self) -> bool {
+        self.w.strategy.decoupled && self.w.strategy.speculative
     }
 
     /// Earliest verify readiness among rounds whose results have not yet
@@ -483,9 +590,15 @@ impl ShardSim {
     /// nothing reads its committed state before the `VerifyDone` pops.
     fn apply_result(&mut self, rr: RoundResult) {
         let batch = self.inflight.get(&rr.rid).expect("verify result for unknown round");
+        let per_round = if self.w.strategy.speculative {
+            self.w.accept + 1
+        } else {
+            1
+        };
         for &ri in batch {
             let r = &mut self.reqs[ri];
-            let take = (self.w.accept + 1).min(r.remaining);
+            let take = per_round.min(r.remaining);
+            self.drafts_accepted += take.saturating_sub(1) as u64;
             r.remaining -= take;
             r.ctx_len += take;
             r.ready_at = rr.sv.end;
@@ -504,6 +617,156 @@ impl ShardSim {
         self.cross_msgs += 1;
     }
 
+    /// Pipelined speculative round: per-request draft reservations on
+    /// this group's nodes, then the replica-sharding verify menu — the
+    /// classic decoupled dispatch.
+    fn plan_pipelined(&mut self) -> Option<Planned> {
+        let t0 = Instant::now();
+        let assign = self
+            .scheduler
+            .assign_incremental(&self.cost, &self.arena, &self.cpool, self.k);
+        self.sched_invocations += 1;
+        self.sched_ns += t0.elapsed().as_nanos() as u64;
+        let assign = assign?;
+
+        let b = assign.batch.len();
+        let mut ctx_crit = 1usize;
+        let mut draft_end = 0.0f64;
+        for (pos, &ri) in assign.batch.iter().enumerate() {
+            let r = &self.reqs[ri];
+            ctx_crit = ctx_crit.max(r.ctx_len);
+            let gamma = assign.gammas[pos].max(1);
+            let set = self.arena.get(assign.placement[pos]);
+            let mut t_i = self.cost.t_draft_s(1, gamma, r.ctx_len);
+            if self.w.strategy.fusion {
+                t_i += gamma as f64 * self.cost.network.fusion_round_s(set.len().max(1), 1);
+            }
+            let (_, e_i) = self.res.draft_on(set, r.ready_at, t_i);
+            for &node in set {
+                self.queue.push(e_i, EventKind::DraftDone(self.round_id, node));
+            }
+            draft_end = draft_end.max(e_i);
+        }
+        let big_gamma: usize = assign.gammas.iter().map(|g| g + 1).sum();
+        let g_eff = (big_gamma as f64 / b as f64).ceil().max(1.0) as usize;
+        let durs: Vec<f64> = (1..=self.w.n_replicas.max(1))
+            .map(|s| {
+                let bs = b.div_ceil(s);
+                self.cost.t_verify_s(bs, g_eff, ctx_crit)
+                    + self.cost.network.verify_exchange_s(bs, self.cost.g1)
+            })
+            .collect();
+        self.batch_sorted.clear();
+        self.batch_sorted.extend_from_slice(&assign.batch);
+        self.batch_sorted.sort_unstable();
+        let cost = &self.cost;
+        let price = |pb: usize, sum_g1: usize, crit: usize, _pf: usize| -> f64 {
+            let g_eff = (sum_g1 as f64 / pb as f64).ceil().max(1.0) as usize;
+            cost.t_verify_s(pb, g_eff, crit) + cost.network.verify_exchange_s(pb, cost.g1)
+        };
+        chunk_pending_rounds(
+            self.cpool.iter_len(),
+            &self.batch_sorted,
+            b,
+            2 * self.w.n_replicas.max(1),
+            |_| false,
+            price,
+            &mut self.pending_durs,
+        );
+        Some(Planned {
+            proposed: assign.gammas.iter().map(|&g| g as u64).sum(),
+            batch: assign.batch,
+            ready: draft_end,
+            durs,
+        })
+    }
+
+    /// Coupled speculative round (vanilla, specinfer): co-located
+    /// drafting occupies the round's replica back-to-back with
+    /// verification, so the hub gets a single-entry duration menu and no
+    /// backlog (the replica can't pipeline around its own draft phase).
+    fn plan_coupled(&mut self) -> Option<Planned> {
+        let t0 = Instant::now();
+        let assign = self
+            .scheduler
+            .assign_incremental(&self.cost, &self.arena, &self.cpool, self.k);
+        self.sched_invocations += 1;
+        self.sched_ns += t0.elapsed().as_nanos() as u64;
+        let assign = assign?;
+
+        let b = assign.batch.len();
+        let mut ctx_crit = 1usize;
+        let mut batch_ready = 0.0f64;
+        for &ri in &assign.batch {
+            let r = &self.reqs[ri];
+            ctx_crit = ctx_crit.max(r.ctx_len);
+            batch_ready = batch_ready.max(r.ready_at);
+        }
+        let gamma_max = assign.gammas.iter().copied().max().unwrap_or(1).max(1);
+        let gang = self.k.clamp(1, self.w.n_nodes.max(1));
+        let per_node_b = (b * self.k).div_ceil(gang).max(1);
+        let mut t_draft = self.cost.t_draft_s(per_node_b, gamma_max, ctx_crit);
+        if self.w.strategy.fusion {
+            t_draft += gamma_max as f64 * self.cost.network.fusion_round_s(self.k, b);
+        }
+        let big_gamma: usize = assign.gammas.iter().map(|g| g + 1).sum();
+        let g_eff = (big_gamma as f64 / b as f64).ceil().max(1.0) as usize;
+        let g_tree = if self.w.strategy.tree {
+            g_eff * self.k
+        } else {
+            g_eff
+        };
+        let t_verify = self.cost.t_verify_s(b, g_tree, ctx_crit);
+        self.pending_durs.clear();
+        Some(Planned {
+            proposed: assign.gammas.iter().map(|&g| g as u64).sum(),
+            batch: assign.batch,
+            ready: batch_ready,
+            durs: vec![t_draft + t_verify],
+        })
+    }
+
+    /// Non-speculative round (vllm): FIFO continuous batching of one
+    /// batched target decode step, with the queue-aware replica menu.
+    fn plan_fifo_decode(&mut self) -> Option<Planned> {
+        let max_b = self.w.max_batch.min(self.cost.max_bucket).max(1);
+        let t0 = Instant::now();
+        let batch: Vec<usize> = self.cpool.iter_arrival().take(max_b).map(|c| c.idx).collect();
+        self.sched_invocations += 1;
+        self.sched_ns += t0.elapsed().as_nanos() as u64;
+        if batch.is_empty() {
+            return None;
+        }
+
+        let b = batch.len();
+        let mut ctx_crit = 1usize;
+        let mut batch_ready = 0.0f64;
+        for &ri in &batch {
+            let r = &self.reqs[ri];
+            ctx_crit = ctx_crit.max(r.ctx_len);
+            batch_ready = batch_ready.max(r.ready_at);
+        }
+        let durs: Vec<f64> = (1..=self.w.n_replicas.max(1))
+            .map(|s| self.cost.t_decode_s(b.div_ceil(s), 1, ctx_crit))
+            .collect();
+        let cost = &self.cost;
+        chunk_pending_rounds(
+            self.cpool.iter_arrival().skip(b),
+            &[],
+            b,
+            2 * self.w.n_replicas.max(1),
+            |_| false,
+            |pb, _sum_g1, crit, _pf| cost.t_decode_s(pb, 1, crit),
+            &mut self.pending_durs,
+        );
+        Some(Planned {
+            batch,
+            proposed: 0,
+            ready: batch_ready,
+            durs,
+        })
+    }
+
     /// Process one event instant: the classic loop body (coalesced pops,
     /// frontier transitions, routing, the scheduling loop, the tick
     /// safety net), with verify rounds submitted to the hub instead of
@@ -519,98 +782,67 @@ impl ShardSim {
         while self.queue.next_at().is_some_and(|t| t <= now) {
             if let Some((_, k2)) = self.queue.pop() {
                 self.events += 1;
+                self.coalesced += 1;
                 collect_ready(k2, &mut self.inflight, &mut self.newly_ready);
             }
         }
 
         // flip exactly the candidates on nodes whose reservations ended
-        let t0 = Instant::now();
-        self.res.drafter_transitions(now, &mut self.trans);
-        self.cpool.apply_transitions(&self.trans);
-        self.index_ns += t0.elapsed().as_nanos() as u64;
+        if self.decoupled() {
+            let t0 = Instant::now();
+            self.res.drafter_transitions(now, &mut self.trans);
+            self.cpool.apply_transitions(&self.trans);
+            self.index_ns += t0.elapsed().as_nanos() as u64;
+        }
 
-        // route the newly-ready requests on their private streams
+        // surface the newly-ready requests; pipelined strategies route
+        // them on their private streams, the rest carry no placement
         self.newly_ready.sort_unstable();
+        let decoupled = self.decoupled();
         for &ri in &self.newly_ready {
             let r = &mut self.reqs[ri];
             if r.finish_s.is_some() {
                 continue;
             }
-            route_draw(&mut r.rng, &self.group_nodes, self.k, &mut self.set_buf);
-            r.placement = self.arena.intern(&self.set_buf);
+            if decoupled {
+                route_draw(&mut r.rng, &self.group_nodes, self.k, &mut self.set_buf);
+                r.placement = self.arena.intern(&self.set_buf);
+            }
+            let gamma = if self.w.strategy.speculative {
+                self.w.gamma.min(r.remaining.max(1))
+            } else {
+                1
+            };
             self.cpool.insert(
                 Candidate {
                     idx: ri,
                     ctx_len: r.ctx_len,
-                    gamma: self.w.gamma.min(r.remaining.max(1)),
+                    gamma,
                     ready_at: r.ready_at,
                     arrival_s: r.arrival_s,
                     placement: r.placement,
                 },
                 &self.arena,
             );
-            self.alloc_proxy += 1;
             self.peak_depth = self.peak_depth.max(self.cpool.len());
         }
 
-        // schedule while candidates and their nodes are free at `now`
+        // schedule while candidates (and, pipelined, their nodes) are
+        // free at `now`
         loop {
             if self.unfinished == 0 {
                 break;
             }
-            let t0 = Instant::now();
-            let assign =
-                self.scheduler
-                    .assign_incremental(&self.cost, &self.arena, &self.cpool, self.k);
-            self.sched_invocations += 1;
-            self.sched_ns += t0.elapsed().as_nanos() as u64;
-            let Some(assign) = assign else {
+            let plan = if self.decoupled() {
+                self.plan_pipelined()
+            } else if self.w.strategy.speculative {
+                self.plan_coupled()
+            } else {
+                self.plan_fifo_decode()
+            };
+            let Some(plan) = plan else {
                 break;
             };
-
-            // per-request draft reservations on this group's nodes
-            let b = assign.batch.len();
-            let mut ctx_crit = 1usize;
-            let mut draft_end = 0.0f64;
-            for (pos, &ri) in assign.batch.iter().enumerate() {
-                let r = &self.reqs[ri];
-                ctx_crit = ctx_crit.max(r.ctx_len);
-                let gamma = assign.gammas[pos].max(1);
-                let set = self.arena.get(assign.placement[pos]);
-                let t_i = self.cost.t_draft_s(1, gamma, r.ctx_len)
-                    + gamma as f64 * self.cost.network.fusion_round_s(set.len().max(1), 1);
-                let (_, e_i) = self.res.draft_on(set, r.ready_at, t_i);
-                for &node in set {
-                    self.queue.push(e_i, EventKind::DraftDone(self.round_id, node));
-                }
-                draft_end = draft_end.max(e_i);
-            }
-            let big_gamma: usize = assign.gammas.iter().map(|g| g + 1).sum();
-            let g_eff = (big_gamma as f64 / b as f64).ceil().max(1.0) as usize;
-            let durs: Vec<f64> = (1..=self.w.n_replicas.max(1))
-                .map(|s| {
-                    let bs = b.div_ceil(s);
-                    self.cost.t_verify_s(bs, g_eff, ctx_crit)
-                        + self.cost.network.verify_exchange_s(bs, self.cost.g1)
-                })
-                .collect();
-            self.batch_sorted.clear();
-            self.batch_sorted.extend_from_slice(&assign.batch);
-            self.batch_sorted.sort_unstable();
-            let cost = &self.cost;
-            let price = |pb: usize, sum_g1: usize, crit: usize, _pf: usize| -> f64 {
-                let g_eff = (sum_g1 as f64 / pb as f64).ceil().max(1.0) as usize;
-                cost.t_verify_s(pb, g_eff, crit) + cost.network.verify_exchange_s(pb, cost.g1)
-            };
-            chunk_pending_rounds(
-                self.cpool.iter_len(),
-                &self.batch_sorted,
-                b,
-                2 * self.w.n_replicas.max(1),
-                |_| false,
-                price,
-                &mut self.pending_durs,
-            );
 
             // cross to the hub: reserve the VerifyDone's tie-break slot
             // now (where the classic loop pushes the event), key the
@@ -623,18 +855,20 @@ impl ShardSim {
             };
             self.dispatch_seq += 1;
             self.rounds += 1;
+            self.req_rounds += plan.batch.len() as u64;
+            self.drafts_proposed += plan.proposed;
             self.cross_msgs += 1;
             self.outstanding.push(Outstanding {
                 rid: self.round_id,
-                ready: draft_end,
+                ready: plan.ready,
             });
             let bound = self.current_bound();
             hub.submit(
                 Dispatch {
                     key,
-                    b,
-                    ready: draft_end,
-                    durs,
+                    b: plan.batch.len(),
+                    ready: plan.ready,
+                    durs: plan.durs,
                     pending_durs: self.pending_durs.clone(),
                     rid: self.round_id,
                     reserved_seq: seq,
@@ -642,12 +876,14 @@ impl ShardSim {
                 bound,
             );
 
-            self.cpool.remove_batch(&assign.batch);
-            let t0 = Instant::now();
-            self.res.drafter_transitions(now, &mut self.trans);
-            self.cpool.apply_transitions(&self.trans);
-            self.index_ns += t0.elapsed().as_nanos() as u64;
-            self.inflight.insert(self.round_id, assign.batch);
+            self.cpool.remove_batch(&plan.batch);
+            if self.decoupled() {
+                let t0 = Instant::now();
+                self.res.drafter_transitions(now, &mut self.trans);
+                self.cpool.apply_transitions(&self.trans);
+                self.index_ns += t0.elapsed().as_nanos() as u64;
+            }
+            self.inflight.insert(self.round_id, plan.batch);
             self.round_id += 1;
         }
 
@@ -730,56 +966,22 @@ fn worker(hub: &Hub, mut shards: Vec<ShardSim>) -> (Vec<ShardSim>, u64) {
     }
 }
 
-/// Aggregate report of a sharded run.  For a fixed workload (including
-/// its `n_groups`), every field except the wall-clock-derived ones is
-/// bit-identical across thread counts — [`identical`] is the cross-check
-/// the bench sweep and the property tests enforce.
-#[derive(Debug, Clone)]
-pub struct ShardedReport {
-    pub n_groups: usize,
-    pub n_threads: usize,
-    pub events: u64,
-    pub rounds: u64,
-    pub sched_invocations: u64,
-    pub wall_s: f64,
-    pub sched_s: f64,
-    pub events_per_s: f64,
-    pub sched_ns_per_event: f64,
-    pub alloc_proxy: u64,
-    pub elig_touched: u64,
-    pub elig_touched_per_event: f64,
-    pub index_ns_per_event: f64,
-    pub peak_pool_depth: usize,
-    pub makespan_s: f64,
-    pub throughput_tps: f64,
-    pub p50_latency_s: f64,
-    pub p99_latency_s: f64,
-    pub tokens: u64,
-    /// events processed per logical shard (thread-count independent)
-    pub shard_events: Vec<u64>,
-    /// dispatches + results crossing the verify hub
-    pub cross_shard_msgs: u64,
-    /// wall ns workers spent blocked on the cross-shard merge
-    pub merge_stall_ns: u64,
-    /// exact per-request finish times, global request order
-    pub finish_s: Vec<f64>,
-    /// order-sensitive fold over the full schedule (finish bits, rounds,
-    /// events, per-shard events) — one number to compare runs by
-    pub schedule_hash: u64,
-}
-
-/// Bit-identical schedules? Exact equality on every virtual-time output
-/// (no tolerance: determinism is the contract, not approximation).
-pub fn identical(a: &ShardedReport, b: &ShardedReport) -> bool {
-    a.n_groups == b.n_groups
-        && a.events == b.events
-        && a.rounds == b.rounds
-        && a.sched_invocations == b.sched_invocations
-        && a.shard_events == b.shard_events
+/// Bit-identical schedules?  Exact equality on every virtual-time output
+/// (no tolerance: determinism is the contract, not approximation) — the
+/// cross-check the bench sweep and the property tests enforce across
+/// thread counts.  Wall-clock-derived fields are exempt by construction.
+pub fn identical(a: &RunReport, b: &RunReport) -> bool {
+    a.engine.events_processed == b.engine.events_processed
+        && a.engine.rounds_dispatched == b.engine.rounds_dispatched
+        && a.engine.sched_invocations == b.engine.sched_invocations
+        && a.engine.shard_events == b.engine.shard_events
         && a.makespan_s.to_bits() == b.makespan_s.to_bits()
-        && a.finish_s.len() == b.finish_s.len()
-        && a.finish_s.iter().zip(&b.finish_s).all(|(x, y)| x.to_bits() == y.to_bits())
-        && a.schedule_hash == b.schedule_hash
+        && a.latencies_s.len() == b.latencies_s.len()
+        && a.latencies_s
+            .iter()
+            .zip(&b.latencies_s)
+            .all(|(x, y)| x.to_bits() == y.to_bits())
+        && a.engine.schedule_hash == b.engine.schedule_hash
 }
 
 fn fold_hash(mut h: u64, v: u64) -> u64 {
@@ -788,73 +990,18 @@ fn fold_hash(mut h: u64, v: u64) -> u64 {
     h
 }
 
-impl ShardedReport {
-    pub fn merge_stall_ms(&self) -> f64 {
-        self.merge_stall_ns as f64 / 1e6
-    }
-
-    pub fn to_json(&self) -> Json {
-        let mut m = std::collections::BTreeMap::new();
-        m.insert("n_groups".to_string(), Json::Num(self.n_groups as f64));
-        m.insert("n_threads".to_string(), Json::Num(self.n_threads as f64));
-        m.insert("events".to_string(), Json::Num(self.events as f64));
-        m.insert("rounds".to_string(), Json::Num(self.rounds as f64));
-        m.insert(
-            "sched_invocations".to_string(),
-            Json::Num(self.sched_invocations as f64),
-        );
-        m.insert("wall_s".to_string(), Json::Num(self.wall_s));
-        m.insert("sched_s".to_string(), Json::Num(self.sched_s));
-        m.insert("events_per_s".to_string(), Json::Num(self.events_per_s));
-        m.insert(
-            "sched_ns_per_event".to_string(),
-            Json::Num(self.sched_ns_per_event),
-        );
-        m.insert("alloc_proxy".to_string(), Json::Num(self.alloc_proxy as f64));
-        m.insert("elig_touched".to_string(), Json::Num(self.elig_touched as f64));
-        m.insert(
-            "elig_touched_per_event".to_string(),
-            Json::Num(self.elig_touched_per_event),
-        );
-        m.insert(
-            "index_ns_per_event".to_string(),
-            Json::Num(self.index_ns_per_event),
-        );
-        m.insert(
-            "peak_pool_depth".to_string(),
-            Json::Num(self.peak_pool_depth as f64),
-        );
-        m.insert("makespan_s".to_string(), Json::Num(self.makespan_s));
-        m.insert("throughput_tps".to_string(), Json::Num(self.throughput_tps));
-        m.insert("p50_latency_s".to_string(), Json::Num(self.p50_latency_s));
-        m.insert("p99_latency_s".to_string(), Json::Num(self.p99_latency_s));
-        m.insert("tokens".to_string(), Json::Num(self.tokens as f64));
-        m.insert(
-            "shard_events".to_string(),
-            Json::Arr(self.shard_events.iter().map(|&e| Json::Num(e as f64)).collect()),
-        );
-        m.insert(
-            "cross_shard_msgs".to_string(),
-            Json::Num(self.cross_shard_msgs as f64),
-        );
-        m.insert("merge_stall_ms".to_string(), Json::Num(self.merge_stall_ms()));
-        m.insert(
-            "schedule_hash".to_string(),
-            Json::Str(format!("{:016x}", self.schedule_hash)),
-        );
-        Json::Obj(m)
-    }
-}
-
 /// Run the workload's logical shards on `n_threads` worker threads
-/// (clamped to the group count; shards are distributed round-robin).
-/// Any thread count produces a bit-identical report — `n_threads` buys
-/// wall-clock only.
-pub fn run_sharded(w: &ShardWorkload, n_threads: usize) -> ShardedReport {
+/// (clamped to the group count; shards are distributed round-robin) and
+/// assemble the unified [`RunReport`].  Any thread count produces a
+/// bit-identical report (see [`identical`]) — `n_threads` buys wall-clock
+/// only.
+pub fn run_sharded(w: &ShardWorkload, n_threads: usize) -> RunReport {
     let groups = w.groups();
     let n_threads = n_threads.clamp(1, groups);
-    let cost = SchedCostModel::synthetic("l", w.n_nodes);
-    let hub = Hub::new(w, cost.network.allgather_step_s(w.max_batch.max(1)));
+    let n_requests = w.reqs.len();
+    let n_replicas = w.n_replicas.max(1);
+    let decoupled = w.strategy.decoupled && w.strategy.speculative;
+    let hub = Hub::new(w, w.cost.network.allgather_step_s(w.max_batch.max(1)));
     let mut per_thread: Vec<Vec<ShardSim>> = (0..n_threads).map(|_| Vec::new()).collect();
     for g in 0..groups {
         per_thread[g % n_threads].push(ShardSim::new(w, g));
@@ -881,115 +1028,180 @@ pub fn run_sharded(w: &ShardWorkload, n_threads: usize) -> ShardedReport {
     shards.sort_by_key(|s| s.g);
 
     let hub_res = hub.into_res();
-    let mut events = 0u64;
-    let mut rounds = 0u64;
-    let mut sched_invocations = 0u64;
-    let mut sched_ns = 0u64;
-    let mut index_ns = 0u64;
-    let mut alloc_proxy = 0u64;
-    let mut elig_touched = 0u64;
-    let mut cross_shard_msgs = 0u64;
-    let mut peak_depth = 0usize;
+    let mut stats = EngineStats {
+        merge_stall_ns,
+        n_shards: n_threads,
+        ..EngineStats::default()
+    };
+    let mut req_rounds = 0u64;
+    let mut drafts_proposed = 0u64;
+    let mut drafts_accepted = 0u64;
+    let mut cluster_busy = 0.0f64;
+    let mut draft_wait = 0.0f64;
+    let mut draft_phases = 0u64;
     let mut makespan = hub_res.makespan();
-    let mut shard_events = Vec::with_capacity(groups);
     for sh in &shards {
-        events += sh.events;
-        rounds += sh.rounds;
-        sched_invocations += sh.sched_invocations;
-        sched_ns += sh.sched_ns;
-        index_ns += sh.index_ns;
-        alloc_proxy += sh.alloc_proxy + sh.arena.len() as u64;
-        elig_touched += sh.cpool.elig_touched();
-        cross_shard_msgs += sh.cross_msgs;
-        peak_depth = peak_depth.max(sh.peak_depth);
+        stats.events_processed += sh.events;
+        stats.events_coalesced += sh.coalesced;
+        stats.rounds_dispatched += sh.rounds;
+        stats.sched_invocations += sh.sched_invocations;
+        stats.sched_wall_ns += sh.sched_ns;
+        stats.index_wall_ns += sh.index_ns;
+        stats.elig_touched += sh.cpool.elig_touched();
+        stats.cross_shard_msgs += sh.cross_msgs;
+        stats.peak_pool_depth = stats.peak_pool_depth.max(sh.peak_depth);
+        stats.shard_events.push(sh.events);
+        req_rounds += sh.req_rounds;
+        drafts_proposed += sh.drafts_proposed;
+        drafts_accepted += sh.drafts_accepted;
+        cluster_busy += sh.res.drafter_busy_total();
+        draft_wait += sh.res.draft_wait;
+        draft_phases += sh.res.draft_phases;
         makespan = makespan.max(sh.res.makespan());
-        shard_events.push(sh.events);
     }
 
     // per-request finishes, stitched back into global request order from
     // each request's owning shard
-    let finish_s: Vec<f64> = (0..w.n_requests)
+    let finish_s: Vec<f64> = (0..n_requests)
         .map(|ri| {
             shards[ri % groups].reqs[ri]
                 .finish_s
                 .expect("request never finished")
         })
         .collect();
-    let mut lats: Vec<f64> = finish_s
+    let latencies_s: Vec<f64> = finish_s
         .iter()
         .enumerate()
-        .map(|(ri, f)| f - ri as f64 * w.arrival_dt)
+        .map(|(ri, f)| f - w.reqs[ri].arrival_s)
         .collect();
-    lats.sort_by(|a, b| a.total_cmp(b));
-    let pct = |p: f64| -> f64 {
-        if lats.is_empty() {
-            0.0
-        } else {
-            lats[((lats.len() as f64 * p) as usize).min(lats.len() - 1)]
-        }
+    let ms_per_token = if latencies_s.is_empty() {
+        0.0
+    } else {
+        1e3 * latencies_s
+            .iter()
+            .enumerate()
+            .map(|(ri, l)| l / w.reqs[ri].gen_len.max(1) as f64)
+            .sum::<f64>()
+            / latencies_s.len() as f64
     };
 
     let mut h = 0xcbf29ce484222325u64;
     for f in &finish_s {
         h = fold_hash(h, f.to_bits());
     }
-    h = fold_hash(h, rounds);
-    h = fold_hash(h, events);
-    for &e in &shard_events {
+    h = fold_hash(h, stats.rounds_dispatched);
+    h = fold_hash(h, stats.events_processed);
+    for &e in &stats.shard_events {
         h = fold_hash(h, e);
     }
+    stats.schedule_hash = h;
 
-    let tokens = (w.n_requests * w.gen_len) as u64;
-    ShardedReport {
-        n_groups: groups,
-        n_threads,
-        events,
-        rounds,
-        sched_invocations,
-        wall_s,
-        sched_s: sched_ns as f64 / 1e9,
-        events_per_s: if wall_s > 0.0 {
-            events as f64 / wall_s
+    // per-node drafter accounting merged from each node's owning shard
+    let (per_drafter_busy_s, per_drafter_phases, drafter_spread_s) = if decoupled {
+        let busy: Vec<f64> = (0..w.n_nodes)
+            .map(|d| shards[d % groups].res.drafters[d].busy)
+            .collect();
+        let phases: Vec<u64> = (0..w.n_nodes)
+            .map(|d| shards[d % groups].res.drafters[d].phases)
+            .collect();
+        let frees = (0..w.n_nodes).map(|d| shards[d % groups].res.drafters[d].free_at);
+        let max = frees.clone().fold(f64::NEG_INFINITY, f64::max);
+        let min = frees.fold(f64::INFINITY, f64::min);
+        let spread = if max.is_finite() && min.is_finite() {
+            max - min
         } else {
             0.0
-        },
-        sched_ns_per_event: if events > 0 {
-            sched_ns as f64 / events as f64
-        } else {
-            0.0
-        },
-        alloc_proxy,
-        elig_touched,
-        elig_touched_per_event: if events > 0 {
-            elig_touched as f64 / events as f64
-        } else {
-            0.0
-        },
-        index_ns_per_event: if events > 0 {
-            index_ns as f64 / events as f64
-        } else {
-            0.0
-        },
-        peak_pool_depth: peak_depth,
+        };
+        (busy, phases, spread)
+    } else {
+        (Vec::new(), Vec::new(), 0.0)
+    };
+
+    let tokens: u64 = w.reqs.iter().map(|r| r.gen_len.max(1) as u64).sum();
+    let server_busy = hub_res.verifier_busy_total();
+    let accept_ratio = if req_rounds == 0 {
+        0.0
+    } else {
+        (drafts_accepted + req_rounds) as f64 / req_rounds as f64
+    };
+    // rent model, matching `RunReport::assemble`: provisioned hardware is
+    // billed for the whole run
+    let mut rate_per_hr = w.cost.verifier_gpu.rent_per_hr * (w.verifier_gpus * n_replicas) as f64;
+    if decoupled {
+        rate_per_hr += w.cost.drafter_gpu.rent_per_hr * w.n_nodes as f64;
+    }
+    let cost_total = rate_per_hr * makespan / 3600.0;
+
+    RunReport {
+        strategy: w.label.clone(),
+        pair: w.pair.clone(),
+        n_requests,
+        tokens,
         makespan_s: makespan,
+        ms_per_token,
         throughput_tps: if makespan > 0.0 {
             tokens as f64 / makespan
         } else {
             0.0
         },
-        p50_latency_s: pct(0.5),
-        p99_latency_s: pct(0.99),
-        tokens,
-        shard_events,
-        cross_shard_msgs,
-        merge_stall_ns,
-        finish_s,
-        schedule_hash: h,
+        accept_ratio,
+        rounds: req_rounds,
+        drafts_proposed,
+        drafts_accepted,
+        cluster_busy_s: cluster_busy,
+        server_busy_s: server_busy,
+        server_idle_frac: if makespan > 0.0 {
+            (1.0 - server_busy / makespan).max(0.0)
+        } else {
+            0.0
+        },
+        cluster_idle_frac: if makespan > 0.0 && decoupled {
+            (1.0 - cluster_busy / makespan).max(0.0)
+        } else {
+            0.0
+        },
+        n_verifier_replicas: n_replicas,
+        per_drafter_busy_s,
+        per_verifier_busy_s: hub_res.verifiers.iter().map(|r| r.busy).collect(),
+        per_drafter_phases,
+        per_verifier_phases: hub_res.verifiers.iter().map(|r| r.phases).collect(),
+        drafter_spread_s,
+        verify_phases: hub_res.verify_phases,
+        verify_shard_rounds: hub_res.verify_shard_rounds,
+        verify_shards_total: hub_res.verify_shards_total,
+        verify_shard_saved_s: hub_res.verify_shard_saved_s,
+        verify_round_time_s: hub_res.verify_round_time_s,
+        drafter_util: if decoupled && w.n_nodes > 0 && makespan > 0.0 {
+            cluster_busy / (w.n_nodes as f64 * makespan)
+        } else {
+            0.0
+        },
+        verifier_util: if makespan > 0.0 {
+            server_busy / (n_replicas as f64 * makespan)
+        } else {
+            0.0
+        },
+        draft_queue_delay_s: if draft_phases > 0 {
+            draft_wait / draft_phases as f64
+        } else {
+            0.0
+        },
+        verify_queue_delay_s: hub_res.mean_verify_wait_s(),
+        cost_total,
+        cost_per_token: if tokens > 0 {
+            cost_total / tokens as f64
+        } else {
+            f64::INFINITY
+        },
+        latencies_s,
+        wall_s,
+        pjrt_wall_s: 0.0,
+        engine: stats,
     }
 }
 
 /// The single-threaded oracle: the same shard/hub code on one worker.
-pub fn run_single(w: &ShardWorkload) -> ShardedReport {
+pub fn run_single(w: &ShardWorkload) -> RunReport {
     run_sharded(w, 1)
 }
 
@@ -1011,10 +1223,16 @@ mod tests {
         let spec = small_spec();
         let classic = run_sched_bench(&spec, BenchMode::Frontier);
         let sharded = run_single(&spec.shard_workload(1));
-        assert_eq!(sharded.rounds, classic.rounds, "round counts diverged");
-        assert_eq!(sharded.events, classic.events, "event counts diverged");
+        assert_eq!(
+            sharded.engine.rounds_dispatched, classic.rounds,
+            "round counts diverged"
+        );
+        assert_eq!(
+            sharded.engine.events_processed, classic.events,
+            "event counts diverged"
+        );
         assert_eq!(sharded.tokens, classic.tokens);
-        assert_eq!(sharded.peak_pool_depth, classic.peak_pool_depth);
+        assert_eq!(sharded.engine.peak_pool_depth, classic.peak_pool_depth);
         assert_eq!(
             sharded.makespan_s.to_bits(),
             classic.makespan_s.to_bits(),
@@ -1022,8 +1240,8 @@ mod tests {
             sharded.makespan_s,
             classic.makespan_s
         );
-        assert_eq!(sharded.p50_latency_s.to_bits(), classic.p50_latency_s.to_bits());
-        assert_eq!(sharded.p99_latency_s.to_bits(), classic.p99_latency_s.to_bits());
+        assert_eq!(sharded.p50_latency_s().to_bits(), classic.p50_latency_s.to_bits());
+        assert_eq!(sharded.p99_latency_s().to_bits(), classic.p99_latency_s.to_bits());
     }
 
     #[test]
@@ -1038,10 +1256,10 @@ mod tests {
         };
         let classic = run_sched_bench(&spec, BenchMode::Frontier);
         let sharded = run_single(&spec.shard_workload(1));
-        assert_eq!(sharded.rounds, classic.rounds);
-        assert_eq!(sharded.events, classic.events);
+        assert_eq!(sharded.engine.rounds_dispatched, classic.rounds);
+        assert_eq!(sharded.engine.events_processed, classic.events);
         assert_eq!(sharded.makespan_s.to_bits(), classic.makespan_s.to_bits());
-        assert_eq!(sharded.p99_latency_s.to_bits(), classic.p99_latency_s.to_bits());
+        assert_eq!(sharded.p99_latency_s().to_bits(), classic.p99_latency_s.to_bits());
     }
 
     #[test]
@@ -1053,17 +1271,17 @@ mod tests {
         assert!(
             identical(&r1, &r2),
             "1 vs 2 threads diverged: {:016x} vs {:016x}",
-            r1.schedule_hash,
-            r2.schedule_hash
+            r1.engine.schedule_hash,
+            r2.engine.schedule_hash
         );
         assert!(
             identical(&r1, &r4),
             "1 vs 4 threads diverged: {:016x} vs {:016x}",
-            r1.schedule_hash,
-            r4.schedule_hash
+            r1.engine.schedule_hash,
+            r4.engine.schedule_hash
         );
-        assert_eq!(r1.shard_events.len(), 4);
-        assert!(r1.shard_events.iter().all(|&e| e > 0));
+        assert_eq!(r1.engine.shard_events.len(), 4);
+        assert!(r1.engine.shard_events.iter().all(|&e| e > 0));
     }
 
     #[test]
@@ -1072,7 +1290,53 @@ mod tests {
         let a = run_sharded(&w, 2);
         let b = run_sharded(&w, 2);
         assert!(identical(&a, &b));
-        assert_eq!(a.cross_shard_msgs, 2 * a.rounds);
+        assert_eq!(a.engine.cross_shard_msgs, 2 * a.engine.rounds_dispatched);
+    }
+
+    #[test]
+    fn coupled_and_fifo_strategies_complete_and_stay_deterministic() {
+        for strategy in [
+            // vanilla: coupled speculative, FIFO batching
+            ShardStrategy {
+                speculative: true,
+                decoupled: false,
+                lp_batching: false,
+                fusion: false,
+                tree: false,
+            },
+            // specinfer: coupled + tree verification
+            ShardStrategy {
+                speculative: true,
+                decoupled: false,
+                lp_batching: false,
+                fusion: false,
+                tree: true,
+            },
+            // vllm: non-speculative continuous batching
+            ShardStrategy {
+                speculative: false,
+                decoupled: false,
+                lp_batching: false,
+                fusion: false,
+                tree: false,
+            },
+        ] {
+            let mut w = small_spec().shard_workload(3);
+            w.strategy = strategy;
+            let a = run_sharded(&w, 1);
+            let b = run_sharded(&w, 3);
+            assert!(
+                identical(&a, &b),
+                "strategy {strategy:?} diverged across thread counts"
+            );
+            assert_eq!(a.tokens, w.reqs.iter().map(|r| r.gen_len as u64).sum::<u64>());
+            assert!(a.latencies_s.iter().all(|&l| l > 0.0));
+            if !strategy.speculative {
+                // one committed token per request-round
+                assert_eq!(a.rounds, a.tokens);
+                assert_eq!(a.drafts_accepted, 0);
+            }
+        }
     }
 
     #[test]

@@ -16,7 +16,7 @@
 //!                 --seed N (routing-exploration RNG seed)
 
 use anyhow::Result;
-use cosine::util::cli::Args;
+use cosine::util::cli::{parse_shards, Args};
 
 mod cmd;
 
@@ -31,19 +31,28 @@ COMMANDS:
   serve      [--requests N]          full CoSine stack on a synthetic trace
   offline    [--batches 1,2,4,8,16] [--requests N] [--strategies a,b,..]
                                      Fig. 6 latency/throughput sweep
-  online     [--modes low,high,volatile] [--minutes M]
-                                     Fig. 7 online serving
+  online     [--modes low,high,volatile] [--minutes M] [--shards 1,2] [--smoke]
+                                     Fig. 7 online serving; --shards serves
+                                     through the sharded engine backend
+                                     (bit-identical across thread counts);
+                                     --smoke is the artifact-free CI pass
   motivation [--figs fig2a,fig2b,fig3b]
                                      Fig. 2/3 motivation profiles
-  table2     [--prompts-per-domain N]
-                                     Table 2 acceptance matrix
+  table2     [--prompts-per-domain N] [--shards 1,2]
+                                     Table 2 acceptance matrix (+ sharded
+                                     serving pass with --shards)
   cost       [--table1]              Table 1 + Table 3 cost efficiency
-  ablation   [--nodes 1,2,4,6,8]     Fig. 8 component ablation
+  ablation   [--nodes 1,2,4,6,8] [--shards 1,2]
+                                     Fig. 8 component ablation
   bench      [--smoke] [--out FILE] [--requests N] [--shards 1,2,4]
                                      scheduler hot-path harness: emits
                                      BENCH_sched.json (no artifacts needed);
                                      --shards sweeps the sharded engine core
                                      over worker thread counts
+
+Every experiment runs through one entry point (`serve()`): a typed
+strategy (cosine|vllm|vanilla|pipeinfer|specinfer) on either the classic
+event loop or, with --shards, the multi-core sharded engine backend.
 ";
 
 fn main() -> Result<()> {
@@ -77,20 +86,30 @@ fn main() -> Result<()> {
             &cfg,
             &args.get_or("modes", "low,high,volatile"),
             args.get_f64("minutes", 240.0)?,
+            args.get("shards").map(parse_shards).transpose()?,
+            args.has_flag("smoke"),
         ),
         Some("motivation") => {
             cmd::motivation::run(&cfg, &args.get_or("figs", "fig2a,fig2b,fig3b"))
         }
-        Some("table2") => cmd::table2::run(&cfg, args.get_usize("prompts-per-domain", 8)?),
+        Some("table2") => cmd::table2::run(
+            &cfg,
+            args.get_usize("prompts-per-domain", 8)?,
+            args.get("shards").map(parse_shards).transpose()?,
+        ),
         Some("cost") => cmd::cost::run(&cfg, args.has_flag("table1")),
-        Some("ablation") => cmd::ablation::run(&cfg, &args.get_or("nodes", "1,2,4,6,8")),
+        Some("ablation") => cmd::ablation::run(
+            &cfg,
+            &args.get_or("nodes", "1,2,4,6,8"),
+            args.get("shards").map(parse_shards).transpose()?,
+        ),
         Some("bench") => {
             let requests = args.get_usize("requests", 0)?;
             cmd::bench::run(
                 &args.get_or("out", "BENCH_sched.json"),
                 args.has_flag("smoke"),
                 if requests == 0 { None } else { Some(requests) },
-                &args.get_or("shards", "1,2,4"),
+                &parse_shards(&args.get_or("shards", "1,2,4"))?,
             )
         }
         _ => {

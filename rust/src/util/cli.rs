@@ -63,6 +63,33 @@ impl Args {
     }
 }
 
+/// Parse a `--shards` list ("1,2,4"): worker-thread counts for the
+/// sharded engine backend, shared by every subcommand that accepts the
+/// option.  Rejects zero and empty lists, dedupes, and sorts ascending
+/// (so sweeps always compare against the single-threaded oracle first).
+pub fn parse_shards(spec: &str) -> Result<Vec<usize>> {
+    let mut out = Vec::new();
+    for part in spec.split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        let n: usize = part
+            .parse()
+            .map_err(|e| anyhow::anyhow!("bad --shards entry {part:?}: {e}"))?;
+        if n == 0 {
+            bail!("--shards entries must be ≥ 1, got 0 in {spec:?}");
+        }
+        out.push(n);
+    }
+    if out.is_empty() {
+        bail!("--shards needs at least one thread count, got {spec:?}");
+    }
+    out.sort_unstable();
+    out.dedup();
+    Ok(out)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -83,5 +110,14 @@ mod tests {
     #[test]
     fn rejects_double_positional() {
         assert!(Args::parse(&sv(&["a", "b"])).is_err());
+    }
+
+    #[test]
+    fn parse_shards_validates_sorts_and_dedupes() {
+        assert_eq!(parse_shards("4,1,2,2, 1").unwrap(), vec![1, 2, 4]);
+        assert_eq!(parse_shards("3").unwrap(), vec![3]);
+        assert!(parse_shards("0,2").is_err());
+        assert!(parse_shards("").is_err());
+        assert!(parse_shards("two").is_err());
     }
 }

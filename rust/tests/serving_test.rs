@@ -6,7 +6,7 @@ use std::path::Path;
 use std::sync::Arc;
 
 use cosine::bench;
-use cosine::coordinator::ServingContext;
+use cosine::coordinator::{ServingContext, Strategy};
 use cosine::{CosineConfig, Engine};
 
 fn ctx_with(f: impl FnOnce(&mut CosineConfig)) -> Option<ServingContext> {
@@ -31,7 +31,7 @@ fn cosine_serves_trace_to_completion() {
     let Some(ctx) = ctx_with(small_cfg) else { return };
     let c = ctx.constants().clone();
     let trace = bench::offline_trace(&ctx, 3, 21);
-    let r = bench::run(&ctx, &trace, "cosine").unwrap();
+    let r = bench::run(&ctx, &trace, Strategy::Cosine).unwrap();
     assert_eq!(r.n_requests, 3);
     assert_eq!(r.tokens as usize, 3 * c.gen_len, "every request completes");
     assert_eq!(r.latencies_s.len(), 3);
@@ -46,7 +46,13 @@ fn all_strategies_complete_and_match_token_counts() {
     let Some(ctx) = ctx_with(small_cfg) else { return };
     let c = ctx.constants().clone();
     let trace = bench::offline_trace(&ctx, 2, 22);
-    for strat in ["vllm", "vanilla", "pipeinfer", "specinfer", "cosine"] {
+    for strat in [
+        Strategy::Vllm,
+        Strategy::Vanilla,
+        Strategy::PipeInfer,
+        Strategy::SpecInfer,
+        Strategy::Cosine,
+    ] {
         let r = bench::run(&ctx, &trace, strat).unwrap();
         assert_eq!(
             r.tokens as usize,
@@ -64,8 +70,8 @@ fn all_strategies_complete_and_match_token_counts() {
 fn speculative_strategies_beat_vllm_in_virtual_time() {
     let Some(ctx) = ctx_with(small_cfg) else { return };
     let trace = bench::offline_trace(&ctx, 3, 23);
-    let vllm = bench::run(&ctx, &trace, "vllm").unwrap();
-    let cosine_r = bench::run(&ctx, &trace, "cosine").unwrap();
+    let vllm = bench::run(&ctx, &trace, Strategy::Vllm).unwrap();
+    let cosine_r = bench::run(&ctx, &trace, Strategy::Cosine).unwrap();
     assert!(
         cosine_r.throughput_tps > vllm.throughput_tps,
         "speculation must beat incremental decoding: {} vs {}",
@@ -95,7 +101,7 @@ fn identical_outputs_across_speculative_strategies() {
         cosine::coordinator::verifier::target_decode_one(&ctx, &mut req_v).unwrap();
     }
     // CoSine rollout
-    let r = bench::run(&ctx, &trace, "cosine").unwrap();
+    let r = bench::run(&ctx, &trace, Strategy::Cosine).unwrap();
     assert_eq!(r.tokens as usize, req_v.generated.len());
     // and the tokens themselves must match — reconstruct via a second run
     let mut req_c = cosine::coordinator::request::Request::from_trace(&trace.requests[0], 6, 4);
@@ -139,7 +145,7 @@ fn identical_outputs_across_speculative_strategies() {
 fn ablation_knobs_change_behavior() {
     let Some(full) = ctx_with(small_cfg) else { return };
     let trace = bench::offline_trace(&full, 2, 25);
-    let r_full = bench::run(&full, &trace, "cosine").unwrap();
+    let r_full = bench::run(&full, &trace, Strategy::Cosine).unwrap();
 
     let Some(nofusion) = ctx_with(|cfg| {
         small_cfg(cfg);
@@ -147,7 +153,7 @@ fn ablation_knobs_change_behavior() {
     }) else {
         return;
     };
-    let r_nf = bench::run(&nofusion, &trace, "cosine").unwrap();
+    let r_nf = bench::run(&nofusion, &trace, Strategy::Cosine).unwrap();
     // both complete; behavior may differ but token budget is identical
     assert_eq!(r_full.tokens, r_nf.tokens);
 }
@@ -173,8 +179,8 @@ fn second_verifier_replica_improves_serving() {
     };
     let trace = bench::offline_trace(&ctx1, 8, 31);
 
-    let v1 = bench::run(&ctx1, &trace, "vllm").unwrap();
-    let v2 = bench::run(&ctx2, &trace, "vllm").unwrap();
+    let v1 = bench::run(&ctx1, &trace, Strategy::Vllm).unwrap();
+    let v2 = bench::run(&ctx2, &trace, Strategy::Vllm).unwrap();
     assert_eq!(v1.tokens, v2.tokens);
     assert!(
         v2.throughput_tps > v1.throughput_tps,
@@ -192,8 +198,8 @@ fn second_verifier_replica_improves_serving() {
     assert_eq!(v2.per_verifier_busy_s.len(), 2);
     assert!(v2.per_verifier_busy_s.iter().all(|&b| b > 0.0), "both replicas must work");
 
-    let c1 = bench::run(&ctx1, &trace, "cosine").unwrap();
-    let c2 = bench::run(&ctx2, &trace, "cosine").unwrap();
+    let c1 = bench::run(&ctx1, &trace, Strategy::Cosine).unwrap();
+    let c2 = bench::run(&ctx2, &trace, Strategy::Cosine).unwrap();
     assert_eq!(c1.tokens, c2.tokens, "replica count must not change outputs");
     assert!(
         c2.throughput_tps >= c1.throughput_tps * 0.99,
@@ -224,7 +230,7 @@ fn online_trace_respects_arrivals() {
     if trace.is_empty() {
         return;
     }
-    let r = bench::run(&ctx, &trace, "cosine").unwrap();
+    let r = bench::run(&ctx, &trace, Strategy::Cosine).unwrap();
     // no request may finish before it arrives
     for (t, lat) in trace.requests.iter().zip(&r.latencies_s) {
         assert!(*lat > 0.0, "request {} has non-positive latency", t.id);

@@ -1,15 +1,19 @@
 //! Property tests for the sharded parallel engine core: for any workload
-//! shape, group decomposition, seed, and replica count, an N-thread run is
-//! bit-identical to the single-threaded oracle — same per-request finish
-//! times, same per-shard event counts, same schedule hash — and the
-//! 1-group corner reproduces the classic single-pool loop in
-//! `bench::sched` exactly.
+//! shape, strategy, group decomposition, seed, and replica count, an
+//! N-thread run is bit-identical to the single-threaded oracle — same
+//! per-request finish times, same per-shard event counts, same schedule
+//! hash — and the 1-group corner reproduces the classic single-pool loop
+//! in `bench::sched` exactly.
 //!
 //! Hand-rolled harness (the offline image has no proptest): each property
 //! runs over many seeded random inputs and reports the failing case seed.
 
 use cosine::bench::sched::{run_sched_bench, BenchMode, SchedBenchSpec};
-use cosine::coordinator::shard::{identical, run_sharded, run_single, ShardWorkload};
+use cosine::config::{
+    ClusterConfig, CosineConfig, RouterConfig, SchedulerConfig, SpeculationConfig,
+};
+use cosine::coordinator::serve::{modeled_workload, Strategy};
+use cosine::coordinator::shard::{identical, run_sharded, run_single, ShardRequestSpec};
 use cosine::util::rng::Rng;
 
 /// Run `body(rng, case_index)` for `n` seeded cases; panic with the seed
@@ -21,74 +25,132 @@ fn cases(n: u64, body: impl Fn(&mut Rng, u64)) {
     }
 }
 
-/// A random but CI-sized workload: enough requests to keep several rounds
-/// in flight per group, small enough that hundreds of cases stay fast.
-fn random_workload(rng: &mut Rng) -> ShardWorkload {
-    let n_nodes = 1 + rng.usize(10);
-    let n_groups = 1 + rng.usize(n_nodes);
-    ShardWorkload {
-        n_requests: 8 + rng.usize(56),
-        arrival_dt: [1e-4, 1e-3, 1e-2][rng.usize(3)],
-        prompt_len: 16 + rng.usize(512),
-        gen_len: 1 + rng.usize(24),
-        gamma: 1 + rng.usize(8),
-        accept: rng.usize(6),
-        n_nodes,
-        n_replicas: 1 + rng.usize(4),
-        k: 1 + rng.usize(4),
-        max_batch: 1 + rng.usize(16),
-        seed: rng.next_u64(),
-        n_groups,
+/// A random topology/policy config for the unified serving bridge.
+fn random_cfg(rng: &mut Rng) -> CosineConfig {
+    CosineConfig {
+        pair: if rng.usize(2) == 0 { "l" } else { "q" }.into(),
+        router: RouterConfig {
+            drafters_per_request: 1 + rng.usize(4),
+            seed: rng.next_u64(),
+            ..RouterConfig::default()
+        },
+        scheduler: SchedulerConfig {
+            max_batch: 1 + rng.usize(16),
+            ..SchedulerConfig::default()
+        },
+        speculation: SpeculationConfig {
+            gamma_init: 1 + rng.usize(8),
+            fusion: rng.usize(2) == 0,
+            ..SpeculationConfig::default()
+        },
+        cluster: ClusterConfig {
+            n_drafter_nodes: 1 + rng.usize(10),
+            n_verifier_replicas: 1 + rng.usize(4),
+            ..ClusterConfig::default()
+        },
+        ..CosineConfig::default()
     }
 }
 
+/// A random heterogeneous request set: irregular arrival gaps, mixed
+/// prompt/generation lengths — well beyond the bench harness's uniform
+/// workload shape.
+fn random_reqs(rng: &mut Rng) -> Vec<ShardRequestSpec> {
+    let n = 8 + rng.usize(56);
+    let dt = [1e-4, 1e-3, 1e-2][rng.usize(3)];
+    let mut t = 0.0f64;
+    (0..n)
+        .map(|_| {
+            t += dt * (1 + rng.usize(3)) as f64;
+            ShardRequestSpec {
+                arrival_s: t,
+                prompt_len: 16 + rng.usize(512),
+                gen_len: 1 + rng.usize(24),
+            }
+        })
+        .collect()
+}
+
 #[test]
-fn prop_thread_count_never_changes_the_schedule() {
-    cases(120, |rng, seed| {
-        let w = random_workload(rng);
-        let oracle = run_single(&w);
-        for threads in [2, 3, 4] {
-            let r = run_sharded(&w, threads);
-            assert!(
-                identical(&oracle, &r),
-                "seed {seed}: {threads}-thread run diverged from the oracle \
-                 (groups={}, nodes={}, replicas={}, hash {:016x} vs {:016x})",
-                w.groups(),
-                w.n_nodes,
-                w.n_replicas,
-                oracle.schedule_hash,
-                r.schedule_hash,
-            );
+fn prop_every_strategy_is_schedule_identical_across_thread_counts() {
+    // the unified-API acceptance property: every strategy × --shards ∈
+    // {1,2,4} produces the same finish times and schedule hash as the
+    // single-threaded run, on random workloads
+    cases(24, |rng, seed| {
+        let cfg = random_cfg(rng);
+        let reqs = random_reqs(rng);
+        let n_groups = 1 + rng.usize(cfg.cluster.n_drafter_nodes);
+        for strategy in Strategy::ALL {
+            let w = modeled_workload(&cfg, reqs.clone(), strategy, n_groups);
+            let oracle = run_single(&w);
+            for threads in [2, 4] {
+                let r = run_sharded(&w, threads);
+                assert!(
+                    identical(&oracle, &r),
+                    "seed {seed}: {strategy} diverged at {threads} threads \
+                     (groups={}, nodes={}, replicas={}, hash {:016x} vs {:016x})",
+                    w.groups(),
+                    w.n_nodes,
+                    w.n_replicas,
+                    oracle.engine.schedule_hash,
+                    r.engine.schedule_hash,
+                );
+            }
         }
     });
 }
 
 #[test]
 fn prop_sharded_runs_complete_and_account_for_every_request() {
-    cases(120, |rng, seed| {
-        let w = random_workload(rng);
+    cases(40, |rng, seed| {
+        let cfg = random_cfg(rng);
+        let reqs = random_reqs(rng);
+        let n_groups = 1 + rng.usize(cfg.cluster.n_drafter_nodes);
+        let strategy = Strategy::ALL[rng.usize(Strategy::ALL.len())];
+        let w = modeled_workload(&cfg, reqs.clone(), strategy, n_groups);
         let r = run_sharded(&w, 1 + rng.usize(4));
+        assert_eq!(r.n_requests, reqs.len(), "seed {seed} ({strategy})");
         assert_eq!(
-            r.finish_s.len(),
-            w.n_requests,
-            "seed {seed}: missing finish times"
+            r.latencies_s.len(),
+            reqs.len(),
+            "seed {seed} ({strategy}): missing latencies"
         );
         assert!(
-            r.finish_s
-                .iter()
-                .enumerate()
-                .all(|(ri, &f)| f >= ri as f64 * w.arrival_dt),
-            "seed {seed}: a request finished before it arrived"
+            r.latencies_s.iter().all(|&l| l > 0.0),
+            "seed {seed} ({strategy}): a request finished before it arrived"
         );
-        assert_eq!(r.tokens, (w.n_requests * w.gen_len.max(1)) as u64);
-        assert_eq!(r.shard_events.len(), w.groups(), "seed {seed}");
         assert_eq!(
-            r.shard_events.iter().sum::<u64>(),
-            r.events,
-            "seed {seed}: per-shard events do not sum to the total"
+            r.tokens,
+            reqs.iter().map(|q| q.gen_len.max(1) as u64).sum::<u64>(),
+            "seed {seed} ({strategy})"
         );
-        assert_eq!(r.cross_shard_msgs, 2 * r.rounds, "seed {seed}");
-        assert!(r.makespan_s >= r.finish_s.iter().cloned().fold(0.0, f64::max) - 1e-9);
+        assert_eq!(
+            r.engine.shard_events.len(),
+            w.groups(),
+            "seed {seed} ({strategy})"
+        );
+        assert_eq!(
+            r.engine.shard_events.iter().sum::<u64>(),
+            r.engine.events_processed,
+            "seed {seed} ({strategy}): per-shard events do not sum to the total"
+        );
+        assert_eq!(
+            r.engine.cross_shard_msgs,
+            2 * r.engine.rounds_dispatched,
+            "seed {seed} ({strategy})"
+        );
+        let max_finish = r
+            .latencies_s
+            .iter()
+            .zip(&reqs)
+            .map(|(l, q)| l + q.arrival_s)
+            .fold(0.0, f64::max);
+        assert!(
+            r.makespan_s >= max_finish - 1e-9,
+            "seed {seed} ({strategy}): makespan {} < last finish {}",
+            r.makespan_s,
+            max_finish
+        );
     });
 }
 
@@ -113,10 +175,16 @@ fn prop_one_group_matches_the_classic_loop() {
         };
         let classic = run_sched_bench(&spec, BenchMode::Frontier);
         let sharded = run_single(&spec.shard_workload(1));
-        assert_eq!(sharded.rounds, classic.rounds, "seed {seed}: rounds");
-        assert_eq!(sharded.events, classic.events, "seed {seed}: events");
         assert_eq!(
-            sharded.peak_pool_depth, classic.peak_pool_depth,
+            sharded.engine.rounds_dispatched, classic.rounds,
+            "seed {seed}: rounds"
+        );
+        assert_eq!(
+            sharded.engine.events_processed, classic.events,
+            "seed {seed}: events"
+        );
+        assert_eq!(
+            sharded.engine.peak_pool_depth, classic.peak_pool_depth,
             "seed {seed}: pool depth"
         );
         assert_eq!(
@@ -127,12 +195,12 @@ fn prop_one_group_matches_the_classic_loop() {
             classic.makespan_s
         );
         assert_eq!(
-            sharded.p50_latency_s.to_bits(),
+            sharded.p50_latency_s().to_bits(),
             classic.p50_latency_s.to_bits(),
             "seed {seed}: p50"
         );
         assert_eq!(
-            sharded.p99_latency_s.to_bits(),
+            sharded.p99_latency_s().to_bits(),
             classic.p99_latency_s.to_bits(),
             "seed {seed}: p99"
         );
@@ -157,8 +225,11 @@ fn one_node_one_replica_legacy_corner_over_many_seeds() {
         };
         let classic = run_sched_bench(&spec, BenchMode::Frontier);
         let sharded = run_single(&spec.shard_workload(1));
-        assert_eq!(sharded.rounds, classic.rounds, "seed {seed}");
-        assert_eq!(sharded.events, classic.events, "seed {seed}");
+        assert_eq!(
+            sharded.engine.rounds_dispatched, classic.rounds,
+            "seed {seed}"
+        );
+        assert_eq!(sharded.engine.events_processed, classic.events, "seed {seed}");
         assert_eq!(
             sharded.makespan_s.to_bits(),
             classic.makespan_s.to_bits(),
@@ -177,7 +248,10 @@ fn oversubscribed_thread_counts_clamp_to_the_group_count() {
     .shard_workload(2);
     let a = run_sharded(&w, 2);
     let b = run_sharded(&w, 16);
-    assert_eq!(b.n_threads, 2, "thread count must clamp to the group count");
+    assert_eq!(
+        b.engine.n_shards, 2,
+        "thread count must clamp to the group count"
+    );
     assert!(identical(&a, &b));
 }
 
@@ -194,7 +268,7 @@ fn group_count_is_a_workload_parameter_not_an_execution_detail() {
     let g1 = run_single(&spec.shard_workload(1));
     let g3 = run_single(&spec.shard_workload(3));
     assert_ne!(
-        g1.schedule_hash, g3.schedule_hash,
+        g1.engine.schedule_hash, g3.engine.schedule_hash,
         "1-group and 3-group schedules should differ (different placement domains)"
     );
     assert!(identical(&g3, &run_sharded(&spec.shard_workload(3), 3)));
