@@ -27,11 +27,13 @@
 //! depth.
 
 use std::cell::Cell;
-use std::collections::{BTreeMap, HashMap};
+use std::collections::BTreeMap;
 use std::time::Instant;
 
 use crate::config::SchedulerConfig;
-use crate::coordinator::engine::{chunk_pending_rounds, collect_ready, EventKind, EventQueue};
+use crate::coordinator::engine::{
+    chunk_pending_rounds, collect_ready, ArrivalGate, EventKind, EventQueue, InflightRounds,
+};
 use crate::coordinator::pipeline::ResourcePool;
 use crate::coordinator::scheduler::{
     Candidate, CandidatePool, PlacementArena, PlacementId, SchedCostModel, Scheduler,
@@ -79,6 +81,11 @@ pub struct SchedBenchSpec {
     pub k: usize,
     pub max_batch: usize,
     pub seed: u64,
+    /// closed-loop admission cap: at most this many requests live
+    /// (admitted, unfinished) at once; the unadmitted tail enters as
+    /// slots free up.  `None` = open loop, every arrival event is pushed
+    /// up front — the pre-PR-8 behavior, unchanged.
+    pub max_backlog: Option<usize>,
 }
 
 impl SchedBenchSpec {
@@ -97,6 +104,7 @@ impl SchedBenchSpec {
             k: 3,
             max_batch: 16,
             seed: 7,
+            max_backlog: None,
         }
     }
 
@@ -127,6 +135,41 @@ impl SchedBenchSpec {
             k: 2,
             max_batch: 16,
             seed: 13,
+            max_backlog: None,
+        }
+    }
+
+    /// The million-request closed-loop scenario behind the `mega` CI
+    /// gate: 10⁶ requests all arriving at t = 0, throttled by a
+    /// 1280-deep admission cap (≥ 1024 in flight before the first
+    /// dispatch), one verify round per request (`gen_len = accept + 1`).
+    /// ~3M events end to end — the scale at which any per-event heap
+    /// allocation or hash lookup shows up directly in events/sec, which
+    /// is exactly what the >100k ev/s floor in `check_bench.py` holds.
+    pub fn mega1m() -> Self {
+        Self {
+            n_requests: 1_000_000,
+            arrival_dt: 0.0,
+            prompt_len: 128,
+            gen_len: 4,
+            gamma: 4,
+            accept: 3,
+            n_nodes: 64,
+            n_replicas: 8,
+            k: 2,
+            max_batch: 32,
+            seed: 17,
+            max_backlog: Some(1280),
+        }
+    }
+
+    /// The mega scenario at per-PR CI smoke scale: identical knobs (same
+    /// admission cap, so the same ≥ 1024 steady-state depth), 120k
+    /// requests instead of a million.
+    pub fn mega_smoke() -> Self {
+        Self {
+            n_requests: 120_000,
+            ..Self::mega1m()
         }
     }
 
@@ -156,6 +199,7 @@ impl SchedBenchSpec {
             verifier_gpus: 1,
             strategy: ShardStrategy::pipelined(),
             cost: SchedCostModel::synthetic("l", self.n_nodes),
+            max_backlog: self.max_backlog,
         }
     }
 }
@@ -174,6 +218,11 @@ pub struct SchedBenchReport {
     /// candidate-set clones (naive) / pool inserts + interned sets
     /// (closure, frontier) — a proxy for hot-path heap churn
     pub alloc_proxy: u64,
+    /// in-flight round slab slots ever created: plateaus at the maximum
+    /// concurrent round count, so a value that stays flat while
+    /// `rounds` grows by orders of magnitude certifies the steady-state
+    /// hot loop allocates nothing per round (the mega-gate alloc proxy)
+    pub inflight_slots: usize,
     /// eligibility work: index-maintenance candidate touches (frontier)
     /// or per-candidate freeness evaluations (closure, naive)
     pub elig_touched: u64,
@@ -207,6 +256,10 @@ impl SchedBenchReport {
             Json::Num(self.sched_ns_per_event),
         );
         m.insert("alloc_proxy".to_string(), Json::Num(self.alloc_proxy as f64));
+        m.insert(
+            "inflight_slots".to_string(),
+            Json::Num(self.inflight_slots as f64),
+        );
         m.insert("elig_touched".to_string(), Json::Num(self.elig_touched as f64));
         m.insert(
             "elig_touched_per_event".to_string(),
@@ -275,7 +328,7 @@ pub fn run_sched_bench(spec: &SchedBenchSpec, mode: BenchMode) -> SchedBenchRepo
     let mut res = ResourcePool::new(spec.n_nodes, spec.n_replicas.max(1));
     res.allgather_step_s = cost.network.allgather_step_s(spec.max_batch.max(1));
     let mut queue = EventQueue::new();
-    let mut inflight: HashMap<u64, Vec<usize>> = HashMap::new();
+    let mut inflight = InflightRounds::new();
 
     let mut reqs: Vec<SimReq> = (0..spec.n_requests)
         .map(|i| SimReq {
@@ -288,9 +341,27 @@ pub fn run_sched_bench(spec: &SchedBenchSpec, mode: BenchMode) -> SchedBenchRepo
             rng: request_rng(spec.seed, i),
         })
         .collect();
-    for (i, r) in reqs.iter().enumerate() {
-        queue.push(r.arrival_s, EventKind::Arrival(i));
+    let mut gate = spec
+        .max_backlog
+        .map(|cap| ArrivalGate::new(cap, 0, 1, reqs.len()));
+    match &mut gate {
+        // closed loop: only the first `cap` arrivals enter up front; the
+        // tail is admitted as finished requests free slots
+        Some(gate) => gate.top_up(|i| queue.push(reqs[i].arrival_s, EventKind::Arrival(i))),
+        None => {
+            for (i, r) in reqs.iter().enumerate() {
+                queue.push(r.arrival_s, EventKind::Arrival(i));
+            }
+        }
     }
+    // naive closed-loop bookkeeping: the from-scratch rescan must not see
+    // requests whose arrival event has not popped yet (the pool modes
+    // can't — they are simply not in the pool)
+    let mut arrived: Vec<bool> = if gate.is_some() && mode == BenchMode::Naive {
+        vec![false; reqs.len()]
+    } else {
+        Vec::new()
+    };
 
     let mut unfinished = reqs.len();
     // naive-mode bookkeeping (the pre-pool shape tracks only a count)
@@ -309,6 +380,7 @@ pub fn run_sched_bench(spec: &SchedBenchSpec, mode: BenchMode) -> SchedBenchRepo
     let mut newly_ready: Vec<usize> = Vec::new();
     let mut trans: Vec<(usize, bool)> = Vec::new();
     let mut pending_durs: Vec<f64> = Vec::new();
+    let mut durs: Vec<f64> = Vec::new();
     let mut batch_sorted: Vec<usize> = Vec::new();
     let canonical_nodes: Vec<usize> = (0..spec.n_nodes.max(1)).collect();
     let mut set_buf: Vec<usize> = Vec::new();
@@ -326,6 +398,19 @@ pub fn run_sched_bench(spec: &SchedBenchSpec, mode: BenchMode) -> SchedBenchRepo
             }
         }
 
+        // closed-loop admission, mirrored verbatim in the sharded core's
+        // `process_instant`: finished requests surface exactly once (at
+        // their VerifyDone pop) and free their slots; the unadmitted
+        // tail refills at max(spec arrival, now)
+        if let Some(gate) = &mut gate {
+            for &ri in &newly_ready {
+                if reqs[ri].finish_s.is_some() {
+                    gate.retire();
+                }
+            }
+            gate.top_up(|i| queue.push(reqs[i].arrival_s.max(now), EventKind::Arrival(i)));
+        }
+
         // frontier: flip exactly the candidates on the nodes whose
         // reservations ended at this instant
         if mode == BenchMode::Frontier {
@@ -339,6 +424,9 @@ pub fn run_sched_bench(spec: &SchedBenchSpec, mode: BenchMode) -> SchedBenchRepo
         // in every mode)
         newly_ready.sort_unstable();
         for &ri in &newly_ready {
+            if !arrived.is_empty() {
+                arrived[ri] = true;
+            }
             let r = &mut reqs[ri];
             if r.finish_s.is_some() {
                 continue;
@@ -391,7 +479,10 @@ pub fn run_sched_bench(spec: &SchedBenchSpec, mode: BenchMode) -> SchedBenchRepo
                     let mut avail: Vec<Candidate> = Vec::new();
                     let mut cloned_sets: Vec<Vec<usize>> = Vec::new();
                     for (i, r) in reqs.iter().enumerate() {
-                        if r.finish_s.is_some() || r.ready_at > now + 1e-9 {
+                        if (!arrived.is_empty() && !arrived[i])
+                            || r.finish_s.is_some()
+                            || r.ready_at > now + 1e-9
+                        {
                             continue;
                         }
                         let cand = Candidate {
@@ -445,13 +536,11 @@ pub fn run_sched_bench(spec: &SchedBenchSpec, mode: BenchMode) -> SchedBenchRepo
             }
             let big_gamma: usize = assign.gammas.iter().map(|g| g + 1).sum();
             let g_eff = (big_gamma as f64 / b as f64).ceil().max(1.0) as usize;
-            let durs: Vec<f64> = (1..=spec.n_replicas.max(1))
-                .map(|s| {
-                    let bs = b.div_ceil(s);
-                    cost.t_verify_s(bs, g_eff, ctx_crit)
-                        + cost.network.verify_exchange_s(bs, cost.g1)
-                })
-                .collect();
+            durs.clear();
+            durs.extend((1..=spec.n_replicas.max(1)).map(|s| {
+                let bs = b.div_ceil(s);
+                cost.t_verify_s(bs, g_eff, ctx_crit) + cost.network.verify_exchange_s(bs, cost.g1)
+            }));
             batch_sorted.clear();
             batch_sorted.extend_from_slice(&assign.batch);
             batch_sorted.sort_unstable();
@@ -518,7 +607,8 @@ pub fn run_sched_bench(spec: &SchedBenchSpec, mode: BenchMode) -> SchedBenchRepo
                 cpool.apply_transitions(&trans);
                 index_ns += t0.elapsed().as_nanos() as u64;
             }
-            inflight.insert(round_id, assign.batch);
+            inflight.insert(round_id, &assign.batch);
+            scheduler.recycle(assign);
             round_id += 1;
         }
 
@@ -579,6 +669,7 @@ pub fn run_sched_bench(spec: &SchedBenchSpec, mode: BenchMode) -> SchedBenchRepo
             0.0
         },
         alloc_proxy,
+        inflight_slots: inflight.slots(),
         elig_touched,
         elig_touched_per_event: if events > 0 {
             elig_touched as f64 / events as f64
@@ -650,6 +741,71 @@ mod tests {
             closure.makespan_s,
             closure.rounds
         );
+    }
+
+    #[test]
+    fn closed_loop_modes_produce_identical_schedules() {
+        // the admission gate throttles all three modes identically —
+        // including naive, whose from-scratch rescan must not see the
+        // unadmitted tail
+        let spec = SchedBenchSpec {
+            n_requests: 600,
+            max_backlog: Some(64),
+            ..SchedBenchSpec::mega1m()
+        };
+        let frontier = run_sched_bench(&spec, BenchMode::Frontier);
+        let closure = run_sched_bench(&spec, BenchMode::Closure);
+        let naive = run_sched_bench(&spec, BenchMode::Naive);
+        for other in [&closure, &naive] {
+            assert!(
+                schedule_identical(&frontier, other),
+                "closed-loop schedules diverged: frontier makespan {} rounds {} vs {} {} {}",
+                frontier.makespan_s,
+                frontier.rounds,
+                other.mode,
+                other.makespan_s,
+                other.rounds
+            );
+        }
+        assert_eq!(frontier.tokens, 600 * 4);
+        assert!(frontier.peak_pool_depth <= 64);
+    }
+
+    #[test]
+    fn steady_state_hot_loop_allocation_proxy_plateaus() {
+        // 4× the requests through the same admission cap: the in-flight
+        // round slab must not grow with workload size — per-round state
+        // is recycled at steady state, not allocated.  This is the
+        // zero-per-event-allocation pin for the mega gate, at test scale.
+        let small = SchedBenchSpec {
+            n_requests: 1500,
+            ..SchedBenchSpec::mega1m()
+        };
+        let big = SchedBenchSpec {
+            n_requests: 6000,
+            ..SchedBenchSpec::mega1m()
+        };
+        let a = run_sched_bench(&small, BenchMode::Frontier);
+        let b = run_sched_bench(&big, BenchMode::Frontier);
+        assert!(a.inflight_slots > 0);
+        assert!(
+            b.rounds >= 3 * a.rounds,
+            "the big run must actually churn more rounds: {} vs {}",
+            b.rounds,
+            a.rounds
+        );
+        assert!(
+            b.inflight_slots <= a.inflight_slots.saturating_add(4),
+            "in-flight round slab grew with request count ({} slots at {} rounds \
+             -> {} slots at {} rounds): the hot loop is allocating per round",
+            a.inflight_slots,
+            a.rounds,
+            b.inflight_slots,
+            b.rounds
+        );
+        // both runs saturate the cap before the first dispatch
+        assert_eq!(a.peak_pool_depth, 1280);
+        assert_eq!(b.peak_pool_depth, 1280);
     }
 
     #[test]

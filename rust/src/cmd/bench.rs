@@ -13,9 +13,14 @@
 //! finish times), and records the events/sec scaling.  A per-strategy
 //! block then runs all five `Strategy` variants through the unified
 //! sharded path on a small modeled workload and holds each bit-identical
-//! across thread counts.  Emits `BENCH_sched.json` (schema 4) — the perf
-//! trajectory CI gates on (artifact upload + regression check).  Needs no
-//! PJRT artifacts.
+//! across thread counts.  A `mega` block then runs the million-request
+//! closed-loop scenario (`SchedBenchSpec::mega1m`; its 120k-request
+//! sibling under `--smoke`): the frontier loop at full scale with an
+//! events/sec floor, a frontier-vs-closure identity oracle on a
+//! subsampled slice, and a sharded sweep at 1 and max threads with a
+//! bounded merge-stall fraction.  Emits `BENCH_sched.json` (schema 5) —
+//! the perf trajectory CI gates on (artifact upload + regression check).
+//! Needs no PJRT artifacts.
 
 use anyhow::Result;
 use cosine::bench::sched::{run_sched_bench, schedule_identical, BenchMode, SchedBenchSpec};
@@ -47,6 +52,30 @@ fn print_report(r: &cosine::bench::sched::SchedBenchReport) {
 
 fn merge_stall_ms(r: &RunReport) -> f64 {
     r.engine.merge_stall_ns as f64 / 1e6
+}
+
+/// Peak RSS (VmHWM) of this process in MiB via /proc/self/status; 0.0
+/// off Linux or when unreadable.  Process-wide high-water mark, so it
+/// upper-bounds the mega scenario's footprint (everything before it in
+/// the run is orders of magnitude smaller).
+fn peak_rss_mb() -> f64 {
+    #[cfg(target_os = "linux")]
+    {
+        if let Ok(s) = std::fs::read_to_string("/proc/self/status") {
+            for line in s.lines() {
+                if let Some(rest) = line.strip_prefix("VmHWM:") {
+                    let kb: f64 = rest
+                        .trim()
+                        .trim_end_matches("kB")
+                        .trim()
+                        .parse()
+                        .unwrap_or(0.0);
+                    return kb / 1024.0;
+                }
+            }
+        }
+    }
+    0.0
 }
 
 fn print_sharded(r: &RunReport) {
@@ -81,6 +110,10 @@ fn sharded_json(r: &RunReport) -> Json {
         Json::Num(r.engine.cross_shard_msgs as f64),
     );
     m.insert("merge_stall_ms".to_string(), Json::Num(merge_stall_ms(r)));
+    m.insert(
+        "merge_stall_frac".to_string(),
+        Json::Num(r.merge_stall_frac()),
+    );
     m.insert(
         "schedule_hash".to_string(),
         Json::Str(format!("{:016x}", r.engine.schedule_hash)),
@@ -270,6 +303,50 @@ pub fn run(out: &str, smoke: bool, requests: Option<usize>, threads: &[usize]) -
     println!("strategy sweep: all strategies × sharded backend ({SWEEP_GROUPS} groups)");
     let (strategy_rows, strategies_identical) = strategy_sweep(threads);
 
+    // million-request closed-loop scenario: the allocation-free hot-path
+    // gate (>100k events/sec floor at full scale; 120k requests in smoke
+    // so tier-1 CI drives the same code path at reduced scale)
+    let mega_spec = if smoke {
+        SchedBenchSpec::mega_smoke()
+    } else {
+        SchedBenchSpec::mega1m()
+    };
+    println!(
+        "mega scenario ({}): {} requests, backlog cap {}, nodes={} replicas={} max_batch={}",
+        if smoke { "smoke scale" } else { "full 1M" },
+        mega_spec.n_requests,
+        mega_spec.max_backlog.unwrap_or(0),
+        mega_spec.n_nodes,
+        mega_spec.n_replicas,
+        mega_spec.max_batch,
+    );
+    let mega = run_sched_bench(&mega_spec, BenchMode::Frontier);
+    print_report(&mega);
+    // schedule-identity oracle on a subsampled slice: the closure mode
+    // pays O(in-flight) per event, so the full-scale cross-check would
+    // dominate the bench; identity over the same knobs at 4096 requests
+    // exercises warmup, steady state, and drain of the closed loop
+    let mega_slice_spec = SchedBenchSpec {
+        n_requests: 4096.min(mega_spec.n_requests),
+        ..mega_spec.clone()
+    };
+    let slice_frontier = run_sched_bench(&mega_slice_spec, BenchMode::Frontier);
+    let slice_closure = run_sched_bench(&mega_slice_spec, BenchMode::Closure);
+    let mega_identical = schedule_identical(&slice_frontier, &slice_closure);
+    println!(
+        "mega identity slice (n={}): schedule_identical={} inflight_slots={} peak_depth={}",
+        mega_slice_spec.n_requests, mega_identical, mega.inflight_slots, mega.peak_pool_depth,
+    );
+    // sharded mega: 1 thread and max threads only (runtime-bounded — the
+    // intermediate counts are covered by the base/deep sweeps above)
+    let max_t = threads.iter().copied().max().unwrap_or(1);
+    let mega_threads: Vec<usize> = if max_t > 1 { vec![1, max_t] } else { vec![1] };
+    println!(
+        "mega sharded sweep: {SWEEP_GROUPS} groups, threads {:?}",
+        mega_threads
+    );
+    let (mega_sweep, mega_sweep_identical) = shard_sweep(&mega_spec, &mega_threads);
+
     let mut workload = BTreeMap::new();
     workload.insert("n_requests".to_string(), Json::Num(spec.n_requests as f64));
     workload.insert("gen_len".to_string(), Json::Num(spec.gen_len as f64));
@@ -298,13 +375,42 @@ pub fn run(out: &str, smoke: bool, requests: Option<usize>, threads: &[usize]) -
         "identical".to_string(),
         Json::Bool(base_identical && deep_sweep_identical && strategies_identical),
     );
+    let mut mega_m = BTreeMap::new();
+    mega_m.insert(
+        "n_requests_spec".to_string(),
+        Json::Num(mega_spec.n_requests as f64),
+    );
+    mega_m.insert(
+        "max_backlog".to_string(),
+        Json::Num(mega_spec.max_backlog.unwrap_or(0) as f64),
+    );
+    mega_m.insert("smoke".to_string(), Json::Bool(smoke));
+    mega_m.insert("frontier".to_string(), mega.to_json());
+    let mut slice_m = BTreeMap::new();
+    slice_m.insert(
+        "n_requests".to_string(),
+        Json::Num(mega_slice_spec.n_requests as f64),
+    );
+    slice_m.insert("frontier".to_string(), slice_frontier.to_json());
+    slice_m.insert("closure".to_string(), slice_closure.to_json());
+    slice_m.insert(
+        "schedule_identical".to_string(),
+        Json::Bool(mega_identical),
+    );
+    mega_m.insert("identity_slice".to_string(), Json::Obj(slice_m));
+    mega_m.insert(
+        "sharded".to_string(),
+        sweep_json(&mega_sweep, mega_sweep_identical),
+    );
+    mega_m.insert("peak_rss_mb".to_string(), Json::Num(peak_rss_mb()));
     let mut m = BTreeMap::new();
-    m.insert("schema".to_string(), Json::Num(4.0));
+    m.insert("schema".to_string(), Json::Num(5.0));
     m.insert("workload".to_string(), Json::Obj(workload));
     m.insert("incremental".to_string(), frontier.to_json());
     m.insert("closure".to_string(), closure.to_json());
     m.insert("naive".to_string(), naive.to_json());
     m.insert("deep".to_string(), Json::Obj(deep));
+    m.insert("mega".to_string(), Json::Obj(mega_m));
     m.insert("sharded".to_string(), Json::Obj(sharded));
     m.insert("speedup_events_per_s".to_string(), Json::Num(speedup));
     m.insert(
@@ -318,7 +424,11 @@ pub fn run(out: &str, smoke: bool, requests: Option<usize>, threads: &[usize]) -
         "frontier schedule diverged from the closure/naive reference"
     );
     anyhow::ensure!(
-        base_identical && deep_sweep_identical,
+        mega_identical,
+        "mega identity slice: frontier schedule diverged from the closure oracle"
+    );
+    anyhow::ensure!(
+        base_identical && deep_sweep_identical && mega_sweep_identical,
         "sharded engine schedules diverged across thread counts"
     );
     anyhow::ensure!(

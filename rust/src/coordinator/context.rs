@@ -15,6 +15,21 @@ use crate::runtime::{Engine, Model};
 
 use super::scheduler::SchedCostModel;
 
+/// The per-round constants of the serving loops, hoisted out of the
+/// manifest [`Constants`](crate::runtime::manifest::Constants) as a
+/// cheap `Copy` struct (see [`ServingContext::engine_constants`]).
+#[derive(Debug, Clone, Copy)]
+pub struct EngineConstants {
+    /// hard per-request draft-window cap
+    pub gamma_max: usize,
+    /// modeled prompt length (prefill pricing)
+    pub prompt_len: usize,
+    /// verify-exchange message size
+    pub g1: usize,
+    /// largest compiled batch bucket
+    pub max_bucket: usize,
+}
+
 pub struct ServingContext {
     pub engine: Arc<Engine>,
     pub target: Model,
@@ -81,6 +96,23 @@ impl ServingContext {
 
     pub fn constants(&self) -> &crate::runtime::manifest::Constants {
         self.engine.constants()
+    }
+
+    /// The tiny `Copy` slice of the manifest [`Constants`] the serving
+    /// loops actually read per round.  One shared accessor for both
+    /// engine entry points, so per-run setup copies four words instead of
+    /// deep-cloning the whole hardware model (`batch_buckets` and friends
+    /// stay in the manifest).
+    ///
+    /// [`Constants`]: crate::runtime::manifest::Constants
+    pub fn engine_constants(&self) -> EngineConstants {
+        let c = self.constants();
+        EngineConstants {
+            gamma_max: c.gamma_max,
+            prompt_len: c.prompt_len,
+            g1: c.g1,
+            max_bucket: *c.batch_buckets.iter().max().unwrap_or(&16),
+        }
     }
 
     /// The artifact-free slice of this context the Eq. 8 scheduler prices

@@ -56,7 +56,7 @@
 
 use anyhow::Result;
 use std::cmp::Ordering;
-use std::collections::{BinaryHeap, HashMap};
+use std::collections::BinaryHeap;
 use std::time::Instant;
 
 use crate::workload::Trace;
@@ -70,6 +70,7 @@ use super::router::{RoundFeedback, Router};
 use super::scheduler::{Candidate, CandidatePool, PlacementArena, PlacementId, Scheduler};
 use super::serve::{embed_sim, StrategyOpts};
 use super::speculation::AdaptiveSpeculation;
+use super::tokens::{TokenArena, TokenSpan};
 use super::verifier;
 
 /// Discrete events on the virtual timeline.
@@ -201,21 +202,149 @@ struct PerReq {
     prefilled: bool,
 }
 
+/// Dense in-flight round storage: round id -> member pool indices.
+///
+/// Round ids are sequential per engine, so a flat `Vec` indexed by id
+/// replaces the old `HashMap<u64, Vec<usize>>` — no hashing on the
+/// per-event hot path, no hash-iteration order anywhere (a latent
+/// nondeterminism hazard even though nothing iterated the map), and the
+/// member lists are recycled through a free list instead of being
+/// allocated per round and dropped per `VerifyDone`.  At steady state
+/// the slab stops growing: [`Self::slots`] plateaus at the maximum
+/// number of concurrently in-flight rounds regardless of how many
+/// million rounds pass through (asserted by the bench alloc-proxy
+/// tests).
+#[derive(Debug, Default)]
+pub(crate) struct InflightRounds {
+    /// round id -> slot + 1 (0 = not in flight); grows with the round
+    /// counter, 4 bytes per round ever dispatched
+    slot_of: Vec<u32>,
+    /// recycled member lists, addressed by slot
+    members: Vec<Vec<usize>>,
+    free: Vec<u32>,
+    live: usize,
+}
+
+impl InflightRounds {
+    pub(crate) fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record round `rid`'s batch by copying it into a recycled slot.
+    pub(crate) fn insert(&mut self, rid: u64, batch: &[usize]) {
+        let rid = rid as usize;
+        if rid >= self.slot_of.len() {
+            self.slot_of.resize(rid + 1, 0);
+        }
+        debug_assert_eq!(self.slot_of[rid], 0, "round {rid} dispatched twice");
+        let slot = match self.free.pop() {
+            Some(s) => s,
+            None => {
+                self.members.push(Vec::new());
+                (self.members.len() - 1) as u32
+            }
+        };
+        let m = &mut self.members[slot as usize];
+        m.clear();
+        m.extend_from_slice(batch);
+        self.slot_of[rid] = slot + 1;
+        self.live += 1;
+    }
+
+    /// Drain round `rid`'s members into `out`, freeing its slot.
+    pub(crate) fn take(&mut self, rid: u64, out: &mut Vec<usize>) -> bool {
+        let Some(e) = self.slot_of.get_mut(rid as usize) else {
+            return false;
+        };
+        let slot = *e;
+        if slot == 0 {
+            return false;
+        }
+        *e = 0;
+        out.extend_from_slice(&self.members[(slot - 1) as usize]);
+        self.free.push(slot - 1);
+        self.live -= 1;
+        true
+    }
+
+    pub(crate) fn get(&self, rid: u64) -> Option<&[usize]> {
+        match self.slot_of.get(rid as usize) {
+            Some(&s) if s > 0 => Some(&self.members[(s - 1) as usize]),
+            _ => None,
+        }
+    }
+
+    /// Member lists ever created — the slab's allocation proxy.
+    pub(crate) fn slots(&self) -> usize {
+        self.members.len()
+    }
+
+    pub(crate) fn is_empty(&self) -> bool {
+        self.live == 0
+    }
+}
+
+/// Closed-loop arrival admission for the bench scenarios: cap the live
+/// (admitted, unfinished) request count so a million-request flood keeps
+/// the candidate pool at a bounded working-set depth instead of indexing
+/// the whole trace at once.  Shared verbatim between the single-threaded
+/// bench loop and the sharded [`ShardSim`](super::shard) so closed-loop
+/// runs stay bit-identical across backends: a slot frees when a finished
+/// request re-surfaces at its `VerifyDone` pop (a deterministic point on
+/// the virtual timeline — never at hub-drain time, which varies with
+/// thread interleaving), and `top_up` re-admits strictly in request-index
+/// order along the owner's stride.
+#[derive(Debug)]
+pub(crate) struct ArrivalGate {
+    cap: usize,
+    /// next request index to admit (steps by `stride`)
+    next: usize,
+    stride: usize,
+    n: usize,
+    live: usize,
+}
+
+impl ArrivalGate {
+    /// A gate over requests `first, first+stride, .. < n` (a shard owns
+    /// the indices congruent to its group id; the classic loop owns all).
+    pub(crate) fn new(cap: usize, first: usize, stride: usize, n: usize) -> Self {
+        Self {
+            cap: cap.max(1),
+            next: first,
+            stride: stride.max(1),
+            n,
+            live: 0,
+        }
+    }
+
+    /// A finished request surfaced at its `VerifyDone`: free its slot.
+    pub(crate) fn retire(&mut self) {
+        self.live -= 1;
+    }
+
+    /// Admit requests up to the cap; `push` queues each arrival event.
+    pub(crate) fn top_up(&mut self, mut push: impl FnMut(usize)) {
+        while self.next < self.n && self.live < self.cap {
+            push(self.next);
+            self.live += 1;
+            self.next += self.stride;
+        }
+    }
+}
+
 /// Fold a popped event into the per-instant ready list: arrivals carry
 /// their pool index, verify-completions re-surface their round's batch.
 /// `pub(crate)` so `bench::sched` drives the exact same event-to-ready
 /// semantics as the engine.
 pub(crate) fn collect_ready(
     kind: EventKind,
-    inflight: &mut HashMap<u64, Vec<usize>>,
+    inflight: &mut InflightRounds,
     newly_ready: &mut Vec<usize>,
 ) {
     match kind {
         EventKind::Arrival(i) => newly_ready.push(i),
         EventKind::VerifyDone(rid) => {
-            if let Some(batch) = inflight.remove(&rid) {
-                newly_ready.extend(batch);
-            }
+            inflight.take(rid, newly_ready);
         }
         EventKind::DraftDone(..) | EventKind::SchedTick => {}
     }
@@ -275,7 +404,7 @@ pub fn run_speculative(
         .engine
         .exec_wall_ns
         .load(std::sync::atomic::Ordering::Relaxed);
-    let c = ctx.constants().clone();
+    let c = ctx.engine_constants();
     let cost = ctx.sched_cost();
     let n_drafters = ctx.n_drafters();
     let n_nodes = ctx.cfg.cluster.n_drafter_nodes.max(1);
@@ -306,7 +435,7 @@ pub fn run_speculative(
     // and every candidate stays eligible).
     let mut arena = PlacementArena::new();
     let mut cpool = CandidatePool::new(if opts.decoupled { n_nodes } else { 0 });
-    let mut inflight: HashMap<u64, Vec<usize>> = HashMap::new();
+    let mut inflight = InflightRounds::new();
     let mut unfinished = pool.unfinished();
     let mut stats = EngineStats::default();
     // reusable per-event scratch
@@ -317,6 +446,14 @@ pub fn run_speculative(
     let mut pending_durs: Vec<f64> = Vec::new();
     let mut batch_sorted: Vec<usize> = Vec::new();
     let mut priors_scratch: Vec<f64> = Vec::new();
+    // reusable per-round scratch: the verify/fusion round body reuses
+    // these across every round of the run instead of allocating fresh
+    // per-request/per-round heap Vecs (the engine.rs clone cluster the
+    // TokenArena replaces)
+    let mut per_req: Vec<PerReq> = Vec::new();
+    let mut durs: Vec<f64> = Vec::new();
+    let mut fed_arena = TokenArena::new();
+    let mut fed_scratch: Vec<TokenSpan> = Vec::new();
 
     for (i, r) in pool.requests.iter().enumerate() {
         queue.push(r.arrival_s, EventKind::Arrival(i));
@@ -431,7 +568,7 @@ pub fn run_speculative(
                 DraftMode::Independent
             };
             let mut new_prefills = 0usize;
-            let mut per_req: Vec<PerReq> = Vec::new();
+            per_req.clear();
             let mut ctx_crit = 1usize;
 
             for (pos, &ri) in assign.batch.iter().enumerate() {
@@ -486,7 +623,9 @@ pub fn run_speculative(
             let mut big_gamma = 0usize;
             for pr in &per_req {
                 let req = &mut pool.requests[pr.ri];
-                let (main_path, outcome) = if opts.tree {
+                // the committed path is only read (verify borrows it, the
+                // window charge needs its length) — no clone
+                let (main_len, outcome) = if opts.tree {
                     // SpecInfer: verify every independent path, keep the
                     // best.  Real compute verifies each path; modeled time
                     // charges the whole token tree in one batched pass
@@ -504,14 +643,13 @@ pub fn run_speculative(
                         }
                     }
                     let (pi, _) = best.unwrap();
-                    let path = pr.round.paths[pi].clone();
-                    let out = verifier::verify_and_commit(ctx, req, &path.tokens)?;
-                    (path.tokens.clone(), out)
+                    let out = verifier::verify_and_commit(ctx, req, &pr.round.paths[pi].tokens)?;
+                    (pr.round.paths[pi].tokens.len(), out)
                 } else {
                     let out = verifier::verify_and_commit(ctx, req, &pr.round.main.tokens)?;
-                    (pr.round.main.tokens.clone(), out)
+                    (pr.round.main.tokens.len(), out)
                 };
-                big_gamma += main_path.len() + 1;
+                big_gamma += main_len + 1;
 
                 // routing feedback (Eq. 1-2)
                 if opts.routing {
@@ -543,32 +681,22 @@ pub fn run_speculative(
                     req.l_acc = 0.7 * req.l_acc + 0.3 * outcome.accepted as f64;
                 }
 
-                // drafter KV resync
-                let fed: Vec<Vec<i32>> = match mode {
-                    DraftMode::Fused => arena
-                        .get(pr.set)
-                        .iter()
-                        .map(|_| {
-                            let mut f = pr.round.main.tokens.clone();
-                            f.truncate(f.len().saturating_sub(1));
-                            f
-                        })
-                        .collect(),
-                    DraftMode::Independent => pr
-                        .round
-                        .paths
-                        .iter()
-                        .map(|p| {
-                            let mut f = p.tokens.clone();
-                            f.truncate(f.len().saturating_sub(1));
-                            f
-                        })
-                        .collect(),
-                };
+                // drafter KV resync: what each drafter was fed lands as
+                // spans in reused arena scratch (one shared span in Fused
+                // mode, one per path in Independent) instead of a fresh
+                // Vec<Vec<i32>> of truncated clones per request
+                fusion::fed_spans(
+                    mode,
+                    &pr.round,
+                    arena.get(pr.set).len(),
+                    &mut fed_arena,
+                    &mut fed_scratch,
+                );
                 fusion::resync_after_commit(
                     req,
                     arena.get(pr.set),
-                    &fed,
+                    &fed_scratch,
+                    &fed_arena,
                     &outcome.committed_drafts,
                     outcome.before_len,
                 );
@@ -627,16 +755,15 @@ pub fn run_speculative(
                 // from sharding (splitting saves nothing before the
                 // compute knee), so only genuinely compute-bound batches
                 // split
-                let durs: Vec<f64> = (1..=n_replicas)
-                    .map(|s| {
-                        let bs = b.div_ceil(s);
-                        let mut t = ctx.t_verify_s(bs, g_tree, ctx_crit);
-                        if new_prefills > 0 {
-                            t += ctx.t_target_prefill_s(new_prefills.div_ceil(s), c.prompt_len);
-                        }
-                        t + ctx.network.verify_exchange_s(bs, c.g1)
-                    })
-                    .collect();
+                durs.clear();
+                durs.extend((1..=n_replicas).map(|s| {
+                    let bs = b.div_ceil(s);
+                    let mut t = ctx.t_verify_s(bs, g_tree, ctx_crit);
+                    if new_prefills > 0 {
+                        t += ctx.t_target_prefill_s(new_prefills.div_ceil(s), c.prompt_len);
+                    }
+                    t + ctx.network.verify_exchange_s(bs, c.g1)
+                }));
                 let sv = if opts.sharded_verify {
                     // queue-aware with a *sharp* backlog estimate: chunk
                     // the remaining ready candidates (shortest-first, the
@@ -768,7 +895,10 @@ pub fn run_speculative(
                 cpool.apply_transitions(&trans);
                 stats.index_wall_ns += t_idx.elapsed().as_nanos() as u64;
             }
-            inflight.insert(rid, assign.batch);
+            inflight.insert(rid, &assign.batch);
+            // the assignment's heap buffers go back to the scheduler for
+            // the next dispatch instead of dropping
+            scheduler.recycle(assign);
         }
 
         // SchedTick safety net: every busy resource already has a
@@ -836,12 +966,8 @@ pub fn run_vllm(ctx: &ServingContext, trace: &Trace) -> Result<RunReport> {
         .engine
         .exec_wall_ns
         .load(std::sync::atomic::Ordering::Relaxed);
-    let c = ctx.constants().clone();
-    let max_b = ctx
-        .cfg
-        .scheduler
-        .max_batch
-        .min(*c.batch_buckets.iter().max().unwrap_or(&16));
+    let c = ctx.engine_constants();
+    let max_b = ctx.cfg.scheduler.max_batch.min(c.max_bucket);
     let n_replicas = ctx.cfg.cluster.n_verifier_replicas.max(1);
     let mut pool = RequestPool::new(
         trace
@@ -860,11 +986,14 @@ pub fn run_vllm(ctx: &ServingContext, trace: &Trace) -> Result<RunReport> {
     // nodes, so every candidate is always eligible)
     let arena = PlacementArena::new();
     let mut cpool = CandidatePool::new(0);
-    let mut inflight: HashMap<u64, Vec<usize>> = HashMap::new();
+    let mut inflight = InflightRounds::new();
     let mut unfinished = pool.unfinished();
     let mut stats = EngineStats::default();
     let mut newly_ready: Vec<usize> = Vec::new();
     let mut pending_durs: Vec<f64> = Vec::new();
+    // reusable per-round scratch
+    let mut idxs: Vec<usize> = Vec::new();
+    let mut durs: Vec<f64> = Vec::new();
 
     for (i, r) in pool.requests.iter().enumerate() {
         queue.push(r.arrival_s, EventKind::Arrival(i));
@@ -911,7 +1040,8 @@ pub fn run_vllm(ctx: &ServingContext, trace: &Trace) -> Result<RunReport> {
             // continuous batching: oldest arrivals first, up to max_b —
             // read straight off the persistent FIFO ordering
             let t_sched = Instant::now();
-            let idxs: Vec<usize> = cpool.iter_arrival().take(max_b).map(|x| x.idx).collect();
+            idxs.clear();
+            idxs.extend(cpool.iter_arrival().take(max_b).map(|x| x.idx));
             stats.sched_invocations += 1;
             stats.sched_wall_ns += t_sched.elapsed().as_nanos() as u64;
 
@@ -933,16 +1063,15 @@ pub fn run_vllm(ctx: &ServingContext, trace: &Trace) -> Result<RunReport> {
             // count; the queue-aware policy picks the fastest placement
             // given the rounds still waiting behind this one
             let b = idxs.len();
-            let durs: Vec<f64> = (1..=n_replicas)
-                .map(|s| {
-                    let bs = b.div_ceil(s);
-                    let mut t = ctx.t_target_decode_s(bs, 1, ctx_crit);
-                    if new_prefills > 0 {
-                        t += ctx.t_target_prefill_s(new_prefills.div_ceil(s), c.prompt_len);
-                    }
-                    t
-                })
-                .collect();
+            durs.clear();
+            durs.extend((1..=n_replicas).map(|s| {
+                let bs = b.div_ceil(s);
+                let mut t = ctx.t_target_decode_s(bs, 1, ctx_crit);
+                if new_prefills > 0 {
+                    t += ctx.t_target_prefill_s(new_prefills.div_ceil(s), c.prompt_len);
+                }
+                t
+            }));
             let ready = idxs
                 .iter()
                 .map(|&i| pool.requests[i].ready_at)
@@ -983,7 +1112,7 @@ pub fn run_vllm(ctx: &ServingContext, trace: &Trace) -> Result<RunReport> {
                 }
             }
             cpool.remove_batch(&idxs);
-            inflight.insert(rid, idxs);
+            inflight.insert(rid, &idxs);
         }
     }
     anyhow::ensure!(

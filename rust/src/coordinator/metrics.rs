@@ -277,6 +277,19 @@ impl RunReport {
         self.engine.merge_stall_ns as f64 / 1e6
     }
 
+    /// Fraction of total worker wall time (threads × run wall) spent
+    /// blocked on the cross-shard merge — the normalized stall metric
+    /// the bench gate bounds at the max thread count.  0 when the run
+    /// was single-threaded or too fast to measure.
+    pub fn merge_stall_frac(&self) -> f64 {
+        let denom = self.engine.n_shards.max(1) as f64 * self.wall_s * 1e9;
+        if denom > 0.0 {
+            (self.engine.merge_stall_ns as f64 / denom).min(1.0)
+        } else {
+            0.0
+        }
+    }
+
     /// Mean replicas per verify round (1.0 = never sharded, 0 = no verify
     /// rounds ran).
     pub fn mean_verify_shards(&self) -> f64 {

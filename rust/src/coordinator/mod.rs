@@ -14,6 +14,8 @@
 //! * `shard` — the sharded parallel engine core: drafter-group shards on
 //!   worker threads, verifier replicas merged through a sequenced
 //!   cross-shard queue, bit-identical to the single-threaded oracle.
+//! * `tokens` — flat token arena + span handles backing the engine's
+//!   allocation-free per-round token traffic.
 //! * `verifier` — greedy longest-prefix acceptance + commit bookkeeping
 //!   (the accept/bonus computation itself is fused into the L1 verify
 //!   kernel; this module owns the state updates).
@@ -32,6 +34,7 @@ pub mod sampling;
 pub mod scheduler;
 pub mod shard;
 pub mod speculation;
+pub mod tokens;
 pub mod verifier;
 
 pub mod serve;

@@ -727,6 +727,12 @@ pub struct Scheduler {
     hist: Vec<u32>,
     /// eligible candidates accumulated along the sweep
     chosen: Vec<Candidate>,
+    /// spare [`Assignment`] bodies handed back by [`Self::recycle`]: the
+    /// next dispatch reuses their heap buffers instead of allocating
+    /// three fresh Vecs per round
+    spare_batch: Vec<usize>,
+    spare_gammas: Vec<usize>,
+    spare_placement: Vec<PlacementId>,
 }
 
 impl Scheduler {
@@ -738,7 +744,32 @@ impl Scheduler {
             touched: Vec::new(),
             hist: Vec::new(),
             chosen: Vec::new(),
+            spare_batch: Vec::new(),
+            spare_gammas: Vec::new(),
+            spare_placement: Vec::new(),
         }
+    }
+
+    /// Hand a consumed [`Assignment`]'s heap buffers back for reuse.
+    /// Callers on the per-event hot path (engine round loops, the sharded
+    /// core, `bench::sched`) recycle after copying the batch into the
+    /// in-flight slab, making dispatch allocation-free at steady state;
+    /// not recycling is always safe, just slower.
+    pub fn recycle(&mut self, a: Assignment) {
+        self.spare_batch = a.batch;
+        self.spare_gammas = a.gammas;
+        self.spare_placement = a.placement;
+    }
+
+    /// Take the spare buffers (cleared) for a new [`Assignment`].
+    fn spares(&mut self) -> (Vec<usize>, Vec<usize>, Vec<PlacementId>) {
+        let mut batch = std::mem::take(&mut self.spare_batch);
+        let mut gammas = std::mem::take(&mut self.spare_gammas);
+        let mut placement = std::mem::take(&mut self.spare_placement);
+        batch.clear();
+        gammas.clear();
+        placement.clear();
+        (batch, gammas, placement)
     }
 
     /// Predicted phase latencies for a prospective batch — the from-scratch
@@ -874,13 +905,16 @@ impl Scheduler {
                 return None;
             }
             let chosen = std::mem::take(&mut self.chosen);
-            let mut gammas: Vec<usize> = chosen.iter().map(|c| c.gamma).collect();
+            let (mut batch, mut gammas, mut placement) = self.spares();
+            gammas.extend(chosen.iter().map(|c| c.gamma));
             trim_gammas(&mut gammas, self.cfg.gamma_total_max);
             let (t_d, t_v) = self.predict(cost, arena, &chosen, &gammas, k_nodes);
             let big_gamma = gammas.iter().map(|g| g + 1).sum();
+            batch.extend(chosen.iter().map(|c| c.idx));
+            placement.extend(chosen.iter().map(|c| c.placement));
             let assignment = Assignment {
-                batch: chosen.iter().map(|c| c.idx).collect(),
-                placement: chosen.iter().map(|c| c.placement).collect(),
+                batch,
+                placement,
                 t_draft: t_d,
                 t_verify: t_v,
                 objective: self.objective(t_d, t_v, chosen.len(), big_gamma),
@@ -981,13 +1015,16 @@ impl Scheduler {
         }
 
         let (obj, best_b, t_d, t_v) = best?;
+        let (mut batch, mut gammas, mut placement) = self.spares();
         let chosen = &self.chosen[..best_b];
-        let mut gammas: Vec<usize> = chosen.iter().map(|c| c.gamma).collect();
+        gammas.extend(chosen.iter().map(|c| c.gamma));
         trim_gammas(&mut gammas, self.cfg.gamma_total_max);
+        batch.extend(chosen.iter().map(|c| c.idx));
+        placement.extend(chosen.iter().map(|c| c.placement));
         Some(Assignment {
-            batch: chosen.iter().map(|c| c.idx).collect(),
+            batch,
             gammas,
-            placement: chosen.iter().map(|c| c.placement).collect(),
+            placement,
             t_draft: t_d,
             t_verify: t_v,
             objective: obj,

@@ -331,6 +331,9 @@ fn workload_with_cost(
         verifier_gpus: cfg.cluster.verifier_gpus.max(1),
         strategy: policy,
         cost,
+        // live traces are open-loop: admission control is the client's
+        // job, the engine sees every arrival as specified
+        max_backlog: None,
     }
 }
 

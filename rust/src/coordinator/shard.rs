@@ -64,14 +64,23 @@
 //! points under a conservative-lookahead rule: each shard publishes a
 //! lower bound on any dispatch key it can still produce —
 //! `max(watermark, min(next local event time, earliest in-flight round's
-//! modeled draft completion))` — and the hub applies a pending dispatch
-//! only once it precedes every *other* shard's bound.  The lookahead
-//! window comes from the modeled draft latency: a submitted round's
-//! verify readiness is its known draft end, which lower-bounds every
-//! event (hence every later dispatch) the round can cause.  The verify
-//! reservation returns asynchronously; its `VerifyDone` is pushed under
-//! an event seq *reserved at submission* ([`EventQueue::reserve_seq`]),
-//! so FIFO-within-timestamp tie-breaks match the classic loop exactly.
+//! known VerifyDone lower bound))` — and the hub applies a pending
+//! dispatch only once it precedes every *other* shard's bound.  The
+//! lookahead window comes from the modeled round latency: a submitted
+//! round's verify readiness is its known draft end, and every hub
+//! placement runs for at least the cheapest entry of its priced duration
+//! menu, so `ready + min(durs)` lower-bounds every event (hence every
+//! later dispatch) the round can cause.  The verify reservation returns
+//! asynchronously; its `VerifyDone` is pushed under an event seq
+//! *reserved at submission* ([`EventQueue::reserve_seq`]), so
+//! FIFO-within-timestamp tie-breaks match the classic loop exactly.
+//!
+//! Hub traffic is batched: a shard buffers the dispatches of each burst
+//! locally and crosses them to the hub in **one lock acquisition per
+//! worker visit** (`Hub::exchange` — flush + bound publish + apply +
+//! result drain), instead of taking the lock once per dispatch.  The
+//! buffered dispatches are always flushed before a worker can block, so
+//! the deadlock-freedom argument below is unchanged.
 //!
 //! Deadlock freedom: if every shard is blocked, the globally minimal
 //! pending dispatch precedes every other shard's bound (bounds are
@@ -91,12 +100,14 @@
 //! property tests and the `cosine bench --shards` sweep hold N-thread
 //! runs bit-identical to.
 
-use std::collections::HashMap;
+use std::collections::VecDeque;
 use std::sync::{Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::config::SchedulerConfig;
-use crate::coordinator::engine::{chunk_pending_rounds, collect_ready, EventKind, EventQueue};
+use crate::coordinator::engine::{
+    chunk_pending_rounds, collect_ready, ArrivalGate, EventKind, EventQueue, InflightRounds,
+};
 use crate::coordinator::metrics::{EngineStats, RunReport};
 use crate::coordinator::pipeline::{ResourcePool, ShardedVerify};
 use crate::coordinator::scheduler::{
@@ -181,6 +192,13 @@ pub struct ShardWorkload {
     /// pricing model (from `ServingContext::sched_cost` or
     /// `SchedCostModel::synthetic`)
     pub cost: SchedCostModel,
+    /// closed-loop admission cap: at most this many requests admitted
+    /// (arrived-but-unfinished) engine-wide at once, split across shards
+    /// as `cap.div_ceil(groups)`.  `None` = open loop, every arrival
+    /// enters the event heap up front.  Part of the modeled workload:
+    /// changing it changes the schedule; the thread count still never
+    /// does.
+    pub max_backlog: Option<usize>,
 }
 
 impl ShardWorkload {
@@ -281,7 +299,7 @@ struct HubState {
     bounds: Vec<MergeKey>,
     /// per-group FIFO of submitted, not-yet-applied dispatches (keys
     /// strictly increase within a group)
-    pending: Vec<Vec<Dispatch>>,
+    pending: Vec<VecDeque<Dispatch>>,
     /// per-group inbox of applied verify reservations
     results: Vec<Vec<RoundResult>>,
 }
@@ -295,7 +313,7 @@ impl Hub {
             state: Mutex::new(HubState {
                 res,
                 bounds: vec![MergeKey::FLOOR; groups],
-                pending: (0..groups).map(|_| Vec::new()).collect(),
+                pending: (0..groups).map(|_| VecDeque::new()).collect(),
                 results: (0..groups).map(|_| Vec::new()).collect(),
             }),
             cv: Condvar::new(),
@@ -309,7 +327,7 @@ impl Hub {
         loop {
             let mut best: Option<(usize, MergeKey)> = None;
             for (g, q) in st.pending.iter().enumerate() {
-                if let Some(d) = q.first() {
+                if let Some(d) = q.front() {
                     if best.is_none_or(|(_, k)| d.key.lt(&k)) {
                         best = Some((g, d.key));
                     }
@@ -320,7 +338,7 @@ impl Hub {
             if gated {
                 break;
             }
-            let d = st.pending[g].remove(0);
+            let d = st.pending[g].pop_front().expect("best key from empty queue");
             let sv = st.res.verify_sharded_queued_with(d.b, d.ready, &d.durs, &d.pending_durs);
             st.results[g].push(RoundResult {
                 rid: d.rid,
@@ -332,30 +350,36 @@ impl Hub {
         any
     }
 
-    /// Submit a dispatch and advance the group's bound past it.
-    fn submit(&self, d: Dispatch, bound: MergeKey) {
+    /// One lock acquisition per worker visit: append the shard's
+    /// buffered dispatches (submission order preserved), publish its
+    /// fresh bound, apply whatever that unlocks, and drain the shard's
+    /// result inbox into `out`.  Batching a whole burst's dispatches
+    /// under one acquisition — instead of one lock round-trip per
+    /// dispatch — is what keeps `merge_stall_ns` flat as threads are
+    /// added: peers observe the burst plus its post-burst bound as a
+    /// single state change.
+    fn exchange(
+        &self,
+        g: usize,
+        bound: MergeKey,
+        submits: &mut Vec<Dispatch>,
+        out: &mut Vec<RoundResult>,
+    ) {
         let mut st = self.state.lock().unwrap();
-        let g = d.key.group as usize;
-        debug_assert!(
-            st.pending[g].last().is_none_or(|p| p.key.lt(&d.key)),
-            "dispatch keys must strictly increase within a shard"
-        );
-        st.pending[g].push(d);
-        st.bounds[g] = bound;
-        Self::try_apply(&mut st);
-        drop(st);
-        self.cv.notify_all();
-    }
-
-    /// Publish a fresh bound for `g`, apply whatever that unlocks, and
-    /// drain `g`'s result inbox into `out`.
-    fn sync(&self, g: usize, bound: MergeKey, out: &mut Vec<RoundResult>) {
-        let mut st = self.state.lock().unwrap();
+        let submitted = !submits.is_empty();
+        for d in submits.drain(..) {
+            debug_assert_eq!(d.key.group as usize, g);
+            debug_assert!(
+                st.pending[g].back().is_none_or(|p| p.key.lt(&d.key)),
+                "dispatch keys must strictly increase within a shard"
+            );
+            st.pending[g].push_back(d);
+        }
         st.bounds[g] = bound;
         let applied = Self::try_apply(&mut st);
         out.append(&mut st.results[g]);
         drop(st);
-        if applied {
+        if applied || submitted {
             self.cv.notify_all();
         }
     }
@@ -411,15 +435,21 @@ struct ShardReq {
 /// into the local event heap.
 struct Outstanding {
     rid: u64,
-    /// draft completion = verify readiness; lower-bounds the round's
-    /// `VerifyDone` time (the conservative lookahead term)
-    ready: f64,
+    /// known lower bound on the round's `VerifyDone` time: verify
+    /// readiness plus the cheapest entry of the priced duration menu.
+    /// Every hub placement ends at `t0 + d` with `t0 >= ready` and `d`
+    /// drawn from (or above) the menu, so the bound is sound — and
+    /// strictly tighter than the bare readiness the gate used before,
+    /// which lets a shard keep draining local instants instead of
+    /// stalling on the hub.
+    lower: f64,
 }
 
-/// One planned round about to cross to the hub: who is in it, when its
-/// verification can start, and the priced duration menu.
+/// One planned round about to cross to the hub: when its verification
+/// can start and the priced duration menu.  The batch membership lands
+/// in `ShardSim::plan_batch` — reused scratch, not a fresh allocation
+/// per round.
 struct Planned {
-    batch: Vec<usize>,
     proposed: u64,
     ready: f64,
     durs: Vec<f64>,
@@ -444,10 +474,13 @@ struct ShardSim {
     /// non-speculative strategies never occupy drafters (0-node pool).
     res: ResourcePool,
     queue: EventQueue,
-    inflight: HashMap<u64, Vec<usize>>,
+    inflight: InflightRounds,
     reqs: Vec<ShardReq>,
     unfinished: usize,
     outstanding: Vec<Outstanding>,
+    /// closed-loop admission over this shard's request slice
+    /// (`Some` iff the workload sets `max_backlog`)
+    gate: Option<ArrivalGate>,
     /// monotone ratchet over processed instant times — the clamp that
     /// keeps dispatch keys monotone even when past-started draft
     /// reservations warp heap time backward
@@ -473,6 +506,10 @@ struct ShardSim {
     pending_durs: Vec<f64>,
     batch_sorted: Vec<usize>,
     set_buf: Vec<usize>,
+    /// the current plan's batch membership (reused round to round)
+    plan_batch: Vec<usize>,
+    /// dispatches buffered since the last hub exchange
+    submit_buf: Vec<Dispatch>,
 }
 
 impl ShardSim {
@@ -508,10 +545,27 @@ impl ShardSim {
             .collect();
         let mut queue = EventQueue::new();
         let mut unfinished = 0usize;
-        for (i, r) in reqs.iter().enumerate() {
+        for i in 0..reqs.len() {
             if i % groups == g {
-                queue.push(r.arrival_s, EventKind::Arrival(i));
                 unfinished += 1;
+            }
+        }
+        let mut gate = w
+            .max_backlog
+            .map(|cap| ArrivalGate::new(cap.div_ceil(groups), g, groups, reqs.len()));
+        match &mut gate {
+            // closed loop: admit only this shard's share of the global
+            // backlog cap; the tail enters as finished requests free
+            // slots (see `process_instant`)
+            Some(gate) => {
+                gate.top_up(|i| queue.push(reqs[i].arrival_s, EventKind::Arrival(i)));
+            }
+            None => {
+                for (i, r) in reqs.iter().enumerate() {
+                    if i % groups == g {
+                        queue.push(r.arrival_s, EventKind::Arrival(i));
+                    }
+                }
             }
         }
         ShardSim {
@@ -523,10 +577,11 @@ impl ShardSim {
             cpool: CandidatePool::new(if decoupled { w.n_nodes } else { 0 }),
             res,
             queue,
-            inflight: HashMap::new(),
+            inflight: InflightRounds::new(),
             reqs,
             unfinished,
             outstanding: Vec::new(),
+            gate,
             watermark: f64::NEG_INFINITY,
             dispatch_seq: 0,
             round_id: 0,
@@ -547,6 +602,8 @@ impl ShardSim {
             pending_durs: Vec::new(),
             batch_sorted: Vec::new(),
             set_buf: Vec::new(),
+            plan_batch: Vec::new(),
+            submit_buf: Vec::new(),
             cost,
             w: w.clone(),
         }
@@ -556,10 +613,10 @@ impl ShardSim {
         self.w.strategy.decoupled && self.w.strategy.speculative
     }
 
-    /// Earliest verify readiness among rounds whose results have not yet
-    /// been drained: a lower bound on every pending `VerifyDone` time.
+    /// Tightest known lower bound on every pending `VerifyDone` time
+    /// (readiness + cheapest menu entry per round, see [`Outstanding`]).
     fn outstanding_gate(&self) -> f64 {
-        self.outstanding.iter().fold(f64::INFINITY, |m, o| m.min(o.ready))
+        self.outstanding.iter().fold(f64::INFINITY, |m, o| m.min(o.lower))
     }
 
     /// May the next local instant be processed without waiting on the
@@ -589,7 +646,7 @@ impl ShardSim {
     /// classic loop: a request sits in at most one round at a time, and
     /// nothing reads its committed state before the `VerifyDone` pops.
     fn apply_result(&mut self, rr: RoundResult) {
-        let batch = self.inflight.get(&rr.rid).expect("verify result for unknown round");
+        let batch = self.inflight.get(rr.rid).expect("verify result for unknown round");
         let per_round = if self.w.strategy.speculative {
             self.w.accept + 1
         } else {
@@ -673,9 +730,12 @@ impl ShardSim {
             price,
             &mut self.pending_durs,
         );
+        let proposed = assign.gammas.iter().map(|&g| g as u64).sum();
+        self.plan_batch.clear();
+        self.plan_batch.extend_from_slice(&assign.batch);
+        self.scheduler.recycle(assign);
         Some(Planned {
-            proposed: assign.gammas.iter().map(|&g| g as u64).sum(),
-            batch: assign.batch,
+            proposed,
             ready: draft_end,
             durs,
         })
@@ -718,9 +778,12 @@ impl ShardSim {
         };
         let t_verify = self.cost.t_verify_s(b, g_tree, ctx_crit);
         self.pending_durs.clear();
+        let proposed = assign.gammas.iter().map(|&g| g as u64).sum();
+        self.plan_batch.clear();
+        self.plan_batch.extend_from_slice(&assign.batch);
+        self.scheduler.recycle(assign);
         Some(Planned {
-            proposed: assign.gammas.iter().map(|&g| g as u64).sum(),
-            batch: assign.batch,
+            proposed,
             ready: batch_ready,
             durs: vec![t_draft + t_verify],
         })
@@ -731,17 +794,19 @@ impl ShardSim {
     fn plan_fifo_decode(&mut self) -> Option<Planned> {
         let max_b = self.w.max_batch.min(self.cost.max_bucket).max(1);
         let t0 = Instant::now();
-        let batch: Vec<usize> = self.cpool.iter_arrival().take(max_b).map(|c| c.idx).collect();
+        self.plan_batch.clear();
+        self.plan_batch
+            .extend(self.cpool.iter_arrival().take(max_b).map(|c| c.idx));
         self.sched_invocations += 1;
         self.sched_ns += t0.elapsed().as_nanos() as u64;
-        if batch.is_empty() {
+        if self.plan_batch.is_empty() {
             return None;
         }
 
-        let b = batch.len();
+        let b = self.plan_batch.len();
         let mut ctx_crit = 1usize;
         let mut batch_ready = 0.0f64;
-        for &ri in &batch {
+        for &ri in &self.plan_batch {
             let r = &self.reqs[ri];
             ctx_crit = ctx_crit.max(r.ctx_len);
             batch_ready = batch_ready.max(r.ready_at);
@@ -760,7 +825,6 @@ impl ShardSim {
             &mut self.pending_durs,
         );
         Some(Planned {
-            batch,
             proposed: 0,
             ready: batch_ready,
             durs,
@@ -768,10 +832,11 @@ impl ShardSim {
     }
 
     /// Process one event instant: the classic loop body (coalesced pops,
-    /// frontier transitions, routing, the scheduling loop, the tick
-    /// safety net), with verify rounds submitted to the hub instead of
-    /// reserved on a local verifier pool.
-    fn process_instant(&mut self, hub: &Hub) {
+    /// closed-loop admission, frontier transitions, routing, the
+    /// scheduling loop, the tick safety net), with verify rounds
+    /// buffered for the hub instead of reserved on a local verifier
+    /// pool.
+    fn process_instant(&mut self) {
         let Some((now, kind)) = self.queue.pop() else {
             return;
         };
@@ -785,6 +850,21 @@ impl ShardSim {
                 self.coalesced += 1;
                 collect_ready(k2, &mut self.inflight, &mut self.newly_ready);
             }
+        }
+
+        // closed-loop admission: a finished request surfaces exactly
+        // once, at its `VerifyDone` pop — a deterministic point on the
+        // virtual timeline, unlike hub-drain time, which moves with the
+        // thread interleaving.  Retire those slots, then refill from the
+        // unadmitted tail at `max(spec arrival, now)`.
+        if let Some(gate) = &mut self.gate {
+            for &ri in &self.newly_ready {
+                if self.reqs[ri].finish_s.is_some() {
+                    gate.retire();
+                }
+            }
+            let (queue, reqs) = (&mut self.queue, &self.reqs);
+            gate.top_up(|i| queue.push(reqs[i].arrival_s.max(now), EventKind::Arrival(i)));
         }
 
         // flip exactly the candidates on nodes whose reservations ended
@@ -846,7 +926,9 @@ impl ShardSim {
 
             // cross to the hub: reserve the VerifyDone's tie-break slot
             // now (where the classic loop pushes the event), key the
-            // dispatch under the watermark clamp
+            // dispatch under the watermark clamp.  The dispatch is
+            // buffered — the whole burst crosses in one lock
+            // acquisition at the next exchange.
             let seq = self.queue.reserve_seq();
             let key = MergeKey {
                 t: self.watermark,
@@ -855,35 +937,32 @@ impl ShardSim {
             };
             self.dispatch_seq += 1;
             self.rounds += 1;
-            self.req_rounds += plan.batch.len() as u64;
+            self.req_rounds += self.plan_batch.len() as u64;
             self.drafts_proposed += plan.proposed;
             self.cross_msgs += 1;
+            let min_dur = plan.durs.iter().copied().fold(f64::INFINITY, f64::min);
             self.outstanding.push(Outstanding {
                 rid: self.round_id,
-                ready: plan.ready,
+                lower: plan.ready + if min_dur.is_finite() { min_dur } else { 0.0 },
             });
-            let bound = self.current_bound();
-            hub.submit(
-                Dispatch {
-                    key,
-                    b: plan.batch.len(),
-                    ready: plan.ready,
-                    durs: plan.durs,
-                    pending_durs: self.pending_durs.clone(),
-                    rid: self.round_id,
-                    reserved_seq: seq,
-                },
-                bound,
-            );
+            self.submit_buf.push(Dispatch {
+                key,
+                b: self.plan_batch.len(),
+                ready: plan.ready,
+                durs: plan.durs,
+                pending_durs: self.pending_durs.clone(),
+                rid: self.round_id,
+                reserved_seq: seq,
+            });
 
-            self.cpool.remove_batch(&plan.batch);
+            self.cpool.remove_batch(&self.plan_batch);
             if self.decoupled() {
                 let t0 = Instant::now();
                 self.res.drafter_transitions(now, &mut self.trans);
                 self.cpool.apply_transitions(&self.trans);
                 self.index_ns += t0.elapsed().as_nanos() as u64;
             }
-            self.inflight.insert(self.round_id, plan.batch);
+            self.inflight.insert(self.round_id, &self.plan_batch);
             self.round_id += 1;
         }
 
@@ -927,8 +1006,11 @@ fn worker(hub: &Hub, mut shards: Vec<ShardSim>) -> (Vec<ShardSim>, u64) {
             if sh.done {
                 continue;
             }
+            // one lock acquisition: flush the previous burst's buffered
+            // dispatches, publish the fresh bound, drain results
             results.clear();
-            hub.sync(sh.g, sh.current_bound(), &mut results);
+            let bound = sh.current_bound();
+            hub.exchange(sh.g, bound, &mut sh.submit_buf, &mut results);
             if !results.is_empty() {
                 progressed = true;
                 for rr in results.drain(..) {
@@ -937,7 +1019,7 @@ fn worker(hub: &Hub, mut shards: Vec<ShardSim>) -> (Vec<ShardSim>, u64) {
             }
             let mut steps = 0;
             while steps < SYNC_BURST && sh.runnable() {
-                sh.process_instant(hub);
+                sh.process_instant();
                 steps += 1;
             }
             if steps > 0 {
@@ -950,9 +1032,13 @@ fn worker(hub: &Hub, mut shards: Vec<ShardSim>) -> (Vec<ShardSim>, u64) {
                     sh.g, sh.unfinished
                 );
                 sh.done = true;
-                // final bound (t = ∞): never gate another shard again
+                // final bound (t = ∞): never gate another shard again.
+                // Nothing can still be buffered — a buffered dispatch
+                // implies an outstanding round.
+                debug_assert!(sh.submit_buf.is_empty());
                 results.clear();
-                hub.sync(sh.g, sh.current_bound(), &mut results);
+                let bound = sh.current_bound();
+                hub.exchange(sh.g, bound, &mut sh.submit_buf, &mut results);
                 debug_assert!(results.is_empty());
                 progressed = true;
             }
@@ -1337,6 +1423,47 @@ mod tests {
                 assert_eq!(a.drafts_accepted, 0);
             }
         }
+    }
+
+    fn closed_spec() -> SchedBenchSpec {
+        SchedBenchSpec {
+            n_requests: 400,
+            max_backlog: Some(96),
+            ..SchedBenchSpec::mega1m()
+        }
+    }
+
+    #[test]
+    fn closed_loop_admission_matches_the_classic_loop() {
+        // the ArrivalGate is shared verbatim between the classic bench
+        // loop and the sharded core; with one group they must stay
+        // bit-identical, admission cap included
+        let spec = closed_spec();
+        let classic = run_sched_bench(&spec, BenchMode::Frontier);
+        let sharded = run_single(&spec.shard_workload(1));
+        assert_eq!(sharded.engine.rounds_dispatched, classic.rounds);
+        assert_eq!(sharded.engine.events_processed, classic.events);
+        assert_eq!(sharded.engine.peak_pool_depth, classic.peak_pool_depth);
+        assert_eq!(sharded.makespan_s.to_bits(), classic.makespan_s.to_bits());
+        assert_eq!(sharded.p99_latency_s().to_bits(), classic.p99_latency_s.to_bits());
+    }
+
+    #[test]
+    fn closed_loop_thread_count_never_changes_the_schedule() {
+        let w = closed_spec().shard_workload(4);
+        let r1 = run_sharded(&w, 1);
+        let r2 = run_sharded(&w, 2);
+        let r4 = run_sharded(&w, 4);
+        assert!(
+            identical(&r1, &r2) && identical(&r1, &r4),
+            "closed-loop schedule diverged across thread counts: {:016x} / {:016x} / {:016x}",
+            r1.engine.schedule_hash,
+            r2.engine.schedule_hash,
+            r4.engine.schedule_hash
+        );
+        assert_eq!(r1.engine.cross_shard_msgs, 2 * r1.engine.rounds_dispatched);
+        // the cap binds: the pool never indexes the whole trace at once
+        assert!(r1.engine.peak_pool_depth <= 96);
     }
 
     #[test]

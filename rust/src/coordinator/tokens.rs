@@ -1,0 +1,120 @@
+//! Flat token storage for the engine's per-round hot path.
+//!
+//! The verify/fusion round body used to materialize every fed-token
+//! buffer as a fresh heap `Vec<i32>` (a `Vec<Vec<i32>>` per request per
+//! round — millions of short-lived allocations at bench scale).  A
+//! [`TokenArena`] replaces that cluster: tokens are appended to one flat
+//! reused `Vec<i32>` and handed around as `Copy` [`TokenSpan`] handles,
+//! so a round's token traffic is span copies into scratch whose capacity
+//! plateaus after the first few rounds.
+//!
+//! The arena is deliberately tiny: push-only within a round, wholesale
+//! [`TokenArena::clear`] between uses.  Spans are only meaningful
+//! against the arena they were pushed into and before its next `clear`
+//! — the engine scopes both to one request's resync call, so the
+//! invariant is local and obvious at the call site.
+
+/// A handle to a contiguous token run inside a [`TokenArena`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TokenSpan {
+    start: u32,
+    len: u32,
+}
+
+impl TokenSpan {
+    pub const EMPTY: TokenSpan = TokenSpan { start: 0, len: 0 };
+
+    pub fn len(&self) -> usize {
+        self.len as usize
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+}
+
+/// Reused flat token scratch: `Vec<i32>` + span handles.
+#[derive(Debug, Default)]
+pub struct TokenArena {
+    buf: Vec<i32>,
+}
+
+impl TokenArena {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Drop every span's contents; capacity is retained.
+    pub fn clear(&mut self) {
+        self.buf.clear();
+    }
+
+    /// Copy `toks` into the arena and return its span handle.
+    pub fn push_slice(&mut self, toks: &[i32]) -> TokenSpan {
+        let start = self.buf.len() as u32;
+        self.buf.extend_from_slice(toks);
+        TokenSpan {
+            start,
+            len: toks.len() as u32,
+        }
+    }
+
+    pub fn get(&self, s: TokenSpan) -> &[i32] {
+        &self.buf[s.start as usize..(s.start + s.len) as usize]
+    }
+
+    /// Tokens currently stored (across all live spans).
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// Heap capacity in tokens — the arena's allocation proxy: constant
+    /// at steady state no matter how many rounds recycle through it.
+    pub fn capacity(&self) -> usize {
+        self.buf.capacity()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spans_round_trip() {
+        let mut a = TokenArena::new();
+        let s1 = a.push_slice(&[1, 2, 3]);
+        let s2 = a.push_slice(&[]);
+        let s3 = a.push_slice(&[9, 8]);
+        assert_eq!(a.get(s1), &[1, 2, 3]);
+        assert_eq!(a.get(s2), &[] as &[i32]);
+        assert_eq!(a.get(s3), &[9, 8]);
+        assert_eq!(s1.len(), 3);
+        assert!(s2.is_empty());
+        assert_eq!(a.len(), 5);
+    }
+
+    #[test]
+    fn churn_reuses_capacity() {
+        // steady-state rounds must not grow the arena: after warmup, a
+        // clear + same-shaped pushes keep capacity (and thus heap
+        // allocations) flat
+        let mut a = TokenArena::new();
+        for _ in 0..3 {
+            a.clear();
+            a.push_slice(&[1; 64]);
+            a.push_slice(&[2; 32]);
+        }
+        let cap = a.capacity();
+        for round in 0..1000 {
+            a.clear();
+            let s = a.push_slice(&[round; 64]);
+            a.push_slice(&[round + 1; 32]);
+            assert_eq!(a.get(s), &[round; 64]);
+        }
+        assert_eq!(a.capacity(), cap, "steady-state rounds grew the arena");
+    }
+}
