@@ -32,6 +32,13 @@ Gates:
   * machine-dependent (schema 5, armed when the baseline records
     mega_min_events_per_s): the mega frontier run must sustain at least
     that events/sec floor (100k ev/s on the full 1M scenario);
+  * machine-independent (schema 6): the chaos block — a scenario-layer
+    workload under a named deterministic fault plan — must show (a) an
+    armed-but-non-binding plan reproducing the healthy schedule hash
+    (nofault_identical), (b) the fault run bit-identical across thread
+    counts, (c) every request completing exactly once under drafter loss
+    (completed == n_requests), and (d) the plan actually binding
+    (faults_injected > 0);
   * machine-dependent (armed once the baseline records events_per_s for
     this runner class): absolute events/sec must not regress > 20%.
 
@@ -58,8 +65,8 @@ def main() -> None:
         base = json.load(f)
 
     schema = int(cur.get("schema", 0))
-    if schema < 5:
-        sys.exit(f"bench schema {schema} < 5: rebuild BENCH_sched.json")
+    if schema < 6:
+        sys.exit(f"bench schema {schema} < 6: rebuild BENCH_sched.json")
 
     if not cur["schedule_identical"]:
         sys.exit("frontier schedule diverged from the closure/naive reference")
@@ -184,6 +191,32 @@ def main() -> None:
         )
     else:
         print(f"mega events/sec {mega_ev:.0f} >= {mega_floor:.0f} floor")
+
+    # chaos fault-injection gates (schema 6)
+    chaos = cur["chaos"]
+    if not chaos["nofault_identical"]:
+        sys.exit(
+            "chaos: an armed-but-non-binding fault plan perturbed the "
+            "healthy schedule"
+        )
+    if not chaos["identical"]:
+        sys.exit("chaos: fault run diverged across thread counts")
+    n_req = int(chaos["n_requests"])
+    completed = int(chaos["completed"])
+    if completed != n_req:
+        sys.exit(
+            f"chaos: {completed}/{n_req} requests completed — requests "
+            "lost or duplicated under fault recovery"
+        )
+    if int(chaos["faults_injected"]) <= 0:
+        sys.exit("chaos: fault plan injected no events (gate not exercised)")
+    print(
+        f"chaos: plan `{chaos['plan']}` on `{chaos['scenario']}` — "
+        f"{int(chaos['faults_injected'])} faults, "
+        f"{int(chaos['rounds_cancelled'])} rounds cancelled, "
+        f"{completed}/{n_req} completed, no-fault identity and "
+        "cross-thread identity hold"
+    )
 
     baseline_ev = base.get("events_per_s")
     cur_ev = cur["incremental"]["events_per_s"]

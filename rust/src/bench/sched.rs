@@ -34,6 +34,7 @@ use crate::config::SchedulerConfig;
 use crate::coordinator::engine::{
     chunk_pending_rounds, collect_ready, ArrivalGate, EventKind, EventQueue, InflightRounds,
 };
+use crate::coordinator::faults::FaultPlan;
 use crate::coordinator::pipeline::ResourcePool;
 use crate::coordinator::scheduler::{
     Candidate, CandidatePool, PlacementArena, PlacementId, SchedCostModel, Scheduler,
@@ -200,6 +201,7 @@ impl SchedBenchSpec {
             strategy: ShardStrategy::pipelined(),
             cost: SchedCostModel::synthetic("l", self.n_nodes),
             max_backlog: self.max_backlog,
+            faults: FaultPlan::default(),
         }
     }
 }

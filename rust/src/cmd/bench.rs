@@ -18,17 +18,23 @@
 //! sibling under `--smoke`): the frontier loop at full scale with an
 //! events/sec floor, a frontier-vs-closure identity oracle on a
 //! subsampled slice, and a sharded sweep at 1 and max threads with a
-//! bounded merge-stall fraction.  Emits `BENCH_sched.json` (schema 5) —
-//! the perf trajectory CI gates on (artifact upload + regression check).
-//! Needs no PJRT artifacts.
+//! bounded merge-stall fraction.  A `chaos` block serves the scenario
+//! layer's bursty multi-tenant mix under a named deterministic fault plan
+//! and gates recovery: armed-but-non-binding plans reproduce the healthy
+//! schedule byte-for-byte, fault runs stay bit-identical across thread
+//! counts, and no request is lost or duplicated under drafter loss.
+//! Emits `BENCH_sched.json` (schema 6) — the perf trajectory CI gates on
+//! (artifact upload + regression check).  Needs no PJRT artifacts.
 
 use anyhow::Result;
 use cosine::bench::sched::{run_sched_bench, schedule_identical, BenchMode, SchedBenchSpec};
 use cosine::config::{ClusterConfig, CosineConfig};
+use cosine::coordinator::faults::FaultPlan;
 use cosine::coordinator::serve::{modeled_workload, Strategy};
 use cosine::coordinator::shard::{identical, run_sharded, ShardRequestSpec};
 use cosine::coordinator::RunReport;
 use cosine::util::json::Json;
+use cosine::workload::Scenario;
 use std::collections::BTreeMap;
 
 /// Logical shard (drafter node group) count for the scaling sweep: a
@@ -219,6 +225,102 @@ fn strategy_sweep(threads: &[usize]) -> (Json, bool) {
     (Json::Obj(rows), all_identical)
 }
 
+/// Chaos gate: the scenario layer's bursty multi-tenant mix served under
+/// a named deterministic fault plan through the sharded backend.
+/// Produces the schema-6 `chaos` block and the flags `check_bench.py`
+/// gates on:
+///   * `nofault_identical` — an armed-but-non-binding plan (unit straggle
+///     factor, so every chaos branch runs but never changes a duration)
+///     reproduces the plain run's schedule hash byte-for-byte,
+///   * `identical` — the fault run is bit-identical across thread counts,
+///   * `completed == n_requests` — no request lost or duplicated under
+///     drafter loss: every arrival has exactly one positive latency,
+///   * `faults_injected > 0` / `rounds_cancelled` — the plan really bound.
+fn chaos_block(threads: &[usize]) -> (Json, bool) {
+    let cfg = CosineConfig::default();
+    let scen = Scenario::named("bursty-mix", 120.0, 2.0, 7).expect("named scenario");
+    let reqs: Vec<ShardRequestSpec> = scen
+        .generate()
+        .into_iter()
+        .map(|r| ShardRequestSpec {
+            arrival_s: r.arrival_s,
+            prompt_len: r.prompt_len,
+            gen_len: r.gen_len,
+        })
+        .collect();
+    let n_requests = reqs.len();
+    let plain = modeled_workload(&cfg, reqs, Strategy::Cosine, SWEEP_GROUPS);
+    let base = run_sharded(&plain, 1);
+
+    let mut armed = plain.clone();
+    armed.faults = FaultPlan::new(vec![cosine::coordinator::faults::FaultEvent {
+        at_s: 0.0,
+        node: 0,
+        kind: cosine::coordinator::faults::FaultKind::ReplicaStraggle { factor: 1.0 },
+    }]);
+    let nofault = run_sharded(&armed, 1);
+    let nofault_identical = nofault.engine.schedule_hash == base.engine.schedule_hash
+        && nofault.makespan_s.to_bits() == base.makespan_s.to_bits()
+        && nofault.engine.rounds_cancelled == 0;
+
+    let mut chaotic = plain.clone();
+    chaotic.faults =
+        FaultPlan::named("storm", chaotic.n_nodes, base.makespan_s).expect("named fault plan");
+    let reports: Vec<RunReport> = threads.iter().map(|&t| run_sharded(&chaotic, t)).collect();
+    for r in &reports {
+        print_sharded(r);
+    }
+    let cross_identical = reports.windows(2).all(|p| identical(&p[0], &p[1]));
+    let r = &reports[0];
+    let completed = r.latencies_s.iter().filter(|&&l| l > 0.0).count();
+    let bound = r.engine.faults_injected > 0;
+    println!(
+        "chaos `storm` on `{}`: {} requests, {} faults, {} rounds cancelled, {} tokens re-drafted, catch-up {:.1} ms — nofault_identical={} cross_thread_identical={} completed={}/{}",
+        scen.name,
+        n_requests,
+        r.engine.faults_injected,
+        r.engine.rounds_cancelled,
+        r.engine.redrafted_tokens,
+        r.engine.recovery_catchup_ns as f64 / 1e6,
+        nofault_identical,
+        cross_identical,
+        completed,
+        n_requests,
+    );
+
+    let mut m = BTreeMap::new();
+    m.insert("scenario".to_string(), Json::Str(scen.name.to_string()));
+    m.insert("plan".to_string(), Json::Str("storm".to_string()));
+    m.insert("n_requests".to_string(), Json::Num(n_requests as f64));
+    m.insert("completed".to_string(), Json::Num(completed as f64));
+    m.insert(
+        "faults_injected".to_string(),
+        Json::Num(r.engine.faults_injected as f64),
+    );
+    m.insert(
+        "rounds_cancelled".to_string(),
+        Json::Num(r.engine.rounds_cancelled as f64),
+    );
+    m.insert(
+        "redrafted_tokens".to_string(),
+        Json::Num(r.engine.redrafted_tokens as f64),
+    );
+    m.insert(
+        "recovery_catchup_ms".to_string(),
+        Json::Num(r.engine.recovery_catchup_ns as f64 / 1e6),
+    );
+    m.insert(
+        "nofault_identical".to_string(),
+        Json::Bool(nofault_identical),
+    );
+    for r in &reports {
+        m.insert(format!("t{}", r.engine.n_shards), sharded_json(r));
+    }
+    m.insert("identical".to_string(), Json::Bool(cross_identical));
+    let ok = nofault_identical && cross_identical && completed == n_requests && bound;
+    (Json::Obj(m), ok)
+}
+
 pub fn run(out: &str, smoke: bool, requests: Option<usize>, threads: &[usize]) -> Result<()> {
     let mut spec = if smoke {
         SchedBenchSpec::smoke()
@@ -302,6 +404,10 @@ pub fn run(out: &str, smoke: bool, requests: Option<usize>, threads: &[usize]) -
     // unified serving path: every strategy through the sharded backend
     println!("strategy sweep: all strategies × sharded backend ({SWEEP_GROUPS} groups)");
     let (strategy_rows, strategies_identical) = strategy_sweep(threads);
+
+    // chaos gate: scenario-layer workload under a named fault plan
+    println!("chaos sweep: bursty-mix scenario × `storm` fault plan ({SWEEP_GROUPS} groups)");
+    let (chaos_json, chaos_ok) = chaos_block(threads);
 
     // million-request closed-loop scenario: the allocation-free hot-path
     // gate (>100k events/sec floor at full scale; 120k requests in smoke
@@ -404,8 +510,9 @@ pub fn run(out: &str, smoke: bool, requests: Option<usize>, threads: &[usize]) -
     );
     mega_m.insert("peak_rss_mb".to_string(), Json::Num(peak_rss_mb()));
     let mut m = BTreeMap::new();
-    m.insert("schema".to_string(), Json::Num(5.0));
+    m.insert("schema".to_string(), Json::Num(6.0));
     m.insert("workload".to_string(), Json::Obj(workload));
+    m.insert("chaos".to_string(), chaos_json);
     m.insert("incremental".to_string(), frontier.to_json());
     m.insert("closure".to_string(), closure.to_json());
     m.insert("naive".to_string(), naive.to_json());
@@ -434,6 +541,10 @@ pub fn run(out: &str, smoke: bool, requests: Option<usize>, threads: &[usize]) -
     anyhow::ensure!(
         strategies_identical,
         "a strategy's sharded schedule diverged across thread counts"
+    );
+    anyhow::ensure!(
+        chaos_ok,
+        "chaos gate failed: fault recovery lost requests or perturbed the schedule"
     );
     Ok(())
 }

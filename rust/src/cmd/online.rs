@@ -13,6 +13,7 @@
 //! for all strategies (the tier-1 CI exercise).
 
 use anyhow::Result;
+use cosine::coordinator::faults::FaultPlan;
 use cosine::coordinator::serve::{
     modeled_workload, serve_sharded_swept, shard_workload, Strategy, DEFAULT_SHARD_GROUPS,
 };
@@ -63,8 +64,11 @@ fn print_row(mode: &str, r: &RunReport) {
 
 /// Artifact-free smoke: every strategy through the unified sharded
 /// backend on a tiny synthetic arrival ramp, bit-identity enforced across
-/// the requested thread counts.  This is what tier-1 CI runs.
-fn run_smoke(cfg: &CosineConfig, threads: &[usize]) -> Result<()> {
+/// the requested thread counts.  This is what tier-1 CI runs; with
+/// `--chaos` the same pass injects a deterministic fault plan and the
+/// sweep additionally proves the fault schedule (cancellations, re-routes,
+/// recovery) is bit-identical across thread counts.
+fn run_smoke(cfg: &CosineConfig, threads: &[usize], chaos: Option<&str>) -> Result<()> {
     let reqs: Vec<ShardRequestSpec> = (0..64)
         .map(|i| ShardRequestSpec {
             arrival_s: i as f64 * 1e-2,
@@ -72,19 +76,35 @@ fn run_smoke(cfg: &CosineConfig, threads: &[usize]) -> Result<()> {
             gen_len: 32,
         })
         .collect();
+    let horizon_s = reqs.last().map_or(1.0, |r| r.arrival_s).max(1e-3);
     println!(
-        "online smoke (artifact-free): {} requests, sharded backend, {} groups, threads {:?}",
+        "online smoke (artifact-free): {} requests, sharded backend, {} groups, threads {:?}{}",
         reqs.len(),
         DEFAULT_SHARD_GROUPS,
         threads,
+        chaos.map(|c| format!(", chaos plan `{c}`")).unwrap_or_default(),
     );
     print_header();
+    let (mut faults, mut cancelled, mut redrafted) = (0u64, 0u64, 0u64);
     for s in STRATEGIES {
-        let w = modeled_workload(cfg, reqs.clone(), s, DEFAULT_SHARD_GROUPS);
+        let mut w = modeled_workload(cfg, reqs.clone(), s, DEFAULT_SHARD_GROUPS);
+        if let Some(spec) = chaos {
+            w.faults = FaultPlan::parse(spec, w.n_nodes, horizon_s)?;
+        }
         let r = serve_sharded_swept(&w, threads)?;
+        faults = faults.max(r.engine.faults_injected);
+        cancelled += r.engine.rounds_cancelled;
+        redrafted += r.engine.redrafted_tokens;
         print_row("smoke", &r);
     }
-    println!("all strategies bit-identical across thread counts {threads:?}");
+    match chaos {
+        Some(spec) => println!(
+            "chaos `{spec}`: {faults} fault events, {cancelled} rounds cancelled, \
+             {redrafted} tokens re-drafted — all strategies recovered, bit-identical \
+             across thread counts {threads:?}"
+        ),
+        None => println!("all strategies bit-identical across thread counts {threads:?}"),
+    }
     Ok(())
 }
 
@@ -94,11 +114,21 @@ pub fn run(
     minutes: f64,
     shards: Option<Vec<usize>>,
     smoke: bool,
+    chaos: Option<&str>,
 ) -> Result<()> {
     if smoke {
         let threads = shards.unwrap_or_else(|| vec![1, 2]);
-        return run_smoke(cfg, &threads);
+        return run_smoke(cfg, &threads, chaos);
     }
+    // fault injection lives in the sharded engine; --chaos without
+    // --shards silently serving the classic loop would drop the plan
+    let shards = match (shards, chaos) {
+        (None, Some(_)) => {
+            eprintln!("--chaos serves through the sharded backend; defaulting to --shards 1,2");
+            Some(vec![1, 2])
+        }
+        (s, _) => s,
+    };
 
     let ctx = ServingContext::load(cfg)?;
     let c = ctx.constants().clone();
@@ -126,7 +156,10 @@ pub fn run(
         for strat in STRATEGIES {
             let r = match &shards {
                 Some(threads) => {
-                    let w = shard_workload(&ctx, &trace, strat, DEFAULT_SHARD_GROUPS);
+                    let mut w = shard_workload(&ctx, &trace, strat, DEFAULT_SHARD_GROUPS);
+                    if let Some(spec) = chaos {
+                        w.faults = FaultPlan::parse(spec, w.n_nodes, minutes * 60.0)?;
+                    }
                     serve_sharded_swept(&w, threads)?
                 }
                 None => cosine::bench::run(&ctx, &trace, strat)?,

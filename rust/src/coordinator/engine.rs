@@ -62,6 +62,7 @@ use std::time::Instant;
 use crate::workload::Trace;
 
 use super::context::ServingContext;
+use super::faults::{self, FaultKind};
 use super::fusion::{self, DraftMode};
 use super::metrics::{EngineStats, RunReport};
 use super::pipeline::{ResourcePool, ShardedVerify};
@@ -95,6 +96,15 @@ pub enum EventKind {
     /// drivers of [`EventQueue`] can push it to wake the scheduler at any
     /// chosen virtual time.
     SchedTick,
+    /// a drafter node leaves service (payload: node index) — lowered from
+    /// a `FaultPlan`'s `DrafterDown` schedule.  The engine parks the
+    /// node's pooled candidates (forced-busy) and re-routes them against
+    /// the surviving node set.
+    NodeFail(usize),
+    /// a drafter node returns to service (payload: node index) — the
+    /// counterpart `DrafterUp` lowering; unparks the node's candidates if
+    /// its resource is idle.
+    NodeRecover(usize),
 }
 
 #[derive(Debug, Clone, Copy)]
@@ -346,7 +356,10 @@ pub(crate) fn collect_ready(
         EventKind::VerifyDone(rid) => {
             inflight.take(rid, newly_ready);
         }
-        EventKind::DraftDone(..) | EventKind::SchedTick => {}
+        EventKind::DraftDone(..)
+        | EventKind::SchedTick
+        | EventKind::NodeFail(_)
+        | EventKind::NodeRecover(_) => {}
     }
 }
 
@@ -455,6 +468,37 @@ pub fn run_speculative(
     let mut fed_arena = TokenArena::new();
     let mut fed_scratch: Vec<TokenSpan> = Vec::new();
 
+    // ---- chaos layer state (all of it gated on a non-empty fault plan:
+    // an empty plan adds no events, no predicate calls, and no RNG draws,
+    // so fault-free runs stay bit-identical to a build without the layer).
+    // In this real-compute engine a cancelled round keeps its
+    // (deterministic) token commit and charges the re-draft as a latency
+    // penalty before the members re-surface for re-routing; the sharded
+    // timing engine withholds the commit outright.
+    let chaos = !opts.faults.is_empty();
+    let mut down: Vec<bool> = vec![false; if chaos { n_nodes } else { 0 }];
+    let mut attempts: Vec<u32> = vec![0; if chaos { pool.requests.len() } else { 0 }];
+    let canon_order: Vec<usize> = if chaos { (0..n_nodes).collect() } else { Vec::new() };
+    let mut fault_cands: Vec<Candidate> = Vec::new();
+    let mut fault_flips: Vec<(usize, bool)> = Vec::new();
+    if chaos {
+        stats.faults_injected = opts.faults.len() as u64;
+        if opts.decoupled {
+            // drafter down/up windows become engine events; straggle and
+            // transient faults stay pure virtual-time predicates
+            for ev in opts.faults.events() {
+                if ev.node >= n_nodes {
+                    continue;
+                }
+                match ev.kind {
+                    FaultKind::DrafterDown => queue.push(ev.at_s, EventKind::NodeFail(ev.node)),
+                    FaultKind::DrafterUp => queue.push(ev.at_s, EventKind::NodeRecover(ev.node)),
+                    _ => {}
+                }
+            }
+        }
+    }
+
     for (i, r) in pool.requests.iter().enumerate() {
         queue.push(r.arrival_s, EventKind::Arrival(i));
     }
@@ -462,7 +506,13 @@ pub fn run_speculative(
     while let Some((now, kind)) = queue.pop() {
         stats.events_processed += 1;
         newly_ready.clear();
+        fault_flips.clear();
         collect_ready(kind, &mut inflight, &mut newly_ready);
+        match kind {
+            EventKind::NodeFail(d) => fault_flips.push((d, true)),
+            EventKind::NodeRecover(d) => fault_flips.push((d, false)),
+            _ => {}
+        }
         // Coalesce every event at this timestamp before scheduling, so a
         // batch formed at time t sees all requests ready by t (events
         // carry no deferred state: reservations happen at schedule time).
@@ -471,6 +521,11 @@ pub fn run_speculative(
                 stats.events_processed += 1;
                 stats.events_coalesced += 1;
                 collect_ready(k2, &mut inflight, &mut newly_ready);
+                match k2 {
+                    EventKind::NodeFail(d) => fault_flips.push((d, true)),
+                    EventKind::NodeRecover(d) => fault_flips.push((d, false)),
+                    _ => {}
+                }
             }
         }
 
@@ -481,8 +536,46 @@ pub fn run_speculative(
         if opts.decoupled {
             let t_idx = Instant::now();
             res.drafter_transitions(now, &mut trans);
+            if chaos {
+                // a reservation ending on a down node must not surface its
+                // candidates; the node unparks at its NodeRecover instead
+                trans.retain(|&(d, freed)| !(freed && down[d]));
+            }
             cpool.apply_transitions(&trans);
             stats.index_wall_ns += t_idx.elapsed().as_nanos() as u64;
+        }
+
+        // Fault transitions at this instant, in pop order: a failed node
+        // is forced busy (parking its pooled candidates) and those
+        // candidates re-route against the surviving node set via
+        // canonical, RNG-free substitution — unaffected requests keep
+        // byte-identical placements and RNG streams.  A recovered node is
+        // unparked once its resource is actually idle (a reservation that
+        // outlives the down window frees it later, through the normal
+        // transition above, which is no longer suppressed).
+        for fi in 0..fault_flips.len() {
+            let (d, went_down) = fault_flips[fi];
+            if went_down {
+                down[d] = true;
+                cpool.on_node_busy(d);
+                cpool.live_on_node(d, &mut fault_cands);
+                for ci in 0..fault_cands.len() {
+                    let mut cand = fault_cands[ci];
+                    route_scratch.clear();
+                    route_scratch.extend_from_slice(arena.get(cand.placement));
+                    if faults::substitute_down(&mut route_scratch, &down, &canon_order) {
+                        let pid = arena.intern(&route_scratch);
+                        pool.requests[cand.idx].routed_set = Some(pid);
+                        cand.placement = pid;
+                        cpool.insert(cand, &arena);
+                    }
+                }
+            } else {
+                down[d] = false;
+                if res.drafters[d].free_at <= now + 1e-9 {
+                    cpool.on_node_freed(d);
+                }
+            }
         }
 
         // Resolve placement for the requests that became ready at this
@@ -500,13 +593,22 @@ pub fn run_speculative(
                     continue;
                 }
                 let set_id = if opts.routing {
-                    let set = router.route(r, n_drafters, k_now, &backlog);
+                    // `down` is empty without chaos, so this is exactly
+                    // `route` (same draws) on the fault-free path
+                    let set = router.route_excluding(r, n_drafters, k_now, &backlog, &down);
                     arena.intern(&set)
                 } else if opts.k == 1 {
-                    arena.intern(&[(r.id as usize) % n_drafters])
+                    let mut one = [(r.id as usize) % n_drafters];
+                    if chaos {
+                        faults::substitute_down(&mut one, &down, &canon_order);
+                    }
+                    arena.intern(&one)
                 } else {
                     route_scratch.clear();
                     route_scratch.extend(0..k_now.min(n_drafters));
+                    if chaos {
+                        faults::substitute_down(&mut route_scratch, &down, &canon_order);
+                    }
                     arena.intern(&route_scratch)
                 };
                 r.routed_set = Some(set_id);
@@ -764,6 +866,16 @@ pub fn run_speculative(
                     }
                     t + ctx.network.verify_exchange_s(bs, c.g1)
                 }));
+                if chaos {
+                    // straggling replicas slow every verify shape priced
+                    // while their window is active
+                    let f = opts.faults.verify_factor_at(now);
+                    if f > 1.0 {
+                        for d in durs.iter_mut() {
+                            *d *= f;
+                        }
+                    }
+                }
                 let sv = if opts.sharded_verify {
                     // queue-aware with a *sharp* backlog estimate: chunk
                     // the remaining ready candidates (shortest-first, the
@@ -803,8 +915,40 @@ pub fn run_speculative(
                         shards: 1,
                     }
                 };
-                queue.push(sv.end, EventKind::VerifyDone(round_id));
-                (t_draft, sv.end - sv.start, sv.end, sv.shards)
+                let mut done_at = sv.end;
+                if chaos {
+                    // lazy cancellation: a pure function of the fault plan
+                    // and this round's reserved spans decides whether a
+                    // fault killed it — no heap surgery, bit-identical at
+                    // any execution interleaving
+                    let ds = draft_start.min(draft_end);
+                    let killed = opts.faults.verify_fail_in(sv.start, sv.end)
+                        || per_req.iter().any(|pr| {
+                            arena
+                                .get(pr.set)
+                                .iter()
+                                .any(|&node| opts.faults.kills_draft(node, ds, draft_end))
+                        });
+                    if killed {
+                        let attempt =
+                            assign.batch.iter().map(|&ri| attempts[ri]).max().unwrap_or(0);
+                        for &ri in &assign.batch {
+                            attempts[ri] += 1;
+                        }
+                        let redo = (draft_end - ds) + (sv.end - sv.start);
+                        done_at = sv.end + faults::backoff_s(attempt) + redo;
+                        stats.rounds_cancelled += 1;
+                        stats.redrafted_tokens +=
+                            per_req.iter().map(|p| p.gamma as u64).sum::<u64>();
+                        stats.recovery_catchup_ns += ((done_at - sv.end) * 1e9) as u64;
+                    } else {
+                        for &ri in &assign.batch {
+                            attempts[ri] = 0;
+                        }
+                    }
+                }
+                queue.push(done_at, EventKind::VerifyDone(round_id));
+                (t_draft, sv.end - sv.start, done_at, sv.shards)
             } else {
                 // coupled: batch-level draft + verify back-to-back on one
                 // replica (co-located drafting, the resource-contention
@@ -827,9 +971,36 @@ pub fn run_speculative(
                 if new_prefills > 0 {
                     t_verify += ctx.t_target_prefill_s(new_prefills, c.prompt_len);
                 }
-                let (_, _, v_end) = res.coupled(batch_ready, t_draft, t_verify);
-                queue.push(v_end, EventKind::VerifyDone(round_id));
-                (t_draft, t_verify, v_end, 1usize)
+                if chaos {
+                    let f = opts.faults.verify_factor_at(now);
+                    if f > 1.0 {
+                        t_verify *= f;
+                    }
+                }
+                let (_, c_start, v_end) = res.coupled(batch_ready, t_draft, t_verify);
+                let mut done_at = v_end;
+                if chaos {
+                    // coupled rounds have no drafter-node reservations:
+                    // only transient verify failures can kill them
+                    if opts.faults.verify_fail_in(c_start, v_end) {
+                        let attempt =
+                            assign.batch.iter().map(|&ri| attempts[ri]).max().unwrap_or(0);
+                        for &ri in &assign.batch {
+                            attempts[ri] += 1;
+                        }
+                        done_at = v_end + faults::backoff_s(attempt) + (v_end - c_start);
+                        stats.rounds_cancelled += 1;
+                        stats.redrafted_tokens +=
+                            per_req.iter().map(|p| p.gamma as u64).sum::<u64>();
+                        stats.recovery_catchup_ns += ((done_at - v_end) * 1e9) as u64;
+                    } else {
+                        for &ri in &assign.batch {
+                            attempts[ri] = 0;
+                        }
+                    }
+                }
+                queue.push(done_at, EventKind::VerifyDone(round_id));
+                (t_draft, t_verify, done_at, 1usize)
             };
             if debug_sched {
                 eprintln!(
@@ -892,6 +1063,9 @@ pub fn run_speculative(
             if opts.decoupled {
                 let t_idx = Instant::now();
                 res.drafter_transitions(now, &mut trans);
+                if chaos {
+                    trans.retain(|&(d, freed)| !(freed && down[d]));
+                }
                 cpool.apply_transitions(&trans);
                 stats.index_wall_ns += t_idx.elapsed().as_nanos() as u64;
             }
@@ -907,13 +1081,22 @@ pub fn run_speculative(
         // prod the scheduler when the earliest busy resource frees instead
         // of letting the run exit with unfinished requests.
         if queue.is_empty() && unfinished > 0 && !cpool.is_empty() {
-            let free_t = res
+            let mut free_t = res
                 .drafters
                 .iter()
                 .chain(res.verifiers.iter())
                 .map(|r| r.free_at)
                 .filter(|&t| t > now + 1e-9)
                 .fold(f64::INFINITY, f64::min);
+            if chaos {
+                // also wake at the next fault-plan instant: candidates
+                // parked on a down node have no resource wake-up, so
+                // without this a NodeRecover with an otherwise-idle queue
+                // would strand them until the next arrival
+                if let Some(t) = opts.faults.next_change_after(now + 1e-9) {
+                    free_t = free_t.min(t);
+                }
+            }
             if free_t.is_finite() {
                 queue.push(free_t, EventKind::SchedTick);
                 stats.sched_ticks += 1;
@@ -952,6 +1135,67 @@ pub fn run_speculative(
         (pjrt1 - pjrt0) as f64 / 1e9,
         stats,
     ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn admitted(gate: &mut ArrivalGate) -> Vec<usize> {
+        let mut out = Vec::new();
+        gate.top_up(|i| out.push(i));
+        out
+    }
+
+    #[test]
+    fn gate_cap_at_least_trace_length_admits_everything_at_once() {
+        let mut g = ArrivalGate::new(10, 0, 1, 5);
+        assert_eq!(admitted(&mut g), vec![0, 1, 2, 3, 4]);
+        assert_eq!(admitted(&mut g), Vec::<usize>::new(), "nothing left");
+        for _ in 0..5 {
+            g.retire();
+        }
+        assert_eq!(admitted(&mut g), Vec::<usize>::new(), "trace exhausted");
+    }
+
+    #[test]
+    fn gate_cap_one_serializes_admission() {
+        let mut g = ArrivalGate::new(1, 0, 1, 3);
+        assert_eq!(admitted(&mut g), vec![0]);
+        assert_eq!(admitted(&mut g), Vec::<usize>::new(), "slot occupied");
+        g.retire();
+        assert_eq!(admitted(&mut g), vec![1]);
+        g.retire();
+        assert_eq!(admitted(&mut g), vec![2]);
+        g.retire();
+        assert_eq!(admitted(&mut g), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn gate_zero_request_trace_is_a_no_op() {
+        let mut g = ArrivalGate::new(4, 0, 1, 0);
+        assert_eq!(admitted(&mut g), Vec::<usize>::new());
+        assert_eq!(admitted(&mut g), Vec::<usize>::new(), "idempotent");
+    }
+
+    #[test]
+    fn gate_zero_cap_is_clamped_to_one() {
+        let mut g = ArrivalGate::new(0, 0, 1, 2);
+        assert_eq!(admitted(&mut g), vec![0], "cap clamps to 1, not 0");
+        g.retire();
+        assert_eq!(admitted(&mut g), vec![1]);
+    }
+
+    #[test]
+    fn gate_stride_owns_only_its_congruence_class() {
+        let mut g = ArrivalGate::new(2, 1, 3, 10);
+        assert_eq!(admitted(&mut g), vec![1, 4]);
+        g.retire();
+        assert_eq!(admitted(&mut g), vec![7]);
+        g.retire();
+        g.retire();
+        assert_eq!(admitted(&mut g), Vec::<usize>::new(), "10 is out of range");
+    }
 }
 
 /// vLLM-style continuous batching (no speculation) on the same event

@@ -1,0 +1,617 @@
+//! Deterministic fault injection for the serving engine (the chaos layer).
+//!
+//! A [`FaultPlan`] is a virtual-time schedule of node-level faults that is
+//! lowered into engine events (`NodeFail`/`NodeRecover`) and into pure
+//! predicates consulted by the dispatch/commit paths:
+//!
+//! * `DrafterDown` / `DrafterUp` — a drafter node leaves and rejoins the
+//!   serving set.  While down, the router excludes the node from Eq. 3
+//!   scoring (via post-pick substitution, so the RNG draw sequence — and
+//!   therefore the placement of every *unaffected* request — is unchanged),
+//!   pooled candidates placed on the node are re-routed against the
+//!   survivors, and in-flight rounds whose draft window straddles the
+//!   failure instant are cancelled and re-drafted.
+//! * `ReplicaStraggle { factor }` / `ReplicaRestore` — a verifier replica
+//!   slows down; every verify duration priced while the straggle window is
+//!   active is multiplied by the largest active factor.
+//! * `DraftFail` / `VerifyFail` — transient point failures: a round whose
+//!   draft (resp. verify) span covers the instant is cancelled and retried
+//!   with bounded, deterministic virtual-time backoff ([`backoff_s`]).
+//!
+//! Everything here is a pure function of virtual time, so fault runs stay
+//! bit-identical across sharded worker-thread counts, and the empty plan is
+//! bit-identical to a run without the chaos layer (all call sites gate on
+//! [`FaultPlan::is_empty`]).
+//!
+//! Cancellation semantics differ slightly per backend: the sharded timing
+//! engine withholds the round's token commit and re-dispatches the members
+//! after the backoff (a true re-draft), while the classic engine — which
+//! commits real PJRT compute at dispatch time — keeps the (deterministic)
+//! token content and charges the redo as a latency penalty before the
+//! members re-surface for re-routing.  Both account the damage through the
+//! same `EngineStats` counters.
+
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+/// One scheduled fault.  `node` is a drafter index for the drafter/draft
+/// kinds and a verifier-replica index for the replica/verify kinds.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FaultKind {
+    DrafterDown,
+    DrafterUp,
+    ReplicaStraggle { factor: f64 },
+    ReplicaRestore,
+    DraftFail,
+    VerifyFail,
+}
+
+impl FaultKind {
+    fn tag(&self) -> &'static str {
+        match self {
+            FaultKind::DrafterDown => "drafter-down",
+            FaultKind::DrafterUp => "drafter-up",
+            FaultKind::ReplicaStraggle { .. } => "replica-straggle",
+            FaultKind::ReplicaRestore => "replica-restore",
+            FaultKind::DraftFail => "draft-fail",
+            FaultKind::VerifyFail => "verify-fail",
+        }
+    }
+
+    /// Same-instant tie-break: recoveries sort before failures so a
+    /// zero-length gap never strands a node, and the order is total so the
+    /// normalized plan is unique.
+    fn order(&self) -> u8 {
+        match self {
+            FaultKind::DrafterUp => 0,
+            FaultKind::ReplicaRestore => 1,
+            FaultKind::DrafterDown => 2,
+            FaultKind::ReplicaStraggle { .. } => 3,
+            FaultKind::DraftFail => 4,
+            FaultKind::VerifyFail => 5,
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultEvent {
+    pub at_s: f64,
+    pub node: usize,
+    pub kind: FaultKind,
+}
+
+/// A normalized (time-sorted) schedule of fault events.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FaultPlan {
+    events: Vec<FaultEvent>,
+}
+
+/// Deterministic virtual-time retry backoff for cancelled rounds:
+/// 2 ms doubling per attempt, capped at 64 ms.
+pub fn backoff_s(attempt: u32) -> f64 {
+    2e-3 * f64::from(1u32 << attempt.min(5))
+}
+
+/// Replace the down members of `set` in place with surviving substitutes
+/// drawn from `order` (first node that is up and not already in the set).
+/// Members with no available substitute are left as-is — the caller parks
+/// the request until a node recovers.  Returns whether the set changed.
+/// No RNG is consumed, so unaffected placements stay byte-identical.
+pub fn substitute_down(set: &mut [usize], down: &[bool], order: &[usize]) -> bool {
+    let mut changed = false;
+    for i in 0..set.len() {
+        if !down.get(set[i]).copied().unwrap_or(false) {
+            continue;
+        }
+        let sub = order
+            .iter()
+            .copied()
+            .find(|&d| !down.get(d).copied().unwrap_or(false) && !set.contains(&d));
+        if let Some(d) = sub {
+            set[i] = d;
+            changed = true;
+        }
+    }
+    changed
+}
+
+impl FaultPlan {
+    /// Build a plan from events, normalizing to the canonical total order
+    /// (time, recovery-before-failure, node).
+    pub fn new(mut events: Vec<FaultEvent>) -> FaultPlan {
+        events.sort_by(|a, b| {
+            a.at_s
+                .total_cmp(&b.at_s)
+                .then_with(|| a.kind.order().cmp(&b.kind.order()))
+                .then_with(|| a.node.cmp(&b.node))
+        });
+        FaultPlan { events }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn events(&self) -> &[FaultEvent] {
+        &self.events
+    }
+
+    /// Liveness/shape checks: finite non-negative times, drafter indices in
+    /// range, straggle factors >= 1, and every `DrafterDown` closed by a
+    /// strictly later `DrafterUp` for the same node (an unclosed window
+    /// could park requests forever).
+    pub fn validate(&self, n_drafters: usize) -> Result<()> {
+        for ev in &self.events {
+            if !ev.at_s.is_finite() || ev.at_s < 0.0 {
+                bail!("fault event time {} is not finite and >= 0", ev.at_s);
+            }
+            match ev.kind {
+                FaultKind::DrafterDown | FaultKind::DrafterUp | FaultKind::DraftFail => {
+                    if ev.node >= n_drafters {
+                        bail!(
+                            "fault event targets drafter {} but the cluster has {}",
+                            ev.node,
+                            n_drafters
+                        );
+                    }
+                }
+                FaultKind::ReplicaStraggle { factor } => {
+                    if !factor.is_finite() || factor < 1.0 {
+                        bail!("straggle factor {factor} must be finite and >= 1");
+                    }
+                }
+                FaultKind::ReplicaRestore | FaultKind::VerifyFail => {}
+            }
+        }
+        for (i, ev) in self.events.iter().enumerate() {
+            if ev.kind == FaultKind::DrafterDown {
+                let closed = self.events[i + 1..].iter().any(|e| {
+                    e.node == ev.node && e.kind == FaultKind::DrafterUp && e.at_s > ev.at_s
+                });
+                if !closed {
+                    bail!(
+                        "drafter {} goes down at {} and never recovers (unclosed window)",
+                        ev.node,
+                        ev.at_s
+                    );
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Is drafter `node` out of service at virtual time `t`?  The last
+    /// down/up event at or before `t` wins.
+    pub fn drafter_down_at(&self, node: usize, t: f64) -> bool {
+        let mut down = false;
+        for ev in &self.events {
+            if ev.at_s > t {
+                break;
+            }
+            if ev.node == node {
+                match ev.kind {
+                    FaultKind::DrafterDown => down = true,
+                    FaultKind::DrafterUp => down = false,
+                    _ => {}
+                }
+            }
+        }
+        down
+    }
+
+    /// Does a draft reservation on `node` spanning `(t0, t1]` get killed —
+    /// either by the node failing mid-draft or by a transient `DraftFail`
+    /// landing inside the span?  (A node that is already down at `t0` also
+    /// kills, though routing exclusion normally prevents that dispatch.)
+    pub fn kills_draft(&self, node: usize, t0: f64, t1: f64) -> bool {
+        if self.drafter_down_at(node, t0) {
+            return true;
+        }
+        self.events.iter().any(|ev| {
+            ev.node == node
+                && ev.at_s > t0
+                && ev.at_s <= t1
+                && matches!(ev.kind, FaultKind::DrafterDown | FaultKind::DraftFail)
+        })
+    }
+
+    /// Does a transient `VerifyFail` land inside the verify span `(t0, t1]`?
+    pub fn verify_fail_in(&self, t0: f64, t1: f64) -> bool {
+        self.events
+            .iter()
+            .any(|ev| ev.kind == FaultKind::VerifyFail && ev.at_s > t0 && ev.at_s <= t1)
+    }
+
+    /// Verify-duration multiplier at virtual time `t`: the largest factor
+    /// among replicas with an active straggle window, 1.0 when none.
+    pub fn verify_factor_at(&self, t: f64) -> f64 {
+        let mut active: Vec<(usize, f64)> = Vec::new();
+        for ev in &self.events {
+            if ev.at_s > t {
+                break;
+            }
+            match ev.kind {
+                FaultKind::ReplicaStraggle { factor } => {
+                    match active.iter_mut().find(|(n, _)| *n == ev.node) {
+                        Some(slot) => slot.1 = factor,
+                        None => active.push((ev.node, factor)),
+                    }
+                }
+                FaultKind::ReplicaRestore => active.retain(|(n, _)| *n != ev.node),
+                _ => {}
+            }
+        }
+        active.iter().fold(1.0, |acc, &(_, f)| acc.max(f))
+    }
+
+    /// First scheduled fault instant strictly after `t` — the extra wake
+    /// time the `SchedTick` net arms so a recovery with an otherwise-idle
+    /// queue is not stranded until the next arrival.
+    pub fn next_change_after(&self, t: f64) -> Option<f64> {
+        self.events.iter().map(|e| e.at_s).find(|&at| at > t)
+    }
+
+    /// A named plan, parameterized on the cluster size and the workload
+    /// horizon so the same name stresses both smoke and full-scale runs.
+    pub fn named(name: &str, n_drafters: usize, horizon_s: f64) -> Option<FaultPlan> {
+        let h = horizon_s.max(1e-3);
+        let n = n_drafters.max(1);
+        let mut ev = Vec::new();
+        let mut down = |node: usize, a: f64, b: f64, ev: &mut Vec<FaultEvent>| {
+            ev.push(FaultEvent {
+                at_s: a * h,
+                node,
+                kind: FaultKind::DrafterDown,
+            });
+            ev.push(FaultEvent {
+                at_s: b * h,
+                node,
+                kind: FaultKind::DrafterUp,
+            });
+        };
+        match name {
+            "drafter-loss" => {
+                down(0, 0.2, 0.6, &mut ev);
+                if n >= 2 {
+                    down(1, 0.35, 0.7, &mut ev);
+                }
+            }
+            "straggler" => {
+                ev.push(FaultEvent {
+                    at_s: 0.25 * h,
+                    node: 0,
+                    kind: FaultKind::ReplicaStraggle { factor: 3.0 },
+                });
+                ev.push(FaultEvent {
+                    at_s: 0.75 * h,
+                    node: 0,
+                    kind: FaultKind::ReplicaRestore,
+                });
+            }
+            "transient" => {
+                ev.push(FaultEvent {
+                    at_s: 0.3 * h,
+                    node: 0,
+                    kind: FaultKind::DraftFail,
+                });
+                ev.push(FaultEvent {
+                    at_s: 0.5 * h,
+                    node: 0,
+                    kind: FaultKind::VerifyFail,
+                });
+                ev.push(FaultEvent {
+                    at_s: 0.6 * h,
+                    node: n - 1,
+                    kind: FaultKind::DraftFail,
+                });
+            }
+            "storm" => {
+                down(0, 0.15, 0.45, &mut ev);
+                if n >= 3 {
+                    down(2, 0.3, 0.65, &mut ev);
+                }
+                ev.push(FaultEvent {
+                    at_s: 0.2 * h,
+                    node: 0,
+                    kind: FaultKind::ReplicaStraggle { factor: 2.5 },
+                });
+                ev.push(FaultEvent {
+                    at_s: 0.7 * h,
+                    node: 0,
+                    kind: FaultKind::ReplicaRestore,
+                });
+                ev.push(FaultEvent {
+                    at_s: 0.4 * h,
+                    node: n / 2,
+                    kind: FaultKind::DraftFail,
+                });
+                ev.push(FaultEvent {
+                    at_s: 0.55 * h,
+                    node: 0,
+                    kind: FaultKind::VerifyFail,
+                });
+            }
+            _ => return None,
+        }
+        Some(FaultPlan::new(ev))
+    }
+
+    /// Resolve a `--chaos <plan>` spec: a named plan, or a path to a fault
+    /// plan JSON file.  Validates against the drafter count either way.
+    pub fn parse(spec: &str, n_drafters: usize, horizon_s: f64) -> Result<FaultPlan> {
+        let plan = match FaultPlan::named(spec, n_drafters, horizon_s) {
+            Some(p) => p,
+            None => {
+                let text = std::fs::read_to_string(spec).with_context(|| {
+                    format!("--chaos {spec}: not a named plan and not a readable file")
+                })?;
+                let json = Json::parse(&text).with_context(|| format!("parsing {spec}"))?;
+                FaultPlan::from_json(&json).with_context(|| format!("decoding {spec}"))?
+            }
+        };
+        plan.validate(n_drafters)?;
+        Ok(plan)
+    }
+
+    /// Decode `{"events": [{"at_s": .., "node": .., "kind": "drafter-down",
+    /// "factor": ..}, ..]}`.
+    pub fn from_json(json: &Json) -> Result<FaultPlan> {
+        let mut events = Vec::new();
+        for (i, ev) in json.req("events")?.as_arr()?.iter().enumerate() {
+            let at_s = ev.req("at_s")?.as_f64()?;
+            let node = ev.req("node")?.as_usize()?;
+            let kind = match ev.req("kind")?.as_str()? {
+                "drafter-down" => FaultKind::DrafterDown,
+                "drafter-up" => FaultKind::DrafterUp,
+                "replica-straggle" => FaultKind::ReplicaStraggle {
+                    factor: ev.req("factor")?.as_f64()?,
+                },
+                "replica-restore" => FaultKind::ReplicaRestore,
+                "draft-fail" => FaultKind::DraftFail,
+                "verify-fail" => FaultKind::VerifyFail,
+                other => bail!("event {i}: unknown fault kind {other:?}"),
+            };
+            events.push(FaultEvent { at_s, node, kind });
+        }
+        Ok(FaultPlan::new(events))
+    }
+
+    pub fn to_json(&self) -> Json {
+        let events = self
+            .events
+            .iter()
+            .map(|ev| {
+                let mut m = BTreeMap::new();
+                m.insert("at_s".to_string(), Json::Num(ev.at_s));
+                m.insert("node".to_string(), Json::Num(ev.node as f64));
+                m.insert("kind".to_string(), Json::Str(ev.kind.tag().to_string()));
+                if let FaultKind::ReplicaStraggle { factor } = ev.kind {
+                    m.insert("factor".to_string(), Json::Num(factor));
+                }
+                Json::Obj(m)
+            })
+            .collect();
+        let mut top = BTreeMap::new();
+        top.insert("events".to_string(), Json::Arr(events));
+        Json::Obj(top)
+    }
+
+    /// A random but always-valid plan for property tests: every down window
+    /// closes inside the horizon (liveness), factors in [1.5, 4], and a
+    /// sprinkle of transient point failures.
+    pub fn random(rng: &mut Rng, n_drafters: usize, horizon_s: f64) -> FaultPlan {
+        let h = horizon_s.max(1e-3);
+        let n = n_drafters.max(1);
+        let mut ev = Vec::new();
+        for _ in 0..rng.usize(3) + 1 {
+            let node = rng.usize(n);
+            let a = rng.f64() * 0.7 * h;
+            let b = a + (0.05 + rng.f64() * 0.25) * h;
+            ev.push(FaultEvent {
+                at_s: a,
+                node,
+                kind: FaultKind::DrafterDown,
+            });
+            ev.push(FaultEvent {
+                at_s: b,
+                node,
+                kind: FaultKind::DrafterUp,
+            });
+        }
+        for _ in 0..rng.usize(2) {
+            let node = rng.usize(4);
+            let a = rng.f64() * 0.6 * h;
+            ev.push(FaultEvent {
+                at_s: a,
+                node,
+                kind: FaultKind::ReplicaStraggle {
+                    factor: 1.5 + rng.f64() * 2.5,
+                },
+            });
+            ev.push(FaultEvent {
+                at_s: a + (0.1 + rng.f64() * 0.3) * h,
+                node,
+                kind: FaultKind::ReplicaRestore,
+            });
+        }
+        for _ in 0..rng.usize(3) {
+            let kind = if rng.bool(0.5) {
+                FaultKind::DraftFail
+            } else {
+                FaultKind::VerifyFail
+            };
+            ev.push(FaultEvent {
+                at_s: rng.f64() * h,
+                node: rng.usize(n),
+                kind,
+            });
+        }
+        FaultPlan::new(ev)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn plan(events: Vec<FaultEvent>) -> FaultPlan {
+        FaultPlan::new(events)
+    }
+
+    #[test]
+    fn down_window_state_machine() {
+        let p = plan(vec![
+            FaultEvent {
+                at_s: 1.0,
+                node: 0,
+                kind: FaultKind::DrafterDown,
+            },
+            FaultEvent {
+                at_s: 2.0,
+                node: 0,
+                kind: FaultKind::DrafterUp,
+            },
+        ]);
+        assert!(!p.drafter_down_at(0, 0.5));
+        assert!(p.drafter_down_at(0, 1.0));
+        assert!(p.drafter_down_at(0, 1.5));
+        assert!(!p.drafter_down_at(0, 2.0));
+        assert!(!p.drafter_down_at(1, 1.5), "other nodes unaffected");
+        assert!(p.kills_draft(0, 0.5, 1.5), "failure lands mid-draft");
+        assert!(!p.kills_draft(0, 2.5, 3.0));
+        assert_eq!(p.next_change_after(0.0), Some(1.0));
+        assert_eq!(p.next_change_after(1.0), Some(2.0));
+        assert_eq!(p.next_change_after(2.0), None);
+    }
+
+    #[test]
+    fn straggle_factor_is_max_of_active_windows() {
+        let p = plan(vec![
+            FaultEvent {
+                at_s: 1.0,
+                node: 0,
+                kind: FaultKind::ReplicaStraggle { factor: 2.0 },
+            },
+            FaultEvent {
+                at_s: 2.0,
+                node: 1,
+                kind: FaultKind::ReplicaStraggle { factor: 3.0 },
+            },
+            FaultEvent {
+                at_s: 3.0,
+                node: 1,
+                kind: FaultKind::ReplicaRestore,
+            },
+        ]);
+        assert_eq!(p.verify_factor_at(0.5), 1.0);
+        assert_eq!(p.verify_factor_at(1.5), 2.0);
+        assert_eq!(p.verify_factor_at(2.5), 3.0);
+        assert_eq!(p.verify_factor_at(3.5), 2.0);
+    }
+
+    #[test]
+    fn transient_points_kill_only_covering_spans() {
+        let p = plan(vec![
+            FaultEvent {
+                at_s: 1.0,
+                node: 2,
+                kind: FaultKind::DraftFail,
+            },
+            FaultEvent {
+                at_s: 5.0,
+                node: 0,
+                kind: FaultKind::VerifyFail,
+            },
+        ]);
+        assert!(p.kills_draft(2, 0.5, 1.5));
+        assert!(!p.kills_draft(1, 0.5, 1.5), "wrong node");
+        assert!(!p.kills_draft(2, 1.5, 2.0), "span after the point");
+        assert!(p.verify_fail_in(4.0, 5.0));
+        assert!(!p.verify_fail_in(5.0, 6.0), "span is (t0, t1]");
+    }
+
+    #[test]
+    fn named_plans_resolve_and_validate() {
+        for name in ["drafter-loss", "straggler", "transient", "storm"] {
+            let p = FaultPlan::named(name, 6, 1.0).expect(name);
+            assert!(!p.is_empty(), "{name} is non-empty");
+            p.validate(6).expect(name);
+        }
+        assert!(FaultPlan::named("nope", 6, 1.0).is_none());
+    }
+
+    #[test]
+    fn validate_rejects_unclosed_windows_and_bad_targets() {
+        let unclosed = plan(vec![FaultEvent {
+            at_s: 1.0,
+            node: 0,
+            kind: FaultKind::DrafterDown,
+        }]);
+        assert!(unclosed.validate(4).is_err());
+        let oob = plan(vec![
+            FaultEvent {
+                at_s: 1.0,
+                node: 9,
+                kind: FaultKind::DrafterDown,
+            },
+            FaultEvent {
+                at_s: 2.0,
+                node: 9,
+                kind: FaultKind::DrafterUp,
+            },
+        ]);
+        assert!(oob.validate(4).is_err());
+        let weak = plan(vec![FaultEvent {
+            at_s: 1.0,
+            node: 0,
+            kind: FaultKind::ReplicaStraggle { factor: 0.5 },
+        }]);
+        assert!(weak.validate(4).is_err());
+    }
+
+    #[test]
+    fn json_round_trip() {
+        let p = FaultPlan::named("storm", 6, 2.0).unwrap();
+        let back = FaultPlan::from_json(&p.to_json()).unwrap();
+        assert_eq!(p, back);
+    }
+
+    #[test]
+    fn random_plans_are_valid() {
+        for seed in 0..64 {
+            let mut rng = Rng::seed_from_u64(0xFA17 ^ seed);
+            let p = FaultPlan::random(&mut rng, 6, 1.0);
+            p.validate(6).unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+        }
+    }
+
+    #[test]
+    fn substitution_is_canonical_and_leaves_up_nodes_alone() {
+        let down = vec![false, true, false, true];
+        let order = vec![0, 1, 2, 3];
+        let mut set = vec![1, 2];
+        assert!(substitute_down(&mut set, &down, &order));
+        assert_eq!(set, vec![0, 2], "down member replaced by first survivor");
+        let mut set2 = vec![0, 2];
+        assert!(!substitute_down(&mut set2, &down, &order));
+        assert_eq!(set2, vec![0, 2], "untouched when nothing is down");
+        let all_down = vec![true; 2];
+        let mut set3 = vec![0, 1];
+        assert!(!substitute_down(&mut set3, &all_down, &[0, 1]));
+        assert_eq!(set3, vec![0, 1], "no survivor: parked as-is");
+    }
+
+    #[test]
+    fn backoff_is_bounded() {
+        assert!(backoff_s(0) < backoff_s(1));
+        assert_eq!(backoff_s(5), backoff_s(9), "capped after five doublings");
+        assert!(backoff_s(30) <= 0.064 + 1e-12);
+    }
+}

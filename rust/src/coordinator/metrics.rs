@@ -57,6 +57,15 @@ pub struct EngineStats {
     /// rounds, events, per-shard events) — one number to compare runs
     /// by.  0 when the backend does not compute one (the classic loop).
     pub schedule_hash: u64,
+    /// fault-plan events lowered into the run (0 without `--chaos`)
+    pub faults_injected: u64,
+    /// verify rounds cancelled by a fault and retried
+    pub rounds_cancelled: u64,
+    /// draft tokens whose rounds were cancelled and had to be re-drafted
+    pub redrafted_tokens: u64,
+    /// virtual nanoseconds of recovery catch-up charged to cancelled
+    /// rounds (backoff + redo), summed per round
+    pub recovery_catchup_ns: u64,
 }
 
 #[derive(Debug, Clone, Default)]
@@ -348,7 +357,7 @@ impl RunReport {
     }
 
     pub fn summary_row(&self) -> String {
-        format!(
+        let mut row = format!(
             "{:<10} pair={} n={:<3} tok={:<6} lat={:>8.1} ms/tok thr={:>8.1} tok/s acc={:>4.2} cost/tok=${:.6} idle(srv)={:.0}% qwait={:.2}s shards={:.2} sched={:.0}ns/ev elig={:.1}/ev idx={:.0}ns/ev eng={}x xmsg={} stall={:.1}ms wall={:.1}s",
             self.strategy,
             self.pair,
@@ -368,6 +377,16 @@ impl RunReport {
             self.engine.cross_shard_msgs,
             self.merge_stall_ms(),
             self.wall_s,
-        )
+        );
+        if self.engine.faults_injected > 0 {
+            row.push_str(&format!(
+                " faults={} cancelled={} redraft={} catchup={:.1}ms",
+                self.engine.faults_injected,
+                self.engine.rounds_cancelled,
+                self.engine.redrafted_tokens,
+                self.engine.recovery_catchup_ns as f64 / 1e6,
+            ));
+        }
+        row
     }
 }

@@ -25,6 +25,7 @@
 
 pub mod context;
 pub mod engine;
+pub mod faults;
 pub mod fusion;
 pub mod metrics;
 pub mod pipeline;

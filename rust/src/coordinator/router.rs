@@ -145,10 +145,41 @@ impl Router {
         k: usize,
         load: &[f64],
     ) -> Vec<usize> {
+        self.route_excluding(req, n_drafters, k, load, &[])
+    }
+
+    /// [`Router::route`] with failed nodes excluded (the chaos layer's
+    /// Eq. 3 exclusion).  `down[d]` marks drafter `d` out of service; an
+    /// empty slice means no exclusions.
+    ///
+    /// The selection runs exactly as in the healthy case — same candidate
+    /// ranking, same RNG draw sequence — and down nodes are then replaced
+    /// *post-pick* by the best-scoring surviving node not already chosen.
+    /// Because every pick consumes the same draws either way, a request
+    /// whose healthy placement never touched the down node keeps a
+    /// byte-identical placement (seed-stable exclusion); only affected
+    /// requests change, and only in the slots that pointed at a down node.
+    /// With no survivor left the down pick is kept — the engine parks such
+    /// requests until a node recovers.
+    pub fn route_excluding(
+        &mut self,
+        req: &Request,
+        n_drafters: usize,
+        k: usize,
+        load: &[f64],
+        down: &[bool],
+    ) -> Vec<usize> {
         let k = k.min(n_drafters);
+        let is_down = |d: usize| down.get(d).copied().unwrap_or(false);
         if !self.cfg.enabled {
-            // ablation: uniform random assignment
-            return self.random_subset(n_drafters, k);
+            // ablation: uniform random assignment (down nodes substituted
+            // canonically, lowest surviving index first)
+            let mut chosen = self.random_subset(n_drafters, k);
+            if down.iter().any(|&b| b) {
+                let order: Vec<usize> = (0..n_drafters).collect();
+                super::faults::substitute_down(&mut chosen, down, &order);
+            }
+            return chosen;
         }
         let greedy_p = if req.l_acc < self.cfg.tau {
             self.cfg.alpha // explore: mostly random
@@ -173,6 +204,22 @@ impl Router {
                 self.rng.usize(remaining.len()) // R(M_r)
             };
             chosen.push(remaining.remove(idx));
+        }
+        if down.iter().any(|&b| b) {
+            // Post-pick substitution: replace down picks with the best
+            // surviving non-picked node in score order.  No RNG touched.
+            for i in 0..chosen.len() {
+                if !is_down(chosen[i]) {
+                    continue;
+                }
+                let sub = remaining
+                    .iter()
+                    .copied()
+                    .find(|&d| !is_down(d) && !chosen.contains(&d));
+                if let Some(d) = sub {
+                    chosen[i] = d;
+                }
+            }
         }
         chosen
     }

@@ -670,6 +670,25 @@ impl CandidatePool {
         self.node_index[d] = entries;
     }
 
+    /// Collect the live candidates currently placed on node `d` into
+    /// `out` (cleared first).  Same generation-filtered walk as the
+    /// busy/free flips, but read-only: stale index entries are skipped,
+    /// not reaped.  The chaos layer uses this to re-route a failed node's
+    /// pooled candidates against the survivors.
+    pub fn live_on_node(&self, d: usize, out: &mut Vec<Candidate>) {
+        out.clear();
+        if d >= self.n_nodes {
+            return;
+        }
+        for e in &self.node_index[d] {
+            if let Some(Some(s)) = self.slots.get(e.idx as usize) {
+                if s.gen == e.gen {
+                    out.push(s.cand);
+                }
+            }
+        }
+    }
+
     /// Node `d` became busy: the candidates placed on it leave the
     /// eligible frontier (when this was their last free node dependency).
     pub fn on_node_busy(&mut self, d: usize) {

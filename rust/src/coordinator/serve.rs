@@ -44,6 +44,7 @@ use crate::workload::Trace;
 
 use super::context::ServingContext;
 use super::engine;
+use super::faults::FaultPlan;
 use super::metrics::RunReport;
 use super::router::EmbedSim;
 use super::scheduler::SchedCostModel;
@@ -120,6 +121,7 @@ impl Strategy {
                 lp_batching: false,
                 tree: false,
                 sharded_verify: false,
+                faults: FaultPlan::default(),
             },
         }
     }
@@ -334,6 +336,7 @@ fn workload_with_cost(
         // live traces are open-loop: admission control is the client's
         // job, the engine sees every arrival as specified
         max_backlog: None,
+        faults: FaultPlan::default(),
     }
 }
 
@@ -389,6 +392,9 @@ pub struct StrategyOpts {
     /// data-parallel sharding of a verify round across the replicas free
     /// at its ready time (decoupled strategies only; ablation switch)
     pub sharded_verify: bool,
+    /// deterministic fault-injection schedule (chaos layer); empty = the
+    /// healthy run, bit-identical to a build without the chaos code
+    pub faults: FaultPlan,
 }
 
 impl StrategyOpts {
@@ -403,6 +409,7 @@ impl StrategyOpts {
             lp_batching: true,
             tree: false,
             sharded_verify: true,
+            faults: FaultPlan::default(),
         }
     }
 
@@ -417,6 +424,7 @@ impl StrategyOpts {
             lp_batching: false,
             tree: false,
             sharded_verify: false,
+            faults: FaultPlan::default(),
         }
     }
 
@@ -431,6 +439,7 @@ impl StrategyOpts {
             lp_batching: false,
             tree: false,
             sharded_verify: true,
+            faults: FaultPlan::default(),
         }
     }
 
@@ -445,6 +454,7 @@ impl StrategyOpts {
             lp_batching: false,
             tree: true,
             sharded_verify: false,
+            faults: FaultPlan::default(),
         }
     }
 }

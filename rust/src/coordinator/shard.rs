@@ -108,6 +108,7 @@ use crate::config::SchedulerConfig;
 use crate::coordinator::engine::{
     chunk_pending_rounds, collect_ready, ArrivalGate, EventKind, EventQueue, InflightRounds,
 };
+use crate::coordinator::faults::{self, FaultKind, FaultPlan};
 use crate::coordinator::metrics::{EngineStats, RunReport};
 use crate::coordinator::pipeline::{ResourcePool, ShardedVerify};
 use crate::coordinator::scheduler::{
@@ -199,6 +200,11 @@ pub struct ShardWorkload {
     /// changing it changes the schedule; the thread count still never
     /// does.
     pub max_backlog: Option<usize>,
+    /// deterministic fault-injection schedule (chaos layer).  Part of the
+    /// modeled workload: an empty plan is bit-identical to a healthy run,
+    /// and any plan is bit-identical across thread counts — fault events
+    /// are shard-local (seeded per group at init), never hub traffic.
+    pub faults: FaultPlan,
 }
 
 impl ShardWorkload {
@@ -441,8 +447,16 @@ struct Outstanding {
     /// drawn from (or above) the menu, so the bound is sound — and
     /// strictly tighter than the bare readiness the gate used before,
     /// which lets a shard keep draining local instants instead of
-    /// stalling on the hub.
+    /// stalling on the hub.  A killed round's retry lands strictly after
+    /// its verify end, so the bound also covers the chaos path.
     lower: f64,
+    /// chaos bookkeeping (meaningful only under a non-empty fault plan):
+    /// the round's draft reservation window, the drafter nodes it spans
+    /// (empty for co-located strategies), and the drafts it proposed.
+    draft_start: f64,
+    draft_end: f64,
+    nodes: Vec<usize>,
+    proposed: u64,
 }
 
 /// One planned round about to cross to the hub: when its verification
@@ -453,6 +467,14 @@ struct Planned {
     proposed: u64,
     ready: f64,
     durs: Vec<f64>,
+    /// draft reservation window for the chaos kill check (degenerate —
+    /// `0.0..0.0` with no nodes — for co-located strategies, whose only
+    /// fault exposure is `VerifyFail` over the verify span)
+    draft_start: f64,
+    draft_end: f64,
+    /// participating drafter nodes (deduped; empty unless a fault plan
+    /// is active and the strategy reserves drafters)
+    nodes: Vec<usize>,
 }
 
 /// One logical shard: a group's drafter nodes, requests, candidate pool,
@@ -488,6 +510,14 @@ struct ShardSim {
     dispatch_seq: u64,
     round_id: u64,
     done: bool,
+    /// fault plan active? (`!w.faults.is_empty()`; every chaos branch is
+    /// gated on this so an empty plan is bit-identical by construction)
+    chaos: bool,
+    /// per-node down flags (global node indexing; empty when `!chaos`)
+    down: Vec<bool>,
+    /// per-request consecutive killed-round count (backoff input; reset
+    /// on every clean round; empty when `!chaos`)
+    attempts: Vec<u32>,
     // counters
     events: u64,
     coalesced: u64,
@@ -500,9 +530,14 @@ struct ShardSim {
     index_ns: u64,
     peak_depth: usize,
     cross_msgs: u64,
+    rounds_cancelled: u64,
+    redrafted_tokens: u64,
+    recovery_catchup_ns: u64,
     // scratch
     newly_ready: Vec<usize>,
     trans: Vec<(usize, bool)>,
+    fault_flips: Vec<(usize, bool)>,
+    fault_cands: Vec<Candidate>,
     pending_durs: Vec<f64>,
     batch_sorted: Vec<usize>,
     set_buf: Vec<usize>,
@@ -568,6 +603,24 @@ impl ShardSim {
                 }
             }
         }
+        let chaos = !w.faults.is_empty();
+        if chaos && decoupled {
+            // drafter outages become shard-local events for the group
+            // that owns the node — seeded after the arrivals so event
+            // seqs are a pure function of the workload.  Straggles and
+            // transient failures need no events: they are lazy pricing /
+            // kill checks against the plan.
+            for ev in w.faults.events() {
+                if ev.node >= w.n_nodes || ev.node % groups != g {
+                    continue;
+                }
+                match ev.kind {
+                    FaultKind::DrafterDown => queue.push(ev.at_s, EventKind::NodeFail(ev.node)),
+                    FaultKind::DrafterUp => queue.push(ev.at_s, EventKind::NodeRecover(ev.node)),
+                    _ => {}
+                }
+            }
+        }
         ShardSim {
             g,
             k,
@@ -586,6 +639,9 @@ impl ShardSim {
             dispatch_seq: 0,
             round_id: 0,
             done: false,
+            chaos,
+            down: if chaos { vec![false; w.n_nodes] } else { Vec::new() },
+            attempts: if chaos { vec![0; w.reqs.len()] } else { Vec::new() },
             events: 0,
             coalesced: 0,
             rounds: 0,
@@ -597,8 +653,13 @@ impl ShardSim {
             index_ns: 0,
             peak_depth: 0,
             cross_msgs: 0,
+            rounds_cancelled: 0,
+            redrafted_tokens: 0,
+            recovery_catchup_ns: 0,
             newly_ready: Vec::new(),
             trans: Vec::new(),
+            fault_flips: Vec::new(),
+            fault_cands: Vec::new(),
             pending_durs: Vec::new(),
             batch_sorted: Vec::new(),
             set_buf: Vec::new(),
@@ -645,8 +706,49 @@ impl ShardSim {
     /// Committing at drain time (not schedule time) is equivalent to the
     /// classic loop: a request sits in at most one round at a time, and
     /// nothing reads its committed state before the `VerifyDone` pops.
+    ///
+    /// Under a fault plan, a round whose draft window overlaps a drafter
+    /// outage (or whose verify span eats a transient failure) is
+    /// *killed*: the commit is withheld, the batch backs off by a
+    /// bounded deterministic delay plus a full re-draft + re-verify of
+    /// the same spans, and the `VerifyDone` is requeued at the retry
+    /// instant under the same reserved seq — so every killed round
+    /// re-enters the pool, re-routes against the survivors, and no
+    /// request is ever lost or double-committed.
     fn apply_result(&mut self, rr: RoundResult) {
+        let pos = self
+            .outstanding
+            .iter()
+            .position(|o| o.rid == rr.rid)
+            .expect("drained round was not outstanding");
+        let meta = self.outstanding.swap_remove(pos);
         let batch = self.inflight.get(rr.rid).expect("verify result for unknown round");
+        if self.chaos && self.w.strategy.speculative {
+            let killed = self.w.faults.verify_fail_in(rr.sv.start, rr.sv.end)
+                || meta
+                    .nodes
+                    .iter()
+                    .any(|&d| self.w.faults.kills_draft(d, meta.draft_start, meta.draft_end));
+            if killed {
+                let attempt = batch.iter().map(|&ri| self.attempts[ri]).max().unwrap_or(0);
+                let redo = (meta.draft_end - meta.draft_start).max(0.0)
+                    + (rr.sv.end - rr.sv.start).max(0.0);
+                let retry_at = rr.sv.end + faults::backoff_s(attempt) + redo;
+                for &ri in batch {
+                    self.attempts[ri] += 1;
+                    self.reqs[ri].ready_at = retry_at;
+                }
+                self.rounds_cancelled += 1;
+                self.redrafted_tokens += meta.proposed;
+                self.recovery_catchup_ns += ((retry_at - rr.sv.end) * 1e9) as u64;
+                self.queue.push_at_seq(retry_at, rr.seq, EventKind::VerifyDone(rr.rid));
+                self.cross_msgs += 1;
+                return;
+            }
+            for &ri in batch {
+                self.attempts[ri] = 0;
+            }
+        }
         let per_round = if self.w.strategy.speculative {
             self.w.accept + 1
         } else {
@@ -665,12 +767,6 @@ impl ShardSim {
             }
         }
         self.queue.push_at_seq(rr.sv.end, rr.seq, EventKind::VerifyDone(rr.rid));
-        let pos = self
-            .outstanding
-            .iter()
-            .position(|o| o.rid == rr.rid)
-            .expect("drained round was not outstanding");
-        self.outstanding.swap_remove(pos);
         self.cross_msgs += 1;
     }
 
@@ -688,7 +784,9 @@ impl ShardSim {
 
         let b = assign.batch.len();
         let mut ctx_crit = 1usize;
+        let mut draft_start = f64::INFINITY;
         let mut draft_end = 0.0f64;
+        let mut nodes: Vec<usize> = Vec::new();
         for (pos, &ri) in assign.batch.iter().enumerate() {
             let r = &self.reqs[ri];
             ctx_crit = ctx_crit.max(r.ctx_len);
@@ -698,21 +796,42 @@ impl ShardSim {
             if self.w.strategy.fusion {
                 t_i += gamma as f64 * self.cost.network.fusion_round_s(set.len().max(1), 1);
             }
-            let (_, e_i) = self.res.draft_on(set, r.ready_at, t_i);
+            let (s_i, e_i) = self.res.draft_on(set, r.ready_at, t_i);
             for &node in set {
                 self.queue.push(e_i, EventKind::DraftDone(self.round_id, node));
             }
+            draft_start = draft_start.min(s_i);
             draft_end = draft_end.max(e_i);
+            if self.chaos {
+                for &node in set {
+                    if !nodes.contains(&node) {
+                        nodes.push(node);
+                    }
+                }
+            }
+        }
+        if !draft_start.is_finite() {
+            draft_start = draft_end;
         }
         let big_gamma: usize = assign.gammas.iter().map(|g| g + 1).sum();
         let g_eff = (big_gamma as f64 / b as f64).ceil().max(1.0) as usize;
-        let durs: Vec<f64> = (1..=self.w.n_replicas.max(1))
+        let mut durs: Vec<f64> = (1..=self.w.n_replicas.max(1))
             .map(|s| {
                 let bs = b.div_ceil(s);
                 self.cost.t_verify_s(bs, g_eff, ctx_crit)
                     + self.cost.network.verify_exchange_s(bs, self.cost.g1)
             })
             .collect();
+        if self.chaos {
+            // replica straggle is pure pricing: the menu is inflated by
+            // the max active factor at the dispatch instant
+            let f = self.w.faults.verify_factor_at(self.watermark);
+            if f > 1.0 {
+                for d in durs.iter_mut() {
+                    *d *= f;
+                }
+            }
+        }
         self.batch_sorted.clear();
         self.batch_sorted.extend_from_slice(&assign.batch);
         self.batch_sorted.sort_unstable();
@@ -738,6 +857,9 @@ impl ShardSim {
             proposed,
             ready: draft_end,
             durs,
+            draft_start,
+            draft_end,
+            nodes,
         })
     }
 
@@ -776,7 +898,13 @@ impl ShardSim {
         } else {
             g_eff
         };
-        let t_verify = self.cost.t_verify_s(b, g_tree, ctx_crit);
+        let mut t_verify = self.cost.t_verify_s(b, g_tree, ctx_crit);
+        if self.chaos {
+            let f = self.w.faults.verify_factor_at(self.watermark);
+            if f > 1.0 {
+                t_verify *= f;
+            }
+        }
         self.pending_durs.clear();
         let proposed = assign.gammas.iter().map(|&g| g as u64).sum();
         self.plan_batch.clear();
@@ -786,6 +914,9 @@ impl ShardSim {
             proposed,
             ready: batch_ready,
             durs: vec![t_draft + t_verify],
+            draft_start: 0.0,
+            draft_end: 0.0,
+            nodes: Vec::new(),
         })
     }
 
@@ -811,9 +942,17 @@ impl ShardSim {
             ctx_crit = ctx_crit.max(r.ctx_len);
             batch_ready = batch_ready.max(r.ready_at);
         }
-        let durs: Vec<f64> = (1..=self.w.n_replicas.max(1))
+        let mut durs: Vec<f64> = (1..=self.w.n_replicas.max(1))
             .map(|s| self.cost.t_decode_s(b.div_ceil(s), 1, ctx_crit))
             .collect();
+        if self.chaos {
+            let f = self.w.faults.verify_factor_at(self.watermark);
+            if f > 1.0 {
+                for d in durs.iter_mut() {
+                    *d *= f;
+                }
+            }
+        }
         let cost = &self.cost;
         chunk_pending_rounds(
             self.cpool.iter_arrival().skip(b),
@@ -828,6 +967,9 @@ impl ShardSim {
             proposed: 0,
             ready: batch_ready,
             durs,
+            draft_start: 0.0,
+            draft_end: 0.0,
+            nodes: Vec::new(),
         })
     }
 
@@ -843,12 +985,23 @@ impl ShardSim {
         self.events += 1;
         self.watermark = self.watermark.max(now);
         self.newly_ready.clear();
+        self.fault_flips.clear();
         collect_ready(kind, &mut self.inflight, &mut self.newly_ready);
+        match kind {
+            EventKind::NodeFail(d) => self.fault_flips.push((d, true)),
+            EventKind::NodeRecover(d) => self.fault_flips.push((d, false)),
+            _ => {}
+        }
         while self.queue.next_at().is_some_and(|t| t <= now) {
             if let Some((_, k2)) = self.queue.pop() {
                 self.events += 1;
                 self.coalesced += 1;
                 collect_ready(k2, &mut self.inflight, &mut self.newly_ready);
+                match k2 {
+                    EventKind::NodeFail(d) => self.fault_flips.push((d, true)),
+                    EventKind::NodeRecover(d) => self.fault_flips.push((d, false)),
+                    _ => {}
+                }
             }
         }
 
@@ -871,8 +1024,47 @@ impl ShardSim {
         if self.decoupled() {
             let t0 = Instant::now();
             self.res.drafter_transitions(now, &mut self.trans);
+            if self.chaos {
+                // a reservation ending on a down node must not surface
+                // its candidates — the node stays forced-busy until its
+                // `NodeRecover` pops
+                let down = &self.down;
+                self.trans.retain(|&(d, freed)| !(freed && down[d]));
+            }
             self.cpool.apply_transitions(&self.trans);
             self.index_ns += t0.elapsed().as_nanos() as u64;
+        }
+
+        // apply this instant's fault flips in pop order: a failing node
+        // is parked as forced-busy and every candidate stranded on it is
+        // re-routed onto the surviving group nodes (canonical
+        // lowest-index substitution, no RNG — unaffected placements stay
+        // byte-identical); a recovering node is released only if no
+        // reservation still holds it (otherwise the normal end-of-
+        // reservation transition frees it, no longer suppressed).
+        for fi in 0..self.fault_flips.len() {
+            let (d, went_down) = self.fault_flips[fi];
+            if went_down {
+                self.down[d] = true;
+                self.cpool.on_node_busy(d);
+                self.cpool.live_on_node(d, &mut self.fault_cands);
+                for ci in 0..self.fault_cands.len() {
+                    let mut cand = self.fault_cands[ci];
+                    self.set_buf.clear();
+                    self.set_buf.extend_from_slice(self.arena.get(cand.placement));
+                    if faults::substitute_down(&mut self.set_buf, &self.down, &self.group_nodes) {
+                        let pid = self.arena.intern(&self.set_buf);
+                        cand.placement = pid;
+                        self.reqs[cand.idx].placement = pid;
+                        self.cpool.insert(cand, &self.arena);
+                    }
+                }
+            } else {
+                self.down[d] = false;
+                if self.res.drafters[d].free_at <= now + 1e-9 {
+                    self.cpool.on_node_freed(d);
+                }
+            }
         }
 
         // surface the newly-ready requests; pipelined strategies route
@@ -886,6 +1078,11 @@ impl ShardSim {
             }
             if decoupled {
                 route_draw(&mut r.rng, &self.group_nodes, self.k, &mut self.set_buf);
+                if self.chaos {
+                    // same draw sequence as the healthy run, down picks
+                    // substituted post-draw — seed-stable exclusion
+                    faults::substitute_down(&mut self.set_buf, &self.down, &self.group_nodes);
+                }
                 r.placement = self.arena.intern(&self.set_buf);
             }
             let gamma = if self.w.strategy.speculative {
@@ -944,6 +1141,10 @@ impl ShardSim {
             self.outstanding.push(Outstanding {
                 rid: self.round_id,
                 lower: plan.ready + if min_dur.is_finite() { min_dur } else { 0.0 },
+                draft_start: plan.draft_start,
+                draft_end: plan.draft_end,
+                nodes: plan.nodes,
+                proposed: plan.proposed,
             });
             self.submit_buf.push(Dispatch {
                 key,
@@ -973,7 +1174,7 @@ impl ShardSim {
             && self.unfinished > 0
             && !self.cpool.is_empty()
         {
-            let free_t = self
+            let mut free_t = self
                 .res
                 .drafters
                 .iter()
@@ -981,6 +1182,15 @@ impl ShardSim {
                 .map(|r| r.free_at)
                 .filter(|&t| t > now + 1e-9)
                 .fold(f64::INFINITY, f64::min);
+            if self.chaos {
+                // candidates may be parked on down nodes with nothing
+                // else on the timeline: arm the tick at the next fault-
+                // plan change so recovery is never stranded waiting for
+                // an arrival
+                if let Some(t) = self.w.faults.next_change_after(now + 1e-9) {
+                    free_t = free_t.min(t);
+                }
+            }
             if free_t.is_finite() {
                 self.queue.push(free_t, EventKind::SchedTick);
             }
@@ -1061,6 +1271,10 @@ pub fn identical(a: &RunReport, b: &RunReport) -> bool {
         && a.engine.rounds_dispatched == b.engine.rounds_dispatched
         && a.engine.sched_invocations == b.engine.sched_invocations
         && a.engine.shard_events == b.engine.shard_events
+        && a.engine.faults_injected == b.engine.faults_injected
+        && a.engine.rounds_cancelled == b.engine.rounds_cancelled
+        && a.engine.redrafted_tokens == b.engine.redrafted_tokens
+        && a.engine.recovery_catchup_ns == b.engine.recovery_catchup_ns
         && a.makespan_s.to_bits() == b.makespan_s.to_bits()
         && a.latencies_s.len() == b.latencies_s.len()
         && a.latencies_s
@@ -1137,6 +1351,9 @@ pub fn run_sharded(w: &ShardWorkload, n_threads: usize) -> RunReport {
         stats.cross_shard_msgs += sh.cross_msgs;
         stats.peak_pool_depth = stats.peak_pool_depth.max(sh.peak_depth);
         stats.shard_events.push(sh.events);
+        stats.rounds_cancelled += sh.rounds_cancelled;
+        stats.redrafted_tokens += sh.redrafted_tokens;
+        stats.recovery_catchup_ns += sh.recovery_catchup_ns;
         req_rounds += sh.req_rounds;
         drafts_proposed += sh.drafts_proposed;
         drafts_accepted += sh.drafts_accepted;
@@ -1171,6 +1388,8 @@ pub fn run_sharded(w: &ShardWorkload, n_threads: usize) -> RunReport {
             / latencies_s.len() as f64
     };
 
+    stats.faults_injected = w.faults.len() as u64;
+
     let mut h = 0xcbf29ce484222325u64;
     for f in &finish_s {
         h = fold_hash(h, f.to_bits());
@@ -1180,6 +1399,8 @@ pub fn run_sharded(w: &ShardWorkload, n_threads: usize) -> RunReport {
     for &e in &stats.shard_events {
         h = fold_hash(h, e);
     }
+    h = fold_hash(h, stats.rounds_cancelled);
+    h = fold_hash(h, stats.redrafted_tokens);
     stats.schedule_hash = h;
 
     // per-node drafter accounting merged from each node's owning shard
@@ -1479,5 +1700,146 @@ mod tests {
         let mut a2 = request_rng(42, 3);
         route_draw(&mut a2, &nodes, 3, &mut scratch);
         assert_eq!(first, scratch);
+    }
+
+    use crate::coordinator::faults::FaultEvent;
+
+    fn window(node: usize, a: f64, b: f64) -> Vec<FaultEvent> {
+        vec![
+            FaultEvent {
+                at_s: a,
+                node,
+                kind: FaultKind::DrafterDown,
+            },
+            FaultEvent {
+                at_s: b,
+                node,
+                kind: FaultKind::DrafterUp,
+            },
+        ]
+    }
+
+    #[test]
+    fn drafter_outage_mid_draft_cancels_rounds_and_still_completes() {
+        // single node, single replica: the first round's draft span starts
+        // at t = 0 and surely covers the failure at 1 µs, so it must be
+        // killed; everything re-drafts after the recovery at t = 1 s
+        let spec = SchedBenchSpec {
+            n_requests: 6,
+            gen_len: 8,
+            n_nodes: 1,
+            n_replicas: 1,
+            k: 1,
+            ..SchedBenchSpec::deep()
+        };
+        let mut w = spec.shard_workload(1);
+        w.faults = FaultPlan::new(window(0, 1e-6, 1.0));
+        let r = run_single(&w);
+        assert_eq!(r.engine.faults_injected, 2);
+        assert!(r.engine.rounds_cancelled >= 1, "mid-draft failure must kill the round");
+        assert!(r.engine.redrafted_tokens >= 1);
+        assert!(r.engine.recovery_catchup_ns > 0);
+        assert!(r.makespan_s > 1.0, "nothing finishes before the node recovers");
+        assert_eq!(r.latencies_s.len(), 6, "no request lost");
+        assert!(r.latencies_s.iter().all(|&l| l > 0.0));
+        assert_eq!(
+            r.engine.cross_shard_msgs,
+            2 * r.engine.rounds_dispatched,
+            "killed rounds retry locally, never through the hub"
+        );
+    }
+
+    #[test]
+    fn recovery_with_an_idle_queue_is_not_stranded_until_the_next_arrival() {
+        // request 0 arrives straight into an outage (down at t = 0) and is
+        // parked before any round dispatches; nothing else happens until
+        // request 1 arrives at t = 1000.  The recovery at t = 0.5 must
+        // wake the shard by itself — a stranded engine would only finish
+        // request 0 after the t = 1000 arrival.
+        let spec = SchedBenchSpec {
+            n_requests: 2,
+            arrival_dt: 1000.0,
+            gen_len: 4,
+            n_nodes: 1,
+            n_replicas: 1,
+            k: 1,
+            ..SchedBenchSpec::deep()
+        };
+        let mut w = spec.shard_workload(1);
+        w.faults = FaultPlan::new(window(0, 0.0, 0.5));
+        let r = run_single(&w);
+        assert!(
+            r.latencies_s[0] >= 0.5 && r.latencies_s[0] < 10.0,
+            "request 0 must finish shortly after the 0.5 s recovery, got latency {}",
+            r.latencies_s[0]
+        );
+        assert!(r.latencies_s[1] > 0.0 && r.latencies_s[1] < 10.0);
+        assert_eq!(
+            r.engine.rounds_cancelled, 0,
+            "parked before dispatch: exclusion, not cancellation"
+        );
+    }
+
+    #[test]
+    fn fault_plan_beyond_the_makespan_changes_nothing_but_bookkeeping() {
+        let w = small_spec().shard_workload(3);
+        let base = run_single(&w);
+        let mut w2 = w.clone();
+        w2.faults = FaultPlan::new(window(0, 1e6, 2e6));
+        let r = run_single(&w2);
+        assert_eq!(r.makespan_s.to_bits(), base.makespan_s.to_bits());
+        assert_eq!(r.engine.rounds_dispatched, base.engine.rounds_dispatched);
+        assert_eq!(r.engine.rounds_cancelled, 0);
+        assert!(r
+            .latencies_s
+            .iter()
+            .zip(&base.latencies_s)
+            .all(|(x, y)| x.to_bits() == y.to_bits()));
+    }
+
+    #[test]
+    fn non_binding_fault_plan_is_bit_identical_to_the_plain_run() {
+        // a unit straggle factor arms every chaos branch without ever
+        // changing a priced duration — the gated hot path must stay
+        // byte-for-byte on the healthy schedule
+        let w = small_spec().shard_workload(3);
+        let base = run_sharded(&w, 2);
+        let mut w2 = w.clone();
+        w2.faults = FaultPlan::new(vec![FaultEvent {
+            at_s: 0.0,
+            node: 0,
+            kind: FaultKind::ReplicaStraggle { factor: 1.0 },
+        }]);
+        let r = run_sharded(&w2, 2);
+        assert_eq!(r.makespan_s.to_bits(), base.makespan_s.to_bits());
+        assert_eq!(r.engine.events_processed, base.engine.events_processed);
+        assert_eq!(r.engine.rounds_dispatched, base.engine.rounds_dispatched);
+        assert_eq!(r.engine.rounds_cancelled, 0);
+        assert!(r
+            .latencies_s
+            .iter()
+            .zip(&base.latencies_s)
+            .all(|(x, y)| x.to_bits() == y.to_bits()));
+    }
+
+    #[test]
+    fn fault_runs_stay_bit_identical_across_thread_counts() {
+        let mut w = small_spec().shard_workload(4);
+        let base = run_single(&w);
+        // scale the storm to the healthy makespan so every window binds
+        w.faults = FaultPlan::named("storm", w.n_nodes, base.makespan_s).unwrap();
+        let r1 = run_sharded(&w, 1);
+        let r2 = run_sharded(&w, 2);
+        let r4 = run_sharded(&w, 4);
+        assert!(
+            identical(&r1, &r2) && identical(&r1, &r4),
+            "fault schedule diverged across thread counts: {:016x} / {:016x} / {:016x}",
+            r1.engine.schedule_hash,
+            r2.engine.schedule_hash,
+            r4.engine.schedule_hash
+        );
+        assert_eq!(r1.engine.faults_injected, w.faults.len() as u64);
+        assert_eq!(r1.latencies_s.len(), w.reqs.len(), "no request lost");
+        assert!(r1.latencies_s.iter().all(|&l| l > 0.0));
     }
 }

@@ -32,10 +32,14 @@ COMMANDS:
   offline    [--batches 1,2,4,8,16] [--requests N] [--strategies a,b,..]
                                      Fig. 6 latency/throughput sweep
   online     [--modes low,high,volatile] [--minutes M] [--shards 1,2] [--smoke]
-                                     Fig. 7 online serving; --shards serves
+             [--chaos PLAN]           Fig. 7 online serving; --shards serves
                                      through the sharded engine backend
                                      (bit-identical across thread counts);
-                                     --smoke is the artifact-free CI pass
+                                     --smoke is the artifact-free CI pass;
+                                     --chaos injects a deterministic fault
+                                     plan (drafter-loss|straggler|transient|
+                                     storm, or a JSON file) and proves
+                                     recovery stays bit-identical
   motivation [--figs fig2a,fig2b,fig3b]
                                      Fig. 2/3 motivation profiles
   table2     [--prompts-per-domain N] [--shards 1,2]
@@ -88,6 +92,7 @@ fn main() -> Result<()> {
             args.get_f64("minutes", 240.0)?,
             args.get("shards").map(parse_shards).transpose()?,
             args.has_flag("smoke"),
+            args.get("chaos"),
         ),
         Some("motivation") => {
             cmd::motivation::run(&cfg, &args.get_or("figs", "fig2a,fig2b,fig3b"))

@@ -4,8 +4,10 @@
 
 pub mod arrivals;
 pub mod domains;
+pub mod scenario;
 pub mod trace;
 
 pub use arrivals::{ArrivalMode, ArrivalProcess};
 pub use domains::{DomainSampler, N_DOMAINS};
+pub use scenario::{RequestClass, Scenario, ScenarioRequest};
 pub use trace::{Trace, TraceRequest};

@@ -1,0 +1,310 @@
+//! Trace-driven scenario layer: bursty/diurnal arrival shapes and
+//! multi-tenant request-class mixes.
+//!
+//! Where `arrivals.rs` models the paper's low/high/volatile Poisson rates,
+//! a [`Scenario`] composes a time-varying arrival *shape* with a tenant mix
+//! of request *classes* — long-prefill document QA, chatty short turns, and
+//! code completion — so the chaos and mega harnesses can stress the
+//! scheduler with realistic non-uniform load.  Generation is fully
+//! deterministic in the scenario seed and feeds the same `Trace` /
+//! `ShardWorkload` paths as every other workload: [`Scenario::generate`]
+//! yields `(arrival, class, prompt_len, gen_len)` tuples for the timing
+//! backends, and [`Scenario::trace`] materializes token-level prompts for
+//! the real-compute engine.
+
+use super::domains::DomainSampler;
+use super::trace::{Trace, TraceRequest};
+use crate::util::rng::Rng;
+
+/// Tenant request classes with distinct prefill/decode shapes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RequestClass {
+    /// Long-prefill document QA: big prompt, short answer.
+    DocQa,
+    /// Chatty short turns: small prompt, medium answer.
+    Chat,
+    /// Code completion: medium prompt, long answer.
+    Code,
+}
+
+impl RequestClass {
+    pub fn name(self) -> &'static str {
+        match self {
+            RequestClass::DocQa => "docqa",
+            RequestClass::Chat => "chat",
+            RequestClass::Code => "code",
+        }
+    }
+
+    /// Synthetic-corpus domain this class draws prompts from (the MedQA /
+    /// OASST2 / code-slice analogs of the five-domain mix).
+    pub fn domain(self) -> usize {
+        match self {
+            RequestClass::DocQa => 1,
+            RequestClass::Chat => 4,
+            RequestClass::Code => 2,
+        }
+    }
+
+    /// Sampled (prompt_len, gen_len) for one request of this class.
+    fn sample_shape(self, rng: &mut Rng) -> (usize, usize) {
+        match self {
+            RequestClass::DocQa => (512 + rng.usize(257), 16 + rng.usize(17)),
+            RequestClass::Chat => (48 + rng.usize(81), 32 + rng.usize(33)),
+            RequestClass::Code => (192 + rng.usize(129), 48 + rng.usize(49)),
+        }
+    }
+}
+
+const CLASSES: [RequestClass; 3] = [RequestClass::DocQa, RequestClass::Chat, RequestClass::Code];
+
+/// Time-varying arrival intensity.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ArrivalShape {
+    /// Rate jumps to `mult * base` for the first `burst_frac` of every
+    /// `period_s` window (traffic spikes / batch-upload tenants).
+    Bursty {
+        period_s: f64,
+        burst_frac: f64,
+        mult: f64,
+    },
+    /// Smooth day-cycle: `base * (1 + swing * sin(2π t / period))`.
+    Diurnal { period_s: f64, swing: f64 },
+}
+
+/// One generated request, backend-agnostic: the timing engines consume the
+/// shape directly and the real-compute path materializes a prompt via
+/// [`Scenario::trace`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ScenarioRequest {
+    pub arrival_s: f64,
+    pub class: RequestClass,
+    pub prompt_len: usize,
+    pub gen_len: usize,
+}
+
+/// A named, seeded workload scenario.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Scenario {
+    pub name: &'static str,
+    pub shape: ArrivalShape,
+    /// Tenant mix weights over [DocQa, Chat, Code]; need not sum to 1.
+    pub mix: [f64; 3],
+    /// Baseline arrival rate (req/s).
+    pub base_rate: f64,
+    pub horizon_s: f64,
+    pub seed: u64,
+}
+
+impl Scenario {
+    /// Named scenarios, parameterized on rate/horizon so the same name
+    /// scales from smoke to full runs.
+    pub fn named(name: &str, base_rate: f64, horizon_s: f64, seed: u64) -> Option<Scenario> {
+        let h = horizon_s.max(1e-3);
+        let (name, shape, mix) = match name {
+            "bursty-mix" => (
+                "bursty-mix",
+                ArrivalShape::Bursty {
+                    period_s: h / 6.0,
+                    burst_frac: 0.2,
+                    mult: 4.0,
+                },
+                [0.25, 0.5, 0.25],
+            ),
+            "diurnal-mix" => (
+                "diurnal-mix",
+                ArrivalShape::Diurnal {
+                    period_s: h,
+                    swing: 0.8,
+                },
+                [0.3, 0.4, 0.3],
+            ),
+            "docqa-heavy" => (
+                "docqa-heavy",
+                ArrivalShape::Bursty {
+                    period_s: h / 4.0,
+                    burst_frac: 0.3,
+                    mult: 2.0,
+                },
+                [0.7, 0.2, 0.1],
+            ),
+            "code-burst" => (
+                "code-burst",
+                ArrivalShape::Bursty {
+                    period_s: h / 8.0,
+                    burst_frac: 0.15,
+                    mult: 6.0,
+                },
+                [0.1, 0.2, 0.7],
+            ),
+            _ => return None,
+        };
+        Some(Scenario {
+            name,
+            shape,
+            mix,
+            base_rate,
+            horizon_s,
+            seed,
+        })
+    }
+
+    pub const NAMES: [&'static str; 4] =
+        ["bursty-mix", "diurnal-mix", "docqa-heavy", "code-burst"];
+
+    /// Instantaneous arrival rate at virtual time `t`.
+    pub fn rate_at(&self, t: f64) -> f64 {
+        match self.shape {
+            ArrivalShape::Bursty {
+                period_s,
+                burst_frac,
+                mult,
+            } => {
+                let phase = (t / period_s).fract();
+                if phase < burst_frac {
+                    self.base_rate * mult
+                } else {
+                    self.base_rate
+                }
+            }
+            ArrivalShape::Diurnal { period_s, swing } => {
+                self.base_rate * (1.0 + swing * (std::f64::consts::TAU * t / period_s).sin())
+            }
+        }
+    }
+
+    fn max_rate(&self) -> f64 {
+        match self.shape {
+            ArrivalShape::Bursty { mult, .. } => self.base_rate * mult.max(1.0),
+            ArrivalShape::Diurnal { swing, .. } => self.base_rate * (1.0 + swing.abs()),
+        }
+    }
+
+    /// Generate the full request list: thinned Poisson arrivals against
+    /// `rate_at`, classes drawn from the tenant mix, shapes jittered per
+    /// class.  Deterministic in `seed`.
+    pub fn generate(&self) -> Vec<ScenarioRequest> {
+        let mut arr_rng = Rng::seed_from_u64(self.seed);
+        let mut class_rng = Rng::seed_from_u64(self.seed ^ 0x5CEA_A210);
+        let total: f64 = self.mix.iter().sum();
+        let max_rate = self.max_rate();
+        let mut out = Vec::new();
+        let mut t = 0.0;
+        loop {
+            t += arr_rng.exp(max_rate);
+            if t >= self.horizon_s {
+                break;
+            }
+            if arr_rng.f64() * max_rate > self.rate_at(t) {
+                continue;
+            }
+            let mut draw = class_rng.f64() * total;
+            let mut class = CLASSES[CLASSES.len() - 1];
+            for (i, &w) in self.mix.iter().enumerate() {
+                if draw < w {
+                    class = CLASSES[i];
+                    break;
+                }
+                draw -= w;
+            }
+            let (prompt_len, gen_len) = class.sample_shape(&mut class_rng);
+            out.push(ScenarioRequest {
+                arrival_s: t,
+                class,
+                prompt_len,
+                gen_len,
+            });
+        }
+        out
+    }
+
+    /// Materialize a token-level `Trace` for the real-compute engine:
+    /// prompts are drawn from each class's synthetic domain at the class's
+    /// sampled prefill length.
+    pub fn trace(&self, vocab: usize, n_slices: usize) -> Trace {
+        let mut sampler = DomainSampler::new(vocab, n_slices, 1, self.seed ^ 0x7A_CE);
+        let requests = self
+            .generate()
+            .into_iter()
+            .enumerate()
+            .map(|(i, r)| {
+                sampler.prompt_len = r.prompt_len;
+                let domain = r.class.domain();
+                TraceRequest {
+                    id: i as u64,
+                    arrival_s: r.arrival_s,
+                    domain,
+                    prompt: sampler.prompt(domain),
+                    max_new_tokens: r.gen_len,
+                }
+            })
+            .collect();
+        Trace { requests }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn scenario(name: &str) -> Scenario {
+        Scenario::named(name, 200.0, 1.0, 11).expect(name)
+    }
+
+    #[test]
+    fn generation_is_deterministic_and_ordered() {
+        for name in Scenario::NAMES {
+            let a = scenario(name).generate();
+            let b = scenario(name).generate();
+            assert_eq!(a, b, "{name}: same seed, same requests");
+            assert!(!a.is_empty(), "{name}: non-empty at 200 req/s over 1 s");
+            for w in a.windows(2) {
+                assert!(w[0].arrival_s <= w[1].arrival_s, "{name}: sorted arrivals");
+            }
+            assert!(a.iter().all(|r| r.arrival_s < 1.0), "{name}: inside horizon");
+        }
+    }
+
+    #[test]
+    fn mix_realizes_every_class() {
+        let reqs = scenario("bursty-mix").generate();
+        for class in CLASSES {
+            assert!(
+                reqs.iter().filter(|r| r.class == class).count() > 0,
+                "{} missing from the mix",
+                class.name()
+            );
+        }
+    }
+
+    #[test]
+    fn bursty_rate_spikes_inside_the_burst_window() {
+        let s = scenario("bursty-mix");
+        assert!(s.rate_at(0.01) > s.rate_at(0.9 * 1.0 / 6.0));
+        let d = scenario("diurnal-mix");
+        assert!(d.rate_at(0.25) > d.rate_at(0.75), "day peak above night");
+    }
+
+    #[test]
+    fn classes_have_distinct_shapes() {
+        let reqs = scenario("docqa-heavy").generate();
+        let avg = |c: RequestClass| {
+            let v: Vec<_> = reqs.iter().filter(|r| r.class == c).collect();
+            v.iter().map(|r| r.prompt_len).sum::<usize>() as f64 / v.len().max(1) as f64
+        };
+        assert!(avg(RequestClass::DocQa) > avg(RequestClass::Code));
+        assert!(avg(RequestClass::Code) > avg(RequestClass::Chat));
+    }
+
+    #[test]
+    fn trace_materializes_prompts_at_class_lengths() {
+        let tr = scenario("bursty-mix").trace(4096, 8);
+        let gen = scenario("bursty-mix").generate();
+        assert_eq!(tr.len(), gen.len());
+        for (t, g) in tr.requests.iter().zip(&gen) {
+            assert_eq!(t.prompt.len(), g.prompt_len);
+            assert_eq!(t.max_new_tokens, g.gen_len);
+            assert_eq!(t.domain, g.class.domain());
+        }
+    }
+}

@@ -785,6 +785,114 @@ fn prop_scheduler_candidate_gamma_bounds() {
 }
 
 #[test]
+fn prop_random_fault_plans_lose_no_requests_and_stay_deterministic() {
+    // The chaos recovery invariant, over arbitrary machine-generated
+    // fault plans: every request finishes exactly once (the sharded
+    // report panics on a lost request and carries one latency per
+    // arrival), latencies stay positive, and the recovered schedule —
+    // fault counters included — is bit-identical across worker thread
+    // counts.
+    use cosine::bench::sched::SchedBenchSpec;
+    use cosine::coordinator::faults::FaultPlan;
+    use cosine::coordinator::shard::{identical, run_sharded};
+    cases(20, |rng, seed| {
+        let spec = SchedBenchSpec {
+            n_requests: 16 + rng.usize(17),
+            gen_len: 4 + rng.usize(5),
+            ..SchedBenchSpec::deep()
+        };
+        let mut w = spec.shard_workload(1 + rng.usize(4));
+        let healthy = run_sharded(&w, 1);
+        w.faults = FaultPlan::random(rng, w.n_nodes, healthy.makespan_s);
+        w.faults
+            .validate(w.n_nodes)
+            .unwrap_or_else(|e| panic!("seed {seed}: generated plan invalid: {e}"));
+        let r1 = run_sharded(&w, 1);
+        let r2 = run_sharded(&w, 2);
+        assert!(
+            identical(&r1, &r2),
+            "seed {seed}: fault schedule diverged across thread counts \
+             ({:016x} vs {:016x})",
+            r1.engine.schedule_hash,
+            r2.engine.schedule_hash
+        );
+        assert_eq!(
+            r1.latencies_s.len(),
+            spec.n_requests,
+            "seed {seed}: request lost or duplicated"
+        );
+        assert!(
+            r1.latencies_s.iter().all(|&l| l > 0.0),
+            "seed {seed}: nonpositive latency under faults"
+        );
+        assert_eq!(
+            r1.engine.faults_injected,
+            w.faults.len() as u64,
+            "seed {seed}"
+        );
+    });
+}
+
+#[test]
+fn prop_router_exclusion_is_seed_stable() {
+    // Chaos exclusion must not reshuffle the healthy world: with the same
+    // router seed, a request whose healthy placement never touched the
+    // down node keeps a byte-identical placement, and an affected request
+    // changes only in the slots that pointed at the down node — which are
+    // always replaced by survivors while any remain.
+    cases(100, |rng, seed| {
+        let n = 2 + rng.usize(6);
+        let k = 1 + rng.usize((n - 1).min(3));
+        let down_node = rng.usize(n);
+        let mut down = vec![false; n];
+        down[down_node] = true;
+        let mut healthy = Router::new(RouterConfig::default(), seed);
+        let mut excluding = Router::new(RouterConfig::default(), seed);
+        for i in 0..20u64 {
+            let mut req = Request::from_trace(
+                &TraceRequest {
+                    id: i,
+                    arrival_s: 0.0,
+                    domain: 0,
+                    prompt: vec![0; 4],
+                    max_new_tokens: 4,
+                },
+                n,
+                4,
+            );
+            req.l_acc = rng.f64() * 4.0;
+            for v in req.routing.iter_mut() {
+                *v = rng.f64();
+            }
+            let load: Vec<f64> = (0..n).map(|_| rng.f64() * 3.0).collect();
+            let a = healthy.route_excluding(&req, n, k, &load, &[]);
+            let b = excluding.route_excluding(&req, n, k, &load, &down);
+            if !a.contains(&down_node) {
+                assert_eq!(
+                    a, b,
+                    "seed {seed} req {i}: placement of an unaffected request changed"
+                );
+                continue;
+            }
+            // k < n guarantees a surviving substitute exists
+            assert!(
+                !b.contains(&down_node),
+                "seed {seed} req {i}: routed to the down node"
+            );
+            assert_eq!(a.len(), b.len(), "seed {seed} req {i}: placement width changed");
+            for (slot, (x, y)) in a.iter().zip(&b).enumerate() {
+                if *x != down_node {
+                    assert_eq!(
+                        x, y,
+                        "seed {seed} req {i}: surviving slot {slot} was reshuffled"
+                    );
+                }
+            }
+        }
+    });
+}
+
+#[test]
 fn prop_embed_sim_cosine_bounds() {
     use cosine::coordinator::router::EmbedSim;
     cases(20, |rng, seed| {
