@@ -39,6 +39,14 @@ Gates:
     counts, (c) every request completing exactly once under drafter loss
     (completed == n_requests), and (d) the plan actually binding
     (faults_injected > 0);
+  * machine-independent + machine-dependent (schema 7): the hub block —
+    the lock-free cross-shard transport (SPSC rings + atomic bound cells
+    + try-claim apply) swept over every thread count on the mega smoke
+    scenario — must stay bit-identical across thread counts, actually
+    exercise the lock-free path (bound_publishes > 0), and keep the
+    max-thread merge_stall_frac at or below max_merge_stall_frac (the
+    bound calibrated under the old Mutex+Condvar hub: the "before"
+    number the transport swap is held against);
   * machine-dependent (armed once the baseline records events_per_s for
     this runner class): absolute events/sec must not regress > 20%.
 
@@ -65,8 +73,8 @@ def main() -> None:
         base = json.load(f)
 
     schema = int(cur.get("schema", 0))
-    if schema < 6:
-        sys.exit(f"bench schema {schema} < 6: rebuild BENCH_sched.json")
+    if schema < 7:
+        sys.exit(f"bench schema {schema} < 7: rebuild BENCH_sched.json")
 
     if not cur["schedule_identical"]:
         sys.exit("frontier schedule diverged from the closure/naive reference")
@@ -217,6 +225,37 @@ def main() -> None:
         f"{completed}/{n_req} completed, no-fault identity and "
         "cross-thread identity hold"
     )
+
+    # lock-free hub transport gates (schema 7)
+    hub = cur["hub"]
+    if not hub["identical"]:
+        sys.exit("hub: sharded schedules diverged across thread counts "
+                 "on the transport sweep")
+    hub_threads = int(hub.get("max_threads", 1))
+    hub_row = hub[f"t{hub_threads}"]
+    if int(hub_row.get("bound_publishes", 0)) <= 0:
+        sys.exit("hub: no bound publications recorded — the lock-free "
+                 "transport did not run")
+    if hub_threads > 1:
+        hub_stall = hub_row["merge_stall_frac"]
+        if hub_stall > max_stall:
+            sys.exit(
+                f"hub: merge-stall fraction {hub_stall:.2f} at "
+                f"{hub_threads} threads exceeds the mutex-hub baseline "
+                f"{max_stall} — the lock-free transport regressed "
+                "contention"
+            )
+        print(
+            f"hub: lock-free transport identical across thread counts; "
+            f"stall {hub_stall:.2f} <= mutex-hub baseline {max_stall} at "
+            f"{hub_threads} threads "
+            f"(spins={int(hub_row.get('hub_spins', 0))} "
+            f"parks={int(hub_row.get('hub_parks', 0))} "
+            f"ring_full={int(hub_row.get('ring_full_retries', 0))} "
+            f"bounds={int(hub_row.get('bound_publishes', 0))})"
+        )
+    else:
+        print("hub: single-threaded transport sweep (no contention gate)")
 
     baseline_ev = base.get("events_per_s")
     cur_ev = cur["incremental"]["events_per_s"]

@@ -22,8 +22,12 @@
 //! layer's bursty multi-tenant mix under a named deterministic fault plan
 //! and gates recovery: armed-but-non-binding plans reproduce the healthy
 //! schedule byte-for-byte, fault runs stay bit-identical across thread
-//! counts, and no request is lost or duplicated under drafter loss.
-//! Emits `BENCH_sched.json` (schema 6) — the perf trajectory CI gates on
+//! counts, and no request is lost or duplicated under drafter loss.  A
+//! `hub` block sweeps the lock-free cross-shard transport (SPSC rings +
+//! atomic bounds + try-claim apply) over every thread count on the mega
+//! smoke scenario and records `merge_stall_frac` plus the hub-contention
+//! counters, gated against the mutex-hub baseline.
+//! Emits `BENCH_sched.json` (schema 7) — the perf trajectory CI gates on
 //! (artifact upload + regression check).  Needs no PJRT artifacts.
 
 use anyhow::Result;
@@ -86,13 +90,17 @@ fn peak_rss_mb() -> f64 {
 
 fn print_sharded(r: &RunReport) {
     println!(
-        "shards x{:<2} events={:<6} rounds={:<5} events/s={:>12.0} xmsg={:<6} stall={:>7.1}ms hash={:016x}",
+        "shards x{:<2} events={:<6} rounds={:<5} events/s={:>12.0} xmsg={:<6} stall={:>7.1}ms frac={:.3} hub={}sp/{}pk/{}rf hash={:016x}",
         r.engine.n_shards,
         r.engine.events_processed,
         r.engine.rounds_dispatched,
         r.events_per_s(),
         r.engine.cross_shard_msgs,
         merge_stall_ms(r),
+        r.merge_stall_frac(),
+        r.engine.hub_spins,
+        r.engine.hub_parks,
+        r.engine.ring_full_retries,
         r.engine.schedule_hash,
     );
 }
@@ -119,6 +127,16 @@ fn sharded_json(r: &RunReport) -> Json {
     m.insert(
         "merge_stall_frac".to_string(),
         Json::Num(r.merge_stall_frac()),
+    );
+    m.insert("hub_spins".to_string(), Json::Num(r.engine.hub_spins as f64));
+    m.insert("hub_parks".to_string(), Json::Num(r.engine.hub_parks as f64));
+    m.insert(
+        "ring_full_retries".to_string(),
+        Json::Num(r.engine.ring_full_retries as f64),
+    );
+    m.insert(
+        "bound_publishes".to_string(),
+        Json::Num(r.engine.bound_publishes as f64),
     );
     m.insert(
         "schedule_hash".to_string(),
@@ -321,6 +339,30 @@ fn chaos_block(threads: &[usize]) -> (Json, bool) {
     (Json::Obj(m), ok)
 }
 
+/// The schema-7 `hub` block: the lock-free cross-shard transport swept
+/// over every requested thread count on the mega smoke scenario (the
+/// contention-bound workload the mutex-era `max_merge_stall_frac` gate
+/// was calibrated on — smoke-scale even in the full bench so the block
+/// stays runtime-bounded).  The rows carry `merge_stall_frac` plus the
+/// hub-contention counters (`hub_spins`/`hub_parks`/`ring_full_retries`/
+/// `bound_publishes`); `check_bench.py` holds the max-thread stall
+/// fraction at or below the committed mutex-hub baseline (the "before"
+/// number), so the transport swap can only move contention down, and
+/// enforces bit-identity across thread counts as everywhere else.
+fn hub_block(threads: &[usize]) -> (Json, bool) {
+    let spec = SchedBenchSpec::mega_smoke();
+    let (reports, all_identical) = shard_sweep(&spec, threads);
+    let Json::Obj(mut m) = sweep_json(&reports, all_identical) else {
+        unreachable!("sweep_json always returns an object")
+    };
+    m.insert("workload".to_string(), Json::Str("mega_smoke".to_string()));
+    m.insert(
+        "transport".to_string(),
+        Json::Str("spsc-rings+atomic-bounds+try-claim".to_string()),
+    );
+    (Json::Obj(m), all_identical)
+}
+
 pub fn run(out: &str, smoke: bool, requests: Option<usize>, threads: &[usize]) -> Result<()> {
     let mut spec = if smoke {
         SchedBenchSpec::smoke()
@@ -408,6 +450,11 @@ pub fn run(out: &str, smoke: bool, requests: Option<usize>, threads: &[usize]) -
     // chaos gate: scenario-layer workload under a named fault plan
     println!("chaos sweep: bursty-mix scenario × `storm` fault plan ({SWEEP_GROUPS} groups)");
     let (chaos_json, chaos_ok) = chaos_block(threads);
+
+    // lock-free hub transport gate: merge-stall fraction vs the
+    // mutex-hub baseline on the contention-bound mega smoke scenario
+    println!("hub transport sweep: mega smoke × lock-free transport ({SWEEP_GROUPS} groups, threads {threads:?})");
+    let (hub_json, hub_identical) = hub_block(threads);
 
     // million-request closed-loop scenario: the allocation-free hot-path
     // gate (>100k events/sec floor at full scale; 120k requests in smoke
@@ -510,9 +557,10 @@ pub fn run(out: &str, smoke: bool, requests: Option<usize>, threads: &[usize]) -
     );
     mega_m.insert("peak_rss_mb".to_string(), Json::Num(peak_rss_mb()));
     let mut m = BTreeMap::new();
-    m.insert("schema".to_string(), Json::Num(6.0));
+    m.insert("schema".to_string(), Json::Num(7.0));
     m.insert("workload".to_string(), Json::Obj(workload));
     m.insert("chaos".to_string(), chaos_json);
+    m.insert("hub".to_string(), hub_json);
     m.insert("incremental".to_string(), frontier.to_json());
     m.insert("closure".to_string(), closure.to_json());
     m.insert("naive".to_string(), naive.to_json());
@@ -545,6 +593,10 @@ pub fn run(out: &str, smoke: bool, requests: Option<usize>, threads: &[usize]) -
     anyhow::ensure!(
         chaos_ok,
         "chaos gate failed: fault recovery lost requests or perturbed the schedule"
+    );
+    anyhow::ensure!(
+        hub_identical,
+        "hub transport sweep: sharded schedules diverged across thread counts"
     );
     Ok(())
 }

@@ -33,16 +33,17 @@ const STRATEGIES: [Strategy; 5] = [
 
 fn print_header() {
     println!(
-        "\nmode      | strategy   | mean lat (s) | p99 (s) | ms/token | tok/s | idle% | qwait(s) | shards | shard-eff% | sched ns/ev | elig/ev | eng | xmsg | stall ms | cost/tok"
+        "\nmode      | strategy   | mean lat (s) | p99 (s) | ms/token | tok/s | idle% | qwait(s) | shards | shard-eff% | sched ns/ev | elig/ev | eng | xmsg | stall ms | stall% | hub sp/pk | cost/tok"
     );
     println!(
-        "----------+------------+--------------+---------+----------+-------+-------+----------+--------+------------+-------------+---------+-----+------+----------+---------"
+        "----------+------------+--------------+---------+----------+-------+-------+----------+--------+------------+-------------+---------+-----+------+----------+--------+-----------+---------"
     );
 }
 
 fn print_row(mode: &str, r: &RunReport) {
+    let hub = format!("{}/{}", r.engine.hub_spins, r.engine.hub_parks);
     println!(
-        "{:<9} | {:<10} | {:>12.2} | {:>7.2} | {:>8.1} | {:>5.1} | {:>5.0} | {:>8.3} | {:>6.2} | {:>10.1} | {:>11.0} | {:>7.1} | {:>3} | {:>4} | {:>8.1} | ${:.6}",
+        "{:<9} | {:<10} | {:>12.2} | {:>7.2} | {:>8.1} | {:>5.1} | {:>5.0} | {:>8.3} | {:>6.2} | {:>10.1} | {:>11.0} | {:>7.1} | {:>3} | {:>4} | {:>8.1} | {:>6.2} | {:>9} | ${:.6}",
         mode,
         r.strategy,
         r.mean_latency_s(),
@@ -58,6 +59,8 @@ fn print_row(mode: &str, r: &RunReport) {
         r.engine.n_shards.max(1),
         r.engine.cross_shard_msgs,
         r.merge_stall_ms(),
+        r.merge_stall_frac() * 100.0,
+        hub,
         r.cost_per_token,
     );
 }

@@ -485,7 +485,10 @@ pub fn run_speculative(
         stats.faults_injected = opts.faults.len() as u64;
         if opts.decoupled {
             // drafter down/up windows become engine events; straggle and
-            // transient faults stay pure virtual-time predicates
+            // transient faults stay pure virtual-time predicates.  The
+            // link kinds (LinkLatency/LinkRestore) fall through the
+            // catchall on purpose: they degrade the cross-shard hub path,
+            // and this single-pool loop has no cross-shard path to inflate
             for ev in opts.faults.events() {
                 if ev.node >= n_nodes {
                     continue;

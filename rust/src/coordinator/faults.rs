@@ -14,6 +14,13 @@
 //! * `ReplicaStraggle { factor }` / `ReplicaRestore` — a verifier replica
 //!   slows down; every verify duration priced while the straggle window is
 //!   active is multiplied by the largest active factor.
+//! * `LinkLatency { delay_s }` / `LinkRestore` — network degradation on
+//!   the cross-shard path: while a window is open, every cross-shard
+//!   message (dispatch submission and verify-result delivery) becomes
+//!   visible `delay_s` seconds of virtual time later
+//!   ([`FaultPlan::link_delay_at`]; overlapping windows compose by max).
+//!   Sharded backend only — the classic single-pool loop has no
+//!   cross-shard hop and ignores the kind.
 //! * `DraftFail` / `VerifyFail` — transient point failures: a round whose
 //!   draft (resp. verify) span covers the instant is cancelled and retried
 //!   with bounded, deterministic virtual-time backoff ([`backoff_s`]).
@@ -38,13 +45,23 @@ use crate::util::json::Json;
 use crate::util::rng::Rng;
 
 /// One scheduled fault.  `node` is a drafter index for the drafter/draft
-/// kinds and a verifier-replica index for the replica/verify kinds.
+/// kinds, a verifier-replica index for the replica/verify kinds, and an
+/// opaque window id for the link kinds (the degraded resource is the
+/// cross-shard path itself, not a node — the id only pairs a
+/// `LinkLatency` with its `LinkRestore` so windows may overlap).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum FaultKind {
     DrafterDown,
     DrafterUp,
     ReplicaStraggle { factor: f64 },
     ReplicaRestore,
+    /// Network degradation on the cross-shard path: every cross-shard
+    /// message (dispatch submission and result delivery) becomes visible
+    /// `delay_s` seconds of virtual time later while the window is open.
+    /// Ignored by the classic single-pool loop, which has no cross-shard
+    /// hop.
+    LinkLatency { delay_s: f64 },
+    LinkRestore,
     DraftFail,
     VerifyFail,
 }
@@ -56,6 +73,8 @@ impl FaultKind {
             FaultKind::DrafterUp => "drafter-up",
             FaultKind::ReplicaStraggle { .. } => "replica-straggle",
             FaultKind::ReplicaRestore => "replica-restore",
+            FaultKind::LinkLatency { .. } => "link-latency",
+            FaultKind::LinkRestore => "link-restore",
             FaultKind::DraftFail => "draft-fail",
             FaultKind::VerifyFail => "verify-fail",
         }
@@ -68,10 +87,12 @@ impl FaultKind {
         match self {
             FaultKind::DrafterUp => 0,
             FaultKind::ReplicaRestore => 1,
-            FaultKind::DrafterDown => 2,
-            FaultKind::ReplicaStraggle { .. } => 3,
-            FaultKind::DraftFail => 4,
-            FaultKind::VerifyFail => 5,
+            FaultKind::LinkRestore => 2,
+            FaultKind::DrafterDown => 3,
+            FaultKind::ReplicaStraggle { .. } => 4,
+            FaultKind::LinkLatency { .. } => 5,
+            FaultKind::DraftFail => 6,
+            FaultKind::VerifyFail => 7,
         }
     }
 }
@@ -167,7 +188,12 @@ impl FaultPlan {
                         bail!("straggle factor {factor} must be finite and >= 1");
                     }
                 }
-                FaultKind::ReplicaRestore | FaultKind::VerifyFail => {}
+                FaultKind::LinkLatency { delay_s } => {
+                    if !delay_s.is_finite() || delay_s < 0.0 {
+                        bail!("link latency delay {delay_s} must be finite and >= 0");
+                    }
+                }
+                FaultKind::ReplicaRestore | FaultKind::LinkRestore | FaultKind::VerifyFail => {}
             }
         }
         for (i, ev) in self.events.iter().enumerate() {
@@ -249,6 +275,33 @@ impl FaultPlan {
             }
         }
         active.iter().fold(1.0, |acc, &(_, f)| acc.max(f))
+    }
+
+    /// Cross-shard message delay (seconds of virtual time) at instant
+    /// `t`: the largest `delay_s` among link-latency windows open at `t`,
+    /// 0.0 when none.  `node` is the window id (windows may overlap; a
+    /// `LinkRestore` closes the window it shares an id with); an unclosed
+    /// window simply degrades the link to the end of the run — unlike a
+    /// drafter-down window it can never strand a request, so `validate`
+    /// does not require closure.
+    pub fn link_delay_at(&self, t: f64) -> f64 {
+        let mut active: Vec<(usize, f64)> = Vec::new();
+        for ev in &self.events {
+            if ev.at_s > t {
+                break;
+            }
+            match ev.kind {
+                FaultKind::LinkLatency { delay_s } => {
+                    match active.iter_mut().find(|(n, _)| *n == ev.node) {
+                        Some(slot) => slot.1 = delay_s,
+                        None => active.push((ev.node, delay_s)),
+                    }
+                }
+                FaultKind::LinkRestore => active.retain(|(n, _)| *n != ev.node),
+                _ => {}
+            }
+        }
+        active.iter().fold(0.0, |acc, &(_, d)| acc.max(d))
     }
 
     /// First scheduled fault instant strictly after `t` — the extra wake
@@ -338,6 +391,31 @@ impl FaultPlan {
                     kind: FaultKind::VerifyFail,
                 });
             }
+            "degraded-link" => {
+                // one long shallow window and one short deep spike
+                // overlapping it (distinct window ids), so the max-delay
+                // composition is exercised
+                ev.push(FaultEvent {
+                    at_s: 0.2 * h,
+                    node: 0,
+                    kind: FaultKind::LinkLatency { delay_s: 0.02 * h },
+                });
+                ev.push(FaultEvent {
+                    at_s: 0.75 * h,
+                    node: 0,
+                    kind: FaultKind::LinkRestore,
+                });
+                ev.push(FaultEvent {
+                    at_s: 0.4 * h,
+                    node: 1,
+                    kind: FaultKind::LinkLatency { delay_s: 0.08 * h },
+                });
+                ev.push(FaultEvent {
+                    at_s: 0.5 * h,
+                    node: 1,
+                    kind: FaultKind::LinkRestore,
+                });
+            }
             _ => return None,
         }
         Some(FaultPlan::new(ev))
@@ -374,6 +452,10 @@ impl FaultPlan {
                     factor: ev.req("factor")?.as_f64()?,
                 },
                 "replica-restore" => FaultKind::ReplicaRestore,
+                "link-latency" => FaultKind::LinkLatency {
+                    delay_s: ev.req("delay_s")?.as_f64()?,
+                },
+                "link-restore" => FaultKind::LinkRestore,
                 "draft-fail" => FaultKind::DraftFail,
                 "verify-fail" => FaultKind::VerifyFail,
                 other => bail!("event {i}: unknown fault kind {other:?}"),
@@ -395,6 +477,9 @@ impl FaultPlan {
                 if let FaultKind::ReplicaStraggle { factor } = ev.kind {
                     m.insert("factor".to_string(), Json::Num(factor));
                 }
+                if let FaultKind::LinkLatency { delay_s } = ev.kind {
+                    m.insert("delay_s".to_string(), Json::Num(delay_s));
+                }
                 Json::Obj(m)
             })
             .collect();
@@ -404,8 +489,9 @@ impl FaultPlan {
     }
 
     /// A random but always-valid plan for property tests: every down window
-    /// closes inside the horizon (liveness), factors in [1.5, 4], and a
-    /// sprinkle of transient point failures.
+    /// closes inside the horizon (liveness), factors in [1.5, 4], an
+    /// occasional link-degradation window, and a sprinkle of transient
+    /// point failures.
     pub fn random(rng: &mut Rng, n_drafters: usize, horizon_s: f64) -> FaultPlan {
         let h = horizon_s.max(1e-3);
         let n = n_drafters.max(1);
@@ -439,6 +525,22 @@ impl FaultPlan {
                 at_s: a + (0.1 + rng.f64() * 0.3) * h,
                 node,
                 kind: FaultKind::ReplicaRestore,
+            });
+        }
+        if rng.bool(0.4) {
+            let node = rng.usize(2);
+            let a = rng.f64() * 0.6 * h;
+            ev.push(FaultEvent {
+                at_s: a,
+                node,
+                kind: FaultKind::LinkLatency {
+                    delay_s: rng.f64() * 0.05 * h,
+                },
+            });
+            ev.push(FaultEvent {
+                at_s: a + (0.1 + rng.f64() * 0.3) * h,
+                node,
+                kind: FaultKind::LinkRestore,
             });
         }
         for _ in 0..rng.usize(3) {
@@ -539,7 +641,7 @@ mod tests {
 
     #[test]
     fn named_plans_resolve_and_validate() {
-        for name in ["drafter-loss", "straggler", "transient", "storm"] {
+        for name in ["drafter-loss", "straggler", "transient", "storm", "degraded-link"] {
             let p = FaultPlan::named(name, 6, 1.0).expect(name);
             assert!(!p.is_empty(), "{name} is non-empty");
             p.validate(6).expect(name);
@@ -581,6 +683,49 @@ mod tests {
         let p = FaultPlan::named("storm", 6, 2.0).unwrap();
         let back = FaultPlan::from_json(&p.to_json()).unwrap();
         assert_eq!(p, back);
+        // link events carry their delay through the round trip
+        let p = FaultPlan::named("degraded-link", 6, 2.0).unwrap();
+        let back = FaultPlan::from_json(&p.to_json()).unwrap();
+        assert_eq!(p, back);
+    }
+
+    #[test]
+    fn link_delay_windows_compose_by_max() {
+        let p = plan(vec![
+            FaultEvent {
+                at_s: 1.0,
+                node: 0,
+                kind: FaultKind::LinkLatency { delay_s: 0.02 },
+            },
+            FaultEvent {
+                at_s: 4.0,
+                node: 0,
+                kind: FaultKind::LinkRestore,
+            },
+            FaultEvent {
+                at_s: 2.0,
+                node: 1,
+                kind: FaultKind::LinkLatency { delay_s: 0.08 },
+            },
+            FaultEvent {
+                at_s: 3.0,
+                node: 1,
+                kind: FaultKind::LinkRestore,
+            },
+        ]);
+        p.validate(1).unwrap();
+        assert_eq!(p.link_delay_at(0.5), 0.0);
+        assert_eq!(p.link_delay_at(1.5), 0.02);
+        assert_eq!(p.link_delay_at(2.5), 0.08, "overlap takes the max");
+        assert_eq!(p.link_delay_at(3.5), 0.02, "spike closed, shallow window open");
+        assert_eq!(p.link_delay_at(4.5), 0.0);
+        // negative and non-finite delays are rejected
+        let bad = plan(vec![FaultEvent {
+            at_s: 0.0,
+            node: 0,
+            kind: FaultKind::LinkLatency { delay_s: -1.0 },
+        }]);
+        assert!(bad.validate(1).is_err());
     }
 
     #[test]

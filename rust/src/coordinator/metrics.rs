@@ -46,6 +46,17 @@ pub struct EngineStats {
     /// real wall ns worker threads spent blocked on the deterministic
     /// cross-shard merge (conservative-bound waits); 0 when single-threaded
     pub merge_stall_ns: u64,
+    /// spin/yield iterations of the hub's adaptive backoff before a park
+    /// (lock-free transport; wall-clock dependent like `merge_stall_ns`,
+    /// so excluded from the bit-identity comparison)
+    pub hub_spins: u64,
+    /// bounded-timeout parks of the hub's adaptive backoff
+    pub hub_parks: u64,
+    /// transport-ring full events (submit or result side) that forced a
+    /// drain-and-retry — the deterministic backpressure accounting
+    pub ring_full_retries: u64,
+    /// conservative-bound publications through the atomic bound cells
+    pub bound_publishes: u64,
     /// worker threads the engine ran on (1 = single-threaded)
     pub n_shards: usize,
     /// batch dispatches (verify rounds launched); request-level round
@@ -358,7 +369,7 @@ impl RunReport {
 
     pub fn summary_row(&self) -> String {
         let mut row = format!(
-            "{:<10} pair={} n={:<3} tok={:<6} lat={:>8.1} ms/tok thr={:>8.1} tok/s acc={:>4.2} cost/tok=${:.6} idle(srv)={:.0}% qwait={:.2}s shards={:.2} sched={:.0}ns/ev elig={:.1}/ev idx={:.0}ns/ev eng={}x xmsg={} stall={:.1}ms wall={:.1}s",
+            "{:<10} pair={} n={:<3} tok={:<6} lat={:>8.1} ms/tok thr={:>8.1} tok/s acc={:>4.2} cost/tok=${:.6} idle(srv)={:.0}% qwait={:.2}s shards={:.2} sched={:.0}ns/ev elig={:.1}/ev idx={:.0}ns/ev eng={}x xmsg={} stall={:.1}ms stall_frac={:.3} wall={:.1}s",
             self.strategy,
             self.pair,
             self.n_requests,
@@ -376,8 +387,18 @@ impl RunReport {
             self.engine.n_shards.max(1),
             self.engine.cross_shard_msgs,
             self.merge_stall_ms(),
+            self.merge_stall_frac(),
             self.wall_s,
         );
+        if self.engine.bound_publishes > 0 {
+            row.push_str(&format!(
+                " hub_spins={} hub_parks={} ring_full={} bounds={}",
+                self.engine.hub_spins,
+                self.engine.hub_parks,
+                self.engine.ring_full_retries,
+                self.engine.bound_publishes,
+            ));
+        }
         if self.engine.faults_injected > 0 {
             row.push_str(&format!(
                 " faults={} cancelled={} redraft={} catchup={:.1}ms",

@@ -14,6 +14,9 @@
 //! * `shard` — the sharded parallel engine core: drafter-group shards on
 //!   worker threads, verifier replicas merged through a sequenced
 //!   cross-shard queue, bit-identical to the single-threaded oracle.
+//! * `sync` — the lock-free cross-shard transport primitives behind the
+//!   shard hub: SPSC rings, monotone atomic bound cells, the try-claim
+//!   apply ticket, and the adaptive spin → yield → park backoff.
 //! * `tokens` — flat token arena + span handles backing the engine's
 //!   allocation-free per-round token traffic.
 //! * `verifier` — greedy longest-prefix acceptance + commit bookkeeping
@@ -35,6 +38,7 @@ pub mod sampling;
 pub mod scheduler;
 pub mod shard;
 pub mod speculation;
+pub mod sync;
 pub mod tokens;
 pub mod verifier;
 

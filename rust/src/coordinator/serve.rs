@@ -29,7 +29,11 @@
 //! Both backends return the same [`RunReport`]; the sharded backend
 //! additionally fills the per-shard counters in `EngineStats` and is
 //! bit-identical across worker-thread counts (see `shard::identical`,
-//! enforced by [`serve_sharded_swept`]).  Prefer [`serve`] over calling
+//! enforced by [`serve_sharded_swept`]).  Its worker threads exchange
+//! dispatches over the lock-free transport in `coordinator::sync`
+//! (SPSC rings + atomic bound cells + try-claim apply); callers see
+//! only the `hub_*` contention counters that surfaces in
+//! `EngineStats`.  Prefer [`serve`] over calling
 //! `shard::run_sharded` / `shard::run_single` directly — those are the
 //! backend internals, kept `pub` for the bench harness and the property
 //! tests.

@@ -75,34 +75,68 @@
 //! *reserved at submission* ([`EventQueue::reserve_seq`]), so
 //! FIFO-within-timestamp tie-breaks match the classic loop exactly.
 //!
-//! Hub traffic is batched: a shard buffers the dispatches of each burst
-//! locally and crosses them to the hub in **one lock acquisition per
-//! worker visit** (`Hub::exchange` — flush + bound publish + apply +
-//! result drain), instead of taking the lock once per dispatch.  The
-//! buffered dispatches are always flushed before a worker can block, so
-//! the deadlock-freedom argument below is unchanged.
+//! Hub traffic is batched *and lock-free*: a shard buffers the
+//! dispatches of each burst locally and crosses them to the hub in **one
+//! ring flush + bound publish per worker visit** (`Hub::exchange`).
+//! Each group owns a pair of bounded SPSC rings (dispatch submission and
+//! result drain — see [`coordinator::sync`](super::sync)), conservative
+//! bounds are published through monotone atomic cells instead of under a
+//! lock, and the total-order apply runs under a **try-claim ticket**:
+//! whichever worker wins the claim drains every submit ring into the
+//! per-group pending queues and applies, in global key order, every
+//! dispatch that precedes all other groups' bounds.  Losing the claim
+//! never blocks — the holder is applying on the loser's behalf.  The
+//! apply loop snapshots the bounds *before* draining the rings each
+//! iteration (the Release bound publish happens-after the ring pushes it
+//! covers, so a bound seen in the snapshot implies its dispatches are
+//! visible to the drain, and a stale snapshot only gates harder).  When
+//! a worker has no thread-local progress it waits on an adaptive spin →
+//! yield → park backoff (`Hub::wait_for_progress`), re-running the
+//! try-claim each iteration; the bounded park timeout is a liveness belt
+//! exactly as the old condvar timeout was.  A full ring is deterministic
+//! backpressure, not a block: the pusher drains its own inbox and runs
+//! the apply loop (which moves ring entries into the *unbounded* pending
+//! queues even when every key is gated), counting the retry in
+//! `ring_full_retries`.
 //!
-//! Deadlock freedom: if every shard is blocked, the globally minimal
-//! pending dispatch precedes every other shard's bound (bounds are
-//! watermark-clamped and per-shard keys strictly increase), so the hub
-//! can always apply it — see `try_apply`.
+//! Deadlock freedom (claim scheme): buffered dispatches are always
+//! flushed — and the shard's bound published — before a worker can enter
+//! the backoff, so once every shard is blocked the rings and bounds are
+//! quiescent.  Consider the globally minimal pending dispatch key `k`
+//! (group g): every *other* group's published bound strictly dominates
+//! that group's own submitted keys (its watermark-clamped time is ≥, and
+//! its seq is greater than, any key the group has flushed) and
+//! lower-bounds every key it can still produce, so `k` precedes every
+//! other group's bound and passes the gate.  The claim is try-only and
+//! always released, every waiter re-tries it on every backoff iteration,
+//! and the apply loop re-reads bounds and rings each pass — so some
+//! blocked worker claims the ticket and applies `k`; the result lands on
+//! its owner's ring, whose backoff loop observes it.  Bound staleness is
+//! safe by construction: bounds only ratchet upward, and a torn
+//! `(time, seq)` read composes to a valid *earlier* bound (cross-group
+//! comparisons break ties on the group id before the seq), so a stale
+//! read can only over-gate, never misorder — see `coordinator::sync` for
+//! the full argument.
 //!
 //! # Reporting
 //!
 //! A sharded run returns the same [`RunReport`] the classic loop emits —
 //! one stats surface.  The backend-specific counters (per-shard event
-//! counts, cross-shard messages, merge-stall ns, schedule hash) live in
-//! [`EngineStats`]; [`identical`] is the bit-identity predicate the bench
-//! sweep and the property tests enforce across thread counts.
+//! counts, cross-shard messages, merge-stall ns, schedule hash, and the
+//! hub-contention counters `hub_spins` / `hub_parks` /
+//! `ring_full_retries` / `bound_publishes`) live in [`EngineStats`];
+//! [`identical`] is the bit-identity predicate the bench sweep and the
+//! property tests enforce across thread counts (wall-clock-dependent
+//! counters — stall ns and the hub-contention set — are excluded).
 //!
 //! [`run_single`] is [`run_sharded`] driven by one worker thread: the
 //! same shard/hub code executed sequentially, kept as the oracle the
 //! property tests and the `cosine bench --shards` sweep hold N-thread
 //! runs bit-identical to.
 
+use std::cell::UnsafeCell;
 use std::collections::VecDeque;
-use std::sync::{Condvar, Mutex};
-use std::time::{Duration, Instant};
+use std::time::Instant;
 
 use crate::config::SchedulerConfig;
 use crate::coordinator::engine::{
@@ -113,6 +147,9 @@ use crate::coordinator::metrics::{EngineStats, RunReport};
 use crate::coordinator::pipeline::{ResourcePool, ShardedVerify};
 use crate::coordinator::scheduler::{
     Candidate, CandidatePool, PlacementArena, PlacementId, SchedCostModel, Scheduler,
+};
+use crate::coordinator::sync::{
+    ApplyClaim, AtomicBound, Backoff, HubCounters, ProgressEpoch, SpscRing,
 };
 use crate::util::rng::Rng;
 
@@ -289,26 +326,59 @@ struct RoundResult {
     sv: ShardedVerify,
 }
 
-/// Shared verify stage: the replica [`ResourcePool`] plus the
-/// conservative merge state.  All access is under one mutex; a worker
-/// blocks on the condvar only when every shard it owns is gated (that
-/// blocked wall time is what `merge_stall_ns` reports).
+/// Capacity of each per-group transport ring.  A full ring is handled
+/// by a drain-and-retry protocol with deterministic accounting
+/// (`ring_full_retries`), never by blocking — the apply loop moves ring
+/// entries into the *unbounded* pending queues even when every key is
+/// gated — so capacity tunes batching granularity, not correctness.
+const RING_CAP: usize = 256;
+
+/// Shared verify stage behind the lock-free transport: the replica
+/// [`ResourcePool`] and the per-group pending queues live in
+/// [`ApplyState`], guarded by a try-claim ticket instead of a mutex;
+/// dispatches and results cross shard boundaries through bounded SPSC
+/// rings, and conservative bounds are published through monotone atomic
+/// cells.  A worker blocks only in [`Hub::wait_for_progress`], and then
+/// on an adaptive spin → yield → park backoff (that blocked wall time is
+/// what `merge_stall_ns` reports; the spin/park/ring-retry activity
+/// feeds the `hub_*` counters).
 struct Hub {
-    state: Mutex<HubState>,
-    cv: Condvar,
+    /// apply-side interior, accessed only while holding `claim`: the
+    /// Acquire claim CAS / Release store pair hands exclusive access
+    /// between workers exactly like a mutex's ownership transfer,
+    /// without the blocking
+    state: UnsafeCell<ApplyState>,
+    claim: ApplyClaim,
+    /// per-group conservative lower bound on any future dispatch key
+    bounds: Vec<AtomicBound>,
+    /// per-group dispatch submission rings (producer: the group's
+    /// owning worker; consumer: the current claim holder)
+    submit: Vec<SpscRing<Dispatch>>,
+    /// per-group result drain rings (producer: the current claim
+    /// holder; consumer: the group's owning worker)
+    results: Vec<SpscRing<RoundResult>>,
+    /// bumped on submissions and applies so backed-off waiters reset to
+    /// the cheap spin tier while the hub is moving
+    epoch: ProgressEpoch,
 }
 
-struct HubState {
+/// The claim-guarded interior of the hub: everything the total-order
+/// apply mutates.
+struct ApplyState {
     /// verifier replicas (no drafters — those are shard-owned)
     res: ResourcePool,
-    /// per-group lower bound on any future dispatch key
-    bounds: Vec<MergeKey>,
-    /// per-group FIFO of submitted, not-yet-applied dispatches (keys
-    /// strictly increase within a group)
+    /// per-group FIFO of drained, not-yet-applied dispatches (keys
+    /// strictly increase within a group); unbounded, so a full submit
+    /// ring always clears once any worker runs the apply loop
     pending: Vec<VecDeque<Dispatch>>,
-    /// per-group inbox of applied verify reservations
-    results: Vec<Vec<RoundResult>>,
+    /// bound-snapshot scratch, reused across apply iterations
+    snap: Vec<MergeKey>,
 }
+
+// SAFETY: `state` is only touched by the thread holding `claim` (see
+// `apply_claimed`); every other field synchronizes internally (atomics
+// and SPSC rings with the roles documented on the fields above).
+unsafe impl Sync for Hub {}
 
 impl Hub {
     fn new(w: &ShardWorkload, allgather_step_s: f64) -> Self {
@@ -316,21 +386,56 @@ impl Hub {
         let mut res = ResourcePool::new(0, w.n_replicas.max(1));
         res.allgather_step_s = allgather_step_s;
         Hub {
-            state: Mutex::new(HubState {
+            state: UnsafeCell::new(ApplyState {
                 res,
-                bounds: vec![MergeKey::FLOOR; groups],
                 pending: (0..groups).map(|_| VecDeque::new()).collect(),
-                results: (0..groups).map(|_| Vec::new()).collect(),
+                snap: Vec::with_capacity(groups),
             }),
-            cv: Condvar::new(),
+            claim: ApplyClaim::default(),
+            bounds: (0..groups)
+                .map(|_| AtomicBound::new(MergeKey::FLOOR.t, MergeKey::FLOOR.seq))
+                .collect(),
+            submit: (0..groups).map(|_| SpscRing::with_capacity(RING_CAP)).collect(),
+            results: (0..groups).map(|_| SpscRing::with_capacity(RING_CAP)).collect(),
+            epoch: ProgressEpoch::default(),
         }
     }
 
-    /// Apply, in global key order, every pending dispatch that precedes
-    /// all other groups' bounds.  Returns whether anything applied.
-    fn try_apply(st: &mut HubState) -> bool {
+    /// The gated total-order apply loop.  Caller must hold `claim`.
+    ///
+    /// Each iteration snapshots every group's published bound *before*
+    /// draining the submit rings: the Release bound publish happens
+    /// after the Release ring pushes it covers, so a bound seen in the
+    /// snapshot implies its dispatches are visible to the drain, while a
+    /// stale snapshot only under-approximates (gates harder) — the apply
+    /// order is the mutex hub's global key order either way.
+    fn apply_claimed(&self, c: &mut HubCounters) -> bool {
+        // SAFETY: `claim` is held (caller contract); the Acquire CAS
+        // that claimed it synchronizes-with the previous holder's
+        // Release, so this access is exclusive and sees prior holders'
+        // writes.
+        let st = unsafe { &mut *self.state.get() };
         let mut any = false;
         loop {
+            st.snap.clear();
+            for (g, b) in self.bounds.iter().enumerate() {
+                let (t, seq) = b.load();
+                st.snap.push(MergeKey {
+                    t,
+                    group: g as u32,
+                    seq,
+                });
+            }
+            for (g, ring) in self.submit.iter().enumerate() {
+                while let Some(d) = ring.pop() {
+                    debug_assert_eq!(d.key.group as usize, g);
+                    debug_assert!(
+                        st.pending[g].back().is_none_or(|p| p.key.lt(&d.key)),
+                        "dispatch keys must strictly increase within a shard"
+                    );
+                    st.pending[g].push_back(d);
+                }
+            }
             let mut best: Option<(usize, MergeKey)> = None;
             for (g, q) in st.pending.iter().enumerate() {
                 if let Some(d) = q.front() {
@@ -340,81 +445,127 @@ impl Hub {
                 }
             }
             let Some((g, key)) = best else { break };
-            let gated = st.bounds.iter().enumerate().any(|(g2, b)| g2 != g && !key.lt(b));
+            let gated = st.snap.iter().enumerate().any(|(g2, b)| g2 != g && !key.lt(b));
             if gated {
                 break;
             }
             let d = st.pending[g].pop_front().expect("best key from empty queue");
             let sv = st.res.verify_sharded_queued_with(d.b, d.ready, &d.durs, &d.pending_durs);
-            st.results[g].push(RoundResult {
+            let mut rr = RoundResult {
                 rid: d.rid,
                 seq: d.reserved_seq,
                 sv,
-            });
+            };
+            // deliver to the owner's result ring; owners drain on every
+            // exchange and on every backoff iteration, so a full ring
+            // clears within one owner visit — yield-retry, never block
+            while let Err(back) = self.results[g].push(rr) {
+                rr = back;
+                c.ring_full_retries += 1;
+                std::thread::yield_now();
+            }
             any = true;
+        }
+        if any {
+            self.epoch.bump();
         }
         any
     }
 
-    /// One lock acquisition per worker visit: append the shard's
-    /// buffered dispatches (submission order preserved), publish its
-    /// fresh bound, apply whatever that unlocks, and drain the shard's
-    /// result inbox into `out`.  Batching a whole burst's dispatches
-    /// under one acquisition — instead of one lock round-trip per
-    /// dispatch — is what keeps `merge_stall_ns` flat as threads are
-    /// added: peers observe the burst plus its post-burst bound as a
-    /// single state change.
+    /// Claim the apply ticket if it is free and run the apply loop.
+    /// Never blocks: a held ticket means another worker is already
+    /// applying on our behalf.  Returns whether anything applied.
+    fn try_apply(&self, c: &mut HubCounters) -> bool {
+        if !self.claim.try_claim() {
+            return false;
+        }
+        let any = self.apply_claimed(c);
+        self.claim.release();
+        any
+    }
+
+    /// One hub visit per worker pass: flush the shard's buffered
+    /// dispatches into its submit ring (submission order preserved),
+    /// publish its fresh bound, opportunistically run the apply loop,
+    /// and drain the shard's result ring into `out`.  The flush happens
+    /// *before* the bound publish so any reader that sees the bound also
+    /// sees the dispatches it covers — the ordering the apply loop's
+    /// snapshot-then-drain protocol relies on.
     fn exchange(
         &self,
         g: usize,
         bound: MergeKey,
         submits: &mut Vec<Dispatch>,
         out: &mut Vec<RoundResult>,
+        c: &mut HubCounters,
     ) {
-        let mut st = self.state.lock().unwrap();
         let submitted = !submits.is_empty();
         for d in submits.drain(..) {
             debug_assert_eq!(d.key.group as usize, g);
-            debug_assert!(
-                st.pending[g].back().is_none_or(|p| p.key.lt(&d.key)),
-                "dispatch keys must strictly increase within a shard"
-            );
-            st.pending[g].push_back(d);
+            let mut d = d;
+            while let Err(back) = self.submit[g].push(d) {
+                d = back;
+                c.ring_full_retries += 1;
+                // make room ourselves when the ticket is free (the
+                // apply loop moves ring entries into the unbounded
+                // pending queues even when every key is gated), and
+                // keep our own inbox draining so a claim holder
+                // stalled on a full result ring can finish
+                self.try_apply(c);
+                while let Some(rr) = self.results[g].pop() {
+                    out.push(rr);
+                }
+                std::thread::yield_now();
+            }
         }
-        st.bounds[g] = bound;
-        let applied = Self::try_apply(&mut st);
-        out.append(&mut st.results[g]);
-        drop(st);
-        if applied || submitted {
-            self.cv.notify_all();
+        if submitted {
+            self.epoch.bump();
+        }
+        self.bounds[g].publish(bound.t, bound.seq);
+        c.bound_publishes += 1;
+        self.try_apply(c);
+        while let Some(rr) = self.results[g].pop() {
+            out.push(rr);
         }
     }
 
-    /// Block until any of `owned` has results; accumulates blocked wall
-    /// time into `stall_ns`.  The timeout re-check is a liveness belt:
-    /// correctness never depends on it (see the deadlock-freedom note in
-    /// the module docs).
-    fn wait_for_progress(&self, owned: &[usize], stall_ns: &mut u64) {
+    /// Back off until any of `owned` has results; accumulates blocked
+    /// wall time into `stall_ns` and spin/park counts into `c`.  The
+    /// waiter spins, then yields, then parks on bounded exponentially
+    /// growing timeouts — the park timeout is a liveness belt exactly as
+    /// the old condvar's 50ms timeout was (correctness never depends on
+    /// a wakeup; see the deadlock-freedom note in the module docs), and
+    /// the progress epoch drops the backoff back to the cheap spin tier
+    /// whenever the hub moves.
+    fn wait_for_progress(&self, owned: &[usize], stall_ns: &mut u64, c: &mut HubCounters) {
         let t0 = Instant::now();
-        let mut st = self.state.lock().unwrap();
+        let mut backoff = Backoff::default();
+        let mut seen = self.epoch.load();
         loop {
-            if Self::try_apply(&mut st) {
-                self.cv.notify_all();
-            }
-            if owned.iter().any(|&g| !st.results[g].is_empty()) {
+            self.try_apply(c);
+            if owned.iter().any(|&g| !self.results[g].is_empty()) {
                 break;
             }
-            let (guard, _timeout) = self.cv.wait_timeout(st, Duration::from_millis(50)).unwrap();
-            st = guard;
+            let now = self.epoch.load();
+            if now != seen {
+                seen = now;
+                backoff.reset();
+            }
+            backoff.wait();
         }
-        drop(st);
+        c.spins += backoff.spins;
+        c.parks += backoff.parks;
         *stall_ns += t0.elapsed().as_nanos() as u64;
     }
 
     /// Tear down into the shared replica pool (for makespan accounting).
-    /// Panics if dispatches were left pending.
+    /// Panics if dispatches were left pending or in flight on a ring.
     fn into_res(self) -> ResourcePool {
-        let st = self.state.into_inner().unwrap();
+        assert!(
+            self.submit.iter().all(|r| r.is_empty()) && self.results.iter().all(|r| r.is_empty()),
+            "verify hub torn down with in-flight ring traffic"
+        );
+        let st = self.state.into_inner();
         assert!(
             st.pending.iter().all(|q| q.is_empty()),
             "verify hub torn down with pending dispatches"
@@ -723,6 +874,22 @@ impl ShardSim {
             .expect("drained round was not outstanding");
         let meta = self.outstanding.swap_remove(pos);
         let batch = self.inflight.get(rr.rid).expect("verify result for unknown round");
+        // Cross-shard delivery hop: an open degraded-link window inflates
+        // when this verify result becomes *visible* to the shard.  Pure
+        // virtual time (keyed on the result's own end instant), so the
+        // inflation is deterministic at any thread count; with no open
+        // window `dv` is `rr.sv.end` bit-for-bit (the 0-delay branch
+        // never touches the float).
+        let dv = if self.chaos {
+            let lag = self.w.faults.link_delay_at(rr.sv.end);
+            if lag > 0.0 {
+                rr.sv.end + lag
+            } else {
+                rr.sv.end
+            }
+        } else {
+            rr.sv.end
+        };
         if self.chaos && self.w.strategy.speculative {
             let killed = self.w.faults.verify_fail_in(rr.sv.start, rr.sv.end)
                 || meta
@@ -733,7 +900,7 @@ impl ShardSim {
                 let attempt = batch.iter().map(|&ri| self.attempts[ri]).max().unwrap_or(0);
                 let redo = (meta.draft_end - meta.draft_start).max(0.0)
                     + (rr.sv.end - rr.sv.start).max(0.0);
-                let retry_at = rr.sv.end + faults::backoff_s(attempt) + redo;
+                let retry_at = dv + faults::backoff_s(attempt) + redo;
                 for &ri in batch {
                     self.attempts[ri] += 1;
                     self.reqs[ri].ready_at = retry_at;
@@ -760,13 +927,13 @@ impl ShardSim {
             self.drafts_accepted += take.saturating_sub(1) as u64;
             r.remaining -= take;
             r.ctx_len += take;
-            r.ready_at = rr.sv.end;
+            r.ready_at = dv;
             if r.remaining == 0 {
-                r.finish_s = Some(rr.sv.end);
+                r.finish_s = Some(dv);
                 self.unfinished -= 1;
             }
         }
-        self.queue.push_at_seq(rr.sv.end, rr.seq, EventKind::VerifyDone(rr.rid));
+        self.queue.push_at_seq(dv, rr.seq, EventKind::VerifyDone(rr.rid));
         self.cross_msgs += 1;
     }
 
@@ -1124,8 +1291,24 @@ impl ShardSim {
             // cross to the hub: reserve the VerifyDone's tie-break slot
             // now (where the classic loop pushes the event), key the
             // dispatch under the watermark clamp.  The dispatch is
-            // buffered — the whole burst crosses in one lock
-            // acquisition at the next exchange.
+            // buffered — the whole burst crosses in one ring flush at
+            // the next exchange.
+            // Outbound cross-shard hop: an open degraded-link window
+            // delays when the dispatch reaches the shared verify stage.
+            // Keyed on the watermark (the dispatch instant), so it is
+            // deterministic, and folded into `ready` *before* the
+            // outstanding lower bound is derived — the conservative
+            // lookahead stays sound under inflation.
+            let ready = if self.chaos {
+                let lag = self.w.faults.link_delay_at(self.watermark);
+                if lag > 0.0 {
+                    plan.ready + lag
+                } else {
+                    plan.ready
+                }
+            } else {
+                plan.ready
+            };
             let seq = self.queue.reserve_seq();
             let key = MergeKey {
                 t: self.watermark,
@@ -1140,7 +1323,7 @@ impl ShardSim {
             let min_dur = plan.durs.iter().copied().fold(f64::INFINITY, f64::min);
             self.outstanding.push(Outstanding {
                 rid: self.round_id,
-                lower: plan.ready + if min_dur.is_finite() { min_dur } else { 0.0 },
+                lower: ready + if min_dur.is_finite() { min_dur } else { 0.0 },
                 draft_start: plan.draft_start,
                 draft_end: plan.draft_end,
                 nodes: plan.nodes,
@@ -1149,7 +1332,7 @@ impl ShardSim {
             self.submit_buf.push(Dispatch {
                 key,
                 b: self.plan_batch.len(),
-                ready: plan.ready,
+                ready,
                 durs: plan.durs,
                 pending_durs: self.pending_durs.clone(),
                 rid: self.round_id,
@@ -1203,24 +1386,26 @@ impl ShardSim {
 // ---------------------------------------------------------------------------
 
 /// How many instants a worker advances a shard between hub syncs: large
-/// enough to amortize the lock, small enough to keep peers' bounds fresh.
+/// enough to amortize the transport round-trip, small enough to keep
+/// peers' bounds fresh.
 const SYNC_BURST: usize = 64;
 
-fn worker(hub: &Hub, mut shards: Vec<ShardSim>) -> (Vec<ShardSim>, u64) {
+fn worker(hub: &Hub, mut shards: Vec<ShardSim>) -> (Vec<ShardSim>, u64, HubCounters) {
     let owned: Vec<usize> = shards.iter().map(|s| s.g).collect();
     let mut results: Vec<RoundResult> = Vec::new();
     let mut stall_ns = 0u64;
+    let mut counters = HubCounters::default();
     loop {
         let mut progressed = false;
         for sh in shards.iter_mut() {
             if sh.done {
                 continue;
             }
-            // one lock acquisition: flush the previous burst's buffered
+            // one hub visit: flush the previous burst's buffered
             // dispatches, publish the fresh bound, drain results
             results.clear();
             let bound = sh.current_bound();
-            hub.exchange(sh.g, bound, &mut sh.submit_buf, &mut results);
+            hub.exchange(sh.g, bound, &mut sh.submit_buf, &mut results, &mut counters);
             if !results.is_empty() {
                 progressed = true;
                 for rr in results.drain(..) {
@@ -1248,16 +1433,16 @@ fn worker(hub: &Hub, mut shards: Vec<ShardSim>) -> (Vec<ShardSim>, u64) {
                 debug_assert!(sh.submit_buf.is_empty());
                 results.clear();
                 let bound = sh.current_bound();
-                hub.exchange(sh.g, bound, &mut sh.submit_buf, &mut results);
+                hub.exchange(sh.g, bound, &mut sh.submit_buf, &mut results, &mut counters);
                 debug_assert!(results.is_empty());
                 progressed = true;
             }
         }
         if shards.iter().all(|s| s.done) {
-            return (shards, stall_ns);
+            return (shards, stall_ns, counters);
         }
         if !progressed {
-            hub.wait_for_progress(&owned, &mut stall_ns);
+            hub.wait_for_progress(&owned, &mut stall_ns, &mut counters);
         }
     }
 }
@@ -1310,6 +1495,7 @@ pub fn run_sharded(w: &ShardWorkload, n_threads: usize) -> RunReport {
     let wall0 = Instant::now();
     let mut shards: Vec<ShardSim> = Vec::with_capacity(groups);
     let mut merge_stall_ns = 0u64;
+    let mut hub_counters = HubCounters::default();
     std::thread::scope(|scope| {
         let handles: Vec<_> = per_thread
             .drain(..)
@@ -1319,8 +1505,9 @@ pub fn run_sharded(w: &ShardWorkload, n_threads: usize) -> RunReport {
             })
             .collect();
         for h in handles {
-            let (shs, stall) = h.join().expect("shard worker panicked");
+            let (shs, stall, c) = h.join().expect("shard worker panicked");
             merge_stall_ns += stall;
+            hub_counters.merge(&c);
             shards.extend(shs);
         }
     });
@@ -1331,6 +1518,10 @@ pub fn run_sharded(w: &ShardWorkload, n_threads: usize) -> RunReport {
     let mut stats = EngineStats {
         merge_stall_ns,
         n_shards: n_threads,
+        hub_spins: hub_counters.spins,
+        hub_parks: hub_counters.parks,
+        ring_full_retries: hub_counters.ring_full_retries,
+        bound_publishes: hub_counters.bound_publishes,
         ..EngineStats::default()
     };
     let mut req_rounds = 0u64;
@@ -1372,6 +1563,13 @@ pub fn run_sharded(w: &ShardWorkload, n_threads: usize) -> RunReport {
                 .expect("request never finished")
         })
         .collect();
+    // a degraded-link delivery can land a request's finish after every
+    // resource went idle; fold finishes in so makespan covers them (a
+    // bit-identical no-op on healthy runs, where resource makespan
+    // already dominates every finish)
+    for f in &finish_s {
+        makespan = makespan.max(*f);
+    }
     let latencies_s: Vec<f64> = finish_s
         .iter()
         .enumerate()
@@ -1820,6 +2018,81 @@ mod tests {
             .iter()
             .zip(&base.latencies_s)
             .all(|(x, y)| x.to_bits() == y.to_bits()));
+    }
+
+    fn link_window(node: usize, a: f64, b: f64, delay_s: f64) -> Vec<FaultEvent> {
+        vec![
+            FaultEvent {
+                at_s: a,
+                node,
+                kind: FaultKind::LinkLatency { delay_s },
+            },
+            FaultEvent {
+                at_s: b,
+                node,
+                kind: FaultKind::LinkRestore,
+            },
+        ]
+    }
+
+    #[test]
+    fn link_latency_inflates_the_schedule_and_stays_identical_across_threads() {
+        // a window covering the whole healthy run: every cross-shard hop
+        // (dispatch submission and result delivery) pays the toll, so the
+        // schedule must slow down — and must slow down by the exact same
+        // amount at every thread count
+        let w = small_spec().shard_workload(3);
+        let base = run_single(&w);
+        let mut w2 = w.clone();
+        w2.faults = FaultPlan::new(link_window(0, 0.0, base.makespan_s * 4.0, 1e-3));
+        let r1 = run_sharded(&w2, 1);
+        let r2 = run_sharded(&w2, 2);
+        let r4 = run_sharded(&w2, 4);
+        assert!(
+            identical(&r1, &r2) && identical(&r1, &r4),
+            "degraded-link schedule diverged across thread counts: {:016x} / {:016x} / {:016x}",
+            r1.engine.schedule_hash,
+            r2.engine.schedule_hash,
+            r4.engine.schedule_hash
+        );
+        assert!(
+            r1.makespan_s > base.makespan_s,
+            "a binding link-latency window must slow the schedule ({} vs healthy {})",
+            r1.makespan_s,
+            base.makespan_s
+        );
+        assert_eq!(r1.latencies_s.len(), w.reqs.len(), "no request lost");
+        assert!(r1.latencies_s.iter().all(|&l| l > 0.0));
+        assert_eq!(
+            r1.engine.cross_shard_msgs,
+            2 * r1.engine.rounds_dispatched,
+            "latency inflation delays hub messages, it must not duplicate them"
+        );
+    }
+
+    #[test]
+    fn non_binding_link_latency_windows_are_bit_identical_to_the_plain_run() {
+        // two armed-but-non-binding plans: a zero-delay window inside the
+        // run, and a real delay entirely beyond the makespan.  Both take
+        // the chaos path on every hub hop, but the `lag > 0.0` guard means
+        // the priced floats are never touched — the schedule must stay
+        // byte-for-byte on the healthy run
+        let w = small_spec().shard_workload(3);
+        let base = run_sharded(&w, 2);
+        for evs in [link_window(0, 0.0, 1e6, 0.0), link_window(1, 1e6, 2e6, 0.5)] {
+            let mut w2 = w.clone();
+            w2.faults = FaultPlan::new(evs);
+            let r = run_sharded(&w2, 2);
+            assert_eq!(r.makespan_s.to_bits(), base.makespan_s.to_bits());
+            assert_eq!(r.engine.schedule_hash, base.engine.schedule_hash);
+            assert_eq!(r.engine.rounds_dispatched, base.engine.rounds_dispatched);
+            assert_eq!(r.engine.rounds_cancelled, 0);
+            assert!(r
+                .latencies_s
+                .iter()
+                .zip(&base.latencies_s)
+                .all(|(x, y)| x.to_bits() == y.to_bits()));
+        }
     }
 
     #[test]

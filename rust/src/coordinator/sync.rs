@@ -1,0 +1,657 @@
+//! Lock-free cross-shard transport primitives for the sharded engine
+//! (`coordinator::shard`): bounded SPSC rings for dispatch submission
+//! and result drain, monotone atomic bound cells for conservative-merge
+//! publication, a try-claim ticket serializing the total-order apply,
+//! and an adaptive spin → yield → park backoff replacing the old
+//! condvar wait.
+//!
+//! # Why no locks
+//!
+//! The sharded engine's cross-shard traffic used to funnel through one
+//! `Mutex<HubState>` + `Condvar`; the mega1m gate showed that at scale
+//! the mutex — not compute — bounds multi-thread scaling
+//! (`merge_stall_frac`).  The transport here keeps the exact same
+//! deterministic contract (the watermark-keyed total order applies
+//! byte-for-byte identically — virtual time never observes wall-clock
+//! interleaving) while making the hot-path hub visit wait-free whenever
+//! the rings have room and the apply ticket is uncontended.
+//!
+//! # Synchronization contract
+//!
+//! * [`SpscRing`] is single-producer single-consumer **at any instant**:
+//!   each ring's producer role and its consumer role must each be held
+//!   by at most one thread at a time.  A role may migrate between
+//!   threads when the handoff happens through an acquire/release edge —
+//!   the shard hub hands the consumer role around through
+//!   [`ApplyClaim`], whose Acquire claim CAS synchronizes-with the
+//!   previous holder's Release, making the prior holder's index and
+//!   slot stores visible to the next.
+//! * [`AtomicBound`] publishes a `(time, seq)` conservative lower bound
+//!   as two monotonically-ratcheting atomics.  A reader may observe a
+//!   torn pair (older time with newer seq, or vice versa); because both
+//!   components only ratchet upward, any mixed read is itself a valid
+//!   *earlier* conservative bound — and the merge gate breaks
+//!   cross-group ties on the group id before the seq is ever reached,
+//!   so a stale component can only delay an apply, never misorder one.
+//!   Time is kept at full 64-bit precision via an order-preserving bit
+//!   encoding ([`encode_time`]): truncating time bits to pack both
+//!   words into one `AtomicU64` could round a bound *down* onto a
+//!   pending key's exact time with a smaller group id and gate the
+//!   globally minimal key forever — a liveness hazard, not just a
+//!   precision one.
+//! * The producer protocol is: ring pushes first, bound publish second.
+//!   A reader that gates against a bound must load the bound *before*
+//!   draining the rings: the Release publish happens-after the pushes
+//!   it covers, so a bound seen in the snapshot implies its dispatches
+//!   are visible to the drain, while a stale snapshot merely gates
+//!   harder (never wrongly admits).
+//!
+//! The shard hub composes these into the full gated apply loop; the
+//! tests below exercise the primitives in isolation plus a miniature
+//! ring-transported hub whose apply order is checked against the mutex
+//! hub's (global ascending key order) on random workloads.
+
+use std::cell::UnsafeCell;
+use std::mem::MaybeUninit;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::time::Duration;
+
+/// Order-preserving `f64` → `u64` encoding (sign-flip trick):
+/// `encode_time(a) <= encode_time(b)` iff `a.total_cmp(&b)` is
+/// less-or-equal, including `-inf`, `+inf`, and signed zeros — exactly
+/// the order the merge key uses.
+pub fn encode_time(t: f64) -> u64 {
+    let b = t.to_bits();
+    if b & 0x8000_0000_0000_0000 != 0 {
+        !b
+    } else {
+        b | 0x8000_0000_0000_0000
+    }
+}
+
+/// Inverse of [`encode_time`].
+pub fn decode_time(e: u64) -> f64 {
+    let b = if e & 0x8000_0000_0000_0000 != 0 {
+        e & 0x7FFF_FFFF_FFFF_FFFF
+    } else {
+        !e
+    };
+    f64::from_bits(b)
+}
+
+/// A bounded single-producer single-consumer ring buffer.
+///
+/// Capacity rounds up to a power of two.  `push` is wait-free for the
+/// producer and fails (returning the value) when the ring is full —
+/// backpressure is the caller's protocol, deliberately: the shard hub
+/// turns a full ring into a drain-and-retry with deterministic
+/// accounting (`ring_full_retries`) rather than a block.
+///
+/// Safety contract: at most one thread may act as producer and at most
+/// one as consumer at any instant (roles may migrate across an
+/// acquire/release edge — see the module docs).
+pub struct SpscRing<T> {
+    mask: usize,
+    buf: Box<[UnsafeCell<MaybeUninit<T>>]>,
+    /// next slot to pop; advanced only by the consumer
+    head: AtomicUsize,
+    /// next slot to push; advanced only by the producer
+    tail: AtomicUsize,
+}
+
+// SAFETY: slots are transferred between the producer and the consumer
+// through the Release tail store / Acquire tail load (and head
+// symmetrically), so a slot is only ever touched by the side that
+// currently owns it; T crossing threads needs T: Send only.
+unsafe impl<T: Send> Send for SpscRing<T> {}
+unsafe impl<T: Send> Sync for SpscRing<T> {}
+
+impl<T> SpscRing<T> {
+    pub fn with_capacity(capacity: usize) -> Self {
+        let cap = capacity.max(2).next_power_of_two();
+        let buf: Box<[UnsafeCell<MaybeUninit<T>>]> =
+            (0..cap).map(|_| UnsafeCell::new(MaybeUninit::uninit())).collect();
+        SpscRing {
+            mask: cap - 1,
+            buf,
+            head: AtomicUsize::new(0),
+            tail: AtomicUsize::new(0),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.mask + 1
+    }
+
+    /// True when no items are in flight.  Exact only when both roles
+    /// are quiescent; otherwise a racy-but-monotone hint (safe for the
+    /// hub's "any results waiting?" poll, which re-checks after apply).
+    pub fn is_empty(&self) -> bool {
+        self.head.load(Ordering::Acquire) == self.tail.load(Ordering::Acquire)
+    }
+
+    /// Producer side: enqueue `v`, or hand it back if the ring is full.
+    pub fn push(&self, v: T) -> Result<(), T> {
+        let tail = self.tail.load(Ordering::Relaxed);
+        let head = self.head.load(Ordering::Acquire);
+        if tail.wrapping_sub(head) == self.capacity() {
+            return Err(v);
+        }
+        // SAFETY: this slot is past `head` (consumer won't read it until
+        // the tail store below) and only the producer writes at `tail`.
+        unsafe { (*self.buf[tail & self.mask].get()).write(v) };
+        self.tail.store(tail.wrapping_add(1), Ordering::Release);
+        Ok(())
+    }
+
+    /// Consumer side: dequeue the oldest item, if any.
+    pub fn pop(&self) -> Option<T> {
+        let head = self.head.load(Ordering::Relaxed);
+        let tail = self.tail.load(Ordering::Acquire);
+        if head == tail {
+            return None;
+        }
+        // SAFETY: head < tail, so the producer's Release store published
+        // this slot; only the consumer reads at `head`.
+        let v = unsafe { (*self.buf[head & self.mask].get()).assume_init_read() };
+        self.head.store(head.wrapping_add(1), Ordering::Release);
+        Some(v)
+    }
+}
+
+impl<T> Drop for SpscRing<T> {
+    fn drop(&mut self) {
+        while self.pop().is_some() {}
+    }
+}
+
+/// A published conservative `(time, seq)` lower bound, readable without
+/// a lock.
+///
+/// Single logical writer (the owning shard's worker); `publish` uses
+/// `fetch_max` so each component is a monotone ratchet regardless.  The
+/// two words are not read atomically together — see the torn-read
+/// argument in the module docs for why that is sound.
+pub struct AtomicBound {
+    time_bits: AtomicU64,
+    seq: AtomicU64,
+}
+
+impl AtomicBound {
+    pub fn new(t: f64, seq: u64) -> Self {
+        AtomicBound {
+            time_bits: AtomicU64::new(encode_time(t)),
+            seq: AtomicU64::new(seq),
+        }
+    }
+
+    /// Ratchet the bound forward (Release: pairs with readers' Acquire
+    /// loads, so ring pushes sequenced before this publish are visible
+    /// to any reader that observes it).
+    pub fn publish(&self, t: f64, seq: u64) {
+        self.time_bits.fetch_max(encode_time(t), Ordering::AcqRel);
+        self.seq.fetch_max(seq, Ordering::AcqRel);
+    }
+
+    pub fn load(&self) -> (f64, u64) {
+        (
+            decode_time(self.time_bits.load(Ordering::Acquire)),
+            self.seq.load(Ordering::Acquire),
+        )
+    }
+}
+
+/// The apply ticket: a try-only CAS claim over the hub's interior
+/// state.  Winning the claim (Acquire) synchronizes-with the previous
+/// holder's `release` (Release), so successive holders see each other's
+/// writes to the guarded state — a mutex's ownership-transfer edge
+/// without its blocking.
+#[derive(Default)]
+pub struct ApplyClaim {
+    held: AtomicBool,
+}
+
+impl ApplyClaim {
+    /// Attempt to take the ticket; never blocks.
+    pub fn try_claim(&self) -> bool {
+        self.held
+            .compare_exchange(false, true, Ordering::Acquire, Ordering::Relaxed)
+            .is_ok()
+    }
+
+    pub fn release(&self) {
+        self.held.store(false, Ordering::Release);
+    }
+}
+
+/// Global progress epoch: bumped whenever the hub moves (submissions or
+/// applies) so backed-off waiters can reset to the cheap spin tier
+/// instead of escalating toward parks while progress is being made.
+#[derive(Default)]
+pub struct ProgressEpoch(AtomicU64);
+
+impl ProgressEpoch {
+    pub fn bump(&self) {
+        self.0.fetch_add(1, Ordering::Release);
+    }
+
+    pub fn load(&self) -> u64 {
+        self.0.load(Ordering::Acquire)
+    }
+}
+
+/// Hub-contention counters, aggregated per worker and summed into
+/// `EngineStats`.  All four are wall-clock/interleaving dependent (like
+/// `merge_stall_ns`) and therefore excluded from the bit-identity
+/// comparison.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct HubCounters {
+    /// spin/yield backoff iterations before parking
+    pub spins: u64,
+    /// bounded-timeout parks
+    pub parks: u64,
+    /// transport-ring full events that forced a drain-and-retry
+    pub ring_full_retries: u64,
+    /// conservative-bound publications
+    pub bound_publishes: u64,
+}
+
+impl HubCounters {
+    pub fn merge(&mut self, o: &HubCounters) {
+        self.spins += o.spins;
+        self.parks += o.parks;
+        self.ring_full_retries += o.ring_full_retries;
+        self.bound_publishes += o.bound_publishes;
+    }
+}
+
+/// Spin tiers before escalating: 2^0 .. 2^5 `spin_loop` hints.
+const SPIN_STEPS: u32 = 6;
+/// Yield tiers after spinning, before the first park.
+const YIELD_STEPS: u32 = 10;
+/// Park timeout cap exponent: 50µs << 5 = 1.6ms worst-case wake latency.
+const PARK_SHIFT_CAP: u32 = 5;
+
+/// Adaptive waiter: spin → yield → park with exponentially growing
+/// bounded timeouts.  There is deliberately no unpark registry — the
+/// park timeout is the liveness belt, exactly as the old condvar's 50ms
+/// timeout was (correctness never depends on a wakeup; see the
+/// deadlock-freedom note in `coordinator::shard`), and the progress
+/// epoch lets callers reset the backoff whenever the hub moves.
+#[derive(Default)]
+pub struct Backoff {
+    step: u32,
+    pub spins: u64,
+    pub parks: u64,
+}
+
+impl Backoff {
+    /// Drop back to the cheap spin tier (call when progress was seen).
+    pub fn reset(&mut self) {
+        self.step = 0;
+    }
+
+    /// Wait one backoff step, escalating spin → yield → park.
+    pub fn wait(&mut self) {
+        if self.step < SPIN_STEPS {
+            for _ in 0..(1u32 << self.step) {
+                std::hint::spin_loop();
+            }
+            self.spins += 1;
+        } else if self.step < SPIN_STEPS + YIELD_STEPS {
+            std::thread::yield_now();
+            self.spins += 1;
+        } else {
+            let shift = (self.step - SPIN_STEPS - YIELD_STEPS).min(PARK_SHIFT_CAP);
+            std::thread::park_timeout(Duration::from_micros(50u64 << shift));
+            self.parks += 1;
+        }
+        self.step = self.step.saturating_add(1);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use std::collections::VecDeque;
+
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn time_encoding_is_order_preserving() {
+        let vals = [
+            f64::NEG_INFINITY,
+            -1.0e300,
+            -2.5,
+            -1.0e-300,
+            -0.0,
+            0.0,
+            1.0e-300,
+            1.0,
+            2.5,
+            1.0e300,
+            f64::INFINITY,
+        ];
+        for (i, &a) in vals.iter().enumerate() {
+            assert_eq!(decode_time(encode_time(a)).to_bits(), a.to_bits());
+            for &b in &vals[i + 1..] {
+                assert!(
+                    encode_time(a) <= encode_time(b),
+                    "encoding must preserve total_cmp order: {a} vs {b}"
+                );
+            }
+        }
+        assert!(encode_time(-0.0) < encode_time(0.0));
+    }
+
+    #[test]
+    fn ring_wraparound_preserves_fifo() {
+        let ring: SpscRing<u64> = SpscRing::with_capacity(4);
+        assert_eq!(ring.capacity(), 4);
+        let mut next_push = 0u64;
+        let mut next_pop = 0u64;
+        // interleave pushes and pops far past the capacity so the
+        // indices wrap the buffer many times over
+        for round in 0..1000 {
+            for _ in 0..(1 + round % 4) {
+                if ring.push(next_push).is_ok() {
+                    next_push += 1;
+                }
+            }
+            for _ in 0..(1 + (round + 1) % 3) {
+                if let Some(v) = ring.pop() {
+                    assert_eq!(v, next_pop, "ring must drain in push order");
+                    next_pop += 1;
+                }
+            }
+        }
+        while let Some(v) = ring.pop() {
+            assert_eq!(v, next_pop);
+            next_pop += 1;
+        }
+        assert_eq!(next_pop, next_push);
+        assert!(ring.is_empty());
+    }
+
+    #[test]
+    fn full_ring_hands_the_value_back() {
+        let ring: SpscRing<String> = SpscRing::with_capacity(2);
+        assert!(ring.push("a".to_string()).is_ok());
+        assert!(ring.push("b".to_string()).is_ok());
+        let back = ring.push("c".to_string());
+        assert_eq!(back, Err("c".to_string()), "full ring returns the value");
+        assert_eq!(ring.pop().as_deref(), Some("a"));
+        assert!(ring.push("c".to_string()).is_ok(), "pop frees a slot");
+        assert_eq!(ring.pop().as_deref(), Some("b"));
+        assert_eq!(ring.pop().as_deref(), Some("c"));
+        assert_eq!(ring.pop(), None);
+        // drop with items still enqueued must release them (String would
+        // leak under Miri/ASan if Drop skipped live slots)
+        let ring: SpscRing<String> = SpscRing::with_capacity(4);
+        ring.push("x".to_string()).unwrap();
+        ring.push("y".to_string()).unwrap();
+        drop(ring);
+    }
+
+    #[test]
+    fn multi_producer_rings_drain_in_submission_order() {
+        // one ring per producer (the hub's topology): N producer threads
+        // flood their own rings with retry-on-full, one consumer drains
+        // them all; per-ring FIFO and zero loss must hold under stress
+        const PRODUCERS: usize = 4;
+        const PER_PRODUCER: u64 = 2000;
+        let rings: Vec<SpscRing<(usize, u64)>> =
+            (0..PRODUCERS).map(|_| SpscRing::with_capacity(8)).collect();
+        let done = AtomicUsize::new(0);
+        std::thread::scope(|s| {
+            for (p, ring) in rings.iter().enumerate() {
+                let done = &done;
+                s.spawn(move || {
+                    for i in 0..PER_PRODUCER {
+                        let mut v = (p, i);
+                        while let Err(back) = ring.push(v) {
+                            v = back;
+                            std::thread::yield_now();
+                        }
+                    }
+                    done.fetch_add(1, Ordering::Release);
+                });
+            }
+            let mut seen = [0u64; PRODUCERS];
+            let mut total = 0u64;
+            while total < PRODUCERS as u64 * PER_PRODUCER {
+                let mut idle = true;
+                for (p, ring) in rings.iter().enumerate() {
+                    while let Some((pp, i)) = ring.pop() {
+                        assert_eq!(pp, p);
+                        assert_eq!(i, seen[p], "per-ring FIFO order violated");
+                        seen[p] += 1;
+                        total += 1;
+                        idle = false;
+                    }
+                }
+                if idle {
+                    std::thread::yield_now();
+                }
+            }
+            assert_eq!(done.load(Ordering::Acquire), PRODUCERS);
+        });
+    }
+
+    #[test]
+    fn bound_cell_ratchets_monotonically() {
+        let b = AtomicBound::new(f64::NEG_INFINITY, 0);
+        assert_eq!(b.load(), (f64::NEG_INFINITY, 0));
+        b.publish(1.5, 3);
+        assert_eq!(b.load(), (1.5, 3));
+        // stale publishes never move the bound backward
+        b.publish(0.5, 1);
+        assert_eq!(b.load(), (1.5, 3));
+        b.publish(f64::INFINITY, 4);
+        assert_eq!(b.load(), (f64::INFINITY, 4));
+    }
+
+    /// Claim-guarded shared counter: lost updates would show if the CAS
+    /// ticket ever admitted two holders at once (TSan-visible too).
+    struct Guarded {
+        claim: ApplyClaim,
+        count: UnsafeCell<u64>,
+    }
+    // SAFETY: `count` is only touched while `claim` is held.
+    unsafe impl Sync for Guarded {}
+
+    #[test]
+    fn claim_is_mutually_exclusive() {
+        const THREADS: usize = 4;
+        const PER_THREAD: u64 = 20_000;
+        let g = Guarded {
+            claim: ApplyClaim::default(),
+            count: UnsafeCell::new(0),
+        };
+        std::thread::scope(|s| {
+            for _ in 0..THREADS {
+                let g = &g;
+                s.spawn(move || {
+                    let mut done = 0u64;
+                    while done < PER_THREAD {
+                        if g.claim.try_claim() {
+                            // SAFETY: claim held — exclusive access
+                            unsafe { *g.count.get() += 1 };
+                            g.claim.release();
+                            done += 1;
+                        } else {
+                            std::hint::spin_loop();
+                        }
+                    }
+                });
+            }
+        });
+        assert!(g.claim.try_claim());
+        // SAFETY: claim held
+        let total = unsafe { *g.count.get() };
+        g.claim.release();
+        assert_eq!(total, THREADS as u64 * PER_THREAD, "updates were lost");
+    }
+
+    // --- miniature ring-transported hub vs the mutex hub's apply order ---
+
+    #[derive(Clone, Copy, Debug, PartialEq)]
+    struct Key {
+        t: f64,
+        group: u32,
+        seq: u64,
+    }
+
+    impl Key {
+        fn lt(&self, o: &Key) -> bool {
+            self.t
+                .total_cmp(&o.t)
+                .then(self.group.cmp(&o.group))
+                .then(self.seq.cmp(&o.seq))
+                .is_lt()
+        }
+    }
+
+    struct MiniState {
+        pending: Vec<VecDeque<Key>>,
+        applied: Vec<Key>,
+    }
+
+    /// The shard hub's transport in miniature: per-group key rings +
+    /// atomic bounds + the try-claim gated apply loop, minus the
+    /// resource pool.
+    struct MiniHub {
+        rings: Vec<SpscRing<Key>>,
+        bounds: Vec<AtomicBound>,
+        claim: ApplyClaim,
+        state: UnsafeCell<MiniState>,
+    }
+    // SAFETY: `state` is only touched while `claim` is held.
+    unsafe impl Sync for MiniHub {}
+
+    impl MiniHub {
+        fn new(groups: usize) -> Self {
+            MiniHub {
+                rings: (0..groups).map(|_| SpscRing::with_capacity(8)).collect(),
+                bounds: (0..groups)
+                    .map(|_| AtomicBound::new(f64::NEG_INFINITY, 0))
+                    .collect(),
+                claim: ApplyClaim::default(),
+                state: UnsafeCell::new(MiniState {
+                    pending: (0..groups).map(|_| VecDeque::new()).collect(),
+                    applied: Vec::new(),
+                }),
+            }
+        }
+
+        fn try_apply(&self) {
+            if !self.claim.try_claim() {
+                return;
+            }
+            // SAFETY: claim held — exclusive access to `state`
+            let st = unsafe { &mut *self.state.get() };
+            loop {
+                // bounds first, rings second (module-docs protocol)
+                let snap: Vec<(f64, u64)> = self.bounds.iter().map(|b| b.load()).collect();
+                for (g, ring) in self.rings.iter().enumerate() {
+                    while let Some(k) = ring.pop() {
+                        st.pending[g].push_back(k);
+                    }
+                }
+                let mut best: Option<Key> = None;
+                for q in &st.pending {
+                    if let Some(&k) = q.front() {
+                        if best.is_none_or(|b| k.lt(&b)) {
+                            best = Some(k);
+                        }
+                    }
+                }
+                let Some(key) = best else { break };
+                let gated = snap.iter().enumerate().any(|(g2, &(t, seq))| {
+                    g2 != key.group as usize
+                        && !key.lt(&Key {
+                            t,
+                            group: g2 as u32,
+                            seq,
+                        })
+                });
+                if gated {
+                    break;
+                }
+                let k = st.pending[key.group as usize].pop_front().unwrap();
+                st.applied.push(k);
+            }
+            self.claim.release();
+        }
+    }
+
+    #[test]
+    fn ring_transported_bursts_reproduce_the_mutex_hub_apply_order() {
+        // The mutex hub applied dispatches in global ascending
+        // (t, group, seq) order once a run completed — that IS its
+        // deterministic contract.  The lock-free transport must land on
+        // the same order from concurrent ring-transported bursts.
+        for seed in 0..12u64 {
+            let mut rng = Rng::seed_from_u64(0x51AC ^ seed.wrapping_mul(0x9E37_79B9));
+            let groups = 2 + (seed as usize % 3);
+            let per_group = 120 + rng.usize(120);
+            // per-group strictly increasing keys, drawn on a coarse grid
+            // so cross-group time ties exercise the group-id tie-break
+            let keys: Vec<Vec<Key>> = (0..groups)
+                .map(|g| {
+                    let mut t = 0.0f64;
+                    (0..per_group)
+                        .map(|i| {
+                            t += 0.25 * (1 + rng.usize(4)) as f64;
+                            Key {
+                                t,
+                                group: g as u32,
+                                seq: i as u64,
+                            }
+                        })
+                        .collect()
+                })
+                .collect();
+            let hub = MiniHub::new(groups);
+            std::thread::scope(|s| {
+                for (g, ks) in keys.iter().enumerate() {
+                    let hub = &hub;
+                    s.spawn(move || {
+                        for (i, &k) in ks.iter().enumerate() {
+                            let mut v = k;
+                            // push first, publish second; on a full ring
+                            // run the apply loop ourselves to make room
+                            while let Err(back) = hub.rings[g].push(v) {
+                                v = back;
+                                hub.try_apply();
+                                std::thread::yield_now();
+                            }
+                            let bound = ks
+                                .get(i + 1)
+                                .map(|n| (n.t, n.seq))
+                                .unwrap_or((f64::INFINITY, ks.len() as u64));
+                            hub.bounds[g].publish(bound.0, bound.1);
+                            if i % 7 == 0 {
+                                hub.try_apply();
+                            }
+                        }
+                        hub.try_apply();
+                    });
+                }
+            });
+            hub.try_apply();
+            let st = hub.state.into_inner();
+            assert!(st.pending.iter().all(|q| q.is_empty()));
+            let mut expect: Vec<Key> = keys.into_iter().flatten().collect();
+            expect.sort_by(|a, b| {
+                a.t.total_cmp(&b.t)
+                    .then(a.group.cmp(&b.group))
+                    .then(a.seq.cmp(&b.seq))
+            });
+            assert_eq!(
+                st.applied, expect,
+                "seed {seed}: lock-free apply order diverged from the mutex hub's"
+            );
+        }
+    }
+}

@@ -38,8 +38,8 @@ COMMANDS:
                                      --smoke is the artifact-free CI pass;
                                      --chaos injects a deterministic fault
                                      plan (drafter-loss|straggler|transient|
-                                     storm, or a JSON file) and proves
-                                     recovery stays bit-identical
+                                     storm|degraded-link, or a JSON file)
+                                     and proves recovery stays bit-identical
   motivation [--figs fig2a,fig2b,fig3b]
                                      Fig. 2/3 motivation profiles
   table2     [--prompts-per-domain N] [--shards 1,2]

@@ -139,6 +139,11 @@ fn prop_sharded_runs_complete_and_account_for_every_request() {
             2 * r.engine.rounds_dispatched,
             "seed {seed} ({strategy})"
         );
+        assert!(
+            r.engine.bound_publishes > 0,
+            "seed {seed} ({strategy}): every dispatched round flushes through \
+             the lock-free hub, so at least one bound must have been published"
+        );
         let max_finish = r
             .latencies_s
             .iter()
