@@ -52,8 +52,9 @@ pub struct EngineStats {
     pub hub_spins: u64,
     /// bounded-timeout parks of the hub's adaptive backoff
     pub hub_parks: u64,
-    /// transport-ring full events (submit or result side) that forced a
-    /// drain-and-retry — the deterministic backpressure accounting
+    /// transport-ring full events: a drain-and-retry on the submit side
+    /// or an apply pause on the result side — the deterministic
+    /// backpressure accounting
     pub ring_full_retries: u64,
     /// conservative-bound publications through the atomic bound cells
     pub bound_publishes: u64,

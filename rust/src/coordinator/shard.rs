@@ -94,10 +94,15 @@
 //! yield → park backoff (`Hub::wait_for_progress`), re-running the
 //! try-claim each iteration; the bounded park timeout is a liveness belt
 //! exactly as the old condvar timeout was.  A full ring is deterministic
-//! backpressure, not a block: the pusher drains its own inbox and runs
-//! the apply loop (which moves ring entries into the *unbounded* pending
-//! queues even when every key is gated), counting the retry in
-//! `ring_full_retries`.
+//! backpressure, not a block, on both sides: a producer facing a full
+//! *submit* ring drains its own inbox and runs the apply loop (which
+//! moves ring entries into the *unbounded* pending queues even when
+//! every key is gated, so one apply pass always frees submit rings),
+//! and a claim holder facing a full *result* ring pauses the apply at
+//! that key and releases the claim — it never pushes in a retry loop,
+//! because the holder may itself be that ring's owning consumer (always
+//! single-threaded) and no one else could drain it.  Both paths count
+//! into `ring_full_retries`.
 //!
 //! Deadlock freedom (claim scheme): buffered dispatches are always
 //! flushed — and the shard's bound published — before a worker can enter
@@ -107,11 +112,16 @@
 //! that group's own submitted keys (its watermark-clamped time is ≥, and
 //! its seq is greater than, any key the group has flushed) and
 //! lower-bounds every key it can still produce, so `k` precedes every
-//! other group's bound and passes the gate.  The claim is try-only and
-//! always released, every waiter re-tries it on every backoff iteration,
-//! and the apply loop re-reads bounds and rings each pass — so some
-//! blocked worker claims the ticket and applies `k`; the result lands on
-//! its owner's ring, whose backoff loop observes it.  Bound staleness is
+//! other group's bound and passes the gate.  The claim is try-only,
+//! never held across a block (a full result ring pauses the apply and
+//! releases it), and always released; every waiter re-tries it on every
+//! backoff iteration, and the apply loop re-reads bounds and rings each
+//! pass — so some blocked worker claims the ticket and either applies
+//! `k` or finds `k`'s result ring full, which means its owner already
+//! has results to drain: that owner's backoff check (or next exchange)
+//! pops them, frees the ring, and a later apply resumes from `k`.
+//! Either way the result lands on its owner's ring, whose backoff loop
+//! observes it and whose exchange drains it.  Bound staleness is
 //! safe by construction: bounds only ratchet upward, and a torn
 //! `(time, seq)` read composes to a valid *earlier* bound (cross-group
 //! comparisons break ties on the group id before the seq), so a stale
@@ -327,10 +337,14 @@ struct RoundResult {
 }
 
 /// Capacity of each per-group transport ring.  A full ring is handled
-/// by a drain-and-retry protocol with deterministic accounting
-/// (`ring_full_retries`), never by blocking — the apply loop moves ring
-/// entries into the *unbounded* pending queues even when every key is
-/// gated — so capacity tunes batching granularity, not correctness.
+/// without blocking and with deterministic accounting
+/// (`ring_full_retries`): a full *submit* ring makes the producer help
+/// apply (the apply loop moves ring entries into the *unbounded*
+/// pending queues even when every key is gated, so one pass always
+/// frees it), and a full *result* ring pauses the apply at that key
+/// until the owner drains (the holder may be the owner — see
+/// `apply_claimed`).  Capacity tunes batching granularity, not
+/// correctness.
 const RING_CAP: usize = 256;
 
 /// Shared verify stage behind the lock-free transport: the replica
@@ -449,20 +463,33 @@ impl Hub {
             if gated {
                 break;
             }
+            // The holder may *be* the owner (consumer) of `results[g]`
+            // — always in single-threaded runs, and whenever a worker's
+            // own try_apply reaches one of its own groups — so blocking
+            // on a full ring here can never clear (nothing else drains
+            // it) and would livelock.  And the global order forbids
+            // skipping ahead to another group's later key.  So a full
+            // ring *pauses* the apply: leave the dispatch at the front
+            // of pending, stop, and release the claim — the owner
+            // drains the ring on its next exchange (or its backoff loop
+            // sees the non-empty ring and returns it to the exchange
+            // path), and a later apply resumes from this exact key.
+            // `has_space` is producer-stable (only the owner's pops
+            // change it, full → not-full), so a `true` guarantees the
+            // push below succeeds.
+            if !self.results[g].has_space() {
+                c.ring_full_retries += 1;
+                break;
+            }
             let d = st.pending[g].pop_front().expect("best key from empty queue");
             let sv = st.res.verify_sharded_queued_with(d.b, d.ready, &d.durs, &d.pending_durs);
-            let mut rr = RoundResult {
+            let rr = RoundResult {
                 rid: d.rid,
                 seq: d.reserved_seq,
                 sv,
             };
-            // deliver to the owner's result ring; owners drain on every
-            // exchange and on every backoff iteration, so a full ring
-            // clears within one owner visit — yield-retry, never block
-            while let Err(back) = self.results[g].push(rr) {
-                rr = back;
-                c.ring_full_retries += 1;
-                std::thread::yield_now();
+            if self.results[g].push(rr).is_err() {
+                unreachable!("result ring filled between has_space and push (sole producer)");
             }
             any = true;
         }
@@ -506,11 +533,17 @@ impl Hub {
             while let Err(back) = self.submit[g].push(d) {
                 d = back;
                 c.ring_full_retries += 1;
-                // make room ourselves when the ticket is free (the
-                // apply loop moves ring entries into the unbounded
-                // pending queues even when every key is gated), and
-                // keep our own inbox draining so a claim holder
-                // stalled on a full result ring can finish
+                // make room ourselves: any successful try_apply — ours
+                // or a concurrent holder's — drains *every* submit ring
+                // into the unbounded pending queues before gating, so
+                // one apply pass frees this ring even when every key is
+                // gated.  This loop is live because the claim is never
+                // held across a block: a holder that hits a full result
+                // ring pauses and releases (see `apply_claimed`), so
+                // either our CAS wins and we free the ring, or the
+                // winner that beat us already did.  Draining our own
+                // inbox here keeps the pause window short when the full
+                // result ring is this very group's.
                 self.try_apply(c);
                 while let Some(rr) = self.results[g].pop() {
                     out.push(rr);
@@ -1796,6 +1829,67 @@ mod tests {
         let b = run_sharded(&w, 2);
         assert!(identical(&a, &b));
         assert_eq!(a.engine.cross_shard_msgs, 2 * a.engine.rounds_dispatched);
+    }
+
+    #[test]
+    fn a_full_result_ring_pauses_the_apply_instead_of_livelocking() {
+        // With one group the claim holder IS the result ring's owning
+        // consumer, so a retry-push inside the apply loop could never
+        // be drained — the pre-fix transport livelocked exactly here.
+        // The apply must instead pause at the full ring, release
+        // cleanly, and resume in key order once the owner drains.
+        let w = small_spec().shard_workload(1);
+        let hub = Hub::new(&w, 0.0);
+        let mut c = HubCounters::default();
+        let total = RING_CAP + RING_CAP / 2;
+        let mk = |i: usize| Dispatch {
+            key: MergeKey {
+                t: i as f64,
+                group: 0,
+                seq: i as u64,
+            },
+            b: 1,
+            ready: i as f64,
+            durs: vec![0.25],
+            pending_durs: Vec::new(),
+            rid: i as u64,
+            reserved_seq: i as u64,
+        };
+        // two submit flushes, two applies, no owner drain in between:
+        // the first apply exactly fills the result ring, so the second
+        // meets it full with 128 dispatches still pending
+        let mut next = 0usize;
+        for _ in 0..2 {
+            while next < total && hub.submit[0].push(mk(next)).is_ok() {
+                next += 1;
+            }
+            hub.try_apply(&mut c);
+        }
+        assert_eq!(next, total, "first apply must have freed the submit ring");
+        assert!(
+            c.ring_full_retries > 0,
+            "second apply must pause on the full result ring"
+        );
+        // owner drains; the apply resumes from the paused key
+        let mut drained: Vec<u64> = Vec::new();
+        loop {
+            while let Some(rr) = hub.results[0].pop() {
+                drained.push(rr.rid);
+            }
+            if drained.len() == total {
+                break;
+            }
+            assert!(
+                hub.try_apply(&mut c),
+                "a drained result ring must let the apply resume"
+            );
+        }
+        assert!(
+            drained.windows(2).all(|p| p[0] < p[1]),
+            "pause/resume must preserve the apply order"
+        );
+        // clean teardown: nothing stuck on a ring or a pending queue
+        let _ = hub.into_res();
     }
 
     #[test]

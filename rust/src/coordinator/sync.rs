@@ -130,6 +130,17 @@ impl<T> SpscRing<T> {
         self.head.load(Ordering::Acquire) == self.tail.load(Ordering::Acquire)
     }
 
+    /// Producer side: is there room for at least one push?  Stable for
+    /// the producer — only the consumer changes the answer, and only
+    /// from full to not-full — so a `true` here guarantees the
+    /// producer's next `push` succeeds.  (The consumer side has no such
+    /// stability: the producer may fill the ring at any time.)
+    pub fn has_space(&self) -> bool {
+        let tail = self.tail.load(Ordering::Relaxed);
+        let head = self.head.load(Ordering::Acquire);
+        tail.wrapping_sub(head) < self.capacity()
+    }
+
     /// Producer side: enqueue `v`, or hand it back if the ring is full.
     pub fn push(&self, v: T) -> Result<(), T> {
         let tail = self.tail.load(Ordering::Relaxed);
@@ -246,7 +257,10 @@ impl ProgressEpoch {
 /// comparison.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct HubCounters {
-    /// spin/yield backoff iterations before parking
+    /// pre-park backoff iterations: both `spin_loop`-hint rounds and
+    /// `yield_now` rounds land here (one count per [`Backoff::wait`]
+    /// call below the park tier) — read it as "cheap waits", not CPU
+    /// spin cycles, when tuning from bench output
     pub spins: u64,
     /// bounded-timeout parks
     pub parks: u64,
@@ -281,6 +295,8 @@ const PARK_SHIFT_CAP: u32 = 5;
 #[derive(Default)]
 pub struct Backoff {
     step: u32,
+    /// spin-tier *and* yield-tier iterations (every `wait` below the
+    /// park tier counts once here; see [`HubCounters::spins`])
     pub spins: u64,
     pub parks: u64,
 }
